@@ -1,0 +1,37 @@
+"""Shared helpers for the benchmark harness."""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, List
+
+from repro.core.analytic import LinearServiceModel
+
+V100 = LinearServiceModel(alpha=0.1438, tau0=1.8874)   # ms (paper §3.3)
+P4 = LinearServiceModel(alpha=0.5833, tau0=1.4284)     # ms
+
+RHO_GRID = [0.1, 0.2, 0.3, 0.4, 0.5, 0.6, 0.7, 0.8, 0.9]
+
+
+@dataclass
+class Row:
+    name: str
+    us_per_call: float          # wall time of producing this row (µs)
+    derived: str                # the benchmark's payload (key=val;...)
+
+    def csv(self) -> str:
+        return f"{self.name},{self.us_per_call:.1f},{self.derived}"
+
+
+def timed(fn: Callable[[], Dict[str, Any]], name: str) -> Row:
+    t0 = time.perf_counter()
+    payload = fn()
+    us = (time.perf_counter() - t0) * 1e6
+    derived = ";".join(f"{k}={_fmt(v)}" for k, v in payload.items())
+    return Row(name, us, derived)
+
+
+def _fmt(v: Any) -> str:
+    if isinstance(v, float):
+        return f"{v:.6g}"
+    return str(v)

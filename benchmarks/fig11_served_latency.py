@@ -1,0 +1,40 @@
+"""Paper Fig. 11 analogue: mean latency measured on the REAL serving loop
+(Poisson load generator + dynamic batching + real JAX model execution)
+against the closed-form φ(λ, α, τ0) at the engine's own fitted constants —
+the Server-scenario validation."""
+from __future__ import annotations
+
+from typing import List
+
+from benchmarks.common import Row, timed
+from repro.configs import get_config, reduced
+from repro.core.analytic import phi
+from repro.serving import InferenceEngine
+
+
+def run(n_jobs: int = 200) -> List[Row]:
+    rows: List[Row] = []
+    cfg = reduced(get_config("qwen1.5-0.5b"))
+    eng = InferenceEngine(cfg, workload="forward", seq_len=32, max_batch=32)
+    model, r2 = eng.fit_service_model(samples=3)
+
+    def calib():
+        return {"alpha_ms": model.alpha * 1e3, "tau0_ms": model.tau0 * 1e3,
+                "r2": r2}
+    rows.append(timed(calib, "fig11/calibration"))
+
+    for rho in (0.1, 0.25, 0.4, 0.55, 0.7):
+        lam = rho / model.alpha
+
+        def one(rho=rho, lam=lam):
+            res = eng.serve_poisson(lam, n_jobs=n_jobs, seed=31)
+            bound = float(phi(lam, model.alpha, model.tau0))
+            return {"rho": rho, "lam_per_s": lam,
+                    "measured_EW_ms": res.mean_latency * 1e3,
+                    "phi_ms": bound * 1e3,
+                    "ratio_measured_over_phi": res.mean_latency / bound,
+                    "mean_batch": res.mean_batch,
+                    "p99_ms": res.latency_p99 * 1e3,
+                    "utilization": res.utilization}
+        rows.append(timed(one, f"fig11/rho={rho}"))
+    return rows

@@ -1,0 +1,25 @@
+"""Paper Fig. 5: server utilization 1−π0 vs ρ, with the upper bound
+min(1, λ(α+τ0)) — showing saturation far below ρ=1 (unlike M/D/1)."""
+from __future__ import annotations
+
+from typing import List
+
+from benchmarks.common import RHO_GRID, Row, V100, timed
+from repro.core.analytic import utilization_upper
+from repro.core.markov import solve
+
+
+def run() -> List[Row]:
+    rows: List[Row] = []
+    for rho in RHO_GRID:
+        lam = rho / V100.alpha
+
+        def one(rho=rho, lam=lam):
+            mk = solve(lam, V100)
+            ub = float(utilization_upper(lam, V100.alpha, V100.tau0))
+            return {"rho": rho, "utilization": mk.utilization,
+                    "upper_bound": ub,
+                    "holds": mk.utilization <= ub + 1e-9,
+                    "saturated": mk.utilization > 0.99}
+        rows.append(timed(one, f"fig5/rho={rho}"))
+    return rows

@@ -1,0 +1,36 @@
+"""Paper Fig. 6: average energy efficiency η vs ρ (simulation) with the
+closed-form lower bound (Eq. 40) — Corollary 1's monotone improvement."""
+from __future__ import annotations
+
+from typing import List
+
+from benchmarks.common import RHO_GRID, Row, timed, V100, P4
+from repro.core.calibrate import (TABLE1_P4, TABLE1_V100, fit_linear,
+                                  table1_energy_samples)
+from repro.core.energy import eta_lower
+from repro.core.simulate import simulate
+
+
+def run(n_jobs: int = 100_000) -> List[Row]:
+    rows: List[Row] = []
+    for label, m, table in (("v100", V100, TABLE1_V100),
+                            ("p4", P4, TABLE1_P4)):
+        b, c = table1_energy_samples(table)
+        f = fit_linear(b, c)
+        beta, c0 = f.slope, f.intercept
+        prev = [0.0]
+        for rho in RHO_GRID:
+            lam = rho / m.alpha
+
+            def one(rho=rho, lam=lam):
+                s = simulate(lam, m, n_jobs=n_jobs, seed=23)
+                eta = s.eta(beta, c0)
+                lb = float(eta_lower(lam, m.alpha, m.tau0, beta, c0))
+                monotone = eta >= prev[0] - 1e-3
+                prev[0] = eta
+                return {"rho": rho, "eta_jobs_per_J": eta,
+                        "eta_lower_bound": lb,
+                        "bound_holds": eta >= lb * (1 - 0.02),
+                        "monotone_so_far": monotone}
+            rows.append(timed(one, f"fig6/{label}/rho={rho}"))
+    return rows

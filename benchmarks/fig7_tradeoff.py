@@ -1,0 +1,46 @@
+"""Paper Fig. 7: the energy-latency tradeoff — parametric (η, E[W]) curve
+with ρ as the parameter, and the closed-form approximation (Eqs. 40 + 43)
+used to pick an operating point."""
+from __future__ import annotations
+
+from typing import List
+
+from benchmarks.common import RHO_GRID, Row, V100, timed
+from repro.core.analytic import phi
+from repro.core.calibrate import TABLE1_V100, fit_linear, \
+    table1_energy_samples
+from repro.core.energy import eta_lower
+from repro.core.planner import Planner
+from repro.core.simulate import simulate
+from repro.core.energy import LinearEnergyModel
+
+
+def run(n_jobs: int = 80_000) -> List[Row]:
+    rows: List[Row] = []
+    b, c = table1_energy_samples(TABLE1_V100)
+    f = fit_linear(b, c)
+    beta, c0 = f.slope, f.intercept
+    for rho in RHO_GRID:
+        lam = rho / V100.alpha
+
+        def one(rho=rho, lam=lam):
+            s = simulate(lam, V100, n_jobs=n_jobs, seed=29)
+            return {
+                "rho": rho,
+                "EW_sim": s.mean_latency,
+                "EW_closed_form": float(phi(lam, V100.alpha, V100.tau0)),
+                "eta_sim": s.eta(beta, c0),
+                "eta_closed_form": float(eta_lower(lam, V100.alpha,
+                                                   V100.tau0, beta, c0)),
+            }
+        rows.append(timed(one, f"fig7/rho={rho}"))
+
+    def planner_point():
+        pl = Planner(V100, LinearEnergyModel(beta, c0))
+        lam = pl.max_rate_for_slo(20.0)      # 20 ms SLO
+        op = pl.operating_point(lam)
+        return {"slo_ms": 20.0, "lam_max": lam, "rho": op.rho,
+                "phi_at_op": op.latency_bound,
+                "eta_lb_at_op": op.eta_lower}
+    rows.append(timed(planner_point, "fig7/planner_20ms_slo"))
+    return rows

@@ -1,0 +1,40 @@
+"""Paper Fig. 9/10 analogue: measured batch processing times τ^[b] and
+throughputs μ^[b] of REAL JAX models (reduced assigned architectures on this
+host), with the linear fit quality — the validation of Assumption 4 on our
+own serving system (MultiStream-scenario analogue)."""
+from __future__ import annotations
+
+from typing import List
+
+from benchmarks.common import Row, timed
+from repro.configs import get_config, reduced
+from repro.core.calibrate import fit_service_model
+from repro.serving import InferenceEngine
+
+# one dense, one MoE, one SSM — the families with distinct τ^[b] shapes
+ARCHS = ["qwen1.5-0.5b", "olmoe-1b-7b", "mamba2-2.7b"]
+
+
+def run(samples: int = 3, max_batch: int = 32) -> List[Row]:
+    rows: List[Row] = []
+    for arch in ARCHS:
+        def one(arch=arch):
+            cfg = reduced(get_config(arch))
+            eng = InferenceEngine(cfg, workload="forward", seq_len=32,
+                                  max_batch=max_batch)
+            b, t = eng.calibrate(samples=samples)
+            model, r2 = fit_service_model(b, t)
+            mu = (b / t)
+            payload = {
+                "alpha_ms": model.alpha * 1e3,
+                "tau0_ms": model.tau0 * 1e3,
+                "r2": r2,
+                "mu_saturation_ratio": float(mu[-1] / mu[0]),
+                "throughput_monotone": bool((mu[1:] >= mu[:-1] * 0.85)
+                                            .all()),
+            }
+            for bb, tt in zip(b.astype(int), t):
+                payload[f"tau_b{bb}_ms"] = tt * 1e3
+            return payload
+        rows.append(timed(one, f"fig9/{arch}"))
+    return rows

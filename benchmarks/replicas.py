@@ -1,0 +1,30 @@
+"""Beyond-paper: consolidation vs replication under dynamic batching."""
+from __future__ import annotations
+
+from typing import List
+
+from benchmarks.common import Row, V100, timed
+from repro.core.replicas import compare, simulate_jsq
+
+
+def run(n_jobs: int = 60_000) -> List[Row]:
+    rows: List[Row] = []
+    k = 4
+    for rho in (0.2, 0.5, 0.8):
+        lam = rho / V100.alpha          # load relative to ONE replica's 1/α
+
+        def one(rho=rho, lam=lam):
+            c_flat = compare(lam, V100, k, tau0_scaling="flat")
+            c_scaled = compare(lam, V100, k, tau0_scaling="scaled")
+            jsq = simulate_jsq(lam, V100, k, n_jobs=n_jobs, seed=11)
+            return {
+                "rho_per_replica": rho / k,
+                "EW_k_replicas_split": c_flat.ew_split,
+                "EW_k_replicas_jsq": jsq,
+                "EW_consolidated_tp": c_flat.ew_consolidated,
+                "EW_consolidated_scaleup": c_scaled.ew_consolidated,
+                "consolidation_gain_tp": c_flat.consolidation_gain,
+                "jsq_vs_split_gain": c_flat.ew_split / jsq,
+            }
+        rows.append(timed(one, f"replicas/k={k}/rho={rho}"))
+    return rows

@@ -1,0 +1,180 @@
+"""Roofline analysis (deliverable g): three-term roofline per (arch × shape)
+derived from the compiled dry-run artifacts.
+
+    compute term    = HLO_FLOPs_per_device / peak_FLOP/s
+    memory term     = HLO_bytes_per_device / HBM_bw
+    collective term = collective_bytes_per_device / link_bw
+
+(cost_analysis() on the SPMD-partitioned module is per-device, so the
+/chips division in the spec formulas is already applied.)
+
+Hardware: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+
+Also reports MODEL_FLOPS = 6·N·D (train) / 2·N·D (inference, active params
+for MoE) and the usefulness ratio MODEL_FLOPS / HLO_FLOPs.
+"""
+from __future__ import annotations
+
+import json
+import os
+from dataclasses import dataclass
+from typing import Dict, List, Optional
+
+from benchmarks.common import Row, timed
+from repro.configs import SHAPES, get_config
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s
+LINK_BW = 50e9               # bytes/s per ICI link
+CHIPS = {"16x16": 256, "2x16x16": 512}
+
+RESULTS = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "results")
+
+
+@dataclass
+class RooflineRow:
+    arch: str
+    shape: str
+    mesh: str
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    bottleneck: str
+    model_flops_per_dev: float
+    hlo_flops_per_dev: float
+    useful_ratio: float
+    temp_bytes: int
+    step_s: float                # max of the three terms (roofline time)
+
+    def note(self) -> str:
+        return {
+            "compute": "increase arithmetic efficiency (larger tiles, "
+                       "fewer recomputed flops / remat)",
+            "memory": "cut HBM traffic (fusion, dtype, smaller dispatch "
+                      "buffers, weight-stationary layout)",
+            "collective": "reshard to reduce all-gather/all-reduce volume "
+                          "or overlap collectives with compute",
+        }[self.bottleneck]
+
+
+def model_flops_per_device(arch: str, shape_name: str, chips: int) -> float:
+    cfg = get_config(arch)
+    sh = SHAPES[shape_name]
+    pc = cfg.param_counts()
+    n = pc["active"]
+    if sh.kind == "train":
+        d = sh.global_batch * sh.seq_len
+        return 6.0 * n * d / chips
+    if sh.kind == "prefill":
+        d = sh.global_batch * sh.seq_len
+        return 2.0 * n * d / chips
+    # decode: one token per sequence (cache attention flops excluded from
+    # the 2·N·D convention; the ratio column surfaces that gap)
+    return 2.0 * n * sh.global_batch / chips
+
+
+def load_records(path: str) -> List[dict]:
+    recs = []
+    with open(path) as f:
+        for line in f:
+            recs.append(json.loads(line))
+    return recs
+
+
+def merged_records(mesh: str = "single") -> List[dict]:
+    """Join the full-depth (looped) memory dry-run with the probe-
+    extrapolated cost records: memory from the former (realistic while-loop
+    buffer reuse), flops/bytes/collectives from the latter (XLA's cost
+    analysis counts loop bodies once — see launch/dryrun.run_cost)."""
+    mem = {(r["arch"], r["shape"]): r
+           for r in load_records(os.path.join(RESULTS,
+                                              f"dryrun_{mesh}.jsonl"))
+           if r.get("ok")}
+    out = []
+    cost_path = os.path.join(RESULTS, f"cost_{mesh}.jsonl")
+    if not os.path.exists(cost_path):
+        return list(mem.values())
+    for r in load_records(cost_path):
+        if not r.get("ok"):
+            continue
+        key = (r["arch"], r["shape"])
+        if key in mem:
+            r = dict(r)
+            r["memory"] = mem[key].get("memory", {})
+        out.append(r)
+    return out
+
+
+def analyze(rec: dict) -> Optional[RooflineRow]:
+    if not rec.get("ok"):
+        return None
+    chips = CHIPS[rec["mesh"]]
+    comp = rec["flops"] / PEAK_FLOPS
+    mem = rec["bytes_accessed"] / HBM_BW
+    coll = sum(rec.get("collectives", {}).values()) / LINK_BW
+    terms = {"compute": comp, "memory": mem, "collective": coll}
+    bottleneck = max(terms, key=terms.get)
+    mf = model_flops_per_device(rec["arch"], rec["shape"], chips)
+    return RooflineRow(
+        arch=rec["arch"], shape=rec["shape"], mesh=rec["mesh"],
+        compute_s=comp, memory_s=mem, collective_s=coll,
+        bottleneck=bottleneck,
+        model_flops_per_dev=mf,
+        hlo_flops_per_dev=rec["flops"],
+        useful_ratio=mf / rec["flops"] if rec["flops"] else 0.0,
+        temp_bytes=rec.get("memory", {}).get("temp_size_in_bytes", 0),
+        step_s=max(terms.values()),
+    )
+
+
+def markdown_table(rows: List[RooflineRow]) -> str:
+    hdr = ("| arch | shape | compute s | memory s | collective s | "
+           "bottleneck | 6ND/HLO | temp GiB |\n"
+           "|---|---|---|---|---|---|---|---|\n")
+    out = [hdr]
+    for r in rows:
+        out.append(
+            f"| {r.arch} | {r.shape} | {r.compute_s:.3e} | "
+            f"{r.memory_s:.3e} | {r.collective_s:.3e} | {r.bottleneck} | "
+            f"{r.useful_ratio:.2f} | {r.temp_bytes / 2**30:.2f} |\n")
+    return "".join(out)
+
+
+def run() -> List[Row]:
+    """Benchmark-harness entry: summarize the baseline roofline table."""
+    rows: List[Row] = []
+    path = os.path.join(RESULTS, "dryrun_single.jsonl")
+    if not os.path.exists(path):
+        def missing():
+            return {"error": "run `python -m repro.launch.dryrun --all "
+                             "--mesh single --out results/dryrun_single"
+                             ".jsonl` first"}
+        return [timed(missing, "roofline/missing")]
+    recs = [analyze(r) for r in merged_records("single")]
+    recs = [r for r in recs if r is not None]
+    for r in sorted(recs, key=lambda x: (x.arch, x.shape)):
+        def one(r=r):
+            return {"compute_s": r.compute_s, "memory_s": r.memory_s,
+                    "collective_s": r.collective_s,
+                    "bottleneck": r.bottleneck,
+                    "useful_ratio": r.useful_ratio,
+                    "roofline_step_s": r.step_s}
+        rows.append(timed(one, f"roofline/{r.arch}/{r.shape}"))
+
+    def summary():
+        from collections import Counter
+        c = Counter(r.bottleneck for r in recs)
+        worst = min(recs, key=lambda r: r.useful_ratio)
+        slowest = max(recs, key=lambda r: r.step_s)
+        most_coll = max(recs, key=lambda r: (r.collective_s
+                                             / max(r.step_s, 1e-30)))
+        return {"n": len(recs), **{f"n_{k}": v for k, v in c.items()},
+                "worst_useful_ratio":
+                    f"{worst.arch}/{worst.shape}={worst.useful_ratio:.2f}",
+                "slowest_step":
+                    f"{slowest.arch}/{slowest.shape}={slowest.step_s:.3f}s",
+                "most_collective_bound":
+                    f"{most_coll.arch}/{most_coll.shape}"}
+    rows.append(timed(summary, "roofline/summary"))
+    return rows

@@ -1,0 +1,67 @@
+"""Benchmark harness entry point — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV (one row per measurement).
+
+  python -m benchmarks.run             # everything (≈ minutes)
+  python -m benchmarks.run --quick     # smaller sims, fewer served jobs
+  python -m benchmarks.run --only fig4 # single module
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    from benchmarks import (continuous, fig4_latency_bound,
+                            fig5_utilization, fig6_energy, fig7_tradeoff,
+                            fig8_finite_bmax, fig9_batch_times,
+                            fig11_served_latency, policies, replicas,
+                            roofline, table1_throughput, tails)
+
+    modules = {
+        "table1": lambda: table1_throughput.run(),
+        "fig4": lambda: fig4_latency_bound.run(
+            n_jobs=30_000 if args.quick else 150_000),
+        "fig5": lambda: fig5_utilization.run(),
+        "fig6": lambda: fig6_energy.run(
+            n_jobs=30_000 if args.quick else 100_000),
+        "fig7": lambda: fig7_tradeoff.run(
+            n_jobs=20_000 if args.quick else 80_000),
+        "fig8": lambda: fig8_finite_bmax.run(),
+        "fig9": lambda: fig9_batch_times.run(
+            samples=2 if args.quick else 3,
+            max_batch=16 if args.quick else 32),
+        "fig11": lambda: fig11_served_latency.run(
+            n_jobs=80 if args.quick else 200),
+        "policies": lambda: policies.run(
+            n_jobs=30_000 if args.quick else 100_000),
+        "continuous": lambda: continuous.run(
+            n_jobs=5_000 if args.quick else 20_000),
+        "tails": lambda: tails.run(
+            n_jobs=40_000 if args.quick else 150_000),
+        "replicas": lambda: replicas.run(
+            n_jobs=20_000 if args.quick else 60_000),
+        "roofline": lambda: roofline.run(),
+    }
+    if args.only:
+        modules = {k: v for k, v in modules.items() if k == args.only}
+        if not modules:
+            sys.exit(f"unknown module {args.only!r}")
+
+    print("name,us_per_call,derived")
+    for name, fn in modules.items():
+        try:
+            for row in fn():
+                print(row.csv(), flush=True)
+        except Exception as e:  # noqa: BLE001
+            print(f"{name}/ERROR,0,{type(e).__name__}: {e}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""Paper Table 1 / Fig. 2 / Fig. 3: throughput + energy characteristics.
+
+Reproduces the paper's calibration: τ^[b] and c^[b] linear fits on the
+published V100/P4 ResNet-50 measurements, with the paper's reported
+constants as the pass criteria (α=0.1438, τ0=1.8874 V100; α=0.5833,
+τ0=1.4284 P4; all four R² ≈ 0.9998+), and the μ^[b] = b/(αb+τ0) saturation
+curve (Eq. 26) against the measured throughputs.
+"""
+from __future__ import annotations
+
+from typing import List
+
+import numpy as np
+
+from benchmarks.common import Row, timed
+from repro.core.analytic import mu_b
+from repro.core.calibrate import (TABLE1_P4, TABLE1_V100, fit_linear,
+                                  table1_energy_samples,
+                                  table1_service_samples)
+
+
+def run() -> List[Row]:
+    rows: List[Row] = []
+    for label, table, paper_fit in (
+            ("v100_mixed", TABLE1_V100, (0.1438, 1.8874)),
+            ("p4_int8", TABLE1_P4, (0.5833, 1.4284))):
+        def service():
+            b, tau = table1_service_samples(table)
+            f = fit_linear(b, tau)
+            # predicted vs measured throughput (Fig. 3)
+            mu_pred = mu_b(b, f.slope, f.intercept)
+            mu_meas = table[:, 1] / 1e3                 # images/ms
+            rel = float(np.max(np.abs(mu_pred - mu_meas) / mu_meas))
+            return {
+                "alpha_ms": f.slope, "tau0_ms": f.intercept, "r2": f.r2,
+                "alpha_paper": paper_fit[0], "tau0_paper": paper_fit[1],
+                "alpha_abs_err": abs(f.slope - paper_fit[0]),
+                "mu_curve_max_rel_err": rel,
+                "mu_sat_per_ms": 1.0 / f.slope,
+            }
+        rows.append(timed(service, f"table1/{label}/service_fit"))
+
+        def energy():
+            b, c = table1_energy_samples(table)
+            f = fit_linear(b, c)
+            return {"beta_J": f.slope, "c0_J": f.intercept, "r2": f.r2}
+        rows.append(timed(energy, f"table1/{label}/energy_fit"))
+    return rows

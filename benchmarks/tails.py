@@ -1,0 +1,41 @@
+"""Beyond-paper: tail latency of the dynamic-batching queue.
+
+The paper bounds only the MEAN latency. Operators set SLOs on p95/p99.
+This benchmark measures the tail-to-mean ratios across load and tests a
+practical heuristic: p99(W) ≲ κ·φ(λ) with a load-independent κ — usable
+for SLO planning with the paper's closed form alone.
+"""
+from __future__ import annotations
+
+from typing import List
+
+import numpy as np
+
+from benchmarks.common import RHO_GRID, Row, V100, timed
+from repro.core.analytic import phi
+from repro.core.simulate import simulate
+
+
+def run(n_jobs: int = 150_000) -> List[Row]:
+    rows: List[Row] = []
+    kappas = []
+    for rho in RHO_GRID:
+        lam = rho / V100.alpha
+
+        def one(rho=rho, lam=lam):
+            s = simulate(lam, V100, n_jobs=n_jobs, seed=37,
+                         keep_latencies=True)
+            bound = float(phi(lam, V100.alpha, V100.tau0))
+            k99 = s.latency_p99 / bound
+            kappas.append(k99)
+            return {"rho": rho, "mean": s.mean_latency,
+                    "p95": s.latency_p95, "p99": s.latency_p99,
+                    "p99_over_mean": s.latency_p99 / s.mean_latency,
+                    "p99_over_phi": k99}
+        rows.append(timed(one, f"tails/rho={rho}"))
+
+    def summary():
+        return {"kappa99_max": max(kappas), "kappa99_min": min(kappas),
+                "heuristic": "p99 <= kappa_max * phi(lambda)"}
+    rows.append(timed(summary, "tails/summary"))
+    return rows

@@ -1,0 +1,42 @@
+"""Calibrate every assigned architecture family and plan SLO operating
+points — the paper's workflow as a fleet-management tool.
+
+For each (reduced) architecture: measure tau[b], fit (alpha, tau0), verify
+Assumption 4 (linearity) and Assumption 1(i) (monotone throughput), then
+report the max admissible Poisson rate for a set of latency SLOs.
+
+Run:  PYTHONPATH=src python examples/calibrate_and_plan.py [--families ...]
+"""
+import argparse
+
+from repro.configs import get_config, list_archs, reduced
+from repro.core import Planner, fit_service_model
+from repro.serving import InferenceEngine
+
+DEFAULT = ["qwen1.5-0.5b", "olmoe-1b-7b", "mamba2-2.7b", "whisper-medium"]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--archs", nargs="*", default=DEFAULT,
+                    choices=list_archs())
+    args = ap.parse_args()
+
+    print(f"{'arch':24s} {'alpha ms':>9} {'tau0 ms':>8} {'R^2':>7} "
+          f"{'mu_inf/s':>9} | lam_max @ SLO multiples of tau0: x3, x5, x10")
+    for arch in args.archs:
+        cfg = reduced(get_config(arch))
+        eng = InferenceEngine(cfg, workload="forward", seq_len=32,
+                              max_batch=16)
+        b, t = eng.calibrate(samples=3)
+        model, r2 = fit_service_model(b, t)
+        planner = Planner(model)
+        slos = [3 * model.tau0, 5 * model.tau0, 10 * model.tau0]
+        lams = [planner.max_rate_for_slo(s) for s in slos]
+        print(f"{arch:24s} {model.alpha * 1e3:9.3f} "
+              f"{model.tau0 * 1e3:8.2f} {r2:7.4f} {model.mu_inf:9.1f} | "
+              + ", ".join(f"{l:8.1f}/s" for l in lams))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""Quickstart: the paper's closed-form characterization in five minutes.
+
+1. Take the paper's measured GPU constants (Table 1 fits).
+2. Plot (print) the latency bound φ vs load, validated against the exact
+   queueing model.
+3. Ask the planner for the max sustainable rate under a latency SLO.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.core import (LinearServiceModel, Planner, phi, phi0, phi1,
+                        simulate, solve_markov)
+from repro.core.energy import LinearEnergyModel
+
+# Tesla V100 / ResNet-50, fitted in the paper (§3.3): times in ms
+V100 = LinearServiceModel(alpha=0.1438, tau0=1.8874)
+ENERGY = LinearEnergyModel(beta=0.0442, c0=0.155)     # Joules (Fig. 2 fit)
+
+
+def main() -> None:
+    print("== Dynamic-batching inference server: closed-form latency ==")
+    print(f"service law: tau[b] = {V100.alpha}*b + {V100.tau0} ms  "
+          f"(saturation throughput {V100.mu_inf:.2f} jobs/ms)")
+    print(f"{'rho':>5} {'lam/ms':>8} {'E[W] exact':>11} {'phi':>9} "
+          f"{'phi0':>9} {'phi1':>9} {'E[B]':>7} {'util':>6}")
+    for rho in (0.1, 0.3, 0.5, 0.7, 0.9):
+        lam = rho / V100.alpha
+        mk = solve_markov(lam, V100)
+        print(f"{rho:5.2f} {lam:8.3f} {mk.mean_latency:11.3f} "
+              f"{float(phi(lam, V100.alpha, V100.tau0)):9.3f} "
+              f"{float(phi0(lam, V100.alpha, V100.tau0)):9.3f} "
+              f"{float(phi1(lam, V100.alpha, V100.tau0)):9.3f} "
+              f"{mk.mean_batch:7.2f} {mk.utilization:6.3f}")
+
+    print("\n== simulation spot-check at rho=0.6 ==")
+    lam = 0.6 / V100.alpha
+    s = simulate(lam, V100, n_jobs=200_000, seed=0)
+    print(f"sim E[W]={s.mean_latency:.3f} ms, "
+          f"bound phi={float(phi(lam, V100.alpha, V100.tau0)):.3f} ms, "
+          f"E[B]={s.mean_batch:.1f}, p99={s.latency_p99:.2f} ms")
+
+    print("\n== SLO planning (Corollary 1: run as hot as the SLO allows) ==")
+    planner = Planner(V100, ENERGY)
+    for slo in (5.0, 10.0, 25.0):
+        lam_max = planner.max_rate_for_slo(slo)
+        op = planner.operating_point(lam_max * 0.999)
+        print(f"SLO {slo:5.1f} ms -> lambda_max={lam_max:7.3f}/ms "
+              f"(rho={op.rho:.3f}), eta >= {op.eta_lower:.2f} jobs/J, "
+              f"E[B] >= {op.mean_batch_lower:.1f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""End-to-end driver: serve a REAL model under Poisson load with dynamic
+batching, then compare the measured latency curve against the paper's
+closed-form bound at the engine's own calibrated constants (Fig. 11).
+
+Run:  PYTHONPATH=src python examples/serve_poisson.py [--arch qwen1.5-0.5b]
+"""
+import argparse
+
+from repro.configs import get_config, list_archs, reduced
+from repro.core import BatchAllWaiting, CappedBatch, phi
+from repro.serving import InferenceEngine
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen1.5-0.5b", choices=list_archs())
+    ap.add_argument("--jobs", type=int, default=300)
+    ap.add_argument("--max-batch", type=int, default=32)
+    ap.add_argument("--workload", default="forward",
+                    choices=["forward", "generate"])
+    args = ap.parse_args()
+
+    cfg = reduced(get_config(args.arch))
+    print(f"== serving {cfg.name} ({cfg.family}) with dynamic batching ==")
+    eng = InferenceEngine(cfg, workload=args.workload, seq_len=32,
+                          gen_tokens=4, max_batch=args.max_batch)
+
+    print("calibrating tau[b] (MultiStream analogue)...")
+    b, t = eng.calibrate(samples=3)
+    for bb, tt in zip(b.astype(int), t):
+        print(f"  b={bb:3d}  tau={tt * 1e3:8.2f} ms   "
+              f"mu={bb / tt:8.1f} jobs/s")
+    model, r2 = eng.fit_service_model(samples=3)
+    print(f"fit: alpha={model.alpha * 1e3:.3f} ms, "
+          f"tau0={model.tau0 * 1e3:.3f} ms, R^2={r2:.4f}, "
+          f"saturation {model.mu_inf:.0f} jobs/s")
+
+    print("\nPoisson load sweep (Server-scenario analogue):")
+    print(f"{'rho':>5} {'lam/s':>8} {'E[W] meas':>10} {'phi':>9} "
+          f"{'E[B]':>6} {'util':>6} {'p99':>9}")
+    for rho in (0.1, 0.25, 0.4, 0.55, 0.7):
+        lam = rho / model.alpha
+        res = eng.serve_poisson(lam, n_jobs=args.jobs,
+                                policy=BatchAllWaiting(), seed=7)
+        bound = float(phi(lam, model.alpha, model.tau0))
+        print(f"{rho:5.2f} {lam:8.1f} {res.mean_latency * 1e3:9.1f}ms "
+              f"{bound * 1e3:8.1f}ms {res.mean_batch:6.1f} "
+              f"{res.utilization:6.3f} {res.latency_p99 * 1e3:8.1f}ms")
+
+    print("\ncapped policy (b_max=8) at rho=0.55:")
+    lam = 0.55 / model.alpha
+    res = eng.serve_poisson(lam, n_jobs=args.jobs, policy=CappedBatch(8),
+                            seed=7)
+    print(f"  E[W]={res.mean_latency * 1e3:.1f} ms, "
+          f"E[B]={res.mean_batch:.1f}, util={res.utilization:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,7 @@
+"""repro: dynamic-batching inference serving with a closed-form latency
+characterization (Inoue, Perf. Eval. 2020) — JAX/Pallas multi-pod framework.
+
+Subpackages: core (the paper's theory), models (10 architectures),
+serving (dynamic + continuous batching engines), train, kernels (Pallas),
+configs, launch (meshes, sharding, dry-run).
+"""

@@ -1,0 +1,31 @@
+# Core library: the paper's contribution — closed-form characterization of
+# dynamic-batching inference servers — plus the exact references it is
+# validated against (event simulator, truncated-chain numerics).
+from repro.core.analytic import (  # noqa: F401
+    LinearServiceModel,
+    is_stable,
+    mean_batch_lower,
+    mu_b,
+    phi,
+    phi0,
+    phi1,
+    pi0_lower,
+    rho,
+    stability_limit,
+    utilization_upper,
+)
+from repro.core.calibrate import (  # noqa: F401
+    fit_energy_model,
+    fit_linear,
+    fit_service_model,
+)
+from repro.core.energy import LinearEnergyModel, eta_given_EB, eta_lower  # noqa: F401
+from repro.core.markov import solve as solve_markov  # noqa: F401
+from repro.core.planner import Planner  # noqa: F401
+from repro.core.policy import (  # noqa: F401
+    BatchAllWaiting,
+    BatchPolicy,
+    CappedBatch,
+    TimeoutBatch,
+)
+from repro.core.simulate import SimResult, simulate  # noqa: F401

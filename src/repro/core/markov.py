@@ -1,0 +1,118 @@
+"""Numerical (matrix-analytic style) baseline for the batching queue.
+
+The paper notes that with finite maximum batch size b_max, the system is a
+GI/G/1-type Markov chain that can be solved numerically ([20, §4.2]); with
+b_max = ∞ only the closed-form bound is available. This module implements
+the truncated-chain numerical solution for *deterministic linear* service
+times (the §3.3/§4 setting) and serves as the exact reference the
+closed-form φ is validated against (paper Fig. 4, Fig. 8).
+
+Embedded chain: L_n = number of waiting jobs at the n-th service completion,
+truncated at K. Transition from l:
+  l = 0 : idle Exp(λ); then a batch of 1 starts; L' ~ Poisson(λ·τ[1])
+  l > 0 : batch b = min(l, b_max) starts; L' = (l−b) + Poisson(λ·τ[b])
+E[W] follows by Markov-regenerative renewal reward + Little's law.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.core.analytic import LinearServiceModel
+
+__all__ = ["MarkovResult", "solve", "poisson_pmf_row"]
+
+
+def poisson_pmf_row(mean: float, kmax: int) -> np.ndarray:
+    """Poisson pmf p_0..p_kmax (log-space, final cell absorbs the tail)."""
+    if mean <= 0:
+        row = np.zeros(kmax + 1)
+        row[0] = 1.0
+        return row
+    ks = np.arange(1, kmax + 1, dtype=float)
+    logp = np.concatenate([[0.0], np.cumsum(np.log(mean / ks))]) - mean
+    p = np.exp(logp)
+    tail = max(0.0, 1.0 - p.sum())
+    p[-1] += tail
+    return p
+
+
+@dataclass
+class MarkovResult:
+    lam: float
+    mean_latency: float
+    mean_batch: float
+    batch_m2: float
+    utilization: float
+    mean_queue: float                # time-average jobs in system E[L]
+    pi: np.ndarray                   # stationary dist of waiting count L_n
+    truncation: int
+    tail_mass: float                 # stationary mass at the truncation cell
+
+
+def _default_truncation(lam: float, model: LinearServiceModel,
+                        b_max: float) -> int:
+    rho = lam * model.alpha
+    eb_est = max(1.0, lam * model.tau0 / max(1e-9, 1.0 - rho))
+    if not math.isinf(b_max):
+        eb_est = min(eb_est, float(b_max) * 4 + lam * model.tau0)
+    k = int(40 + 12 * eb_est + 6 * math.sqrt(eb_est + 1) / max(1e-3, 1 - rho))
+    return min(max(k, 128), 20000)
+
+
+def solve(lam: float, model: LinearServiceModel, *,
+          b_max: float = math.inf, truncation: int = 0) -> MarkovResult:
+    """Solve the embedded chain and return exact (up to truncation) metrics."""
+    K = truncation or _default_truncation(lam, model, b_max)
+    tau = model.tau
+
+    # transition matrix over waiting count l = 0..K
+    P = np.zeros((K + 1, K + 1))
+    # batch size served from state l (the NEXT batch)
+    b_of = np.minimum(np.maximum(np.arange(K + 1), 1),
+                      b_max if not math.isinf(b_max) else K + 1).astype(int)
+    # service time of that batch
+    t_of = tau(b_of)
+
+    for l in range(K + 1):
+        b = b_of[l]
+        carry = max(0, l - b)
+        row = poisson_pmf_row(lam * float(t_of[l]), K - carry)
+        P[l, carry:] = row
+
+    # stationary distribution: solve pi (P - I) = 0, sum(pi) = 1
+    A = (P - np.eye(K + 1)).T
+    A[-1, :] = 1.0
+    rhs = np.zeros(K + 1)
+    rhs[-1] = 1.0
+    pi = np.linalg.solve(A, rhs)
+    pi = np.clip(pi, 0.0, None)
+    pi /= pi.sum()
+
+    # Markov-regenerative renewal-reward:
+    # cycle from completion(l): idle (only l=0) + service of batch b_of[l]
+    idle = np.where(np.arange(K + 1) == 0, 1.0 / lam, 0.0)
+    cyc_len = idle + t_of
+    # ∫ jobs-in-system dt over the cycle:
+    #  during idle: 0 jobs; during service: (l or 1 for l=0) + Poisson drift
+    in_sys = np.maximum(np.arange(K + 1), 1).astype(float)
+    integral = in_sys * t_of + lam * t_of ** 2 / 2.0
+    mean_cycle = float(pi @ cyc_len)
+    e_l = float(pi @ integral) / mean_cycle
+    utilization = float(pi @ t_of) / mean_cycle
+
+    eb = float(pi @ b_of)
+    eb2 = float(pi @ (b_of.astype(float) ** 2))
+    return MarkovResult(
+        lam=lam,
+        mean_latency=e_l / lam,
+        mean_batch=eb,
+        batch_m2=eb2,
+        utilization=utilization,
+        mean_queue=e_l,
+        pi=pi,
+        truncation=K,
+        tail_mass=float(pi[-1]),
+    )

@@ -1,0 +1,118 @@
+"""Beyond-paper: replica economics under dynamic batching.
+
+Should a fleet run k independent dynamic-batching replicas (each taking a
+1/k split of the traffic) or one consolidated server k× as fast? The
+paper's model answers this cleanly:
+
+- k replicas, random split: each is the paper's queue at (λ/k, α, τ0)
+  ⇒ E[W] = φ(λ/k, α, τ0)-ish (exactly: the same queue at lower load).
+- one consolidated server: (λ, α/k, τ0') — per-sample marginal divides
+  by k, the fixed cost τ0' depends on how the speedup is obtained
+  (τ0/k for perfect scale-up; τ0 for pure tensor-parallel weight
+  streaming across k chips with unchanged launch overheads).
+
+Because batching efficiency grows with load (Theorem 1), consolidation
+wins twice: bigger batches AND lower marginal time. This module computes
+both sides exactly (markov solver) and in closed form (φ).
+
+Also provides join-shortest-queue (JSQ) simulation for k replicas — the
+strongest practical router — to show even JSQ cannot recover the
+consolidation gap at batching-friendly loads.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List
+
+import numpy as np
+
+from repro.core.analytic import LinearServiceModel, phi
+from repro.core.markov import solve
+
+__all__ = ["ReplicaComparison", "compare", "simulate_jsq"]
+
+
+@dataclass
+class ReplicaComparison:
+    lam: float
+    k: int
+    ew_split: float              # k replicas, random split (exact)
+    ew_consolidated: float       # one k×-fast server (exact)
+    ew_split_phi: float          # closed-form versions
+    ew_consolidated_phi: float
+    consolidation_gain: float    # split / consolidated
+
+
+def compare(lam: float, model: LinearServiceModel, k: int,
+            *, tau0_scaling: str = "flat") -> ReplicaComparison:
+    """tau0_scaling: 'flat' (consolidated keeps τ0 — tensor-parallel) or
+    'scaled' (τ0/k — perfect scale-up)."""
+    tau0_c = model.tau0 if tau0_scaling == "flat" else model.tau0 / k
+    cons = LinearServiceModel(model.alpha / k, tau0_c)
+    ew_split = solve(lam / k, model).mean_latency
+    ew_cons = solve(lam, cons).mean_latency
+    return ReplicaComparison(
+        lam=lam, k=k,
+        ew_split=ew_split,
+        ew_consolidated=ew_cons,
+        ew_split_phi=float(phi(lam / k, model.alpha, model.tau0)),
+        ew_consolidated_phi=float(phi(lam, cons.alpha, cons.tau0)),
+        consolidation_gain=ew_split / ew_cons,
+    )
+
+
+def simulate_jsq(lam: float, model: LinearServiceModel, k: int, *,
+                 n_jobs: int = 100_000, seed: int = 0) -> float:
+    """Join-shortest-queue over k dynamic-batching replicas: arrivals go to
+    the replica with the fewest waiting+in-service jobs. Returns mean
+    latency. Event-driven over (arrival, departure) events."""
+    rng = np.random.default_rng(seed)
+    arr = np.cumsum(rng.exponential(1.0 / lam, size=n_jobs))
+    # per-replica state
+    waiting: List[List[float]] = [[] for _ in range(k)]
+    busy_until = np.zeros(k)
+    in_service = np.zeros(k, dtype=int)
+    lat: List[float] = []
+    i = 0
+    now = 0.0
+
+    def start_service(r: int, t: float) -> None:
+        b = len(waiting[r])
+        if b == 0:
+            return
+        svc = float(model.tau(b))
+        depart = t + svc
+        for a in waiting[r]:
+            lat.append(depart - a)
+        waiting[r].clear()
+        in_service[r] = b
+        busy_until[r] = depart
+
+    while len(lat) < n_jobs:
+        # next event: arrival or earliest busy replica finishing
+        busy = busy_until > now
+        t_dep = busy_until[busy].min() if busy.any() else np.inf
+        t_arr = arr[i] if i < n_jobs else np.inf
+        if t_arr <= t_dep:
+            now = t_arr
+            # JSQ routing (waiting + in flight)
+            load = np.array([len(w) for w in waiting]) + in_service \
+                * (busy_until > now)
+            r = int(np.argmin(load))
+            waiting[r].append(now)
+            i += 1
+            if busy_until[r] <= now:
+                start_service(r, now)
+        else:
+            now = t_dep
+            done = np.where((busy_until <= now + 1e-12)
+                            & (in_service > 0))[0]
+            for r in done:
+                in_service[r] = 0
+                if waiting[r]:
+                    start_service(r, now)
+        if i >= n_jobs and not (busy_until > now).any() \
+                and not any(waiting):
+            break
+
+    return float(np.mean(lat[:n_jobs]))

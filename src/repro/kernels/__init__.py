@@ -1,0 +1,10 @@
+# Pallas TPU kernels for the serving hot spots (the terms that dominate
+# tau^[b]): flash attention (prefill), flash-decode GQA (long-cache decode),
+# and the Mamba2 SSD chunked scan. Each kernel has a pure-jnp oracle in
+# ref.py and is validated against it in interpret mode (tests/test_kernels).
+from repro.kernels.ops import (  # noqa: F401
+    decode_attention_op,
+    flash_attention_op,
+    on_tpu,
+    ssd_scan_op,
+)

@@ -1,0 +1,34 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+``interpret`` defaults to True off-TPU so the same call sites work in CPU
+tests and on real hardware.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.decode_attention import decode_attention
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.ssd_scan import ssd_scan
+
+__all__ = ["flash_attention_op", "decode_attention_op", "ssd_scan_op",
+           "on_tpu"]
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def flash_attention_op(q, k, v, *, causal=True, window=0, bq=128, bk=128):
+    return flash_attention(q, k, v, causal=causal, window=window, bq=bq,
+                           bk=bk, interpret=not on_tpu())
+
+
+def decode_attention_op(q, k, v, lengths, *, window=0, bk=512):
+    return decode_attention(q, k, v, lengths, window=window, bk=bk,
+                            interpret=not on_tpu())
+
+
+def ssd_scan_op(x, dt, a, bmat, cmat, *, chunk=256):
+    return ssd_scan(x, dt, a, bmat, cmat, chunk=chunk,
+                    interpret=not on_tpu())

@@ -1,0 +1,70 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose references)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=0):
+    """q: (B,S,H,hd); k/v: (B,S,KV,hd) -> (B,S,H,hd). Naive masked SDPA."""
+    b, s, h, hd = q.shape
+    kv = k.shape[2]
+    g = h // kv
+    qf = q.astype(jnp.float32).reshape(b, s, kv, g, hd)
+    kf = k.astype(jnp.float32)
+    scores = jnp.einsum("bskgh,btkh->bskgt", qf, kf) * hd ** -0.5
+    pos = jnp.arange(s)
+    mask = jnp.ones((s, s), bool)
+    if causal:
+        mask &= pos[None, :] <= pos[:, None]
+    if window:
+        mask &= pos[:, None] - pos[None, :] < window
+    scores = jnp.where(mask[None, :, None, None, :], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bskgt,btkh->bskgh", p, v.astype(jnp.float32))
+    return out.reshape(b, s, h, hd).astype(q.dtype)
+
+
+def decode_attention_ref(q, k, v, lengths, *, window=0):
+    """q: (B,H,hd); k/v: (B,S,KV,hd); lengths: (B,) -> (B,H,hd)."""
+    b, h, hd = q.shape
+    s, kv = k.shape[1], k.shape[2]
+    g = h // kv
+    qf = q.astype(jnp.float32).reshape(b, kv, g, hd)
+    kf = k.astype(jnp.float32)
+    scores = jnp.einsum("bkgh,btkh->bkgt", qf, kf) * hd ** -0.5
+    pos = jnp.arange(s)[None, :]
+    mask = pos <= lengths[:, None]
+    if window:
+        mask &= lengths[:, None] - pos < window
+    scores = jnp.where(mask[:, None, None, :], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgt,btkh->bkgh", p, v.astype(jnp.float32))
+    return out.reshape(b, h, hd).astype(q.dtype)
+
+
+def ssd_scan_ref(x, dt, a, bmat, cmat):
+    """Sequential (exact) SSM recurrence. Shapes as in ssd_scan."""
+    b, s, nh, hd = x.shape
+    g, ds = bmat.shape[2], bmat.shape[3]
+    rep = nh // g
+    bh = jnp.repeat(bmat.astype(jnp.float32), rep, axis=2)   # (b,s,nh,ds)
+    ch = jnp.repeat(cmat.astype(jnp.float32), rep, axis=2)
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+
+    def step(h, inp):
+        xt, dtt, bt, ct = inp                      # (b,nh,hd),(b,nh),...
+        decay = jnp.exp(dtt * a)[..., None, None]  # (b,nh,1,1)
+        h = h * decay + (dtt[..., None, None]
+                         * xt[..., :, None] * bt[..., None, :])
+        y = jnp.einsum("bhds,bhs->bhd", h, ct)
+        return h, y
+
+    h0 = jnp.zeros((b, nh, hd, ds), jnp.float32)
+    _, ys = jax.lax.scan(
+        step, h0, (xf.transpose(1, 0, 2, 3), dtf.transpose(1, 0, 2),
+                   bh.transpose(1, 0, 2, 3), ch.transpose(1, 0, 2, 3)))
+    return ys.transpose(1, 0, 2, 3).astype(x.dtype)

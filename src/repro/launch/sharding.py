@@ -1,0 +1,283 @@
+"""PartitionSpec generation for params, inputs and caches.
+
+Sharding policy (single-pod mesh ("data", "model"); multi-pod prepends
+"pod" which extends the batch — or, for long_500k, the cache-sequence —
+axis):
+
+- tensor-parallel over "model": attention heads (falling back to head_dim
+  when the head count doesn't divide the axis — qwen4b's 20 heads,
+  internvl2's 14, phi4's 24/kv8), FFN hidden, MoE experts (expert
+  parallelism), Mamba inner channels, vocab (falling back to d_model for
+  non-divisible vocabs: whisper, internvl2, mamba2),
+- data-parallel over "data" (+"pod"): the request/batch dimension; for
+  long_500k (batch=1) the KV-cache *sequence* dimension instead
+  (flash-decode style partial-softmax sharding; GSPMD inserts the merge).
+
+Every rule is guarded by divisibility — a dimension that doesn't divide its
+mesh axis is replicated rather than padded, so the dry-run measures honest
+layouts.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models.transformer import layer_specs, split_pattern
+
+MODEL_AXIS = "model"
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, (tuple, list)):
+        return int(np.prod([mesh.shape[a] for a in axis]))
+    return mesh.shape[axis]
+
+
+def _guard(spec: Tuple, shape: Tuple[int, ...], mesh: Mesh) -> P:
+    """Replicate any dimension whose size doesn't divide its mesh axis."""
+    fixed = []
+    for dim, axis in zip(shape, spec):
+        fixed.append(axis if axis is not None
+                     and dim % _axis_size(mesh, axis) == 0 else None)
+    return P(*fixed)
+
+
+# ---------------------------------------------------------------------------
+# parameter specs
+# ---------------------------------------------------------------------------
+
+def _block_param_spec(name: str, shape: Tuple[int, ...], kind: str,
+                      moe_flag: bool, in_shared: bool, stacked: int,
+                      mesh: Mesh) -> P:
+    """Spec for one block-level parameter (canonical, unstacked shape is
+    shape[stacked:]). Returns the full spec including stack dims."""
+    M = MODEL_AXIS
+    cshape = shape[stacked:]
+    nd = len(cshape)
+
+    def out(*axes):
+        return _guard((None,) * stacked + tuple(axes),
+                      (0,) * stacked + cshape, mesh)
+
+    # §Perf T1 (two refinements measured on qwen1.5-4b train_4k):
+    # - params shard over heads when divisible, else over head_dim — NEVER
+    #   replicated: a replicated projection makes GSPMD all-gather the
+    #   full-GLOBAL-batch activations to form its gradient (measured 20 GB
+    #   per layer).
+    # - the q/k/v ACTIVATIONS are additionally pad-shard-constrained over
+    #   heads (models/attention._shard_heads): with only head_dim-sharded
+    #   q/k, GSPMD all-reduced and replicated the (B,S,H,S) score tensors
+    #   (72s memory term).
+    if name in ("wq", "wk", "wv"):           # (d, H, hd)
+        if cshape[1] % mesh.shape[M] == 0:
+            return out(None, M, None)
+        return out(None, None, M)
+    if name == "wo":                          # (H, hd, d)
+        if cshape[0] % mesh.shape[M] == 0:
+            return out(M, None, None)
+        return out(None, M, None)
+    if name in ("bq", "bk", "bv"):            # (H, hd)
+        if cshape[0] % mesh.shape[M] == 0:
+            return out(M, None)
+        return out(None, M)
+    if name in ("w_uk", "w_uv"):              # (rank, H, hd) — MLA
+        return out(None, M, None)
+    if name in ("w_dkv", "w_kpe", "router"):
+        return out(None, None)
+    if name in ("w_gate", "w_up"):
+        if not in_shared and moe_flag and nd == 3:   # (E, d, f) routed
+            return out(M, None, None)
+        return out(None, M)                   # (d, f) dense / shared
+    if name == "w_down":
+        if not in_shared and moe_flag and nd == 3:   # (E, f, d)
+            return out(M, None, None)
+        return out(M, None)                   # (f, d)
+    if name == "b_up":
+        return out(M)
+    if name == "b_down":
+        return out(None)
+    # §Perf M1: split Mamba projections — every output dim below divides
+    # the model axis cleanly, so no sharded-axis slicing/resharding
+    if name in ("in_z", "in_x", "in_bc", "in_dt"):    # (d, ·)
+        return out(None, M)
+    if name == "out_proj":                    # (d_in, d)
+        return out(M, None)
+    if name in ("conv_wx", "conv_wbc"):       # (k, ·)
+        return out(None, M)
+    if name in ("conv_bx", "conv_bbc"):
+        return out(M)
+    if name in ("A_log", "D", "dt_bias", "norm"):
+        return out(M) if name == "norm" else out(None)
+    # norms / scales / everything else: replicated
+    return P(*((None,) * len(shape)))
+
+
+def param_specs(cfg: ModelConfig, params_shape: Any, mesh: Mesh) -> Any:
+    """PartitionSpec pytree matching `params_shape` (from eval_shape)."""
+    lead, p, r = split_pattern(cfg)
+    specs = layer_specs(cfg)
+    M = MODEL_AXIS
+
+    def spec_for(path, leaf) -> P:
+        keys = [getattr(k, "key", getattr(k, "idx", None)) for k in path]
+        name = keys[-1]
+        shape = leaf.shape
+        if keys[0] == "embed":
+            # §Perf T1c: untied input embeddings shard on d_model — a
+            # vocab-sharded table's gradient scatter makes GSPMD all-gather
+            # the full-GLOBAL-batch dx (measured 2×10 GB f32 per step on
+            # qwen1.5-4b train_4k). Tied tables stay vocab-sharded for the
+            # logits matmul; their bwd gather cost is the price of tying.
+            if not cfg.tie_embeddings:
+                return _guard((None, M), shape, mesh)
+            if shape[0] % mesh.shape[M] == 0:
+                return P(M, None)
+            # §Perf T4: tied + non-divisible vocab (internvl2 151655,
+            # whisper 51865): d-sharding makes the tied logits matmul
+            # contract a sharded axis — GSPMD all-reduces (B,S,V) f32
+            # (measured 13s collective term on internvl2 train_4k).
+            # Replicating the small table keeps logits local.
+            return P(None, None)
+        if keys[0] == "pos_embed":
+            return P(None, None)
+        if keys[0] == "unembed":
+            if shape[1] % mesh.shape[M] == 0:
+                return P(None, M)
+            return _guard((M, None), shape, mesh)
+        if keys[0] == "norm_f":
+            return P(None)
+        if keys[0] == "encoder":
+            if name in ("pos",):
+                return P(None, None)
+            if keys[1] == "stack":
+                return _block_param_spec(name, shape, "attn", False,
+                                         "shared" in keys, 1, mesh)
+            return P(*((None,) * len(shape)))
+        if keys[0] == "lead":
+            i = keys[1]
+            kind, mf = specs[i]
+            return _block_param_spec(name, shape, kind, mf,
+                                     "shared" in keys, 0, mesh)
+        if keys[0] == "stack":
+            j = keys[1]
+            kind, mf = specs[lead + j]
+            return _block_param_spec(name, shape, kind, mf,
+                                     "shared" in keys, 1, mesh)
+        return P(*((None,) * len(shape)))
+
+    return jax.tree_util.tree_map_with_path(spec_for, params_shape)
+
+
+# ---------------------------------------------------------------------------
+# input / cache specs
+# ---------------------------------------------------------------------------
+
+def batch_axes(mesh: Mesh) -> Tuple:
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def input_spec_tree(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                    inputs: Dict[str, Any]) -> Dict[str, Any]:
+    """Specs for the abstract inputs from models.registry.input_specs."""
+    B = batch_axes(mesh)
+    M = MODEL_AXIS
+    long_ctx = shape.kind == "decode" and shape.global_batch < \
+        _axis_size(mesh, B)
+
+    def token_spec(x):
+        return _guard((B, None), x.shape, mesh)
+
+    out: Dict[str, Any] = {}
+    for k, v in inputs.items():
+        if k in ("tokens", "labels"):
+            out[k] = _guard((B if not long_ctx else None, None), v.shape,
+                            mesh)
+        elif k in ("patch_embeds", "frames"):
+            out[k] = _guard((B, None, None), v.shape, mesh)
+        elif k == "lengths":
+            out[k] = _guard((B if not long_ctx else None,), v.shape, mesh)
+        elif k == "cache":
+            out[k] = cache_specs(cfg, v, mesh, seq_axes=B if long_ctx
+                                 else None)
+        else:
+            out[k] = jax.tree.map(lambda x: P(*((None,) * x.ndim)), v)
+    return out
+
+
+def cache_specs(cfg: ModelConfig, cache_shape: Any, mesh: Mesh, *,
+                seq_axes: Optional[Tuple] = None) -> Any:
+    """Decode-cache layout (post §Perf iteration D1):
+
+    - batch over the data axes; the cache *sequence* over "model"
+      (flash-decode context parallelism: per-shard partial softmax, GSPMD
+      inserts the small LSE/output all-reduces). This keeps the KV cache
+      fully sharded even when kv-head counts don't divide the model axis
+      (qwen4b's 20, jamba's 8) — head-sharding it would replicate
+      (baseline measured 100.5 GiB/device on qwen1.5-4b decode_32k).
+    - long-context (batch < data axis): sequence over (data, model) both.
+    - SSM states have no sequence dim: heads over model.
+    """
+    B = batch_axes(mesh)
+    M = MODEL_AXIS
+    if seq_axes:                       # long_500k: batch can't fill 'data'
+        bspec = None
+        sspec = tuple(seq_axes) + (M,)
+    else:
+        bspec = B
+        sspec = M
+
+    def spec_for(path, leaf):
+        name = getattr(path[-1], "key", None)
+        shape = leaf.shape
+        # stacked caches have a leading repeats dim inside 'stack'
+        stacked = 1 if any(getattr(k, "key", None) == "stack"
+                           for k in path) else 0
+        pre = (None,) * stacked
+        if name in ("k", "v", "k_scale", "v_scale"):   # (B, S, KV, ·)
+            return _guard(pre + (bspec, sspec, None, None), shape, mesh)
+        if name in ("c_kv", "k_pe"):      # (B, S, rank)
+            return _guard(pre + (bspec, sspec, None), shape, mesh)
+        if name in ("cross_k", "cross_v"):  # (B, n_ctx, H, hd)
+            return _guard(pre + (bspec, None, M, None), shape, mesh)
+        if name in ("conv_x", "conv_bc"):  # (B, k, channels)
+            return _guard(pre + (bspec, None, M), shape, mesh)
+        if name == "ssm":                 # (B, nh, hd, ds)
+            return _guard(pre + (bspec, M, None, None), shape, mesh)
+        return P(*((None,) * len(shape)))
+
+    return jax.tree_util.tree_map_with_path(spec_for, cache_shape)
+
+
+def to_named(tree: Any, mesh: Mesh) -> Any:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def zero1_opt_specs(params_shape: Any, pspecs: Any, mesh: Mesh) -> Any:
+    """ZeRO-1: AdamW moments additionally shard over the 'data' axis on
+    the first dimension not already covered by a mesh axis (and divisible
+    by it). Grads are reduce-scattered over 'data' for the update and the
+    fresh params all-gathered back — optimizer state per device drops by
+    |data|× (jamba-52B: 25.8 → 1.6 GiB). Enable with REPRO_ZERO1=1."""
+    flat_p, tdef = jax.tree_util.tree_flatten(params_shape)
+    flat_s = tdef.flatten_up_to(pspecs)
+    dsize = mesh.shape["data"]
+
+    def add_data(leaf, spec):
+        axes = tuple(spec) + (None,) * (leaf.ndim - len(spec))
+        for i, (dim, ax) in enumerate(zip(leaf.shape, axes)):
+            if ax is None and dim % dsize == 0 and dim >= dsize:
+                new = list(axes)
+                new[i] = "data"
+                return P(*new)
+        return P(*axes)
+
+    return jax.tree_util.tree_unflatten(
+        tdef, [add_data(l, s) for l, s in zip(flat_p, flat_s)])

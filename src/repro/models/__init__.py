@@ -1,0 +1,7 @@
+from repro.models.registry import (  # noqa: F401
+    ModelBundle,
+    build,
+    decode_window,
+    input_specs,
+    token_len,
+)

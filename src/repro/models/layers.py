@@ -1,0 +1,103 @@
+"""Basic neural layers: norms, MLPs, embeddings.
+
+Pure-JAX (no flax): parameters are plain pytrees (nested dicts of
+jnp.ndarray); every layer is an ``init_*`` + ``apply_*`` function pair.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, jnp.ndarray]
+
+
+def _dtype(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32,
+            "float16": jnp.float16}[name]
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def init_norm(key, d: int, kind: str, dtype) -> Params:
+    p = {"scale": jnp.ones((d,), dtype=dtype)}
+    if kind == "layernorm":
+        p["bias"] = jnp.zeros((d,), dtype=dtype)
+    return p
+
+
+def apply_norm(p: Params, x: jnp.ndarray, kind: str,
+               eps: float = 1e-6) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(var + eps)
+    else:
+        mean = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mean) * jax.lax.rsqrt(var + eps)
+    y = y.astype(x.dtype) * p["scale"].astype(x.dtype)
+    if kind == "layernorm":
+        y = y + p["bias"].astype(x.dtype)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Dense / MLP
+# ---------------------------------------------------------------------------
+
+def _init_w(key, shape, dtype, scale: Optional[float] = None):
+    fan_in = shape[0]
+    scale = scale if scale is not None else fan_in ** -0.5
+    return (jax.random.normal(key, shape, dtype=jnp.float32)
+            * scale).astype(dtype)
+
+
+def init_mlp(key, d_model: int, d_ff: int, activation: str, dtype) -> Params:
+    ks = jax.random.split(key, 3)
+    if activation == "swiglu":
+        return {
+            "w_gate": _init_w(ks[0], (d_model, d_ff), dtype),
+            "w_up": _init_w(ks[1], (d_model, d_ff), dtype),
+            "w_down": _init_w(ks[2], (d_ff, d_model), dtype),
+        }
+    return {
+        "w_up": _init_w(ks[0], (d_model, d_ff), dtype),
+        "b_up": jnp.zeros((d_ff,), dtype=dtype),
+        "w_down": _init_w(ks[1], (d_ff, d_model), dtype),
+        "b_down": jnp.zeros((d_model,), dtype=dtype),
+    }
+
+
+def apply_mlp(p: Params, x: jnp.ndarray, activation: str) -> jnp.ndarray:
+    if activation == "swiglu":
+        g = jnp.einsum("...d,df->...f", x, p["w_gate"])
+        u = jnp.einsum("...d,df->...f", x, p["w_up"])
+        h = jax.nn.silu(g) * u
+        return jnp.einsum("...f,fd->...d", h, p["w_down"])
+    h = jnp.einsum("...d,df->...f", x, p["w_up"]) + p["b_up"]
+    h = jax.nn.gelu(h)
+    return jnp.einsum("...f,fd->...d", h, p["w_down"]) + p["b_down"]
+
+
+# ---------------------------------------------------------------------------
+# Embeddings
+# ---------------------------------------------------------------------------
+
+def init_embedding(key, vocab: int, d_model: int, dtype) -> jnp.ndarray:
+    return (jax.random.normal(key, (vocab, d_model), dtype=jnp.float32)
+            * 0.02).astype(dtype)
+
+
+def embed(table: jnp.ndarray, tokens: jnp.ndarray) -> jnp.ndarray:
+    return jnp.take(table, tokens, axis=0)
+
+
+def unembed(table_or_w: jnp.ndarray, x: jnp.ndarray,
+            tied: bool) -> jnp.ndarray:
+    if tied:
+        return jnp.einsum("...d,vd->...v", x, table_or_w)
+    return jnp.einsum("...d,dv->...v", x, table_or_w)

@@ -1,0 +1,236 @@
+"""Mamba2 / SSD (state-space duality) block — chunked scan + O(1) decode.
+
+Forward (train/prefill) uses the SSD chunked algorithm [arXiv:2405.21060]:
+intra-chunk work in the quadratic "dual attention" form (MXU-friendly
+matmuls), inter-chunk state carried by a lax.scan recurrence. Decode is the
+exact diagonal SSM recurrence: h <- exp(dt·A)·h + dt·(B ⊗ x), y = C·h + D·x.
+
+Cache layout: {"conv": (B, d_conv-1, conv_dim), "ssm": (B, nh, hd, ds)}.
+"""
+from __future__ import annotations
+
+import os
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec
+
+from repro.configs.base import SSMConfig
+from repro.models.layers import _init_w, apply_norm
+
+Params = Dict[str, jnp.ndarray]
+
+
+def _shard_dim(t: jnp.ndarray, dim: int) -> jnp.ndarray:
+    """§Perf M2: pin a head dimension to the model axis. The inter-chunk
+    scan carry otherwise gets REPLICATED across the model axis by GSPMD's
+    while-loop sharding choice — measured 3.8 GB of state all-gathers per
+    2 layers on mamba2-2.7b train_4k."""
+    axis = os.environ.get("REPRO_SHARD_HEADS_AXIS")
+    if not axis or t.shape[dim] % 16:
+        return t
+    u = PartitionSpec.UNCONSTRAINED
+    spec = [u] * t.ndim
+    spec[dim] = axis
+    return jax.lax.with_sharding_constraint(t, PartitionSpec(*spec))
+
+
+def conv_dim(d_model: int, s: SSMConfig) -> int:
+    return s.d_inner(d_model) + 2 * s.n_groups * s.d_state
+
+
+def init_mamba2(key, d_model: int, s: SSMConfig, dtype) -> Params:
+    """§Perf M1: the projections are SEPARATE parameters (z / x / BC / dt
+    and a split depthwise conv) instead of one fused in_proj — slicing a
+    model-axis-sharded fused projection at non-shard-aligned boundaries
+    made GSPMD all-gather the full activation (measured 4.9e11 B/device on
+    mamba2-2.7b train_4k)."""
+    d_in = s.d_inner(d_model)
+    nh = s.n_heads(d_model)
+    gs2 = 2 * s.n_groups * s.d_state
+    ks = jax.random.split(key, 7)
+    return {
+        "in_z": _init_w(ks[0], (d_model, d_in), dtype),
+        "in_x": _init_w(ks[1], (d_model, d_in), dtype),
+        "in_bc": _init_w(ks[2], (d_model, gs2), dtype),
+        "in_dt": _init_w(ks[3], (d_model, nh), dtype),
+        "conv_wx": (_init_w(ks[4], (s.d_conv, d_in), jnp.float32)
+                    .astype(dtype)),
+        "conv_bx": jnp.zeros((d_in,), dtype=dtype),
+        "conv_wbc": (_init_w(ks[5], (s.d_conv, gs2), jnp.float32)
+                     .astype(dtype)),
+        "conv_bbc": jnp.zeros((gs2,), dtype=dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh, dtype=jnp.float32)),
+        "D": jnp.ones((nh,), dtype=jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.linspace(1e-3, 1e-1, nh, dtype=jnp.float32))),
+        "norm": jnp.ones((d_in,), dtype=dtype),
+        "out_proj": _init_w(ks[6], (d_in, d_model), dtype),
+    }
+
+
+def _causal_conv(xbc: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray
+                 ) -> jnp.ndarray:
+    """Depthwise causal conv over time. xbc: (B,S,C), w: (K,C)."""
+    k = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros_like(xbc, dtype=jnp.float32)
+    for i in range(k):
+        out = out + (pad[:, i: i + xbc.shape[1], :].astype(jnp.float32)
+                     * w[i].astype(jnp.float32))
+    return jax.nn.silu(out + b.astype(jnp.float32)).astype(xbc.dtype)
+
+
+def _ssd_chunked(x, dt, A, B, C, s: SSMConfig):
+    """SSD chunked scan.
+
+    x: (b,S,nh,hd); dt: (b,S,nh) post-softplus; A: (nh,) negative;
+    B, C: (b,S,g,ds). Returns y (b,S,nh,hd) and final state (b,nh,hd,ds).
+    """
+    b, S0, nh, hd = x.shape
+    g, ds = B.shape[2], B.shape[3]
+    cs = s.chunk_size
+    pad = (-S0) % cs
+    if pad:
+        # identity steps: dt=0 => no decay, no input contribution
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    S = S0 + pad
+    nc = S // cs
+    rep = nh // g
+
+    def chunk(v):
+        return v.reshape((b, nc, cs) + v.shape[2:])
+
+    xc = chunk(x).astype(jnp.float32)
+    dtc = chunk(dt).astype(jnp.float32)              # (b,nc,cs,nh)
+    Bc = chunk(B).astype(jnp.float32)                # (b,nc,cs,g,ds)
+    Cc = chunk(C).astype(jnp.float32)
+
+    dA = dtc * A                                     # (b,nc,cs,nh)
+    cum = jnp.cumsum(dA, axis=2)                     # (b,nc,cs,nh)
+    total = cum[:, :, -1]                            # (b,nc,nh)
+
+    # ---- intra-chunk (dual quadratic form) ----
+    # L[i,j] = exp(cum_i - cum_j) for j <= i else 0            (b,nc,nh,cs,cs)
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]       # (b,nc,i,j,nh)
+    li = jnp.tril(jnp.ones((cs, cs), bool))
+    # mask BEFORE exp: exp of +large at masked (j>i) slots would otherwise
+    # poison gradients with inf·0
+    diff = jnp.where(li[None, None, :, :, None], diff, -jnp.inf)
+    L = jnp.exp(diff)
+    # scores[i,j] = C_i · B_j  (per group, broadcast over heads in group)
+    sc = jnp.einsum("bnigd,bnjgd->bnijg", Cc, Bc)              # (b,nc,i,j,g)
+    sc = jnp.repeat(sc, rep, axis=-1)                          # (b,nc,i,j,nh)
+    M = sc * L
+    y_intra = jnp.einsum("bnijh,bnjh,bnjhd->bnihd", M, dtc, xc)
+
+    # ---- chunk states ----
+    decay_to_end = jnp.exp(total[:, :, None, :] - cum)          # (b,nc,cs,nh)
+    Bh = jnp.repeat(Bc, rep, axis=3)                 # (b,nc,cs,nh,ds)
+    states = jnp.einsum("bnch,bnch,bnchs,bnchd->bnhds",
+                        dtc, decay_to_end, Bh, xc)
+    states = _shard_dim(states, 2)                   # §Perf M2
+
+    # ---- inter-chunk recurrence over nc ----
+    def step(h, inp):
+        st, tot = inp                                # (b,nh,hd,ds), (b,nh)
+        h_new = h * jnp.exp(tot)[:, :, None, None] + st
+        return h_new, h                              # emit state BEFORE chunk
+
+    h0 = _shard_dim(jnp.zeros((b, nh, hd, ds), jnp.float32), 1)
+    hT, h_prev = jax.lax.scan(
+        step, h0, (states.transpose(1, 0, 2, 3, 4),
+                   total.transpose(1, 0, 2)))
+    h_prev = _shard_dim(h_prev.transpose(1, 0, 2, 3, 4), 2)  # (b,nc,nh,hd,ds)
+
+    Ch = jnp.repeat(Cc, rep, axis=3)                  # (b,nc,cs,nh,ds)
+    y_inter = jnp.einsum("bnchs,bnhds,bnch->bnchd",
+                         Ch, h_prev, jnp.exp(cum))
+    y = (y_intra + y_inter).reshape(b, S, nh, hd)
+    return y[:, :S0], hT
+
+
+def mamba2_forward(p: Params, d_model: int, s: SSMConfig, x: jnp.ndarray
+                   ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """Full-sequence SSD. x: (B,S,d). Returns (y, cache_at_end)."""
+    b, S, _ = x.shape
+    d_in = s.d_inner(d_model)
+    nh = s.n_heads(d_model)
+    gs = s.n_groups * s.d_state
+    z = jnp.einsum("bsd,dk->bsk", x, p["in_z"])
+    xi = jnp.einsum("bsd,dk->bsk", x, p["in_x"])
+    bc = jnp.einsum("bsd,dk->bsk", x, p["in_bc"])
+    dt_raw = jnp.einsum("bsd,dk->bsk", x, p["in_dt"])
+    xc = _causal_conv(xi, p["conv_wx"], p["conv_bx"])
+    bcc = _causal_conv(bc, p["conv_wbc"], p["conv_bbc"])
+    xs = xc.reshape(b, S, nh, s.head_dim)
+    B = bcc[..., :gs].reshape(b, S, s.n_groups, s.d_state)
+    C = bcc[..., gs:].reshape(b, S, s.n_groups, s.d_state)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    y, hT = _ssd_chunked(xs, dt, A, B, C, s)
+    y = y + xs.astype(jnp.float32) * p["D"][:, None]
+    y = y.reshape(b, S, d_in).astype(x.dtype)
+    y = apply_norm({"scale": p["norm"]},
+                   y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype),
+                   "rmsnorm")
+    out = jnp.einsum("bsk,kd->bsd", y, p["out_proj"])
+    tail = x[:, -(s.d_conv - 1):]
+    cache = {
+        "conv_x": jnp.einsum("bsd,dk->bsk", tail, p["in_x"]),
+        "conv_bc": jnp.einsum("bsd,dk->bsk", tail, p["in_bc"]),
+        "ssm": hT,
+    }
+    return out, cache
+
+
+def mamba2_decode(p: Params, d_model: int, s: SSMConfig, x: jnp.ndarray,
+                  cache: Dict[str, jnp.ndarray]
+                  ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """Single-token recurrent step. x: (B,1,d)."""
+    b = x.shape[0]
+    d_in = s.d_inner(d_model)
+    nh = s.n_heads(d_model)
+    gs = s.n_groups * s.d_state
+    z = jnp.einsum("bsd,dk->bsk", x, p["in_z"])[:, 0]
+    xi_new = jnp.einsum("bsd,dk->bsk", x, p["in_x"])[:, 0]
+    bc_new = jnp.einsum("bsd,dk->bsk", x, p["in_bc"])[:, 0]
+    dt_raw = jnp.einsum("bsd,dk->bsk", x, p["in_dt"])[:, 0]
+
+    # conv over rolling windows
+    win_x = jnp.concatenate([cache["conv_x"], xi_new[:, None, :]], axis=1)
+    win_bc = jnp.concatenate([cache["conv_bc"], bc_new[:, None, :]], axis=1)
+
+    def dw_conv(win, w, bias):
+        o = jnp.sum(win.astype(jnp.float32)
+                    * w.astype(jnp.float32)[None], axis=1)
+        return jax.nn.silu(o + bias.astype(jnp.float32))
+
+    xbc = dw_conv(win_x, p["conv_wx"], p["conv_bx"])
+    bcc = dw_conv(win_bc, p["conv_wbc"], p["conv_bbc"])
+    new_conv_x = win_x[:, 1:]
+    new_conv_bc = win_bc[:, 1:]
+
+    xs = xbc.reshape(b, nh, s.head_dim)
+    B = bcc[..., :gs].reshape(b, s.n_groups, s.d_state)
+    C = bcc[..., gs:].reshape(b, s.n_groups, s.d_state)
+    rep = nh // s.n_groups
+    Bh = jnp.repeat(B, rep, axis=1)                   # (b,nh,ds)
+    Ch = jnp.repeat(C, rep, axis=1)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (b,nh)
+    A = -jnp.exp(p["A_log"])
+    h = cache["ssm"]
+    h = h * jnp.exp(dt * A)[:, :, None, None] \
+        + dt[:, :, None, None] * xs[:, :, :, None] * Bh[:, :, None, :]
+    y = jnp.einsum("bhds,bhs->bhd", h, Ch) + xs * p["D"][:, None]
+    y = y.reshape(b, d_in).astype(x.dtype)
+    y = apply_norm({"scale": p["norm"]},
+                   y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype),
+                   "rmsnorm")
+    out = jnp.einsum("bk,kd->bd", y, p["out_proj"])[:, None, :]
+    return out, {"conv_x": new_conv_x, "conv_bc": new_conv_bc, "ssm": h}

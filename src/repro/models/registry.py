@@ -1,0 +1,88 @@
+"""Model registry: config -> callable bundle, plus abstract input specs.
+
+``input_specs(cfg, shape)`` returns ShapeDtypeStruct stand-ins for every
+input of the step function selected by the shape kind — the dry-run lowers
+against these without allocating anything.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import transformer as tfm
+from repro.models.layers import _dtype
+
+Params = Dict[str, Any]
+
+
+@dataclass(frozen=True)
+class ModelBundle:
+    cfg: ModelConfig
+    init: Callable[..., Params]
+    forward: Callable[..., Any]
+    prefill: Callable[..., Any]
+    decode_step: Callable[..., Any]
+    init_cache: Callable[..., Params]
+
+
+def build(cfg: ModelConfig) -> ModelBundle:
+    return ModelBundle(
+        cfg=cfg,
+        init=lambda key: tfm.init_params(cfg, key),
+        forward=lambda params, batch, **kw: tfm.forward(cfg, params, batch,
+                                                        **kw),
+        prefill=lambda params, batch, cache_len, **kw: tfm.prefill(
+            cfg, params, batch, cache_len, **kw),
+        decode_step=lambda params, tokens, cache, lengths, **kw:
+            tfm.decode_step(cfg, params, tokens, cache, lengths, **kw),
+        init_cache=lambda batch, cache_len: tfm.init_cache(cfg, batch,
+                                                           cache_len),
+    )
+
+
+def token_len(cfg: ModelConfig, shape: ShapeConfig) -> int:
+    """Text-token length for full-sequence steps (VLM reserves patch slots,
+    enc-dec models keep the full length on the decoder side)."""
+    if cfg.family == "vlm" and cfg.encoder is not None:
+        return shape.seq_len - cfg.encoder.n_ctx
+    return shape.seq_len
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """Abstract inputs for the (arch, shape) step function."""
+    dt = _dtype(cfg.dtype)
+    b = shape.global_batch
+    i32 = jnp.int32
+    sds = jax.ShapeDtypeStruct
+    if shape.kind in ("train", "prefill"):
+        s = token_len(cfg, shape)
+        specs: Dict[str, Any] = {"tokens": sds((b, s), i32)}
+        if shape.kind == "train":
+            specs["labels"] = sds((b, s), i32)
+        if cfg.family == "vlm" and cfg.encoder is not None:
+            specs["patch_embeds"] = sds((b, cfg.encoder.n_ctx, cfg.d_model),
+                                        dt)
+        if cfg.family == "audio" and cfg.encoder is not None:
+            specs["frames"] = sds(
+                (b, cfg.encoder.n_ctx, cfg.encoder.d_model or cfg.d_model),
+                dt)
+        return specs
+    # decode: one token against a cache of length seq_len
+    cache = jax.eval_shape(lambda: tfm.init_cache(cfg, b, shape.seq_len))
+    return {
+        "tokens": sds((b, 1), i32),
+        "cache": cache,
+        "lengths": sds((b,), i32),
+    }
+
+
+def decode_window(cfg: ModelConfig, shape: ShapeConfig) -> int:
+    """Sliding window used for the long-context decode shape on attention
+    architectures (0 = full attention)."""
+    if shape.name == "long_500k" and cfg.has_attention():
+        return cfg.sliding_window
+    return 0

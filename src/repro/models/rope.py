@@ -1,0 +1,37 @@
+"""Rotary position embeddings (full and partial-rotary)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rope_freqs(head_dim: int, theta: float,
+               partial: float = 1.0) -> jnp.ndarray:
+    """Inverse frequencies for the rotary dims (rot_dim = head_dim*partial)."""
+    rot = int(head_dim * partial)
+    rot -= rot % 2
+    return 1.0 / (theta ** (jnp.arange(0, rot, 2, dtype=jnp.float32) / rot))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float,
+               partial: float = 1.0) -> jnp.ndarray:
+    """Apply RoPE.
+
+    x: (..., S, H, head_dim) — positions: broadcastable to (..., S).
+    Uses the half-split convention (rotate_half), matching Llama/Qwen.
+    """
+    head_dim = x.shape[-1]
+    inv = rope_freqs(head_dim, theta, partial)
+    rot = inv.shape[0] * 2
+    angles = positions[..., None].astype(jnp.float32) * inv  # (..., S, rot/2)
+    cos = jnp.cos(angles)[..., None, :]                      # (..., S, 1, r/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x_rot, x_pass = x[..., :rot], x[..., rot:]
+    x1, x2 = x_rot[..., : rot // 2], x_rot[..., rot // 2:]
+    xf1 = x1.astype(jnp.float32)
+    xf2 = x2.astype(jnp.float32)
+    out1 = xf1 * cos - xf2 * sin
+    out2 = xf2 * cos + xf1 * sin
+    out = jnp.concatenate([out1, out2], axis=-1).astype(x.dtype)
+    if x_pass.shape[-1]:
+        out = jnp.concatenate([out, x_pass], axis=-1)
+    return out

@@ -1,0 +1,5 @@
+from repro.serving.continuous import (  # noqa: F401
+    ContinuousEngine,
+    ContinuousServeResult,
+)
+from repro.serving.engine import InferenceEngine, ServeResult  # noqa: F401

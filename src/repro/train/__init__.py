@@ -1,0 +1,7 @@
+from repro.train.loop import (  # noqa: F401
+    cross_entropy,
+    loss_fn,
+    make_train_step,
+    train,
+)
+from repro.train.optimizer import AdamWConfig, AdamWState, init_state  # noqa: F401

@@ -1,0 +1,37 @@
+"""Pytree checkpointing to .npz (no external deps).
+
+Flattens (params, opt_state, step) with path-string keys; restores into the
+same treedef. Suitable for host-local checkpoints; on a real cluster each
+host writes its process-local shards.
+"""
+from __future__ import annotations
+
+import os
+from typing import Any, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten_with_paths(tree: Any):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    keys = ["/".join(str(p) for p in path) for path, _ in flat]
+    vals = [np.asarray(v) for _, v in flat]
+    return keys, vals, treedef
+
+
+def save(path: str, tree: Any) -> None:
+    keys, vals, _ = _flatten_with_paths(tree)
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    np.savez(path, **{k: v for k, v in zip(keys, vals)})
+
+
+def restore(path: str, like: Any) -> Any:
+    data = np.load(path, allow_pickle=False)
+    keys, vals, treedef = _flatten_with_paths(like)
+    leaves = []
+    for k, v in zip(keys, vals):
+        arr = data[k]
+        assert arr.shape == v.shape, (k, arr.shape, v.shape)
+        leaves.append(arr.astype(v.dtype))
+    return jax.tree.unflatten(jax.tree.structure(like), leaves)

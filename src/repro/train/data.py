@@ -1,0 +1,48 @@
+"""Synthetic token data pipeline: deterministic, shardable, packed.
+
+Generates a reproducible pseudo-corpus (Zipfian token stream with induced
+bigram structure so models have something learnable), packs it into
+fixed-length training sequences, and serves host-sharded batches.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Iterator
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class DataConfig:
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    zipf_a: float = 1.2
+
+
+class SyntheticCorpus:
+    """Zipf-distributed token stream with a deterministic bigram rule:
+    after token t, with prob .5 the next token is (t*7+3) % vocab — giving
+    a learnable structure so training loss visibly decreases."""
+
+    def __init__(self, cfg: DataConfig):
+        self.cfg = cfg
+        self.rng = np.random.default_rng(cfg.seed)
+
+    def _block(self, n: int) -> np.ndarray:
+        cfg = self.cfg
+        base = self.rng.zipf(cfg.zipf_a, size=n) % cfg.vocab_size
+        follow = (base * 7 + 3) % cfg.vocab_size
+        coin = self.rng.random(n) < 0.5
+        out = base.copy()
+        out[1:] = np.where(coin[1:], follow[:-1], base[1:])
+        return out.astype(np.int32)
+
+    def batches(self) -> Iterator[Dict[str, np.ndarray]]:
+        cfg = self.cfg
+        per = cfg.seq_len + 1
+        while True:
+            flat = self._block(cfg.global_batch * per)
+            seqs = flat.reshape(cfg.global_batch, per)
+            yield {"tokens": seqs[:, :-1], "labels": seqs[:, 1:]}

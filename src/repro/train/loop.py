@@ -1,0 +1,177 @@
+"""Training loop: loss, jitted train_step factory, simple driver.
+
+The train_step here is the same function the multi-pod dry-run lowers on the
+production mesh (launch/dryrun.py) — there is exactly one implementation.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer as tfm
+from repro.train.optimizer import (AdamWConfig, AdamWState, apply_updates,
+                                   init_state)
+
+Params = Any
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray,
+                  z_loss: float = 1e-4) -> jnp.ndarray:
+    """Token-mean softmax cross entropy with z-loss (f32 accumulation)."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    if z_loss:
+        nll = nll + z_loss * jnp.square(lse)
+    return jnp.mean(nll)
+
+
+CE_CHUNK = 512
+CE_CHUNK_THRESHOLD = 1 << 26     # S·V above which the chunked path kicks in
+
+
+def chunked_cross_entropy(cfg: ModelConfig, params: Params,
+                          hidden: jnp.ndarray, labels: jnp.ndarray,
+                          z_loss: float = 1e-4,
+                          chunk: int = 0) -> jnp.ndarray:
+    """§Perf P1: fused projection + cross entropy, scanned over sequence
+    chunks with rematerialization — the (B,S,V) logits tensor (f32!) never
+    exists; live working set is (B, chunk, V_shard). Exact same value and
+    gradients as the plain path (tests/test_train.py)."""
+    chunk = chunk or CE_CHUNK
+    b, s, _ = hidden.shape
+    n = s // chunk
+    hs = hidden.reshape(b, n, chunk, -1).transpose(1, 0, 2, 3)
+    ls = labels.reshape(b, n, chunk).transpose(1, 0, 2)
+
+    @jax.checkpoint
+    def body(tot, xs):
+        h, lab = xs
+        logits = tfm._logits(cfg, params, h).astype(jnp.float32)
+        lse = jax.scipy.special.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lab[..., None], axis=-1)[..., 0]
+        nll = lse - gold
+        if z_loss:
+            nll = nll + z_loss * jnp.square(lse)
+        return tot + jnp.sum(nll), None
+
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (hs, ls))
+    return total / (b * s)
+
+
+def loss_fn(cfg: ModelConfig, params: Params, batch: Dict[str, jnp.ndarray],
+            *, remat: bool = False) -> Tuple[jnp.ndarray,
+                                             Dict[str, jnp.ndarray]]:
+    labels = batch["labels"]
+    s = labels.shape[1]
+    chunked = (s % CE_CHUNK == 0
+               and s * cfg.vocab_size >= CE_CHUNK_THRESHOLD)
+    if chunked:
+        hidden, aux = tfm.forward_hidden(cfg, params, batch, remat=remat)
+        if hidden.shape[1] != s:        # VLM: drop patch positions
+            hidden = hidden[:, -s:]
+        ce = chunked_cross_entropy(cfg, params, hidden, labels)
+    else:
+        logits, aux = tfm.forward(cfg, params, batch, remat=remat)
+        if logits.shape[1] != s:
+            logits = logits[:, -s:]
+        ce = cross_entropy(logits, labels)
+    aux_w = cfg.moe.router_aux_weight if cfg.moe else 0.0
+    total = ce + aux_w * aux
+    return total, {"ce": ce, "aux": aux}
+
+
+def make_train_step(cfg: ModelConfig, opt: AdamWConfig, *,
+                    remat: bool = False, microbatches: int = 1):
+    """Returns train_step(params, opt_state, batch) -> (params, state,
+    metrics). Pure function of its inputs — jit/pjit it at the call site.
+
+    microbatches > 1 splits the batch dimension and accumulates gradients
+    with a lax.scan (gradient accumulation): peak activation memory drops
+    ~k×, arithmetic is unchanged up to fp reassociation — the standard
+    answer for combos whose per-device activations exceed HBM (jamba-52B
+    train_4k, see EXPERIMENTS.md §8)."""
+
+    grad_fn = jax.value_and_grad(
+        lambda p, b: loss_fn(cfg, p, b, remat=remat), has_aux=True)
+
+    def train_step(params: Params, opt_state: AdamWState,
+                   batch: Dict[str, jnp.ndarray]):
+        if microbatches > 1:
+            def split(x):
+                b = x.shape[0]
+                assert b % microbatches == 0, (b, microbatches)
+                return x.reshape((microbatches, b // microbatches)
+                                 + x.shape[1:])
+
+            mb = jax.tree.map(split, batch)
+
+            def acc(carry, mbi):
+                (loss, parts), grads = grad_fn(params, mbi)
+                g_acc, l_acc, a_acc = carry
+                g_acc = jax.tree.map(
+                    lambda a, g: a + g.astype(jnp.float32) / microbatches,
+                    g_acc, grads)
+                return ((g_acc, l_acc + loss / microbatches,
+                         a_acc + parts["aux"] / microbatches), None)
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss, aux), _ = jax.lax.scan(
+                acc, (zeros, jnp.zeros(()), jnp.zeros(())), mb)
+            parts = {"ce": loss, "aux": aux}
+        else:
+            (loss, parts), grads = grad_fn(params, batch)
+        params, opt_state, gnorm = apply_updates(opt, params, grads,
+                                                 opt_state)
+        metrics = {"loss": loss, "ce": parts["ce"], "aux": parts["aux"],
+                   "grad_norm": gnorm}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+@dataclass
+class TrainResult:
+    steps: int
+    first_loss: float
+    last_loss: float
+    losses: list
+
+
+def train(cfg: ModelConfig, *, steps: int = 50, seed: int = 0,
+          global_batch: int = 8, seq_len: int = 64,
+          opt: Optional[AdamWConfig] = None,
+          log_every: int = 10) -> TrainResult:
+    """Single-host training driver (used by examples and smoke tests)."""
+    from repro.train.data import DataConfig, SyntheticCorpus
+
+    opt = opt or AdamWConfig(total_steps=steps, warmup_steps=max(steps // 10,
+                                                                 1))
+    params = tfm.init_params(cfg, jax.random.PRNGKey(seed))
+    opt_state = init_state(params)
+    step_fn = jax.jit(make_train_step(cfg, opt))
+    data = SyntheticCorpus(DataConfig(vocab_size=cfg.vocab_size,
+                                      seq_len=seq_len,
+                                      global_batch=global_batch, seed=seed))
+    losses = []
+    for i, batch in zip(range(steps), data.batches()):
+        jb = {k: jnp.asarray(v) for k, v in batch.items()}
+        if cfg.family == "vlm" and cfg.encoder is not None:
+            jb["patch_embeds"] = jnp.zeros(
+                (global_batch, cfg.encoder.n_ctx, cfg.d_model), jnp.float32)
+        if cfg.family == "audio" and cfg.encoder is not None:
+            jb["frames"] = jnp.zeros(
+                (global_batch, cfg.encoder.n_ctx, cfg.d_model), jnp.float32)
+        params, opt_state, m = step_fn(params, opt_state, jb)
+        losses.append(float(m["loss"]))
+        if log_every and (i % log_every == 0 or i == steps - 1):
+            print(f"step {i:4d} loss {losses[-1]:.4f} "
+                  f"ce {float(m['ce']):.4f} gnorm {float(m['grad_norm']):.3f}")
+    return TrainResult(steps=steps, first_loss=losses[0],
+                       last_loss=losses[-1], losses=losses)

@@ -1,0 +1,132 @@
+"""Unit + property tests for the closed-form results (paper §3)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import analytic as an
+from repro.core.analytic import LinearServiceModel
+from repro.core.calibrate import (TABLE1_P4, TABLE1_V100, fit_linear,
+                                  fit_service_model, table1_energy_samples,
+                                  table1_service_samples)
+from repro.core.markov import solve
+from repro.core.planner import Planner
+
+V100 = LinearServiceModel(alpha=0.1438, tau0=1.8874)   # ms, paper §3.3
+P4 = LinearServiceModel(alpha=0.5833, tau0=1.4284)
+
+pos = st.floats(min_value=1e-3, max_value=50.0, allow_nan=False)
+loads = st.floats(min_value=0.01, max_value=0.98, allow_nan=False)
+
+
+class TestPaperFits:
+    """Reproduce the paper's own Table-1 calibration numbers."""
+
+    def test_v100_service_fit(self):
+        b, tau = table1_service_samples(TABLE1_V100)
+        f = fit_linear(b, tau)
+        assert f.slope == pytest.approx(0.1438, abs=2e-3)
+        assert f.intercept == pytest.approx(1.8874, abs=2e-2)
+        assert f.r2 > 0.9997         # paper: R² ≈ 0.99975
+
+    def test_p4_service_fit(self):
+        b, tau = table1_service_samples(TABLE1_P4)
+        f = fit_linear(b, tau)
+        assert f.slope == pytest.approx(0.5833, abs=2e-3)
+        assert f.intercept == pytest.approx(1.4284, abs=2e-2)
+        assert f.r2 > 0.9998         # paper: R² ≈ 0.99986
+
+    def test_energy_fit_linear(self):
+        for table, r2_paper in ((TABLE1_V100, 0.99978), (TABLE1_P4,
+                                                         0.99998)):
+            b, c = table1_energy_samples(table)
+            f = fit_linear(b, c)
+            assert f.r2 > r2_paper - 2e-4
+            assert f.slope > 0
+
+
+class TestClosedForm:
+    def test_phi_crossover(self):
+        """φ0 ≤ φ1 iff λ ≤ 1/(α+τ0) (Theorem 2, last claim)."""
+        a, t0 = 0.2, 1.5
+        lam_c = 1.0 / (a + t0)
+        for lam in np.linspace(0.01, 1 / a * 0.99, 97):
+            p0, p1 = float(an.phi0(lam, a, t0)), float(an.phi1(lam, a, t0))
+            if lam < lam_c - 1e-9:
+                assert p0 <= p1 + 1e-12, lam
+            elif lam > lam_c + 1e-9:
+                assert p1 <= p0 + 1e-12, lam
+
+    @given(alpha=pos, tau0=pos, rho=loads)
+    @settings(max_examples=200, deadline=None)
+    def test_bound_dominates_markov_exact(self, alpha, tau0, rho):
+        """Property: φ upper-bounds the exact (numerically solved) E[W]."""
+        lam = rho / alpha
+        m = LinearServiceModel(alpha, tau0)
+        # keep the truncation affordable
+        if lam * tau0 / (1 - rho) > 300:
+            return
+        exact = solve(lam, m).mean_latency
+        bound = float(an.phi(lam, alpha, tau0))
+        assert exact <= bound * (1 + 1e-6)
+
+    @given(alpha=pos, tau0=pos, rho=loads)
+    @settings(max_examples=100, deadline=None)
+    def test_phi_monotone_in_lambda(self, alpha, tau0, rho):
+        lam = rho / alpha
+        lam2 = min(lam * 1.05, 0.999 / alpha)
+        assert float(an.phi(lam, alpha, tau0)) <= \
+            float(an.phi(lam2, alpha, tau0)) + 1e-9
+
+    @given(alpha=pos, tau0=pos, rho=loads)
+    @settings(max_examples=100, deadline=None)
+    def test_lemma3_consistency(self, alpha, tau0, rho):
+        """Lemma 3 with Pr(A=0)∈[0,1] must give E[B²] ≥ E[B]² ≥ 1."""
+        lam = rho / alpha
+        for pa0 in (0.0, 0.3, 1.0):
+            eb, eb2 = an.batch_moments_given_pA0(lam, alpha, tau0, pa0)
+            assert eb > 0 and eb2 > 0
+
+    def test_lemma4_matches_theorem2_at_bounds(self):
+        """Substituting the π0 lower bounds into Lemma 4 gives φ0/φ1."""
+        a, t0 = 0.1438, 1.8874
+        for lam in np.linspace(0.05, 0.95 / a, 23):
+            w0 = an.mean_latency_given_pi0(lam, a, t0,
+                                           float(an.pi0_lower(lam, a, t0)))
+            w1 = an.mean_latency_given_pi0(lam, a, t0, 0.0)
+            assert float(w0) == pytest.approx(float(an.phi0(lam, a, t0))
+                                              if an.pi0_lower(lam, a, t0) > 0
+                                              else float(an.phi1(lam, a,
+                                                                 t0)),
+                                              rel=1e-9)
+            assert float(w1) == pytest.approx(float(an.phi1(lam, a, t0)),
+                                              rel=1e-9)
+
+    def test_stability(self):
+        assert an.is_stable(6.0, V100.alpha, V100.tau0)
+        assert not an.is_stable(7.1, V100.alpha, V100.tau0)   # 1/α ≈ 6.95
+        assert an.stability_limit(V100.alpha, V100.tau0, b_max=64) == \
+            pytest.approx(64 / (V100.alpha * 64 + V100.tau0))
+
+
+class TestPlanner:
+    def test_slo_inversion_roundtrip(self):
+        pl = Planner(V100)
+        for slo in (5.0, 10.0, 50.0):
+            lam = pl.max_rate_for_slo(slo)
+            assert lam > 0
+            assert float(an.phi(lam, V100.alpha, V100.tau0)) <= slo * 1.001
+            lam_hi = min(lam * 1.02, 0.9999 / V100.alpha)
+            if lam_hi > lam * 1.001:
+                assert float(an.phi(lam_hi, V100.alpha, V100.tau0)) > slo
+
+    def test_operating_point_fields(self):
+        pl = Planner(V100)
+        op = pl.operating_point(3.0)
+        assert 0 < op.rho < 1
+        assert op.latency_bound == pytest.approx(
+            min(op.latency_bound_phi0, op.latency_bound_phi1))
+        assert op.mean_batch_lower >= 1.0
+
+    def test_unstable_rejected(self):
+        with pytest.raises(ValueError):
+            Planner(V100).operating_point(10.0)

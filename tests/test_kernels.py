@@ -1,0 +1,158 @@
+"""Pallas kernel validation: shape/dtype sweeps vs pure-jnp oracles
+(interpret=True on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.decode_attention import decode_attention
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.ssd_scan import ssd_scan
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=2e-5, atol=2e-5)
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize("b,s,h,kv,hd", [
+        (1, 128, 2, 2, 32),     # MHA
+        (2, 256, 4, 2, 64),     # GQA 2:1
+        (1, 256, 8, 1, 64),     # MQA
+        (2, 128, 4, 4, 128),    # wide heads
+    ])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_causal_sweep(self, b, s, h, kv, hd, dtype):
+        ks = jax.random.split(KEY, 3)
+        q = jax.random.normal(ks[0], (b, s, h, hd), dtype)
+        k = jax.random.normal(ks[1], (b, s, kv, hd), dtype)
+        v = jax.random.normal(ks[2], (b, s, kv, hd), dtype)
+        out = flash_attention(q, k, v, causal=True, bq=64, bk=64,
+                              interpret=True)
+        want = ref.flash_attention_ref(q, k, v, causal=True)
+        np.testing.assert_allclose(
+            np.asarray(out, np.float32), np.asarray(want, np.float32),
+            **_tol(dtype))
+
+    @pytest.mark.parametrize("window", [16, 64, 100])
+    def test_sliding_window(self, window):
+        ks = jax.random.split(KEY, 3)
+        q = jax.random.normal(ks[0], (2, 256, 4, 32))
+        k = jax.random.normal(ks[1], (2, 256, 2, 32))
+        v = jax.random.normal(ks[2], (2, 256, 2, 32))
+        out = flash_attention(q, k, v, causal=True, window=window,
+                              bq=64, bk=64, interpret=True)
+        want = ref.flash_attention_ref(q, k, v, causal=True, window=window)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                                   rtol=2e-5, atol=2e-5)
+
+    def test_non_causal(self):
+        ks = jax.random.split(KEY, 3)
+        q = jax.random.normal(ks[0], (1, 128, 2, 32))
+        k = jax.random.normal(ks[1], (1, 128, 2, 32))
+        v = jax.random.normal(ks[2], (1, 128, 2, 32))
+        out = flash_attention(q, k, v, causal=False, bq=64, bk=64,
+                              interpret=True)
+        want = ref.flash_attention_ref(q, k, v, causal=False)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                                   rtol=2e-5, atol=2e-5)
+
+    @pytest.mark.parametrize("bq,bk", [(32, 32), (64, 128), (128, 64)])
+    def test_block_shape_invariance(self, bq, bk):
+        ks = jax.random.split(KEY, 3)
+        q = jax.random.normal(ks[0], (1, 256, 2, 32))
+        k = jax.random.normal(ks[1], (1, 256, 2, 32))
+        v = jax.random.normal(ks[2], (1, 256, 2, 32))
+        out = flash_attention(q, k, v, causal=True, bq=bq, bk=bk,
+                              interpret=True)
+        want = ref.flash_attention_ref(q, k, v, causal=True)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                                   rtol=2e-5, atol=2e-5)
+
+
+class TestDecodeAttention:
+    @pytest.mark.parametrize("b,s,h,kv,hd", [
+        (2, 256, 4, 2, 64),
+        (1, 512, 8, 8, 32),
+        (4, 128, 8, 2, 128),
+    ])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_sweep(self, b, s, h, kv, hd, dtype):
+        ks = jax.random.split(KEY, 4)
+        q = jax.random.normal(ks[0], (b, h, hd), dtype)
+        k = jax.random.normal(ks[1], (b, s, kv, hd), dtype)
+        v = jax.random.normal(ks[2], (b, s, kv, hd), dtype)
+        lengths = jax.random.randint(ks[3], (b,), 1, s)
+        out = decode_attention(q, k, v, lengths, bk=64, interpret=True)
+        want = ref.decode_attention_ref(q, k, v, lengths)
+        np.testing.assert_allclose(
+            np.asarray(out, np.float32), np.asarray(want, np.float32),
+            **_tol(dtype))
+
+    def test_window_and_ragged_lengths(self):
+        ks = jax.random.split(KEY, 3)
+        b, s = 3, 256
+        q = jax.random.normal(ks[0], (b, 4, 64))
+        k = jax.random.normal(ks[1], (b, s, 2, 64))
+        v = jax.random.normal(ks[2], (b, s, 2, 64))
+        lengths = jnp.array([5, 100, 255], jnp.int32)
+        out = decode_attention(q, k, v, lengths, window=32, bk=64,
+                               interpret=True)
+        want = ref.decode_attention_ref(q, k, v, lengths, window=32)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                                   rtol=2e-5, atol=2e-5)
+
+
+class TestSSDScan:
+    @pytest.mark.parametrize("b,s,nh,g,hd,ds", [
+        (1, 128, 2, 1, 32, 16),
+        (2, 256, 4, 2, 64, 16),
+        (1, 256, 8, 1, 32, 64),    # mamba2-style big state
+    ])
+    def test_sweep(self, b, s, nh, g, hd, ds):
+        ks = jax.random.split(KEY, 5)
+        x = jax.random.normal(ks[0], (b, s, nh, hd)) * 0.5
+        dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, nh)))
+        a = -jnp.exp(jax.random.normal(ks[2], (nh,)) * 0.3)
+        bm = jax.random.normal(ks[3], (b, s, g, ds)) * 0.3
+        cm = jax.random.normal(ks[4], (b, s, g, ds)) * 0.3
+        out = ssd_scan(x, dt, a, bm, cm, chunk=64, interpret=True)
+        want = ref.ssd_scan_ref(x, dt, a, bm, cm)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                                   rtol=2e-3, atol=2e-3)
+
+    @pytest.mark.parametrize("chunk", [32, 64, 128])
+    def test_chunk_invariance(self, chunk):
+        ks = jax.random.split(KEY, 5)
+        b, s, nh, g, hd, ds = 1, 128, 2, 1, 32, 16
+        x = jax.random.normal(ks[0], (b, s, nh, hd)) * 0.5
+        dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, nh)))
+        a = -jnp.exp(jax.random.normal(ks[2], (nh,)) * 0.3)
+        bm = jax.random.normal(ks[3], (b, s, g, ds)) * 0.3
+        cm = jax.random.normal(ks[4], (b, s, g, ds)) * 0.3
+        out = ssd_scan(x, dt, a, bm, cm, chunk=chunk, interpret=True)
+        want = ref.ssd_scan_ref(x, dt, a, bm, cm)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                                   rtol=2e-3, atol=2e-3)
+
+    def test_matches_model_ssd(self):
+        """The kernel agrees with the model's chunked jnp implementation."""
+        from repro.configs.base import SSMConfig
+        from repro.models.mamba2 import _ssd_chunked
+        ks = jax.random.split(KEY, 5)
+        b, s, nh, hd, ds = 1, 128, 2, 32, 16
+        scfg = SSMConfig(d_state=ds, head_dim=hd, n_groups=1, chunk_size=32)
+        x = jax.random.normal(ks[0], (b, s, nh, hd)) * 0.5
+        dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, nh)))
+        a = -jnp.exp(jax.random.normal(ks[2], (nh,)) * 0.3)
+        bm = jax.random.normal(ks[3], (b, s, 1, ds)) * 0.3
+        cm = jax.random.normal(ks[4], (b, s, 1, ds)) * 0.3
+        y_model, _ = _ssd_chunked(x, dt, a, bm, cm, scfg)
+        y_kernel = ssd_scan(x, dt, a, bm, cm, chunk=32, interpret=True)
+        np.testing.assert_allclose(np.asarray(y_kernel),
+                                   np.asarray(y_model),
+                                   rtol=2e-3, atol=2e-3)

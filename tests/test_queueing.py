@@ -1,0 +1,191 @@
+"""Simulation/Markov cross-validation of the paper's main claims."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import analytic as an
+from repro.core.analytic import LinearServiceModel
+from repro.core.energy import eta_from_batches, eta_given_EB, eta_lower
+from repro.core.markov import solve
+from repro.core.simulate import simulate
+from repro.core.stochastic import a_pmf, st_leq
+
+V100 = LinearServiceModel(alpha=0.1438, tau0=1.8874)
+
+
+class TestSimVsMarkov:
+    """The event simulator and the truncated-chain solver must agree —
+    two independent implementations of the same exact model."""
+
+    @pytest.mark.parametrize("rho", [0.2, 0.5, 0.8])
+    def test_mean_latency_agreement(self, rho):
+        lam = rho / V100.alpha
+        s = simulate(lam, V100, n_jobs=200_000, seed=7)
+        m = solve(lam, V100)
+        assert s.mean_latency == pytest.approx(m.mean_latency, rel=0.03)
+        assert s.mean_batch == pytest.approx(m.mean_batch, rel=0.05)
+        assert s.utilization == pytest.approx(m.utilization, abs=0.01)
+
+    @pytest.mark.parametrize("b_max", [4, 16, 64])
+    def test_finite_bmax_agreement(self, b_max):
+        lam = 0.6 * b_max / (V100.alpha * b_max + V100.tau0)
+        s = simulate(lam, V100, n_jobs=150_000, b_max=b_max, seed=3)
+        m = solve(lam, V100, b_max=b_max)
+        assert s.mean_latency == pytest.approx(m.mean_latency, rel=0.04)
+        assert s.mean_batch <= b_max and m.mean_batch <= b_max + 1e-9
+
+
+class TestTheorem2:
+    """E[W] ≤ φ = min(φ0, φ1), and the bound is tight (paper Fig. 4)."""
+
+    @pytest.mark.parametrize("rho", [0.1, 0.3, 0.5, 0.7, 0.9])
+    def test_bound_holds_and_tight(self, rho):
+        lam = rho / V100.alpha
+        m = solve(lam, V100)
+        bound = float(an.phi(lam, V100.alpha, V100.tau0))
+        assert m.mean_latency <= bound * (1 + 1e-9)
+        if rho >= 0.3:
+            # paper: φ1 nearly exact once utilization saturates
+            assert m.mean_latency == pytest.approx(bound, rel=0.02)
+
+    @pytest.mark.parametrize("gpu", [V100,
+                                     LinearServiceModel(0.5833, 1.4284)])
+    def test_bound_holds_p4_too(self, gpu):
+        for rho in (0.25, 0.6, 0.85):
+            lam = rho / gpu.alpha
+            m = solve(lam, gpu)
+            assert m.mean_latency <= float(
+                an.phi(lam, gpu.alpha, gpu.tau0)) * (1 + 1e-9)
+
+    def test_finite_bmax_approx(self):
+        """Fig. 8: for moderate load the infinite-b_max formula still
+        approximates the finite-b_max system."""
+        b_max = 64
+        lam = 0.5 / V100.alpha
+        m = solve(lam, V100, b_max=b_max)
+        assert m.mean_latency == pytest.approx(
+            float(an.phi(lam, V100.alpha, V100.tau0)), rel=0.05)
+
+    def test_utilization_saturates(self):
+        """Fig. 5: utilization ≈ 1 at moderate ρ (unlike M/D/1)."""
+        lam = 0.4 / V100.alpha
+        m = solve(lam, V100)
+        assert m.utilization > 0.99
+        assert m.utilization <= min(1.0, lam * (V100.alpha + V100.tau0))
+
+
+class TestTheorem1:
+    """Monotonicity: batch sizes and energy efficiency increase with λ."""
+
+    def test_st_order_of_A(self):
+        """(23)/(24): A^[b],λ stochastically increasing in b and in λ."""
+        kmax = 400
+        for dist in ("det", "exp"):
+            p_small = a_pmf(2.0, 4, V100, kmax, dist)
+            p_big = a_pmf(2.0, 16, V100, kmax, dist)
+            assert st_leq(p_small, p_big)
+            p_lo = a_pmf(1.0, 8, V100, kmax, dist)
+            p_hi = a_pmf(3.0, 8, V100, kmax, dist)
+            assert st_leq(p_lo, p_hi)
+
+    def test_batch_size_st_increasing_in_lambda(self):
+        """Theorem 1 on the solved chain: survival of B grows with λ."""
+        lams = [1.0, 2.0, 4.0, 6.0]
+        survs = []
+        K = 900
+        for lam in lams:
+            m = solve(lam, V100, truncation=K)
+            b_of = np.minimum(np.maximum(np.arange(K + 1), 1), K + 1)
+            pmf = np.zeros(K + 2)
+            for l, pl_ in enumerate(m.pi):
+                pmf[b_of[l]] += pl_
+            survs.append(pmf[::-1].cumsum()[::-1])
+        for lo, hi in zip(survs, survs[1:]):
+            assert np.all(lo <= hi + 1e-9)
+
+    def test_energy_efficiency_monotone(self):
+        """Corollary 1 on simulation: η non-decreasing in λ."""
+        beta, c0 = 0.05, 0.2
+        etas = []
+        for rho in (0.1, 0.3, 0.5, 0.7, 0.9):
+            s = simulate(rho / V100.alpha, V100, n_jobs=120_000, seed=11)
+            etas.append(s.eta(beta, c0))
+        assert all(b >= a - 1e-3 for a, b in zip(etas, etas[1:])), etas
+
+    def test_eta_lower_bound(self):
+        beta, c0 = 0.05, 0.2
+        for rho in (0.2, 0.5, 0.8):
+            lam = rho / V100.alpha
+            s = simulate(lam, V100, n_jobs=120_000, seed=5)
+            lb = float(eta_lower(lam, V100.alpha, V100.tau0, beta, c0))
+            assert s.eta(beta, c0) >= lb * (1 - 0.02)
+            # exact form (19) with simulated E[B]
+            assert s.eta(beta, c0) == pytest.approx(
+                float(eta_given_EB(s.mean_batch, beta, c0)), rel=0.02)
+
+
+class TestServiceDistributions:
+    """Example 1 families: the latency ordering H det ≤ gamma ≤ exp
+    (increasing variability ⇒ larger mean latency)."""
+
+    def test_variability_ordering(self):
+        lam = 0.5 / V100.alpha
+        w = {}
+        for dist in ("det", "gamma", "exp"):
+            s = simulate(lam, V100, n_jobs=150_000, dist=dist, cv=0.5,
+                         seed=13)
+            w[dist] = s.mean_latency
+        assert w["det"] < w["gamma"] < w["exp"]
+
+
+@given(rho=st.floats(0.05, 0.9), alpha=st.floats(0.05, 2.0),
+       tau0=st.floats(0.05, 5.0))
+@settings(max_examples=25, deadline=None)
+def test_property_sim_below_bound(rho, alpha, tau0):
+    """Property: simulated E[W] ≤ φ within statistical tolerance."""
+    m = LinearServiceModel(alpha, tau0)
+    lam = rho / alpha
+    if lam * tau0 / (1 - rho) > 200:   # keep runtime bounded
+        return
+    s = simulate(lam, m, n_jobs=60_000, seed=1)
+    assert s.mean_latency <= float(an.phi(lam, alpha, tau0)) * 1.08
+
+
+class TestLemmaIdentities:
+    """The paper's exact identities evaluated on the independently solved
+    chain — a strong cross-check of theory vs numerics."""
+
+    @pytest.mark.parametrize("rho", [0.2, 0.5, 0.8])
+    def test_lemma3_EB_identity(self, rho):
+        """Eq (31): E[B] = (λτ0 + Pr(A=0)) / (1 − λα), with Pr(A=0) taken
+        from the solved chain."""
+        from repro.core.markov import poisson_pmf_row
+        lam = rho / V100.alpha
+        m = solve(lam, V100)
+        K = m.truncation
+        b_of = np.minimum(np.maximum(np.arange(K + 1), 1), K + 1)
+        p_a0 = sum(pl * float(np.exp(-lam * V100.tau(int(b))))
+                   for pl, b in zip(m.pi, b_of))
+        eb_pred, eb2_pred = an.batch_moments_given_pA0(
+            lam, V100.alpha, V100.tau0, p_a0)
+        assert m.mean_batch == pytest.approx(eb_pred, rel=2e-3)
+        assert m.batch_m2 == pytest.approx(eb2_pred, rel=5e-3)
+
+    @pytest.mark.parametrize("rho", [0.2, 0.5, 0.8])
+    def test_lemma2_EW_identity(self, rho):
+        """Eq (36): E[W] = α + τ0 + (1+2λα)(E[B²]−E[B])/(2λE[B]) evaluated
+        with the chain's own batch moments must equal the chain's E[W]."""
+        lam = rho / V100.alpha
+        m = solve(lam, V100)
+        ew = float(an.mean_latency_given_batch_moments(
+            lam, V100.alpha, V100.tau0, m.mean_batch, m.batch_m2))
+        assert m.mean_latency == pytest.approx(ew, rel=2e-3)
+
+    @pytest.mark.parametrize("rho", [0.2, 0.5, 0.8])
+    def test_eq38_utilization_identity(self, rho):
+        """Eq (38): 1 − π0 = λα + λτ0/E[B]."""
+        lam = rho / V100.alpha
+        m = solve(lam, V100)
+        util = float(an.utilization_given_EB(lam, V100.alpha, V100.tau0,
+                                             m.mean_batch))
+        assert m.utilization == pytest.approx(util, rel=2e-3)

@@ -1,0 +1,117 @@
+"""Sharding-spec unit tests + one real subprocess dry-run integration test."""
+import json
+import os
+import subprocess
+import sys
+from types import SimpleNamespace
+
+import jax
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import SHAPES, get_config
+from repro.launch import sharding as shd
+from repro.models import registry as reg
+from repro.models import transformer as tfm
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def mesh16() -> SimpleNamespace:
+    """Shape-only stand-in for the 16×16 production mesh (no devices)."""
+    return SimpleNamespace(shape={"data": 16, "model": 16},
+                           axis_names=("data", "model"))
+
+
+class TestGuards:
+    def test_divisible_kept(self):
+        m = mesh16()
+        assert shd._guard((None, "model"), (10, 32), m) == P(None, "model")
+
+    def test_non_divisible_replicated(self):
+        m = mesh16()
+        assert shd._guard((None, "model"), (10, 20), m) == P(None, None)
+
+    def test_tuple_axes(self):
+        m = SimpleNamespace(shape={"pod": 2, "data": 16, "model": 16},
+                            axis_names=("pod", "data", "model"))
+        assert shd._guard((("pod", "data"), None), (64, 7), m) == \
+            P(("pod", "data"), None)
+        assert shd._guard((("pod", "data"), None), (48, 7), m) == P(None,
+                                                                    None)
+
+
+class TestParamSpecs:
+    @pytest.mark.parametrize("arch", ["qwen1.5-4b", "olmoe-1b-7b",
+                                      "mamba2-2.7b",
+                                      "deepseek-v2-lite-16b"])
+    def test_specs_cover_all_params(self, arch):
+        cfg = get_config(arch)
+        shape = jax.eval_shape(
+            lambda: tfm.init_params(cfg, jax.random.PRNGKey(0)))
+        specs = shd.param_specs(cfg, shape, mesh16())
+        # same structure, every leaf a PartitionSpec with matching rank
+        flat_s, _ = jax.tree_util.tree_flatten(
+            specs, is_leaf=lambda x: isinstance(x, P))
+        flat_p = jax.tree.leaves(shape)
+        assert len(flat_s) == len(flat_p)
+        for sp, leaf in zip(flat_s, flat_p):
+            assert isinstance(sp, P)
+            assert len(sp) <= leaf.ndim
+
+    def test_qwen4b_head_fallback(self):
+        """20 heads don't divide 16 → head_dim sharding must kick in."""
+        cfg = get_config("qwen1.5-4b")
+        shape = jax.eval_shape(
+            lambda: tfm.init_params(cfg, jax.random.PRNGKey(0)))
+        specs = shd.param_specs(cfg, shape, mesh16())
+        wq = specs["stack"][0]["attn"]["wq"]
+        assert wq == P(None, None, None, "model")   # stacked + hd sharding
+
+    def test_moe_expert_parallel(self):
+        cfg = get_config("olmoe-1b-7b")
+        shape = jax.eval_shape(
+            lambda: tfm.init_params(cfg, jax.random.PRNGKey(0)))
+        specs = shd.param_specs(cfg, shape, mesh16())
+        wg = specs["stack"][0]["ffn"]["w_gate"]
+        assert wg == P(None, "model", None, None)   # (R, E, d, f): E→model
+
+
+class TestInputSpecs:
+    def test_decode_cache_fully_sharded(self):
+        """§Perf D1 layout: batch over data, cache sequence over model —
+        the KV cache is fully sharded regardless of kv-head divisibility."""
+        cfg = get_config("qwen1.5-0.5b")
+        inp = reg.input_specs(cfg, SHAPES["decode_32k"])
+        specs = shd.input_spec_tree(cfg, SHAPES["decode_32k"], mesh16(),
+                                    inp)
+        k = specs["cache"]["stack"][0]["k"]
+        # (stack, B, S, KV, hd): batch over data, sequence over model
+        assert k == P(None, "data", "model", None, None)
+        assert specs["tokens"] == P("data", None)
+
+    def test_long500k_sequence_sharded(self):
+        cfg = get_config("qwen1.5-0.5b")
+        inp = reg.input_specs(cfg, SHAPES["long_500k"])
+        specs = shd.input_spec_tree(cfg, SHAPES["long_500k"], mesh16(), inp)
+        k = specs["cache"]["stack"][0]["k"]
+        # (stack, B=1, S, KV, hd): batch replicated, sequence over BOTH
+        # axes (524288 / 256 = 2048 slots per device)
+        assert k[1] is None
+        assert k[2] == ("data", "model")
+
+
+@pytest.mark.slow
+def test_dryrun_subprocess_single_combo():
+    """Full integration: 512 fake devices, production mesh, lower+compile."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch",
+         "qwen1.5-0.5b", "--shape", "decode_32k", "--mesh", "both"],
+        capture_output=True, text=True, env=env, timeout=900, check=True)
+    lines = [json.loads(l) for l in out.stdout.strip().splitlines()]
+    assert len(lines) == 2
+    assert all(r["ok"] for r in lines)
+    meshes = {r["mesh"] for r in lines}
+    assert meshes == {"16x16", "2x16x16"}
