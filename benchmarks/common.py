@@ -35,3 +35,20 @@ def _fmt(v: Any) -> str:
     if isinstance(v, float):
         return f"{v:.6g}"
     return str(v)
+
+
+def timed_sweep(rows: List[Row], grid, name: str, *, n_batches: int,
+                seed: int, q_cap: int = 1024):
+    """Run one jit+vmap sweep dispatch over ``grid``, appending its
+    timing/size row to ``rows``; returns the SweepResult."""
+    from repro.core.sweep import sweep
+
+    out = {}
+
+    def dispatch():
+        out["r"] = sweep(grid, n_batches=n_batches, q_cap=q_cap, seed=seed)
+        return {"points": len(grid), "n_batches": n_batches,
+                "total_jobs": int(out["r"].n_jobs.sum()),
+                "dropped": int(out["r"].dropped.sum())}
+    rows.append(timed(dispatch, f"{name}/sweep_dispatch"))
+    return out["r"]

@@ -1,35 +1,42 @@
 """Paper Fig. 7: the energy-latency tradeoff — parametric (η, E[W]) curve
 with ρ as the parameter, and the closed-form approximation (Eqs. 40 + 43)
-used to pick an operating point."""
+used to pick an operating point.
+
+Simulated columns come from one vectorized sweep dispatch across the
+whole load grid; η is derived from the measured E[B] via Eq. 19.
+"""
 from __future__ import annotations
 
 from typing import List
 
-from benchmarks.common import RHO_GRID, Row, V100, timed
+from benchmarks.common import RHO_GRID, Row, V100, timed, timed_sweep
 from repro.core.analytic import phi
 from repro.core.calibrate import TABLE1_V100, fit_linear, \
     table1_energy_samples
-from repro.core.energy import eta_lower
+from repro.core.energy import LinearEnergyModel, eta_lower
 from repro.core.planner import Planner
-from repro.core.simulate import simulate
-from repro.core.energy import LinearEnergyModel
+from repro.core.sweep import SweepGrid
 
 
-def run(n_jobs: int = 80_000) -> List[Row]:
+def run(n_batches: int = 3000) -> List[Row]:
     rows: List[Row] = []
     b, c = table1_energy_samples(TABLE1_V100)
     f = fit_linear(b, c)
     beta, c0 = f.slope, f.intercept
-    for rho in RHO_GRID:
+
+    grid = SweepGrid.from_rhos(RHO_GRID, V100.alpha, V100.tau0)
+    r = timed_sweep(rows, grid, "fig7", n_batches=n_batches, seed=29)
+    etas = r.eta(beta, c0)
+
+    for i, rho in enumerate(RHO_GRID):
         lam = rho / V100.alpha
 
-        def one(rho=rho, lam=lam):
-            s = simulate(lam, V100, n_jobs=n_jobs, seed=29)
+        def one(rho=rho, lam=lam, i=i):
             return {
                 "rho": rho,
-                "EW_sim": s.mean_latency,
+                "EW_sim": float(r.mean_latency[i]),
                 "EW_closed_form": float(phi(lam, V100.alpha, V100.tau0)),
-                "eta_sim": s.eta(beta, c0),
+                "eta_sim": float(etas[i]),
                 "eta_closed_form": float(eta_lower(lam, V100.alpha,
                                                    V100.tau0, beta, c0)),
             }

@@ -1,30 +1,53 @@
 """Paper Fig. 8: finite maximum batch size b_max vs the infinite-b_max
-closed form φ — agreement away from each b_max's stability boundary."""
+closed form φ — agreement away from each b_max's stability boundary.
+
+Each (b_max, load-fraction) point is checked two ways: the exact
+truncated-chain numerics, and the vectorized sweep engine (all points in
+one dispatch) as an independent Monte Carlo cross-check.
+"""
 from __future__ import annotations
 
 from typing import List
 
-from benchmarks.common import Row, V100, timed
+from benchmarks.common import Row, V100, timed, timed_sweep
 from repro.core.analytic import phi, stability_limit
 from repro.core.markov import solve
+from repro.core.sweep import SweepGrid
+
+B_MAXES = (2, 8, 16, 64)
+FRACS = (0.3, 0.6, 0.8, 0.95)
 
 
-def run() -> List[Row]:
+def run(n_batches: int = 4000) -> List[Row]:
     rows: List[Row] = []
-    for b_max in (2, 8, 16, 64):
+    lams, bmaxes = [], []
+    for b_max in B_MAXES:
         lim = stability_limit(V100.alpha, V100.tau0, b_max)
-        for frac in (0.3, 0.6, 0.8, 0.95):
-            lam = frac * lim
+        for frac in FRACS:
+            lams.append(frac * lim)
+            bmaxes.append(b_max)
+    grid = SweepGrid.from_points(lams, V100.alpha, V100.tau0, b_max=bmaxes)
+    r = timed_sweep(rows, grid, "fig8", n_batches=n_batches, seed=31)
 
-            def one(b_max=b_max, lam=lam, frac=frac):
+    i = 0
+    for b_max in B_MAXES:
+        for frac in FRACS:
+            lam = lams[i]
+
+            def one(b_max=b_max, lam=lam, frac=frac, i=i):
                 mk = solve(lam, V100, b_max=b_max)
                 ph = float(phi(lam, V100.alpha, V100.tau0))
                 rel = abs(mk.mean_latency - ph) / mk.mean_latency
+                sim_rel = abs(float(r.mean_latency[i]) - mk.mean_latency) \
+                    / mk.mean_latency
                 return {"b_max": b_max, "frac_of_limit": frac,
                         "lam": lam, "EW_exact": mk.mean_latency,
+                        "EW_sweep": float(r.mean_latency[i]),
+                        "sweep_vs_exact": sim_rel,
                         "phi_inf": ph, "rel_dev": rel,
                         # moderate load ⇒ the ∞-b_max formula still applies
                         "approx_ok_moderate": (rel < 0.12
                                                if frac <= 0.6 else True)}
             rows.append(timed(one, f"fig8/bmax={b_max}/frac={frac}"))
+            i += 1
     return rows

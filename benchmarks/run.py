@@ -27,13 +27,14 @@ def main() -> None:
     modules = {
         "table1": lambda: table1_throughput.run(),
         "fig4": lambda: fig4_latency_bound.run(
-            n_jobs=30_000 if args.quick else 150_000),
+            n_batches=1_000 if args.quick else 4_000),
         "fig5": lambda: fig5_utilization.run(),
         "fig6": lambda: fig6_energy.run(
             n_jobs=30_000 if args.quick else 100_000),
         "fig7": lambda: fig7_tradeoff.run(
-            n_jobs=20_000 if args.quick else 80_000),
-        "fig8": lambda: fig8_finite_bmax.run(),
+            n_batches=800 if args.quick else 3_000),
+        "fig8": lambda: fig8_finite_bmax.run(
+            n_batches=1_000 if args.quick else 4_000),
         "fig9": lambda: fig9_batch_times.run(
             samples=2 if args.quick else 3,
             max_batch=16 if args.quick else 32),
@@ -44,7 +45,7 @@ def main() -> None:
         "continuous": lambda: continuous.run(
             n_jobs=5_000 if args.quick else 20_000),
         "tails": lambda: tails.run(
-            n_jobs=40_000 if args.quick else 150_000),
+            n_batches=1_500 if args.quick else 6_000),
         "replicas": lambda: replicas.run(
             n_jobs=20_000 if args.quick else 60_000),
         "roofline": lambda: roofline.run(),

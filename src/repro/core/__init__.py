@@ -20,6 +20,7 @@ from repro.core.calibrate import (  # noqa: F401
     fit_service_model,
 )
 from repro.core.energy import LinearEnergyModel, eta_given_EB, eta_lower  # noqa: F401
+from repro.core.evaluate import evaluate  # noqa: F401
 from repro.core.markov import solve as solve_markov  # noqa: F401
 from repro.core.planner import Planner  # noqa: F401
 from repro.core.policy import (  # noqa: F401
@@ -28,4 +29,11 @@ from repro.core.policy import (  # noqa: F401
     CappedBatch,
     TimeoutBatch,
 )
-from repro.core.simulate import SimResult, simulate  # noqa: F401
+# NOTE: the jit sweep kernel is deliberately NOT re-exported here — it
+# is the one piece that imports JAX.  Reach it via
+# `evaluate(grid, backend="sweep")` (deferred import) or explicitly via
+# `from repro.core.sweep import sweep`; plain `import repro.core` stays
+# JAX-free for analytic/scalar users.
+from repro.core.grid import SweepGrid, SweepResult  # noqa: F401
+from repro.core.results import SimResult  # noqa: F401
+from repro.core.simulate import simulate  # noqa: F401

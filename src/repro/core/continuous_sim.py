@@ -26,11 +26,12 @@ applies unchanged, because both disciplines still batch.
 """
 from __future__ import annotations
 
-import heapq
 from dataclasses import dataclass
 from typing import List, Optional
 
 import numpy as np
+
+from repro.core.results import SimResult
 
 __all__ = ["GenServiceModel", "ContinuousResult", "simulate_continuous",
            "simulate_static_generate"]
@@ -53,14 +54,18 @@ class GenServiceModel:
 
 
 @dataclass
-class ContinuousResult:
-    lam: float
-    n_jobs: int
-    mean_latency: float
-    latency_p99: float
-    mean_active: float           # mean batch size over decode steps
-    utilization: float
-    discipline: str
+class ContinuousResult(SimResult):
+    """Shared ``SimResult`` schema plus the scheduling discipline tag.
+
+    ``mean_batch`` holds the mean *active* batch size (over decode steps
+    for the continuous discipline, over request batches for static);
+    ``mean_active`` is a readable alias."""
+
+    discipline: str = ""
+
+    @property
+    def mean_active(self) -> float:
+        return self.mean_batch
 
 
 def _arrivals(lam: float, n: int, rng) -> np.ndarray:
@@ -121,11 +126,17 @@ def simulate_continuous(lam: float, model: GenServiceModel, *,
     lat = np.asarray(done[:n_jobs])
     w = int(len(lat) * 0.1)
     lat = lat[w:]
+    sizes = np.asarray(active_sizes, dtype=float)
     return ContinuousResult(
         lam=lam, n_jobs=len(lat), mean_latency=float(lat.mean()),
+        latency_p50=float(np.percentile(lat, 50)),
+        latency_p95=float(np.percentile(lat, 95)),
         latency_p99=float(np.percentile(lat, 99)),
-        mean_active=float(np.mean(active_sizes)) if active_sizes else 0.0,
+        mean_batch=float(sizes.mean()) if sizes.size else 0.0,
+        batch_m2=float((sizes ** 2).mean()) if sizes.size else 0.0,
+        n_batches=int(sizes.size),
         utilization=float(busy / now) if now else 0.0,
+        backend="sim",
         discipline="continuous")
 
 
@@ -169,9 +180,15 @@ def simulate_static_generate(lam: float, model: GenServiceModel, *,
     lat = np.asarray(done[:n_jobs])
     w = int(len(lat) * 0.1)
     lat = lat[w:]
+    sizes = np.asarray(batches, dtype=float)
     return ContinuousResult(
         lam=lam, n_jobs=len(lat), mean_latency=float(lat.mean()),
+        latency_p50=float(np.percentile(lat, 50)),
+        latency_p95=float(np.percentile(lat, 95)),
         latency_p99=float(np.percentile(lat, 99)),
-        mean_active=float(np.mean(batches)) if batches else 0.0,
+        mean_batch=float(sizes.mean()) if sizes.size else 0.0,
+        batch_m2=float((sizes ** 2).mean()) if sizes.size else 0.0,
+        n_batches=int(sizes.size),
         utilization=float(busy / now) if now else 0.0,
+        backend="sim",
         discipline="static")

@@ -1,0 +1,122 @@
+"""One entry point over every queue-evaluation backend.
+
+``evaluate(grid, backend=...)`` runs a ``SweepGrid`` of
+(λ, α, τ0, b_max, dist, policy) points through the chosen backend and
+returns one ``SimResult`` per point, so analytic, scalar-simulation,
+Markov-chain, and vectorized-sweep answers are interchangeable:
+
+- ``"analytic"``  — closed form only (Theorem 2 + Remark 5 + Eq. 38
+  companions).  ``mean_latency`` is the *upper bound* φ, ``mean_batch``
+  the Remark-5 lower bound, ``utilization`` the Lemma-5 upper bound.
+  Deterministic service, infinite b_max, no timeout (the paper's
+  setting) — other points raise.
+- ``"markov"``    — exact truncated-chain numerics
+  (``repro.core.markov.solve``); deterministic service, no timeout.
+- ``"sim"``       — the scalar NumPy event simulator, one point at a
+  time (slow, exact, the legacy reference); no timeout policy.
+- ``"sweep"``     — the jit+vmap JAX engine (``repro.core.sweep``), all
+  policies and service families, one device dispatch for the grid.
+
+Backend-specific keyword arguments pass through (``n_jobs``/``seed``
+for ``sim``, ``n_batches``/``q_cap``/… for ``sweep``, ``truncation``
+for ``markov``).
+"""
+from __future__ import annotations
+
+import math
+from typing import List
+
+import numpy as np
+
+from repro.core import analytic as an
+from repro.core.grid import DIST_CODE, DIST_NAME, SweepGrid
+from repro.core.results import SimResult
+
+__all__ = ["evaluate", "BACKENDS"]
+
+BACKENDS = ("analytic", "markov", "sim", "sweep")
+
+
+def _require(cond: bool, backend: str, what: str) -> None:
+    if not cond:
+        raise ValueError(f"backend {backend!r} supports only {what}")
+
+
+def _analytic(grid: SweepGrid) -> List[SimResult]:
+    _require(bool(np.all(grid.dist == DIST_CODE["det"])), "analytic",
+             "deterministic service (the paper's Assumption 4 setting)")
+    _require(bool(np.all(grid.b_max == 0)), "analytic", "infinite b_max")
+    _require(bool(np.all(grid.wait_max == 0.0)), "analytic",
+             "the no-wait policy")
+    out = []
+    for i in range(len(grid)):
+        lam = float(grid.lam[i])
+        a, t0 = float(grid.alpha[i]), float(grid.tau0[i])
+        if not an.is_stable(lam, a, t0):
+            raise ValueError(f"point {i}: unstable (λα = {lam * a:.3f})")
+        out.append(SimResult(
+            lam=lam, n_jobs=0,
+            mean_latency=float(an.phi(lam, a, t0)),
+            mean_batch=float(an.mean_batch_lower(lam, a, t0)),
+            batch_m2=float("nan"),
+            utilization=float(an.utilization_upper(lam, a, t0)),
+            backend="analytic",
+        ))
+    return out
+
+
+def _markov(grid: SweepGrid, **kw) -> List[SimResult]:
+    from repro.core.markov import solve
+    _require(bool(np.all(grid.dist == DIST_CODE["det"])), "markov",
+             "deterministic service")
+    _require(bool(np.all(grid.wait_max == 0.0)), "markov",
+             "the no-wait policy")
+    out = []
+    for i in range(len(grid)):
+        b_max = float(grid.b_max[i]) if grid.b_max[i] > 0 else math.inf
+        m = solve(float(grid.lam[i]),
+                  an.LinearServiceModel(float(grid.alpha[i]),
+                                        float(grid.tau0[i])),
+                  b_max=b_max, **kw)
+        out.append(SimResult(
+            lam=m.lam, n_jobs=0, mean_latency=m.mean_latency,
+            mean_batch=m.mean_batch, batch_m2=m.batch_m2,
+            utilization=m.utilization, backend="markov",
+        ))
+    return out
+
+
+def _sim(grid: SweepGrid, **kw) -> List[SimResult]:
+    from repro.core.simulate import simulate
+    _require(bool(np.all(grid.wait_max == 0.0)), "sim",
+             "the no-wait policy (use backend='sweep' for timeouts)")
+    out = []
+    for i in range(len(grid)):
+        b_max = float(grid.b_max[i]) if grid.b_max[i] > 0 else math.inf
+        out.append(simulate(
+            float(grid.lam[i]),
+            an.LinearServiceModel(float(grid.alpha[i]),
+                                  float(grid.tau0[i])),
+            b_max=b_max, dist=DIST_NAME[int(grid.dist[i])],
+            cv=float(grid.cv[i]), **kw))
+    return out
+
+
+def evaluate(grid: SweepGrid, backend: str = "sweep",
+             **kw) -> List[SimResult]:
+    """Evaluate every grid point with the chosen backend (see module
+    docstring); returns one unified ``SimResult`` per point."""
+    if backend == "analytic":
+        if kw:
+            raise ValueError("backend 'analytic' accepts no keyword "
+                             f"arguments (got {sorted(kw)})")
+        return _analytic(grid)
+    if backend == "markov":
+        return _markov(grid, **kw)
+    if backend == "sim":
+        return _sim(grid, **kw)
+    if backend == "sweep":
+        # deferred so that analytic/markov/sim use never imports JAX
+        from repro.core.sweep import sweep
+        return sweep(grid, **kw).to_results()
+    raise ValueError(f"unknown backend {backend!r}; pick from {BACKENDS}")

@@ -1,0 +1,215 @@
+"""Parameter grids and results for the vectorized sweep engine.
+
+jax-free on purpose: importing ``repro.core`` (or building grids and
+reading results) must not pull in JAX — only ``repro.core.sweep``, which
+holds the jit kernel, does.  See that module for the engine itself.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Iterable, List, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.results import SimResult
+
+__all__ = ["DIST_CODE", "DIST_NAME", "SweepGrid", "SweepResult",
+           "hist_edges"]
+
+DIST_CODE = {"det": 0, "exp": 1, "gamma": 2}
+DIST_NAME = {v: k for k, v in DIST_CODE.items()}
+
+# Histogram binning: latencies are binned by their float32 bit pattern —
+# the top _MANT mantissa bits plus the exponent, i.e. 2**_MANT log-spaced
+# bins per octave (piecewise-linear within an octave).  Positive float32
+# bits are monotone in value, so this is an exact monotone binning that
+# costs one shift+subtract per sample on device (no transcendentals in
+# the scan).  _EXP_MIN sets the smallest resolved latency, 2**_EXP_MIN;
+# with _MANT = 3 and 512 bins the histogram spans 2**-32 … 2**32 at
+# ~9% per-bin resolution (refined by in-bin interpolation).
+_MANT = 3
+_EXP_MIN = -32
+
+
+def hist_edges(n_bins: int) -> np.ndarray:
+    """The n_bins+1 latency values bounding the histogram bins."""
+    j = np.arange(n_bins + 1, dtype=np.int64)
+    bits = (j + ((127 + _EXP_MIN) << _MANT)) << (23 - _MANT)
+    return bits.astype(np.int32).view(np.float32).astype(np.float64)
+
+
+# ---------------------------------------------------------------------------
+# parameter grids
+# ---------------------------------------------------------------------------
+
+def _as_f32(x) -> np.ndarray:
+    return np.asarray(x, dtype=np.float32).reshape(-1)
+
+
+def _as_i32(x) -> np.ndarray:
+    return np.asarray(x, dtype=np.int32).reshape(-1)
+
+
+@dataclass(frozen=True)
+class SweepGrid:
+    """Struct-of-arrays parameter grid; one entry per simulated point.
+
+    ``b_max = 0`` encodes an infinite maximum batch size (batch-all-
+    waiting).  ``dist`` holds ``DIST_CODE`` integers; ``cv`` is only read
+    for the gamma family.  ``wait_max``/``wait_target`` encode the
+    timeout policy (0 ⇒ no artificial delay)."""
+
+    lam: np.ndarray
+    alpha: np.ndarray
+    tau0: np.ndarray
+    b_max: np.ndarray
+    dist: np.ndarray
+    cv: np.ndarray
+    wait_max: np.ndarray
+    wait_target: np.ndarray
+
+    def __len__(self) -> int:
+        return int(self.lam.shape[0])
+
+    @property
+    def rho(self) -> np.ndarray:
+        return self.lam * self.alpha
+
+    @classmethod
+    def from_points(cls, lam, alpha, tau0, *, b_max=0, dist="det", cv=0.5,
+                    wait_max=0.0, wait_target=0) -> "SweepGrid":
+        """Build a grid from parallel per-point sequences (broadcast
+        scalars to the common length)."""
+        dist_codes = ([DIST_CODE[d] if isinstance(d, str) else int(d)
+                       for d in np.atleast_1d(dist)]
+                      if not isinstance(dist, str) else [DIST_CODE[dist]])
+        arrays = [_as_f32(lam), _as_f32(alpha), _as_f32(tau0),
+                  _as_i32(b_max), _as_i32(dist_codes), _as_f32(cv),
+                  _as_f32(wait_max), _as_i32(wait_target)]
+        n = max(a.shape[0] for a in arrays)
+        arrays = [np.broadcast_to(a, (n,)).copy() if a.shape[0] == 1 else a
+                  for a in arrays]
+        if any(a.shape[0] != n for a in arrays):
+            raise ValueError("per-point sequences have mismatched lengths")
+        return cls(*arrays)
+
+    @classmethod
+    def from_product(cls, lams: Sequence[float], alphas: Sequence[float],
+                     tau0s: Sequence[float], *,
+                     b_maxes: Sequence[int] = (0,),
+                     dists: Sequence[str] = ("det",),
+                     cvs: Sequence[float] = (0.5,),
+                     wait_maxes: Sequence[float] = (0.0,),
+                     wait_targets: Sequence[int] = (0,)) -> "SweepGrid":
+        """Cartesian product of per-axis values, flattened to one grid."""
+        dist_codes = [DIST_CODE[d] if isinstance(d, str) else int(d)
+                      for d in dists]
+        mesh = np.meshgrid(_as_f32(lams), _as_f32(alphas), _as_f32(tau0s),
+                           _as_i32(b_maxes), _as_i32(dist_codes),
+                           _as_f32(cvs), _as_f32(wait_maxes),
+                           _as_i32(wait_targets), indexing="ij")
+        flat = [m.reshape(-1) for m in mesh]
+        return cls(flat[0].astype(np.float32), flat[1].astype(np.float32),
+                   flat[2].astype(np.float32), flat[3].astype(np.int32),
+                   flat[4].astype(np.int32), flat[5].astype(np.float32),
+                   flat[6].astype(np.float32), flat[7].astype(np.int32))
+
+    @classmethod
+    def from_rhos(cls, rhos: Sequence[float], alpha: float, tau0: float,
+                  **kw) -> "SweepGrid":
+        """Grid over normalized loads ρ = λα for one service model."""
+        lams = [r / alpha for r in rhos]
+        return cls.from_product(lams, [alpha], [tau0], **kw)
+
+    def concat(self, other: "SweepGrid") -> "SweepGrid":
+        return SweepGrid(*[np.concatenate([a, b]) for a, b in
+                           zip(self._arrays(), other._arrays())])
+
+    def _arrays(self) -> Tuple[np.ndarray, ...]:
+        return (self.lam, self.alpha, self.tau0, self.b_max, self.dist,
+                self.cv, self.wait_max, self.wait_target)
+
+
+# ---------------------------------------------------------------------------
+# results
+# ---------------------------------------------------------------------------
+
+@dataclass
+class SweepResult:
+    """Struct-of-arrays sweep output; ``point(i)``/``to_results()`` view it
+    through the backend-independent ``SimResult`` schema."""
+
+    grid: SweepGrid
+    mean_latency: np.ndarray
+    latency_p50: np.ndarray
+    latency_p95: np.ndarray
+    latency_p99: np.ndarray
+    mean_batch: np.ndarray
+    batch_m2: np.ndarray
+    mean_service: np.ndarray
+    utilization: np.ndarray
+    n_jobs: np.ndarray
+    n_batches: np.ndarray
+    max_queue: np.ndarray
+    dropped: np.ndarray                  # arrivals lost to capacity clamps
+    hist: np.ndarray = field(repr=False)           # (N, n_bins) counts
+
+    @property
+    def hist_bin_edges(self) -> np.ndarray:
+        """Latency values bounding the (shared) histogram bins."""
+        return hist_edges(self.hist.shape[1])
+
+    def __len__(self) -> int:
+        return len(self.grid)
+
+    @property
+    def mean_wait(self) -> np.ndarray:
+        return self.mean_latency - self.mean_service
+
+    def eta(self, beta: float, c0: float) -> np.ndarray:
+        from repro.core.energy import eta_given_EB
+        return eta_given_EB(self.mean_batch, beta, c0)
+
+    def point(self, i: int) -> SimResult:
+        return SimResult(
+            lam=float(self.grid.lam[i]),
+            n_jobs=int(self.n_jobs[i]),
+            mean_latency=float(self.mean_latency[i]),
+            mean_batch=float(self.mean_batch[i]),
+            batch_m2=float(self.batch_m2[i]),
+            utilization=float(self.utilization[i]),
+            mean_wait=float(self.mean_wait[i]),
+            mean_service=float(self.mean_service[i]),
+            latency_p50=float(self.latency_p50[i]),
+            latency_p95=float(self.latency_p95[i]),
+            latency_p99=float(self.latency_p99[i]),
+            n_batches=int(self.n_batches[i]),
+            backend="sweep",
+        )
+
+    def to_results(self) -> List[SimResult]:
+        return [self.point(i) for i in range(len(self))]
+
+
+
+def _hist_percentiles(hist: np.ndarray,
+                      qs: Iterable[float]) -> List[np.ndarray]:
+    """Percentiles from the per-point bit-binned histograms, with linear
+    in-bin interpolation (float32 bits are linear-in-value within a
+    bin, so value-space interpolation is the natural choice)."""
+    edges = hist_edges(hist.shape[1])
+    cum = np.cumsum(hist, axis=1)
+    total = cum[:, -1]
+    rows = np.arange(hist.shape[0])
+    out = []
+    for p in qs:
+        target = p / 100.0 * np.maximum(total, 1)
+        j = np.argmax(cum >= target[:, None], axis=1)
+        below = np.where(j > 0, cum[rows, np.maximum(j - 1, 0)], 0)
+        inbin = np.maximum(hist[rows, j], 1)
+        frac = np.clip((target - below) / inbin, 0.0, 1.0)
+        lat = edges[j] + frac * (edges[j + 1] - edges[j])
+        out.append(np.where(total > 0, lat, np.nan))
+    return out
+
+

@@ -1,0 +1,84 @@
+"""Common result schema shared by every queue-evaluation backend.
+
+One dataclass, ``SimResult``, is returned by
+
+- the scalar event simulator            (``repro.core.simulate.simulate``),
+- the truncated-chain numerics          (via ``repro.core.evaluate``),
+- the vectorized JAX sweep engine       (``repro.core.sweep.sweep``),
+- the continuous-batching simulators    (``repro.core.continuous_sim``), and
+- the closed-form analytic backend      (``repro.core.evaluate``),
+
+so callers can switch backends without touching their downstream code.
+Fields a backend cannot produce are NaN (floats) or None (arrays); e.g. the
+analytic backend has no percentiles and the Markov backend has no sampled
+latency array.
+
+Energy is derived, not stored: ``eta``/``energy_per_job`` evaluate the
+paper's Eq. (18)/(19) on the measured mean batch size via
+``repro.core.energy`` — identical to summing c^[b] = β·b + c0 over the
+processed batches, because the energy law is linear.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Optional
+
+import numpy as np
+
+__all__ = ["SimResult"]
+
+_NAN = float("nan")
+
+
+@dataclass
+class SimResult:
+    """Backend-independent summary of one (λ, service-model, policy) point."""
+
+    lam: float                            # arrival rate
+    n_jobs: int                           # jobs in the measured window
+    mean_latency: float                   # E[W]: arrival → batch departure
+    mean_batch: float                     # E[B] over processed batches
+    batch_m2: float                       # E[B²] over processed batches
+    utilization: float                    # busy-time fraction (1 − π0)
+    mean_wait: float = _NAN               # E[W] − per-job service part
+    mean_service: float = _NAN            # per-job service part
+    latency_p50: float = _NAN
+    latency_p95: float = _NAN
+    latency_p99: float = _NAN
+    n_batches: int = 0                    # batches in the measured window
+    backend: str = ""                     # "sim" | "sweep" | "markov" | ...
+    batch_sizes: Optional[np.ndarray] = field(default=None, repr=False)
+    latencies: Optional[np.ndarray] = field(default=None, repr=False)
+
+    # -- derived energy metrics (paper §3.2, via core/energy.py) ----------
+
+    def eta(self, beta: float, c0: float) -> float:
+        """Energy efficiency η = jobs per unit energy (Eq. 18/19).
+
+        Uses η = 1/(β + c0/E[B]), which equals the empirical
+        Σb / Σ(β·b + c0) because c^[b] is linear in b.
+        """
+        from repro.core.energy import eta_given_EB
+        return float(eta_given_EB(self.mean_batch, beta, c0))
+
+    def energy_per_job(self, beta: float, c0: float) -> float:
+        """Mean energy (Joules) per completed job: 1/η."""
+        return 1.0 / self.eta(beta, c0)
+
+    @property
+    def throughput(self) -> float:
+        """Mean departure rate = λ in steady state (sanity/reporting)."""
+        return self.lam
+
+    def check(self) -> "SimResult":
+        """Cheap internal-consistency assertions (used by tests).
+        NaN fields mean "not produced by this backend" and are skipped."""
+        assert self.mean_batch >= 1.0 - 1e-9
+        if not math.isnan(self.batch_m2):
+            assert self.batch_m2 >= self.mean_batch ** 2 * (1 - 1e-6)
+        assert 0.0 <= self.utilization <= 1.0 + 1e-9
+        if not math.isnan(self.latency_p50):
+            assert (self.latency_p50 <= self.latency_p95 + 1e-12
+                    <= self.latency_p99 + 2e-12)
+        return self

@@ -13,12 +13,12 @@ latencies are exact (arrival → batch departure).
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass, field
-from typing import List, Optional
+from typing import List
 
 import numpy as np
 
 from repro.core.analytic import LinearServiceModel
+from repro.core.results import SimResult
 
 __all__ = ["SimResult", "simulate", "ServiceTimeSampler"]
 
@@ -42,28 +42,6 @@ class ServiceTimeSampler:
             k = 1.0 / (self.cv ** 2)
             return float(rng.gamma(k, mean / k))
         raise ValueError(f"unknown dist {self.dist!r}")
-
-
-@dataclass
-class SimResult:
-    lam: float
-    n_jobs: int
-    mean_latency: float
-    mean_wait: float
-    mean_service: float
-    mean_batch: float
-    batch_m2: float                       # E[B²] over processed batches
-    utilization: float                    # busy-time fraction (1-π0)
-    batch_sizes: np.ndarray = field(repr=False)
-    latency_p50: float = 0.0
-    latency_p95: float = 0.0
-    latency_p99: float = 0.0
-    latencies: Optional[np.ndarray] = field(default=None, repr=False)
-
-    def eta(self, beta: float, c0: float) -> float:
-        """Empirical energy efficiency (Eq. 18)."""
-        b = self.batch_sizes.astype(float)
-        return float(b.sum() / (beta * b.sum() + c0 * b.size))
 
 
 def simulate(lam: float, model: LinearServiceModel, *,
@@ -170,5 +148,7 @@ def simulate(lam: float, model: LinearServiceModel, *,
         latency_p95=float(np.percentile(lat_w, 95)),
         latency_p99=float(np.percentile(lat_w, 99)),
         latencies=lat_w if keep_latencies else None,
+        n_batches=len(bs),
+        backend="sim",
     )
     return res

@@ -1,0 +1,62 @@
+"""Optional-`hypothesis` shim for the property tests.
+
+`hypothesis` is an optional dev dependency (see ``[project.optional-dependencies]
+test`` in pyproject.toml).  When it is installed, this module re-exports the
+real ``given``/``settings``/``strategies``.  When it is not, a minimal
+deterministic fallback runs each property test on a fixed pseudo-random sample
+of the strategy space, so the suite still exercises the properties (with less
+coverage) instead of failing at collection.
+
+Only the tiny strategy surface the suite uses is implemented: ``st.floats``
+with ``min_value``/``max_value``.
+"""
+from __future__ import annotations
+
+import functools
+from types import SimpleNamespace
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:                                    # pragma: no cover
+    import numpy as _np
+
+    HAVE_HYPOTHESIS = False
+    _FALLBACK_EXAMPLES = 20
+
+    class _Floats:
+        def __init__(self, min_value: float, max_value: float):
+            self.lo = float(min_value)
+            self.hi = float(max_value)
+
+        def sample(self, rng) -> float:
+            # log-uniform when the range spans decades, else uniform —
+            # crude stand-in for hypothesis' boundary-biased search
+            if self.lo > 0 and self.hi / self.lo > 100:
+                return float(_np.exp(rng.uniform(_np.log(self.lo),
+                                                 _np.log(self.hi))))
+            return float(rng.uniform(self.lo, self.hi))
+
+    def _floats(min_value=0.0, max_value=1.0, **_ignored):
+        return _Floats(min_value, max_value)
+
+    st = SimpleNamespace(floats=_floats)
+
+    def settings(**_ignored):
+        def deco(fn):
+            return fn
+        return deco
+
+    def given(**strategies):
+        def deco(fn):
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                rng = _np.random.default_rng(1234)
+                for _ in range(_FALLBACK_EXAMPLES):
+                    drawn = {name: s.sample(rng)
+                             for name, s in strategies.items()}
+                    fn(*args, **drawn, **kwargs)
+            # hide the strategy params from pytest's fixture resolution
+            del wrapper.__wrapped__
+            return wrapper
+        return deco

@@ -1,7 +1,7 @@
 """Simulation/Markov cross-validation of the paper's main claims."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import analytic as an
 from repro.core.analytic import LinearServiceModel

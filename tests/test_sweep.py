@@ -1,0 +1,210 @@
+"""Tests for the vectorized JAX sweep engine (repro.core.sweep) and the
+unified evaluate() entry point.
+
+Tolerances are statistical: the sweep and the scalar simulator use
+independent RNG streams, so agreement is within Monte Carlo error of the
+run lengths used here, not bit-exact.
+"""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import analytic as an
+from repro.core.analytic import LinearServiceModel
+from repro.core.evaluate import evaluate
+from repro.core.markov import solve
+from repro.core.simulate import simulate
+from repro.core.sweep import DIST_CODE, SweepGrid, sweep
+
+V100 = LinearServiceModel(alpha=0.1438, tau0=1.8874)
+RHOS = [0.2, 0.5, 0.8]
+
+
+@pytest.fixture(scope="module")
+def base_result():
+    """One shared det/∞-b_max sweep across loads (jit cache warm)."""
+    grid = SweepGrid.from_rhos(RHOS, V100.alpha, V100.tau0)
+    return grid, sweep(grid, n_batches=4000, q_cap=1024, seed=7)
+
+
+class TestAgainstScalarSim:
+    """vmap'd sweep ≈ the scalar NumPy simulator on a small grid."""
+
+    def test_mean_latency_and_batches(self, base_result):
+        grid, r = base_result
+        assert int(r.dropped.sum()) == 0
+        for i, rho in enumerate(RHOS):
+            lam = rho / V100.alpha
+            s = simulate(lam, V100, n_jobs=120_000, seed=3)
+            assert r.mean_latency[i] == pytest.approx(s.mean_latency,
+                                                      rel=0.05)
+            assert r.mean_batch[i] == pytest.approx(s.mean_batch, rel=0.05)
+            assert r.utilization[i] == pytest.approx(s.utilization,
+                                                     abs=0.02)
+
+    def test_finite_bmax(self):
+        for b_max in (4, 16):
+            lam = 0.6 * b_max / (V100.alpha * b_max + V100.tau0)
+            g = SweepGrid.from_points([lam], [V100.alpha], [V100.tau0],
+                                      b_max=[b_max])
+            r = sweep(g, n_batches=6000, seed=5)
+            s = simulate(lam, V100, n_jobs=120_000, b_max=b_max, seed=3)
+            assert r.mean_latency[0] == pytest.approx(s.mean_latency,
+                                                      rel=0.05)
+            assert r.mean_batch[0] <= b_max + 1e-9
+
+    def test_service_variability_ordering(self):
+        """Example 1 families: E[W] det < gamma(cv=.5) < exp."""
+        lam = 0.5 / V100.alpha
+        g = SweepGrid.from_product([lam], [V100.alpha], [V100.tau0],
+                                   dists=("det", "gamma", "exp"),
+                                   cvs=(0.5,))
+        r = sweep(g, n_batches=8000, q_cap=1024, seed=11)
+        det, gam, exp_ = r.mean_latency
+        assert det < gam < exp_
+
+
+class TestPaperBoundsOnGrid:
+    """Theorem 2 and Remark 5 hold across a (λ, α, τ0) grid."""
+
+    def test_theorem2_det_infinite_bmax(self):
+        grid = SweepGrid.from_product(
+            [1.0, 2.0, 3.0], [0.1438, 0.25], [0.75, 1.8874])
+        r = sweep(grid, n_batches=4000, q_cap=1024, seed=13)
+        assert int(r.dropped.sum()) == 0
+        bounds = np.array([an.phi(l, a, t) for l, a, t in
+                           zip(grid.lam, grid.alpha, grid.tau0)])
+        # the bound is tight at moderate/high load, so allow MC noise up
+        assert np.all(r.mean_latency <= bounds * 1.05)
+
+    def test_remark5_mean_batch_lower_bound(self):
+        grid = SweepGrid.from_product(
+            [1.0, 2.0, 3.0], [0.1438, 0.25], [0.75, 1.8874])
+        r = sweep(grid, n_batches=4000, q_cap=1024, seed=17)
+        lbs = np.array([an.mean_batch_lower(l, a, t) for l, a, t in
+                        zip(grid.lam, grid.alpha, grid.tau0)])
+        assert np.all(r.mean_batch >= lbs * 0.93)
+        assert np.all(r.mean_batch >= 1.0)
+
+    def test_matches_markov_exact(self, base_result):
+        _, r = base_result
+        for i, rho in enumerate(RHOS):
+            m = solve(rho / V100.alpha, V100)
+            assert r.mean_latency[i] == pytest.approx(m.mean_latency,
+                                                      rel=0.04)
+            assert r.batch_m2[i] == pytest.approx(m.batch_m2, rel=0.15)
+
+
+class TestPolicies:
+    def test_timeout_delay_hurts(self):
+        """Under the paper's model, delaying for batch accumulation
+        strictly increases mean latency vs batch-all-waiting."""
+        lam = 0.3 / V100.alpha
+        g = SweepGrid.from_points(
+            [lam, lam], [V100.alpha], [V100.tau0], b_max=[0, 64],
+            wait_max=[0.0, 5.0], wait_target=[0, 32])
+        r = sweep(g, n_batches=5000, seed=19)
+        assert r.mean_latency[1] > r.mean_latency[0] * 1.2
+
+    def test_cap_harmless_until_it_binds(self):
+        lam = 0.4 / V100.alpha
+        g = SweepGrid.from_points([lam, lam], [V100.alpha], [V100.tau0],
+                                  b_max=[0, 64])
+        r = sweep(g, n_batches=5000, seed=23)
+        assert r.mean_latency[1] == pytest.approx(r.mean_latency[0],
+                                                  rel=0.05)
+
+
+class TestResultSchema:
+    def test_percentiles_ordered_and_results_consistent(self, base_result):
+        _, r = base_result
+        assert np.all(r.latency_p50 <= r.latency_p95)
+        assert np.all(r.latency_p95 <= r.latency_p99)
+        assert np.all(r.latency_p50 <= r.mean_latency * 1.5)
+        for res in r.to_results():
+            res.check()
+            assert res.backend == "sweep"
+            assert res.n_jobs > 0
+
+    def test_percentiles_match_scalar(self, base_result):
+        """Histogram percentiles within a few % of exact sample ones."""
+        _, r = base_result
+        i = 1                                       # rho = 0.5
+        s = simulate(RHOS[i] / V100.alpha, V100, n_jobs=120_000, seed=3)
+        assert r.latency_p50[i] == pytest.approx(s.latency_p50, rel=0.06)
+        assert r.latency_p99[i] == pytest.approx(s.latency_p99, rel=0.08)
+
+    def test_energy_via_shared_schema(self, base_result):
+        """η from the sweep equals Eq. 19 on its measured E[B], and the
+        scalar simulator's η at the same point agrees."""
+        from repro.core.energy import eta_given_EB
+        _, r = base_result
+        beta, c0 = 0.05, 0.2
+        i = 2
+        s = simulate(RHOS[i] / V100.alpha, V100, n_jobs=120_000, seed=5)
+        eta_sweep = r.point(i).eta(beta, c0)
+        assert eta_sweep == pytest.approx(
+            float(eta_given_EB(r.mean_batch[i], beta, c0)), rel=1e-9)
+        assert eta_sweep == pytest.approx(s.eta(beta, c0), rel=0.03)
+
+
+class TestEvaluateEntryPoint:
+    def test_backends_agree(self):
+        grid = SweepGrid.from_rhos([0.3, 0.6], V100.alpha, V100.tau0)
+        mk = evaluate(grid, backend="markov")
+        sw = evaluate(grid, backend="sweep", n_batches=4000, seed=29)
+        anl = evaluate(grid, backend="analytic")
+        for m, s, a in zip(mk, sw, anl):
+            assert s.mean_latency == pytest.approx(m.mean_latency,
+                                                   rel=0.04)
+            assert m.mean_latency <= a.mean_latency * (1 + 1e-9)
+            assert {m.backend, s.backend, a.backend} == \
+                {"markov", "sweep", "analytic"}
+
+    def test_sim_backend_roundtrip(self):
+        grid = SweepGrid.from_rhos([0.4], V100.alpha, V100.tau0)
+        (s,) = evaluate(grid, backend="sim", n_jobs=60_000, seed=1)
+        m = solve(0.4 / V100.alpha, V100)
+        assert s.mean_latency == pytest.approx(m.mean_latency, rel=0.05)
+        assert s.backend == "sim"
+
+    def test_unsupported_points_raise(self):
+        g_exp = SweepGrid.from_product([1.0], [V100.alpha], [V100.tau0],
+                                       dists=("exp",))
+        with pytest.raises(ValueError):
+            evaluate(g_exp, backend="analytic")
+        with pytest.raises(ValueError):
+            evaluate(g_exp, backend="markov")
+        g_to = SweepGrid.from_points([1.0], [V100.alpha], [V100.tau0],
+                                     b_max=[8], wait_max=[1.0],
+                                     wait_target=[4])
+        with pytest.raises(ValueError):
+            evaluate(g_to, backend="sim")
+        with pytest.raises(ValueError):
+            evaluate(g_to, backend="nope")
+
+
+class TestGridConstruction:
+    def test_product_and_points(self):
+        g = SweepGrid.from_product([1.0, 2.0], [0.1], [1.0, 2.0],
+                                   b_maxes=(0, 8))
+        assert len(g) == 8
+        g2 = SweepGrid.from_points([1.0, 2.0], 0.1, 1.0)
+        assert len(g2) == 2 and np.all(g2.alpha == np.float32(0.1))
+        assert len(g.concat(g2)) == 10
+
+    def test_dist_codes(self):
+        g = SweepGrid.from_product([1.0], [0.1], [1.0],
+                                   dists=("det", "exp", "gamma"))
+        assert set(g.dist.tolist()) == set(DIST_CODE.values())
+
+    def test_validation_errors(self):
+        g = SweepGrid.from_points([1.0], [0.1], [1.0], b_max=[4096])
+        with pytest.raises(ValueError):
+            sweep(g, q_cap=512)
+        g2 = SweepGrid.from_rhos([0.5], 0.1, 1.0)
+        with pytest.raises(ValueError):
+            sweep(g2, n_batches=100, warmup=100)
+        with pytest.raises(ValueError):
+            sweep(g2, a_cap=1024, q_cap=512)
