@@ -1,11 +1,27 @@
 """Shared helpers for the benchmark harness."""
 from __future__ import annotations
 
+import os
 import time
 from dataclasses import dataclass
-from typing import Any, Callable, Dict, List
+from typing import Any, Callable, Dict, List, Optional
 
 from repro.core.analytic import LinearServiceModel
+
+
+def enable_host_devices(n: Optional[int] = None) -> None:
+    """Expose CPU cores as separate XLA host devices so the fleet kernel
+    can pmap-shard a grid across them.  Must run before the first JAX
+    backend initialization (call it at benchmark-module import time);
+    a no-op if the flag is already set or only one core exists."""
+    if "xla_force_host_platform_device_count" in \
+            os.environ.get("XLA_FLAGS", ""):
+        return
+    n = n or os.cpu_count() or 1
+    if n > 1:
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "")
+            + f" --xla_force_host_platform_device_count={n}").strip()
 
 V100 = LinearServiceModel(alpha=0.1438, tau0=1.8874)   # ms (paper §3.3)
 P4 = LinearServiceModel(alpha=0.5833, tau0=1.4284)     # ms

@@ -1,30 +1,117 @@
-"""Beyond-paper: consolidation vs replication under dynamic batching."""
+"""Beyond-paper: consolidation vs replication under dynamic batching.
+
+One jit dispatch pushes the full consolidation-economics grid — total
+load × fleet size k ∈ {1..16} × routing (random / round-robin / JSQ) —
+through the vectorized fleet kernel, then derives the consolidation-gain
+curve (split and JSQ fleets vs one k×-fast server, exact via the
+truncated chain) and times the kernel against the legacy per-event
+NumPy JSQ loop at equal job counts.
+
+Total-load parameterization: λ is fixed per curve point (as a fraction
+ρ1 of ONE replica's saturation rate 1/α), so a k-replica fleet runs each
+replica at ρ1/k — cold, small batches — while the consolidated
+(λ, α/k, τ0) server keeps every sample's worth of batching.  That is the
+replica-economics question: routing only reshuffles the cold traffic.
+"""
 from __future__ import annotations
 
 from typing import List
 
-from benchmarks.common import Row, V100, timed
-from repro.core.replicas import compare, simulate_jsq
+from benchmarks.common import Row, V100, enable_host_devices, timed
+
+enable_host_devices()          # before any JAX backend initialization
+
+RHO1S = [0.1, 0.15, 0.2, 0.25, 0.3, 0.35, 0.4, 0.5, 0.6, 0.7, 0.8]
+KS = list(range(1, 17))
+ROUTINGS = ("random", "round_robin", "jsq")
 
 
-def run(n_jobs: int = 60_000) -> List[Row]:
+def run(n_steps: int = 4000) -> List[Row]:
+    from repro.core.analytic import LinearServiceModel
+    from repro.core.markov import solve
+    from repro.core.replicas import simulate_jsq_numpy
+    from repro.core.sweep import FleetGrid, fleet_sweep
+
     rows: List[Row] = []
-    k = 4
-    for rho in (0.2, 0.5, 0.8):
-        lam = rho / V100.alpha          # load relative to ONE replica's 1/α
+    alpha, tau0 = V100.alpha, V100.tau0
 
-        def one(rho=rho, lam=lam):
-            c_flat = compare(lam, V100, k, tau0_scaling="flat")
-            c_scaled = compare(lam, V100, k, tau0_scaling="scaled")
-            jsq = simulate_jsq(lam, V100, k, n_jobs=n_jobs, seed=11)
+    # -- 1) the fleet grid: 11 total loads × 16 fleet sizes × 3
+    #       routings = 528 points, one dispatch ------------------------
+    grid = FleetGrid.from_product([rho / alpha for rho in RHO1S],
+                                  [alpha], [tau0], ks=KS,
+                                  routings=ROUTINGS)
+
+    def idx(rho, k, routing):
+        # from_product flattens lam-major, routing-minor
+        return ((RHO1S.index(rho) * len(KS) + KS.index(k))
+                * len(ROUTINGS) + ROUTINGS.index(routing))
+
+    out = {}
+
+    def dispatch():
+        out["r"] = fleet_sweep(grid, n_steps=n_steps, q_cap=256,
+                               a_cap=32, hist_every=4, seed=17)
+        return {"points": len(grid), "n_steps": n_steps,
+                "total_jobs": int(out["r"].n_jobs.sum()),
+                "dropped": int(out["r"].dropped.sum())}
+
+    rows.append(timed(dispatch, "replicas/fleet_dispatch"))
+    r = out["r"]
+
+    # -- 2) consolidation-gain curve over k at fixed total load: even
+    #       JSQ cannot close the gap to one consolidated server --------
+    rho1 = 0.8
+    lam = rho1 / alpha
+    for k in (2, 4, 8, 16):
+
+        def one(k=k):
+            cons = LinearServiceModel(alpha / k, tau0)   # tensor-parallel
+            ew_split = solve(lam / k, V100).mean_latency
+            ew_cons = solve(lam, cons).mean_latency
+            ew_jsq = float(r.mean_latency[idx(rho1, k, "jsq")])
+            ew_rr = float(r.mean_latency[idx(rho1, k, "round_robin")])
             return {
-                "rho_per_replica": rho / k,
-                "EW_k_replicas_split": c_flat.ew_split,
-                "EW_k_replicas_jsq": jsq,
-                "EW_consolidated_tp": c_flat.ew_consolidated,
-                "EW_consolidated_scaleup": c_scaled.ew_consolidated,
-                "consolidation_gain_tp": c_flat.consolidation_gain,
-                "jsq_vs_split_gain": c_flat.ew_split / jsq,
+                "rho_total": rho1,
+                "rho_per_replica": rho1 / k,
+                "EW_split_exact": ew_split,
+                "EW_round_robin": ew_rr,
+                "EW_jsq": ew_jsq,
+                "EW_consolidated": ew_cons,
+                "consolidation_gain": ew_split / ew_cons,
+                "jsq_vs_consolidated": ew_jsq / ew_cons,
             }
-        rows.append(timed(one, f"replicas/k={k}/rho={rho}"))
+        rows.append(timed(one, f"replicas/gain/k={k}"))
+
+    # -- 3) wall-clock: fleet kernel vs the legacy per-event NumPy JSQ
+    #       loop, equal job counts at the same (λ, k) point ------------
+    k, rho = 16, 0.85
+    lam = k * rho / alpha
+    jgrid = FleetGrid.from_points([lam] * 8, alpha, tau0, k=k,
+                                  routing="jsq")
+    fleet_kw = dict(n_steps=n_steps, q_cap=192, a_cap=32, hist_every=8)
+    fleet_sweep(jgrid, seed=3, **fleet_kw)         # compile outside timing
+    timing = {}
+
+    def fleet_side():
+        res = fleet_sweep(jgrid, seed=23, **fleet_kw)
+        timing["jobs"] = int(res.n_jobs.sum())
+        return {"jobs": timing["jobs"], "dropped": int(res.dropped.sum()),
+                "EW": float(res.mean_latency.mean())}
+
+    rows.append(timed(fleet_side, f"replicas/jsq_fleet/k={k}/rho={rho}"))
+    t_fleet = rows[-1].us_per_call
+
+    def numpy_side():
+        ew = simulate_jsq_numpy(lam, V100, k, n_jobs=timing["jobs"],
+                                seed=23)
+        return {"jobs": timing["jobs"], "EW": ew}
+
+    rows.append(timed(numpy_side, f"replicas/jsq_numpy/k={k}/rho={rho}"))
+    t_numpy = rows[-1].us_per_call
+
+    def speedup():
+        return {"jobs": timing["jobs"],
+                "fleet_s": t_fleet / 1e6, "numpy_s": t_numpy / 1e6,
+                "speedup": t_numpy / t_fleet}
+    rows.append(timed(speedup, "replicas/speedup_vs_numpy"))
     return rows

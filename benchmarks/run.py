@@ -47,7 +47,7 @@ def main() -> None:
         "tails": lambda: tails.run(
             n_batches=1_500 if args.quick else 6_000),
         "replicas": lambda: replicas.run(
-            n_jobs=20_000 if args.quick else 60_000),
+            n_steps=1_500 if args.quick else 4_000),
         "roofline": lambda: roofline.run(),
     }
     if args.only:

@@ -1,0 +1,104 @@
+"""Fleet routing vs consolidation — the replica-economics question at
+grid scale.
+
+Should k GPUs serve as k independent dynamic-batching replicas behind a
+router, or as one consolidated server k× as fast (tensor-parallel: α/k,
+same τ0)?  Theorem 1 says batching efficiency grows with load, so
+splitting a fixed total traffic k ways runs every replica cold — small
+batches, poor amortization of τ0 — while the consolidated server keeps
+the full arrival stream's batch sizes AND a k× smaller per-sample cost.
+This example measures how much of that loss a *router* can win back:
+
+1. one fleet dispatch simulates a (total load, routing) grid for a
+   k-replica fleet — random split, round-robin, and join-shortest-queue
+   (JSQ) — via the vectorized fleet kernel
+   (``repro.core.sweep.fleet_sweep``),
+2. the random-split and consolidated baselines are solved exactly with
+   the truncated Markov chain,
+3. the table shows no routing closes the consolidation gap — JSQ in
+   fact *loses* to blind random splitting here, because steering
+   arrivals to the least-loaded (often just-idle) replica fragments
+   exactly the batches that dynamic batching lives on.
+
+Run:  PYTHONPATH=src python examples/fleet_routing.py [--k 4]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+from repro.core.analytic import LinearServiceModel
+from repro.core.markov import solve
+from repro.core.sweep import FleetGrid, ROUTE_CODE, fleet_sweep
+
+V100 = LinearServiceModel(alpha=0.1438, tau0=1.8874)
+ROUTINGS = ("random", "round_robin", "jsq")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--k", type=int, default=4, help="replica count")
+    ap.add_argument("--steps", type=int, default=12000,
+                    help="fleet events simulated per point")
+    args = ap.parse_args()
+    k = args.k
+    alpha, tau0 = V100.alpha, V100.tau0
+
+    # total load as a fraction of ONE replica's saturation rate 1/α —
+    # the fleet splits it k ways, the consolidated server takes it whole
+    rhos = [0.1, 0.2, 0.3, 0.4, 0.5, 0.6, 0.7, 0.8]
+    grid = FleetGrid.from_product([r / alpha for r in rhos], [alpha],
+                                  [tau0], ks=(k,), routings=ROUTINGS)
+    print(f"== fleet dispatch: {len(grid)} (λ, routing) points at k={k}, "
+          f"{args.steps} events each ==")
+    t0 = time.time()
+    r = fleet_sweep(grid, n_steps=args.steps, warmup=args.steps // 2,
+                    q_cap=256, a_cap=32, seed=2)
+    print(f"one dispatch: {time.time() - t0:.1f}s, "
+          f"{int(r.n_jobs.sum()):,} jobs, dropped={int(r.dropped.sum())}")
+    assert int(r.dropped.sum()) == 0
+
+    def mc(rho, rt):
+        i = rhos.index(rho) * len(ROUTINGS) + ROUTINGS.index(rt)
+        assert int(r.grid.routing[i]) == ROUTE_CODE[rt]
+        return float(r.mean_latency[i])
+
+    # consolidated server, two τ0 scalings: tensor-parallel keeps the
+    # per-batch fixed cost (α/k, τ0); perfect scale-up divides it too
+    cons_tp = LinearServiceModel(alpha / k, tau0)
+    cons_up = LinearServiceModel(alpha / k, tau0 / k)
+    print(f"\nE[W] (ms): k = {k} replicas (each at ρ/k) vs one "
+          f"{k}x-fast server (V100 constants):")
+    print(f"{'rho_tot':>8} {'split':>8} {'round_rb':>9} {'jsq':>8} "
+          f"{'cons_tp':>8} {'cons_up':>8} {'jsq/tp':>7} {'jsq/up':>7}")
+    gap_tp, gap_up = {}, {}
+    for rho in rhos:
+        lam = rho / alpha
+        ew_split = solve(lam / k, V100).mean_latency
+        ew_tp = solve(lam, cons_tp).mean_latency
+        ew_up = solve(lam, cons_up).mean_latency
+        ew_rr, ew_jsq = mc(rho, "round_robin"), mc(rho, "jsq")
+        gap_tp[rho] = ew_jsq / ew_tp
+        gap_up[rho] = ew_jsq / ew_up
+        print(f"{rho:8.2f} {ew_split:8.3f} {ew_rr:9.3f} {ew_jsq:8.3f} "
+              f"{ew_tp:8.3f} {ew_up:8.3f} {gap_tp[rho]:6.2f}x "
+              f"{gap_up[rho]:6.2f}x")
+
+    lo, hi = rhos[0], rhos[-1]
+    print(f"""
+Two regimes, one conclusion:
+- Light load (ρ={lo}): batching barely matters, so routing is the whole
+  game — JSQ and round-robin beat random splitting (idle replicas get
+  the traffic), and a flat-τ0 consolidated server is not even worth it.
+  But against perfect scale-up, JSQ still trails {gap_up[lo]:.1f}x.
+- Batching-friendly load (ρ={hi}): now batch sizes carry the economics
+  (Theorem 1) and JSQ *hurts* — steering arrivals onto just-idle
+  replicas fragments exactly the batches that make high load cheap, so
+  it loses to blind random splitting and leaves the consolidation gap
+  at {gap_tp[hi]:.2f}x (tensor-parallel) / {gap_up[hi]:.2f}x (perfect
+  scale-up).  No routing policy manufactures batch size out of split
+  traffic.""")
+
+
+if __name__ == "__main__":
+    main()

@@ -29,11 +29,17 @@ from repro.core.policy import (  # noqa: F401
     CappedBatch,
     TimeoutBatch,
 )
-# NOTE: the jit sweep kernel is deliberately NOT re-exported here — it
-# is the one piece that imports JAX.  Reach it via
-# `evaluate(grid, backend="sweep")` (deferred import) or explicitly via
-# `from repro.core.sweep import sweep`; plain `import repro.core` stays
-# JAX-free for analytic/scalar users.
-from repro.core.grid import SweepGrid, SweepResult  # noqa: F401
+# NOTE: the jit sweep kernels are deliberately NOT re-exported here —
+# they are the one piece that imports JAX.  Reach them via
+# `evaluate(grid, backend="sweep"/"fleet")` (deferred import) or
+# explicitly via `from repro.core.sweep import sweep, fleet_sweep`;
+# plain `import repro.core` stays JAX-free for analytic/scalar users.
+from repro.core.grid import (  # noqa: F401
+    FleetGrid,
+    FleetResult,
+    ROUTE_CODE,
+    SweepGrid,
+    SweepResult,
+)
 from repro.core.results import SimResult  # noqa: F401
 from repro.core.simulate import simulate  # noqa: F401

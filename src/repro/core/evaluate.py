@@ -16,10 +16,15 @@ Markov-chain, and vectorized-sweep answers are interchangeable:
   time (slow, exact, the legacy reference); no timeout policy.
 - ``"sweep"``     — the jit+vmap JAX engine (``repro.core.sweep``), all
   policies and service families, one device dispatch for the grid.
+- ``"fleet"``     — the k-replica routing kernel
+  (``repro.core.sweep.fleet_sweep``): every point carries a replica
+  count and a routing discipline (random / round_robin / jsq).  Takes a
+  ``FleetGrid``; a plain ``SweepGrid`` is promoted to k = 1 fleets
+  (which reduce exactly to the single-server model).
 
 Backend-specific keyword arguments pass through (``n_jobs``/``seed``
-for ``sim``, ``n_batches``/``q_cap``/… for ``sweep``, ``truncation``
-for ``markov``).
+for ``sim``, ``n_batches``/``q_cap``/… for ``sweep``, ``n_steps``/… for
+``fleet``, ``truncation`` for ``markov``).
 """
 from __future__ import annotations
 
@@ -29,12 +34,12 @@ from typing import List
 import numpy as np
 
 from repro.core import analytic as an
-from repro.core.grid import DIST_CODE, DIST_NAME, SweepGrid
+from repro.core.grid import DIST_CODE, DIST_NAME, FleetGrid, SweepGrid
 from repro.core.results import SimResult
 
 __all__ = ["evaluate", "BACKENDS"]
 
-BACKENDS = ("analytic", "markov", "sim", "sweep")
+BACKENDS = ("analytic", "markov", "sim", "sweep", "fleet")
 
 
 def _require(cond: bool, backend: str, what: str) -> None:
@@ -106,6 +111,13 @@ def evaluate(grid: SweepGrid, backend: str = "sweep",
              **kw) -> List[SimResult]:
     """Evaluate every grid point with the chosen backend (see module
     docstring); returns one unified ``SimResult`` per point."""
+    if backend != "fleet" and isinstance(grid, FleetGrid) \
+            and bool(np.any(grid.k > 1)):
+        # single-server backends would silently read lam as one queue's
+        # rate and ignore k/routing — a wrong "exact" reference
+        raise ValueError(f"backend {backend!r} is single-server; this "
+                         "FleetGrid has k > 1 points — use "
+                         "backend='fleet'")
     if backend == "analytic":
         if kw:
             raise ValueError("backend 'analytic' accepts no keyword "
@@ -118,5 +130,19 @@ def evaluate(grid: SweepGrid, backend: str = "sweep",
     if backend == "sweep":
         # deferred so that analytic/markov/sim use never imports JAX
         from repro.core.sweep import sweep
+        if isinstance(grid, FleetGrid):
+            raise ValueError("backend 'sweep' is single-server; use "
+                             "backend='fleet' for a FleetGrid")
         return sweep(grid, **kw).to_results()
+    if backend == "fleet":
+        from repro.core.sweep import fleet_sweep
+        if not isinstance(grid, FleetGrid):
+            # k = 1 reduces to the single-server model for every
+            # routing; "random" compiles the cheapest kernel (no JSQ
+            # water-filling specialization)
+            grid = FleetGrid.from_points(
+                grid.lam, grid.alpha, grid.tau0, k=1, routing="random",
+                b_max=grid.b_max, dist=grid.dist, cv=grid.cv,
+                wait_max=grid.wait_max, wait_target=grid.wait_target)
+        return fleet_sweep(grid, **kw).to_results()
     raise ValueError(f"unknown backend {backend!r}; pick from {BACKENDS}")

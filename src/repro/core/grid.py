@@ -13,11 +13,17 @@ import numpy as np
 
 from repro.core.results import SimResult
 
-__all__ = ["DIST_CODE", "DIST_NAME", "SweepGrid", "SweepResult",
+__all__ = ["DIST_CODE", "DIST_NAME", "ROUTE_CODE", "ROUTE_NAME",
+           "SweepGrid", "SweepResult", "FleetGrid", "FleetResult",
            "hist_edges"]
 
 DIST_CODE = {"det": 0, "exp": 1, "gamma": 2}
 DIST_NAME = {v: k for k, v in DIST_CODE.items()}
+
+# Routing disciplines for the k-replica fleet kernel: how each arrival is
+# assigned to one of the k replica queues.
+ROUTE_CODE = {"random": 0, "round_robin": 1, "jsq": 2}
+ROUTE_NAME = {v: k for k, v in ROUTE_CODE.items()}
 
 # Histogram binning: latencies are binned by their float32 bit pattern —
 # the top _MANT mantissa bits plus the exponent, i.e. 2**_MANT log-spaced
@@ -122,12 +128,123 @@ class SweepGrid:
         return cls.from_product(lams, [alpha], [tau0], **kw)
 
     def concat(self, other: "SweepGrid") -> "SweepGrid":
-        return SweepGrid(*[np.concatenate([a, b]) for a, b in
-                           zip(self._arrays(), other._arrays())])
+        if type(other) is not type(self):
+            raise TypeError(f"cannot concat {type(other).__name__} onto "
+                            f"{type(self).__name__}")
+        return type(self)(*[np.concatenate([a, b]) for a, b in
+                            zip(self._arrays(), other._arrays())])
+
+    def take(self, idx) -> "SweepGrid":
+        """Sub-grid at ``idx`` (a slice or an integer index array) —
+        dispatching subsets is the natural way to shard a grid, and the
+        determinism tests rely on it (a point's result must not depend
+        on which vmap batch it was dispatched in)."""
+        return type(self)(*[np.asarray(a[idx]).reshape(-1)
+                            for a in self._arrays()])
 
     def _arrays(self) -> Tuple[np.ndarray, ...]:
         return (self.lam, self.alpha, self.tau0, self.b_max, self.dist,
                 self.cv, self.wait_max, self.wait_target)
+
+
+def _as_route_codes(routing) -> List[int]:
+    vals = ([routing] if isinstance(routing, str)
+            else list(np.atleast_1d(routing)))
+    return [ROUTE_CODE[r] if isinstance(r, str) else int(r) for r in vals]
+
+
+@dataclass(frozen=True)
+class FleetGrid(SweepGrid):
+    """A ``SweepGrid`` whose points are k-replica fleets.
+
+    Each point adds ``k`` (number of replicas; every replica runs the
+    point's (α, τ0, b_max, dist, policy) service law and takes a share of
+    the *total* arrival rate ``lam``) and ``routing`` (a ``ROUTE_CODE``
+    integer: how arrivals are assigned to replicas).  ``k = 1`` reduces
+    exactly to the single-server model for every routing."""
+
+    k: np.ndarray
+    routing: np.ndarray
+
+    @property
+    def rho(self) -> np.ndarray:
+        """Per-replica offered load λα/k (the fleet stability metric)."""
+        return self.lam * self.alpha / self.k
+
+    @property
+    def routing_names(self) -> List[str]:
+        return [ROUTE_NAME[int(r)] for r in self.routing]
+
+    @classmethod
+    def from_points(cls, lam, alpha, tau0, *, k=1, routing="jsq", b_max=0,
+                    dist="det", cv=0.5, wait_max=0.0,
+                    wait_target=0) -> "FleetGrid":
+        base = SweepGrid.from_points(lam, alpha, tau0, b_max=b_max,
+                                     dist=dist, cv=cv, wait_max=wait_max,
+                                     wait_target=wait_target)
+        n = len(base)
+        ks = _as_i32(k)
+        routes = _as_i32(_as_route_codes(routing))
+        extras = [np.broadcast_to(a, (n,)).copy() if a.shape[0] == 1 else a
+                  for a in (ks, routes)]
+        if any(a.shape[0] != n for a in extras):
+            raise ValueError("k/routing lengths do not match the grid")
+        return cls(*base._arrays(), *extras)
+
+    @classmethod
+    def from_product(cls, lams: Sequence[float], alphas: Sequence[float],
+                     tau0s: Sequence[float], *,
+                     ks: Sequence[int] = (1,),
+                     routings: Sequence[str] = ("jsq",),
+                     b_maxes: Sequence[int] = (0,),
+                     dists: Sequence[str] = ("det",),
+                     cvs: Sequence[float] = (0.5,),
+                     wait_maxes: Sequence[float] = (0.0,),
+                     wait_targets: Sequence[int] = (0,)) -> "FleetGrid":
+        dist_codes = [DIST_CODE[d] if isinstance(d, str) else int(d)
+                      for d in dists]
+        mesh = np.meshgrid(_as_f32(lams), _as_f32(alphas), _as_f32(tau0s),
+                           _as_i32(b_maxes), _as_i32(dist_codes),
+                           _as_f32(cvs), _as_f32(wait_maxes),
+                           _as_i32(wait_targets), _as_i32(ks),
+                           _as_i32(_as_route_codes(routings)),
+                           indexing="ij")
+        flat = [m.reshape(-1) for m in mesh]
+        return cls(flat[0].astype(np.float32), flat[1].astype(np.float32),
+                   flat[2].astype(np.float32), flat[3].astype(np.int32),
+                   flat[4].astype(np.int32), flat[5].astype(np.float32),
+                   flat[6].astype(np.float32), flat[7].astype(np.int32),
+                   flat[8].astype(np.int32), flat[9].astype(np.int32))
+
+    @classmethod
+    def from_rhos(cls, rhos: Sequence[float], alpha: float, tau0: float,
+                  *, ks: Sequence[int] = (1,),
+                  routings: Sequence[str] = ("jsq",), b_max=0,
+                  dist="det", cv=0.5, wait_max=0.0,
+                  wait_target=0) -> "FleetGrid":
+        """Grid over *per-replica* loads ρ = λα/k for one service model —
+        each (ρ, k) point gets total rate λ = kρ/α, so replicas face the
+        same offered load regardless of k.
+
+        NOTE: deliberately a different contract from
+        ``SweepGrid.from_rhos`` — (ρ, k, routing) are coupled product
+        axes here, while the remaining policy knobs broadcast per point
+        (singular names), so the keyword surfaces are not
+        interchangeable between the two classes."""
+        lam_pts, k_pts, route_pts = [], [], []
+        for r in rhos:
+            for k in ks:
+                for route in routings:
+                    lam_pts.append(int(k) * r / alpha)
+                    k_pts.append(int(k))
+                    route_pts.append(route)
+        return cls.from_points(lam_pts, alpha, tau0, k=k_pts,
+                               routing=route_pts, b_max=b_max,
+                               dist=dist, cv=cv, wait_max=wait_max,
+                               wait_target=wait_target)
+
+    def _arrays(self) -> Tuple[np.ndarray, ...]:
+        return (*super()._arrays(), self.k, self.routing)
 
 
 # ---------------------------------------------------------------------------
@@ -190,6 +307,28 @@ class SweepResult:
     def to_results(self) -> List[SimResult]:
         return [self.point(i) for i in range(len(self))]
 
+
+@dataclass
+class FleetResult(SweepResult):
+    """Fleet sweep output: ``SweepResult`` metrics aggregated fleet-wide
+    (latency over all jobs, batches over all replicas, utilization as the
+    busy fraction of k servers) plus per-replica job counts."""
+
+    grid: FleetGrid
+    jobs_by_replica: np.ndarray = field(repr=False)    # (N, k_max)
+
+    def point(self, i: int) -> SimResult:
+        res = super().point(i)
+        res.backend = "fleet"
+        res.k = int(self.grid.k[i])
+        res.routing = ROUTE_NAME[int(self.grid.routing[i])]
+        return res
+
+    def balance(self, i: int) -> np.ndarray:
+        """Fraction of point i's measured jobs served by each replica."""
+        k = int(self.grid.k[i])
+        jobs = self.jobs_by_replica[i, :k].astype(np.float64)
+        return jobs / max(1.0, jobs.sum())
 
 
 def _hist_percentiles(hist: np.ndarray,

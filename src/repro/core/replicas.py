@@ -13,23 +13,29 @@ paper's model answers this cleanly:
 
 Because batching efficiency grows with load (Theorem 1), consolidation
 wins twice: bigger batches AND lower marginal time. This module computes
-both sides exactly (markov solver) and in closed form (φ).
+both sides exactly (markov solver) and in closed form (φ), and measures
+what routing can and cannot recover via the vectorized fleet kernel
+(``repro.core.sweep.fleet_sweep``): random split, round-robin, and
+join-shortest-queue (JSQ, the strongest practical router) all run as
+(λ, k, routing) grid points in one jit dispatch.
 
-Also provides join-shortest-queue (JSQ) simulation for k replicas — the
-strongest practical router — to show even JSQ cannot recover the
-consolidation gap at batching-friendly loads.
+The original per-event NumPy JSQ loop is kept as
+``simulate_jsq_numpy`` — the independent cross-check reference the fleet
+kernel's statistical tests pin against (see tests/test_fleet.py).
 """
 from __future__ import annotations
 
+import math
 from dataclasses import dataclass
-from typing import List
+from typing import List, Sequence
 
 import numpy as np
 
 from repro.core.analytic import LinearServiceModel, phi
 from repro.core.markov import solve
 
-__all__ = ["ReplicaComparison", "compare", "simulate_jsq"]
+__all__ = ["ReplicaComparison", "compare", "fleet_latency",
+           "simulate_jsq", "simulate_jsq_numpy"]
 
 
 @dataclass
@@ -41,12 +47,15 @@ class ReplicaComparison:
     ew_split_phi: float          # closed-form versions
     ew_consolidated_phi: float
     consolidation_gain: float    # split / consolidated
+    ew_jsq: float = math.nan     # k replicas under JSQ (fleet-kernel MC)
 
 
 def compare(lam: float, model: LinearServiceModel, k: int,
-            *, tau0_scaling: str = "flat") -> ReplicaComparison:
+            *, tau0_scaling: str = "flat", jsq: bool = False,
+            n_jobs: int = 100_000, seed: int = 0) -> ReplicaComparison:
     """tau0_scaling: 'flat' (consolidated keeps τ0 — tensor-parallel) or
-    'scaled' (τ0/k — perfect scale-up)."""
+    'scaled' (τ0/k — perfect scale-up).  ``jsq=True`` adds a Monte Carlo
+    JSQ latency from the fleet kernel (one extra jit dispatch)."""
     tau0_c = model.tau0 if tau0_scaling == "flat" else model.tau0 / k
     cons = LinearServiceModel(model.alpha / k, tau0_c)
     ew_split = solve(lam / k, model).mean_latency
@@ -58,14 +67,64 @@ def compare(lam: float, model: LinearServiceModel, k: int,
         ew_split_phi=float(phi(lam / k, model.alpha, model.tau0)),
         ew_consolidated_phi=float(phi(lam, cons.alpha, cons.tau0)),
         consolidation_gain=ew_split / ew_cons,
+        ew_jsq=(simulate_jsq(lam, model, k, n_jobs=n_jobs, seed=seed)
+                if jsq else math.nan),
     )
 
 
+def _fleet_steps(lam: float, model: LinearServiceModel, k: int,
+                 n_jobs: int) -> int:
+    """Fleet events needed for ~n_jobs measured jobs: one batch per
+    event in steady state, E[B] jobs per batch at the per-replica load
+    (Remark 5 lower bound), plus warmup/idle/deferral slack."""
+    rho = (lam / k) * model.alpha
+    eb = max(1.0, (lam / k) * model.tau0 / max(1e-6, 1.0 - rho))
+    return max(512, int(1.8 * n_jobs / eb))
+
+
+def fleet_latency(lams: Sequence[float], model: LinearServiceModel,
+                  ks: Sequence[int], routing="jsq", *,
+                  n_steps: int = 6000, seed: int = 0, q_cap: int = 256,
+                  a_cap: int = 32, hist_every: int = 1,
+                  require_clean: bool = True) -> np.ndarray:
+    """Mean latency for parallel (λ_total, k) points under ``routing``
+    (a name, or a per-point sequence) in one fleet dispatch."""
+    from repro.core.sweep import FleetGrid, fleet_sweep
+    grid = FleetGrid.from_points(list(lams), model.alpha, model.tau0,
+                                 k=list(ks), routing=routing)
+    r = fleet_sweep(grid, n_steps=n_steps, seed=seed, q_cap=q_cap,
+                    a_cap=a_cap, hist_every=hist_every)
+    if require_clean and int(r.dropped.sum()):
+        raise RuntimeError(
+            f"fleet sweep dropped {int(r.dropped.sum())} arrivals; "
+            "raise q_cap (or lower the load)")
+    return r.mean_latency
+
+
 def simulate_jsq(lam: float, model: LinearServiceModel, k: int, *,
-                 n_jobs: int = 100_000, seed: int = 0) -> float:
-    """Join-shortest-queue over k dynamic-batching replicas: arrivals go to
-    the replica with the fewest waiting+in-service jobs. Returns mean
-    latency. Event-driven over (arrival, departure) events."""
+                 n_jobs: int = 100_000, seed: int = 0,
+                 backend: str = "fleet") -> float:
+    """Join-shortest-queue over k dynamic-batching replicas: arrivals go
+    to the replica with the fewest waiting+in-service jobs. Returns mean
+    latency.
+
+    backend='fleet' (default) runs the vectorized JAX kernel;
+    backend='numpy' runs the legacy per-event loop (the slow exact
+    reference, kept for cross-checking)."""
+    if backend == "numpy":
+        return simulate_jsq_numpy(lam, model, k, n_jobs=n_jobs, seed=seed)
+    if backend != "fleet":
+        raise ValueError(f"unknown backend {backend!r}")
+    (ew,) = fleet_latency(
+        [lam], model, [k], "jsq", seed=seed,
+        n_steps=_fleet_steps(lam, model, k, n_jobs))
+    return float(ew)
+
+
+def simulate_jsq_numpy(lam: float, model: LinearServiceModel, k: int, *,
+                       n_jobs: int = 100_000, seed: int = 0) -> float:
+    """The original event-driven NumPy JSQ loop (one (arrival, departure)
+    event at a time) — the fleet kernel's independent cross-check."""
     rng = np.random.default_rng(seed)
     arr = np.cumsum(rng.exponential(1.0 / lam, size=n_jobs))
     # per-replica state

@@ -48,6 +48,8 @@ class SimResult:
     latency_p99: float = _NAN
     n_batches: int = 0                    # batches in the measured window
     backend: str = ""                     # "sim" | "sweep" | "markov" | ...
+    k: int = 1                            # replica count (1 = single server)
+    routing: str = ""                     # fleet routing ("" outside fleets)
     batch_sizes: Optional[np.ndarray] = field(default=None, repr=False)
     latencies: Optional[np.ndarray] = field(default=None, repr=False)
 

@@ -55,11 +55,24 @@ import jax.numpy as jnp
 from jax import lax, random
 
 from repro.core.grid import (  # noqa: F401  (re-exported for back-compat)
-    DIST_CODE, DIST_NAME, SweepGrid, SweepResult, hist_edges,
-    _EXP_MIN, _MANT, _hist_percentiles)
+    DIST_CODE, DIST_NAME, ROUTE_CODE, ROUTE_NAME, FleetGrid, FleetResult,
+    SweepGrid, SweepResult, hist_edges, _EXP_MIN, _MANT, _hist_percentiles)
 
-__all__ = ["DIST_CODE", "DIST_NAME", "SweepGrid", "SweepResult", "sweep",
-           "hist_edges"]
+__all__ = ["DIST_CODE", "DIST_NAME", "ROUTE_CODE", "ROUTE_NAME",
+           "SweepGrid", "SweepResult", "FleetGrid", "FleetResult",
+           "sweep", "fleet_sweep", "hist_edges"]
+
+
+def _point_keys(seed: int, offset: int, n: int) -> jax.Array:
+    """Per-point PRNG keys via ``fold_in(PRNGKey(seed), point_index)``.
+
+    Unlike ``random.split(key, n)`` — whose i-th key depends on n — a
+    point's key depends only on its global index, so a grid dispatched in
+    one vmap batch or sharded into several (``SweepGrid.take`` +
+    ``key_offset``) produces bitwise-identical per-point results."""
+    base = random.PRNGKey(seed)
+    return jax.vmap(lambda i: random.fold_in(base, i))(
+        jnp.arange(offset, offset + n))
 
 # ---------------------------------------------------------------------------
 # the kernel
@@ -228,7 +241,7 @@ def _build_kernel(n_batches: int, warmup: int, q_cap: int, a_cap: int,
 def sweep(grid: SweepGrid, *, n_batches: int = 3000,
           warmup: Optional[int] = None, q_cap: int = 512,
           a_cap: Optional[int] = None, n_bins: int = 512,
-          seed: int = 0) -> SweepResult:
+          seed: int = 0, key_offset: int = 0) -> SweepResult:
     """Simulate every grid point for ``n_batches`` service completions in
     one jit+vmap device dispatch.
 
@@ -263,7 +276,7 @@ def sweep(grid: SweepGrid, *, n_batches: int = 3000,
         "wait_max": jnp.asarray(grid.wait_max),
         "wait_target": jnp.asarray(grid.wait_target),
     }
-    keys = random.split(random.PRNGKey(seed), len(grid))
+    keys = _point_keys(seed, key_offset, len(grid))
     out = jax.device_get(kernel(params, keys))
 
     p50, p95, p99 = _hist_percentiles(out["hist"], (50, 95, 99))
@@ -281,4 +294,469 @@ def sweep(grid: SweepGrid, *, n_batches: int = 3000,
         max_queue=np.asarray(out["max_queue"]),
         dropped=np.asarray(out["dropped"]),
         hist=np.asarray(out["hist"]),
+    )
+
+
+# ---------------------------------------------------------------------------
+# the fleet kernel: k replica queues + routing per grid point
+# ---------------------------------------------------------------------------
+
+_REBASE_EVERY = 32          # fleet events per full-buffer clock rebase
+
+
+@functools.lru_cache(maxsize=16)
+def _build_fleet_kernel(n_steps: int, warmup: int, k_max: int, q_cap: int,
+                        a_cap: int, pop_cap: int, n_bins: int,
+                        has_timeout: bool, all_det: bool, has_jsq: bool,
+                        hist_every: int, n_dev: int):
+    """Compile-time specialization of the per-point fleet scan kernel.
+
+    Unlike the single-server kernel — one scan step per *service period*
+    with bulk arrival draws — a fleet's replicas overlap in time and a
+    router (JSQ especially) must see the queue state *at each arrival*,
+    so the fleet kernel steps event-by-event: each scan step processes
+    exactly one replica *decision* (a service completion, usually
+    rolling straight into the next batch start) after routing, in one
+    vectorized block, every arrival that precedes it.  Between two
+    decisions no batch departs, so the routing sequence inside the
+    window is closed-form even for JSQ (discrete water-filling over the
+    load vector) — no per-arrival loop anywhere.  Per replica the
+    dynamics stay the exact regenerative batch law (see docs/theory.md
+    §"Fleet routing"); the window machinery only resolves the
+    *interleaving* across replicas.
+
+    State per point is a flat ``(k_max · q_cap,)`` stack of per-replica
+    FIFO rings (row r = replica r's waiting arrivals from ``head[r]``,
+    oldest first; pushes scatter at the tail, pops advance the head)
+    plus per-replica ``(k_max,)`` vectors: waiting count ``q``, ring
+    ``head``, in-flight batch size ``in_service``, a ``committed`` flag
+    (a decision is pending) and its time ``t_free``.  The global arrival stream is carried as ``next_arr``
+    (the next arrival epoch, pre-drawn), so no arrival is ever discarded
+    between windows; if more than ``a_cap`` arrivals precede one event,
+    the event is deferred to the next outer step, which resumes routing
+    where this one stopped — exact, it just spends an extra step.  Only
+    a replica queue exceeding ``q_cap`` actually loses arrivals, counted
+    in ``dropped`` (a correct run has ``dropped == 0``, the same
+    convention as the single-server kernel).  All times are rebased to
+    the last processed event, keeping float32 precision window-sized.
+
+    Replica invariant: a replica is *free* (not committed) iff its queue
+    is empty — a completion that leaves jobs immediately schedules the
+    next decision, and an arrival routed to a free replica schedules one
+    at its own epoch (plus the policy's timeout delay).  Hence every
+    batch start happens at a scheduled decision and is handled uniformly
+    in the outer step.
+    """
+    i32 = jnp.int32
+    f32 = jnp.float32
+    INF = jnp.float32(3.0e38)
+    BIG_LOAD = jnp.int32(2 ** 20)   # inactive-replica load; keeps the
+    slots = jnp.arange(pop_cap)     # JSQ compare free of i32 overflow
+    ridx = jnp.arange(k_max)
+    hist_base = (127 + _EXP_MIN) << _MANT
+    hist_shift = 23 - _MANT
+    R_RANDOM, R_RR = ROUTE_CODE["random"], ROUTE_CODE["round_robin"]
+
+    # rebase cadence: full-buffer clock rebases (the only whole-buffer
+    # passes in the kernel) run once per _REBASE_EVERY events; in
+    # between, times grow to ~32 windows, well within float32 for
+    # ms-scale runs
+    REBASE_EVERY = _REBASE_EVERY
+
+    def run_point(p, key):
+        lam, alpha, tau0 = p["lam"], p["alpha"], p["tau0"]
+        b_max = jnp.where(p["b_max"] > 0, p["b_max"], q_cap).astype(i32)
+        dist, cv = p["dist"], p["cv"]
+        wait_max, wait_target = p["wait_max"], p["wait_target"]
+        k = jnp.clip(p["k"], 1, k_max).astype(i32)
+        routing = p["routing"]
+        active = ridx < k
+
+        def step(state, x):
+            i, kstep = x
+            (q, head, buf, in_service, committed, t_free, next_arr, rr,
+             clock, lat_sum, lat_n, sum_b, sum_b2, sum_bs, n_meas, busy,
+             span, q_max, dropped, jobs_rep) = state
+            ksvc, karr = random.split(kstep)
+
+            # per-window randomness, drawn as two vectorized blocks; the
+            # block shape is fixed, so key consumption never depends on
+            # data and vmap-sharding a grid cannot perturb a point
+            ka, kb = random.split(karr)
+            u_route = random.uniform(ka, (a_cap,))
+            gaps = random.exponential(kb, (a_cap,)) / lam
+
+            # 1) route the arrivals that precede the earliest pending
+            #    decision.  No departures happen inside the window, so
+            #    every routing discipline admits a closed-form, fully
+            #    vectorized destination sequence — random and
+            #    round-robin are state-free, and JSQ is discrete
+            #    water-filling (each arrival tops up the lowest current
+            #    load, ties to the lowest index), whose j-th destination
+            #    follows from level cumsums.  The sequence is
+            #    prefix-stable: truncating the window (below) cannot
+            #    change the destinations of earlier arrivals.
+            t_dep0 = jnp.min(jnp.where(committed, t_free, INF))
+            offs = jnp.concatenate([jnp.zeros((1,), f32),
+                                    jnp.cumsum(gaps)])
+            ts_ext = next_arr + offs                       # (a_cap + 1,)
+            ts = ts_ext[:a_cap]
+            jidx = jnp.arange(a_cap)
+
+            dest_rand = jnp.minimum((u_route * k.astype(f32)).astype(i32),
+                                    k - 1)
+            dest_rr = (rr + jidx) % k
+            if has_jsq:
+                # JSQ water-filling: S(c) = arrivals needed to raise
+                # every load below level c up to c; arrival j fills
+                # level c_j = max{c : S(c) <= j} and lands on the
+                # (j - S(c_j))-th replica (by index) among those with
+                # load <= c_j
+                load = jnp.where(active, q + in_service, BIG_LOAD)
+                lmin = jnp.min(load)
+                cgrid = lmin + jnp.arange(a_cap + 1)
+                S = jnp.sum(
+                    jnp.maximum(cgrid[:, None] - load[None, :], 0),
+                    axis=1)                            # (a_cap + 1,)
+                filled = S[None, :] <= jidx[:, None]   # (a_cap, ·)
+                cj = lmin + jnp.sum(filled.astype(i32), axis=1) - 1
+                s_at = jnp.max(jnp.where(filled, S[None, :], 0), axis=1)
+                rank = jidx - s_at
+                sel = load[None, :] <= cj[:, None]     # (a_cap, k)
+                cum = jnp.cumsum(sel.astype(i32), axis=1)
+                dest_jsq = jnp.sum(
+                    jnp.where(sel & (cum == (rank + 1)[:, None]),
+                              ridx[None, :], 0), axis=1)
+                dest = jnp.where(routing == R_RANDOM, dest_rand,
+                                 jnp.where(routing == R_RR, dest_rr,
+                                           dest_jsq)).astype(i32)
+            else:
+                dest = jnp.where(routing == R_RANDOM, dest_rand,
+                                 dest_rr).astype(i32)
+
+            # a free replica's first arrival schedules its batching
+            # decision (free ⇒ its queue was empty, so that job is the
+            # oldest); a scheduled decision earlier than t_dep0 shrinks
+            # the window.  Including a first-arrival candidate that lies
+            # beyond the final window is harmless: rel >= its arrival
+            # epoch >= t_dep, so it can never be the min.
+            oh_a = dest[:, None] == ridx[None, :]          # (a_cap, k)
+            t_first = jnp.min(jnp.where(oh_a, ts[:, None], INF), axis=0)
+            if has_timeout:
+                do_wait = (wait_max > 0.0) & (wait_target > 1)
+                rel_k = jnp.where(do_wait, t_first + wait_max, t_first)
+            else:
+                rel_k = t_first
+            free = active & ~committed
+            t_dep = jnp.minimum(t_dep0,
+                                jnp.min(jnp.where(free, rel_k, INF)))
+            # the processed prefix closes AT the event: with no timeout
+            # the window-defining first arrival sits exactly at t_dep
+            # (rel == t_first bitwise), and it belongs to the window;
+            # arrival epochs are continuous, so a non-scheduling arrival
+            # landing exactly on t_dep has probability zero
+            sched = free & (t_first <= t_dep)
+            committed = committed | sched
+            t_free = jnp.where(sched, rel_k, t_free)
+
+            proc = ts <= t_dep
+            rr = jnp.where(routing == R_RR,
+                           (rr + jnp.sum(proc.astype(i32))) % k, rr)
+            # first unprocessed arrival epoch carries to the next step;
+            # if even the post-block epoch precedes the event, the event
+            # is deferred — the next step keeps routing (exact, just
+            # costs an extra step; only queue overflow drops, below)
+            unproc = jnp.where(ts_ext > t_dep, ts_ext, INF)
+            mn = jnp.min(unproc)
+            next_arr = jnp.where(mn < INF, mn, ts_ext[-1])
+            do_event = ts_ext[-1] > t_dep
+
+            # bulk FIFO push: each replica row is a ring (head = oldest
+            # waiting job); arrival j lands at ring slot head[dest[j]] +
+            # q[dest[j]] + (# earlier accepted window arrivals there) —
+            # one flattened a_cap-element scatter per step, and pops
+            # below just advance heads (no row shifting)
+            onehot = oh_a & proc[:, None]                  # (a_cap, k)
+            prior = jnp.cumsum(onehot.astype(i32), axis=0) \
+                - onehot.astype(i32)
+            prior_self = jnp.sum(prior * onehot.astype(i32), axis=1)
+            fill = jnp.sum(jnp.where(onehot, q[None, :], 0), axis=1) \
+                + prior_self
+            ok = proc & (fill < q_cap)
+            dropped = dropped + jnp.sum((proc & ~ok).astype(i32))
+            pos = (jnp.sum(jnp.where(onehot, head[None, :], 0), axis=1)
+                   + fill) % q_cap
+            flat = jnp.where(ok, dest * q_cap + pos, k_max * q_cap)
+            buf = buf.at[flat].set(ts, mode="drop")
+            q = q + jnp.sum((onehot & ok[:, None]).astype(i32), axis=0)
+
+            # 2) the event: earliest committed replica decides.  The
+            #    (k,) updates stay dense one-hot ops; the batch is read
+            #    as a pop_cap-wide wrapped gather from the ring
+            t_pend = jnp.where(committed, t_free, INF)
+            r = jnp.argmin(t_pend).astype(i32)
+            t_ev = jnp.min(t_pend)
+            oh = (ridx == r) & do_event
+            release = jnp.any(jnp.where(oh, in_service, 1) == 0)
+            qr = jnp.sum(jnp.where(oh, q, 0))
+            hr = jnp.sum(jnp.where(oh, head, 0))
+            row = jnp.take(buf,
+                           r * q_cap + (hr + slots) % q_cap,
+                           mode="clip")
+
+            # a completion whose queue holds jobs re-decides right away:
+            # with no (applicable) timeout delay it starts the next batch
+            # in this same step; a delayed one schedules the release
+            if has_timeout:
+                want_delay = (wait_max > 0.0) & (qr < wait_target) \
+                    & (row[0] + wait_max > t_ev)
+                rel_next = jnp.where(want_delay, row[0] + wait_max, t_ev)
+                # qr is 0 unless an event fires ⇒ form is do_event-masked
+                form = release | ((qr > 0) & ~want_delay)
+            else:
+                rel_next = t_ev
+                form = release | (qr > 0)
+
+            # batch formation (release events and immediate re-starts)
+            b = jnp.minimum(qr, b_max)
+            mean_s = alpha * b.astype(f32) + tau0
+            if all_det:
+                s = mean_s
+            else:
+                kshape = jnp.where(dist == 1, 1.0, 1.0 / (cv * cv))
+                g = random.gamma(ksvc, kshape) / kshape
+                s = jnp.where(dist == 0, mean_s, mean_s * g)
+            depart = t_ev + s
+            # per-job latency ops run on pop_cap slots only — b never
+            # exceeds pop_cap (= max b_max, or q_cap when some point
+            # batches unboundedly)
+            popmask = slots < b
+            lats = jnp.where(popmask, depart - row, 0.0)
+
+            q = q - jnp.where(oh & form, b, 0)
+            head = jnp.where(oh & form, (hr + b) % q_cap, head)
+            in_service = jnp.where(oh, jnp.where(form, b, 0), in_service)
+            committed = jnp.where(oh, form | (qr > 0), committed)
+            t_free = jnp.where(oh, jnp.where(form, depart, rel_next),
+                               t_free)
+
+            # 3) statistics (latency recorded at batch start — the depart
+            #    epoch is already known under every modelled policy)
+            meas = i >= warmup
+            mstart = meas & form
+            mf = mstart.astype(f32)
+            bf = b.astype(f32)
+            lat_sum = lat_sum + mf * lats.sum()
+            lat_n = lat_n + jnp.where(mstart, b, 0)
+            sum_b = sum_b + mf * bf
+            sum_b2 = sum_b2 + mf * bf * bf
+            sum_bs = sum_bs + mf * bf * s
+            n_meas = n_meas + mstart.astype(i32)
+            busy = busy + mf * s
+            span = span + (meas & do_event).astype(f32) * (t_ev - clock)
+            q_max = jnp.maximum(q_max, jnp.max(q))
+            jobs_rep = jobs_rep + jnp.where(oh & mstart, b, 0)
+            lat_bits = lax.bitcast_convert_type(lats.astype(f32), i32)
+            bins = jnp.clip((lat_bits >> hist_shift) - hist_base,
+                            0, n_bins - 1)
+
+            # the clock tracks the last processed event; the full-buffer
+            # rebase — and the histogram scatter, whose per-call cost
+            # under vmap dwarfs its per-element cost — are amortized to
+            # the superstep wrapper (bins ride out as scan outputs)
+            clock = jnp.where(do_event, t_ev, clock)
+
+            return (q, head, buf, in_service, committed, t_free,
+                    next_arr, rr, clock, lat_sum, lat_n, sum_b, sum_b2,
+                    sum_bs, n_meas, busy, span, q_max, dropped,
+                    jobs_rep), (bins, popmask & mstart)
+
+        # histogram thinning: scatter-adds cost per *element* under
+        # vmap, so hist_every > 1 records only an unbiased 1-in-N batch
+        # subsample (a fixed scrambled offset pattern per superstep —
+        # not a lattice, which could resonate with the event-parity
+        # structure of idle cycles).  Means/counters always use every
+        # job; only the percentile sample thins.
+        hist_rows = np.sort(np.random.default_rng(0).permutation(
+            REBASE_EVERY)[:max(1, REBASE_EVERY // hist_every)])
+
+        def superstep(state, x):
+            i_base, k_sup = x
+            hist = state[-1]
+            state, (bins, inc) = lax.scan(
+                step, state[:-1],
+                (i_base + jnp.arange(REBASE_EVERY),
+                 random.split(k_sup, REBASE_EVERY)))
+            if hist_every > 1:
+                bins, inc = bins[hist_rows], inc[hist_rows]
+            hist = hist.at[bins.reshape(-1)].add(
+                inc.reshape(-1).astype(i32))
+            # rebase time to the last processed event (one buffer pass
+            # per REBASE_EVERY events)
+            (q, head, buf, in_service, committed, t_free, next_arr, rr,
+             clock, *accs) = state
+            return (q, head, buf - clock, in_service, committed,
+                    t_free - clock, next_arr - clock, rr,
+                    jnp.zeros((), f32), *accs, hist), None
+
+        n_super = n_steps // REBASE_EVERY
+        key, k0 = random.split(key)
+        init = (jnp.zeros((k_max,), i32),              # q
+                jnp.zeros((k_max,), i32),              # head (ring)
+                jnp.zeros((k_max * q_cap,), f32),      # buf (flat)
+                jnp.zeros((k_max,), i32),              # in_service
+                jnp.zeros((k_max,), bool),             # committed
+                jnp.full((k_max,), INF, f32),          # t_free
+                random.exponential(k0) / lam,          # next_arr
+                jnp.zeros((), i32),                    # rr
+                jnp.zeros((), f32),                    # clock
+                jnp.zeros((), f32), jnp.zeros((), i32),  # lat_sum, lat_n
+                jnp.zeros((), f32), jnp.zeros((), f32),  # sum_b, sum_b2
+                jnp.zeros((), f32),                      # sum_bs
+                jnp.zeros((), i32), jnp.zeros((), f32),  # n_meas, busy
+                jnp.zeros((), f32), jnp.zeros((), i32),  # span, q_max
+                jnp.zeros((), i32),                      # dropped
+                jnp.zeros((k_max,), i32),                # jobs_rep
+                jnp.zeros((n_bins,), i32))               # hist (superstep)
+        (_, _, _, _, _, _, _, _, _, lat_sum, lat_n, sum_b, sum_b2,
+         sum_bs, n_meas, busy, span, q_max, dropped, jobs_rep,
+         hist), _ = lax.scan(
+            superstep, init,
+            (jnp.arange(n_super) * REBASE_EVERY,
+             random.split(key, n_super)))
+
+        jobs = jnp.maximum(lat_n, 1).astype(f32)
+        nb = jnp.maximum(n_meas, 1).astype(f32)
+        return {
+            "mean_latency": lat_sum / jobs,
+            "mean_batch": sum_b / nb,
+            "batch_m2": sum_b2 / nb,
+            "mean_service": sum_bs / jnp.maximum(sum_b, 1e-30),
+            "utilization": busy / jnp.maximum(
+                k.astype(f32) * span, 1e-30),
+            "n_jobs": lat_n,
+            "n_batches": n_meas,
+            "max_queue": q_max,
+            "dropped": dropped,
+            "hist": hist,
+            "jobs_by_replica": jobs_rep,
+        }
+
+    vm = jax.vmap(run_point)
+    if n_dev > 1:
+        # shard the grid over host devices (XLA_FLAGS=
+        # --xla_force_host_platform_device_count=N on CPU, or real
+        # accelerator devices): still one dispatch, one program
+        return jax.pmap(vm)
+    return jax.jit(vm)
+
+
+def fleet_sweep(grid: FleetGrid, *, n_steps: int = 6000,
+                warmup: Optional[int] = None, q_cap: int = 256,
+                a_cap: int = 32, n_bins: int = 512, seed: int = 0,
+                key_offset: int = 0, hist_every: int = 1,
+                shard: Optional[bool] = None) -> FleetResult:
+    """Simulate every fleet point for ``n_steps`` replica decisions in one
+    jit+vmap device dispatch.
+
+    ``n_steps`` counts fleet-wide *events*: at moderate/high load nearly
+    every event is a service completion that immediately starts the next
+    batch, so the fleet processes roughly ``n_steps`` batches in total —
+    size it ``k×`` larger to give each replica the run length a
+    single-server ``sweep`` would get.  (Idle→busy transitions and
+    arrival windows denser than ``a_cap`` consume extra events, so
+    low-load and very-high-load points complete somewhat fewer batches.)
+    ``q_cap`` bounds each replica's waiting room; overflowing it is the
+    one true capacity loss, counted in ``dropped`` (a correct run has
+    ``dropped == 0``).  ``a_cap`` only tiles the arrival routing — a
+    denser window defers its event a step, exact but slower, so size
+    ``a_cap`` near the expected batch size.  ``hist_every = N > 1``
+    records a 1-in-N batch subsample in the latency histogram (the
+    scatter-add is the costliest op on CPU); means and counters always
+    use every job, only the percentile sample thins.  ``shard`` splits
+    the grid across local devices via pmap (on CPU, set
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=<cores>`` before
+    the first JAX call); per-point keys are global, so sharding never
+    changes a point's result.  Default: shard whenever more than one
+    device is visible.
+    """
+    if not isinstance(grid, FleetGrid):
+        raise TypeError("fleet_sweep needs a FleetGrid "
+                        "(see FleetGrid.from_points/from_product)")
+    if len(grid) == 0:
+        raise ValueError("empty grid")
+    # the kernel rebases its clock once per _REBASE_EVERY events
+    n_steps = -(-int(n_steps) // _REBASE_EVERY) * _REBASE_EVERY
+    if warmup is None:
+        warmup = max(1, n_steps // 10)
+    if not 0 <= warmup < n_steps:
+        raise ValueError(f"warmup {warmup} must lie in [0, {n_steps})")
+    if np.any(grid.k < 1):
+        raise ValueError("k must be >= 1")
+    if np.any(grid.b_max > q_cap):
+        raise ValueError("b_max exceeds q_cap; raise q_cap")
+    if not set(np.unique(grid.routing)) <= set(ROUTE_CODE.values()):
+        raise ValueError(f"unknown routing code in grid "
+                         f"(valid: {ROUTE_CODE})")
+
+    k_max = int(grid.k.max())
+    has_timeout = bool(np.any(grid.wait_max > 0.0))
+    all_det = bool(np.all(grid.dist == DIST_CODE["det"]))
+    # all-finite-b_max grids get narrower per-job latency ops
+    pop_cap = (int(q_cap) if np.any(grid.b_max == 0)
+               else int(grid.b_max.max()))
+    has_jsq = bool(np.any(grid.routing == ROUTE_CODE["jsq"]))
+    n_dev = len(jax.local_devices()) if shard is not False else 1
+    n_dev = max(1, min(n_dev, len(grid)))
+    kernel = _build_fleet_kernel(int(n_steps), int(warmup), k_max,
+                                 int(q_cap), int(a_cap), pop_cap,
+                                 int(n_bins), has_timeout, all_det,
+                                 has_jsq, int(hist_every), n_dev)
+
+    params = {
+        "lam": jnp.asarray(grid.lam), "alpha": jnp.asarray(grid.alpha),
+        "tau0": jnp.asarray(grid.tau0), "b_max": jnp.asarray(grid.b_max),
+        "dist": jnp.asarray(grid.dist), "cv": jnp.asarray(grid.cv),
+        "wait_max": jnp.asarray(grid.wait_max),
+        "wait_target": jnp.asarray(grid.wait_target),
+        "k": jnp.asarray(grid.k), "routing": jnp.asarray(grid.routing),
+    }
+    keys = _point_keys(seed, key_offset, len(grid))
+
+    n = len(grid)
+    if n_dev > 1:
+        # pad (repeating the last point) to a device-divisible count and
+        # add the pmap axis; per-point keys make the padding harmless
+        per = -(-n // n_dev)
+        pad = per * n_dev - n
+
+        def shard_arr(a):
+            if pad:
+                a = jnp.concatenate([a, jnp.repeat(a[-1:], pad, axis=0)])
+            return a.reshape((n_dev, per) + a.shape[1:])
+
+        out = jax.device_get(kernel(
+            {kk: shard_arr(v) for kk, v in params.items()},
+            shard_arr(keys)))
+        out = {kk: np.asarray(v).reshape((n_dev * per,) + v.shape[2:])[:n]
+               for kk, v in out.items()}
+    else:
+        out = jax.device_get(kernel(params, keys))
+
+    p50, p95, p99 = _hist_percentiles(out["hist"], (50, 95, 99))
+    return FleetResult(
+        grid=grid,
+        mean_latency=np.asarray(out["mean_latency"], dtype=np.float64),
+        latency_p50=p50, latency_p95=p95, latency_p99=p99,
+        mean_batch=np.asarray(out["mean_batch"], dtype=np.float64),
+        batch_m2=np.asarray(out["batch_m2"], dtype=np.float64),
+        mean_service=np.asarray(out["mean_service"], dtype=np.float64),
+        utilization=np.clip(
+            np.asarray(out["utilization"], dtype=np.float64), 0.0, 1.0),
+        n_jobs=np.asarray(out["n_jobs"]),
+        n_batches=np.asarray(out["n_batches"]),
+        max_queue=np.asarray(out["max_queue"]),
+        dropped=np.asarray(out["dropped"]),
+        hist=np.asarray(out["hist"]),
+        jobs_by_replica=np.asarray(out["jobs_by_replica"]),
     )

@@ -43,6 +43,10 @@ def _guard(spec: Tuple, shape: Tuple[int, ...], mesh: Mesh) -> P:
     """Replicate any dimension whose size doesn't divide its mesh axis."""
     fixed = []
     for dim, axis in zip(shape, spec):
+        if isinstance(axis, (tuple, list)) and len(axis) == 1:
+            # ('data',) and 'data' shard identically, but PartitionSpec
+            # equality distinguishes them — normalize to the scalar form
+            axis = axis[0]
         fixed.append(axis if axis is not None
                      and dim % _axis_size(mesh, axis) == 0 else None)
     return P(*fixed)

@@ -7,8 +7,8 @@ deterministic fallback runs each property test on a fixed pseudo-random sample
 of the strategy space, so the suite still exercises the properties (with less
 coverage) instead of failing at collection.
 
-Only the tiny strategy surface the suite uses is implemented: ``st.floats``
-with ``min_value``/``max_value``.
+Only the tiny strategy surface the suite uses is implemented:
+``st.floats`` and ``st.integers`` with ``min_value``/``max_value``.
 """
 from __future__ import annotations
 
@@ -40,7 +40,24 @@ except ImportError:                                    # pragma: no cover
     def _floats(min_value=0.0, max_value=1.0, **_ignored):
         return _Floats(min_value, max_value)
 
-    st = SimpleNamespace(floats=_floats)
+    class _Integers:
+        def __init__(self, min_value: int, max_value: int):
+            self.lo = int(min_value)
+            self.hi = int(max_value)
+
+        def sample(self, rng) -> int:
+            # bias toward the boundaries now and then, like hypothesis
+            r = rng.uniform()
+            if r < 0.1:
+                return self.lo
+            if r < 0.2:
+                return self.hi
+            return int(rng.integers(self.lo, self.hi + 1))
+
+    def _integers(min_value=0, max_value=100, **_ignored):
+        return _Integers(min_value, max_value)
+
+    st = SimpleNamespace(floats=_floats, integers=_integers)
 
     def settings(**_ignored):
         def deco(fn):

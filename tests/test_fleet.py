@@ -1,0 +1,246 @@
+"""Statistical test harness for the k-replica fleet kernel.
+
+The fleet kernel (``repro.core.sweep.fleet_sweep``) is pinned against
+three independent references:
+
+- the exact truncated Markov chain (k = 1 must reduce to the
+  single-server model for every routing; a random split at (λ, k) must
+  match the single queue at λ/k — Poisson thinning),
+- the single-server sweep kernel (same policies, independent code path),
+- the legacy per-event NumPy JSQ loop (``simulate_jsq_numpy``) on a
+  shared seed ladder, within 3σ of the paired Monte Carlo error.
+
+Plus bitwise determinism: a grid dispatched in one vmap batch must equal
+the same grid sharded into two dispatches (``take`` + ``key_offset``) —
+this guards the per-point ``fold_in`` key construction against
+shape-dependent key consumption.
+
+Most fleet points share ONE module-scoped dispatch (and one kernel
+compile); keep any new points inside that grid if possible.
+"""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core.analytic import LinearServiceModel
+from repro.core.evaluate import evaluate
+from repro.core.grid import ROUTE_CODE, FleetGrid, SweepGrid
+from repro.core.markov import solve
+from repro.core.replicas import simulate_jsq, simulate_jsq_numpy
+from repro.core.sweep import fleet_sweep, sweep
+
+V100 = LinearServiceModel(alpha=0.1438, tau0=1.8874)
+ALPHA, TAU0 = V100.alpha, V100.tau0
+
+# one shared dispatch: all points use this kernel configuration
+KW = dict(n_steps=4992, q_cap=128, a_cap=32, seed=7)
+RHO = 0.5
+LAM1 = RHO / ALPHA                 # single-replica rate at rho = 0.5
+N_JSQ_REPS = 6                     # seed-ladder width (fleet side)
+
+
+def _grid():
+    """k=1 parity (3 routings) + k=4 random/rr + a k=1 timeout point
+    + the k=4 JSQ seed ladder, all in one FleetGrid."""
+    lam = [LAM1] * 3 + [4 * LAM1] * 2 + [LAM1] \
+        + [4 * LAM1] * N_JSQ_REPS
+    k = [1, 1, 1, 4, 4, 1] + [4] * N_JSQ_REPS
+    routing = (["random", "round_robin", "jsq", "random", "round_robin",
+                "random"] + ["jsq"] * N_JSQ_REPS)
+    wait_max = [0.0] * 5 + [5.0] + [0.0] * N_JSQ_REPS
+    wait_target = [0] * 5 + [32] + [0] * N_JSQ_REPS
+    b_max = [0] * 5 + [64] + [0] * N_JSQ_REPS
+    return FleetGrid.from_points(lam, ALPHA, TAU0, k=k, routing=routing,
+                                 b_max=b_max, wait_max=wait_max,
+                                 wait_target=wait_target)
+
+
+@pytest.fixture(scope="module")
+def fleet():
+    grid = _grid()
+    return grid, fleet_sweep(grid, **KW)
+
+
+class TestParity:
+    def test_no_drops(self, fleet):
+        _, r = fleet
+        assert int(r.dropped.sum()) == 0
+
+    def test_k1_matches_markov_all_routings(self, fleet):
+        """k = 1 reduces to the single-server queue whatever the
+        routing code says."""
+        _, r = fleet
+        m = solve(LAM1, V100)
+        for i in range(3):
+            assert r.mean_latency[i] == pytest.approx(m.mean_latency,
+                                                      rel=0.04)
+            assert r.mean_batch[i] == pytest.approx(m.mean_batch,
+                                                    rel=0.05)
+            assert r.utilization[i] == pytest.approx(m.utilization,
+                                                     abs=0.02)
+
+    def test_k1_matches_single_server_sweep(self, fleet):
+        """Independent kernels, same model: fleet k=1 vs sweep."""
+        _, r = fleet
+        g1 = SweepGrid.from_points([LAM1], ALPHA, TAU0)
+        s = sweep(g1, n_batches=4000, seed=5)
+        assert r.mean_latency[0] == pytest.approx(s.mean_latency[0],
+                                                  rel=0.04)
+        assert r.latency_p50[0] == pytest.approx(s.latency_p50[0],
+                                                 rel=0.06)
+        assert r.latency_p99[0] == pytest.approx(s.latency_p99[0],
+                                                 rel=0.10)
+
+    def test_random_split_is_single_queue_at_lam_over_k(self, fleet):
+        """Poisson thinning: a random 1/k split of Poisson(λ) feeds each
+        replica an independent Poisson(λ/k) — the fleet's mean latency
+        equals the exact single-queue solve at λ/k."""
+        grid, r = fleet
+        i = 3                                  # k=4, random, λ = 4·LAM1
+        assert int(grid.k[i]) == 4
+        m = solve(LAM1, V100)                  # λ/k = LAM1
+        assert r.mean_latency[i] == pytest.approx(m.mean_latency,
+                                                  rel=0.04)
+        assert r.mean_batch[i] == pytest.approx(m.mean_batch, rel=0.05)
+
+    def test_timeout_k1_matches_single_server_sweep(self, fleet):
+        """The timeout policy runs through a different fleet code path
+        (scheduled releases); pin it to the single-server timeout
+        kernel."""
+        _, r = fleet
+        g = SweepGrid.from_points([LAM1], ALPHA, TAU0, b_max=[64],
+                                  wait_max=[5.0], wait_target=[32])
+        s = sweep(g, n_batches=4000, seed=5)
+        assert r.mean_latency[5] == pytest.approx(s.mean_latency[0],
+                                                  rel=0.05)
+        assert r.mean_batch[5] == pytest.approx(s.mean_batch[0],
+                                                rel=0.06)
+
+    def test_jsq_matches_legacy_numpy_seed_ladder(self, fleet):
+        """Fleet JSQ vs the per-event NumPy loop: mean latency within 3σ
+        of the paired MC error over the seed ladders."""
+        _, r = fleet
+        fl = r.mean_latency[6:6 + N_JSQ_REPS]
+        legacy = np.array([simulate_jsq_numpy(4 * LAM1, V100, 4,
+                                              n_jobs=40_000, seed=s)
+                           for s in range(3)])
+        se = math.sqrt(fl.var(ddof=1) / len(fl)
+                       + legacy.var(ddof=1) / len(legacy))
+        se = max(se, 0.01 * legacy.mean())     # floor: 1% of the mean
+        assert abs(fl.mean() - legacy.mean()) < 3.0 * se
+
+
+class TestFleetSchema:
+    def test_point_and_balance(self, fleet):
+        grid, r = fleet
+        p = r.point(3)
+        assert p.backend == "fleet" and p.k == 4 and p.routing == "random"
+        p.check()
+        # measured jobs are attributed to replicas exactly once
+        for i in range(len(grid)):
+            assert int(r.jobs_by_replica[i].sum()) == int(r.n_jobs[i])
+        # round-robin spreads batches near-uniformly at k=4
+        bal = r.balance(4)
+        assert bal.shape == (4,)
+        assert np.all(np.abs(bal - 0.25) < 0.05)
+
+    def test_rho_is_per_replica(self):
+        g = FleetGrid.from_points([4.0], 0.1, 1.0, k=4)
+        assert g.rho[0] == pytest.approx(0.1)
+        assert g.routing_names == ["jsq"]
+
+    def test_grid_construction_scales(self):
+        g = FleetGrid.from_rhos([0.2, 0.5, 0.8], 0.1, 1.0,
+                                ks=list(range(1, 17)),
+                                routings=("random", "round_robin",
+                                          "jsq"))
+        assert len(g) == 3 * 16 * 3
+        gp = FleetGrid.from_product([1.0, 2.0], [0.1], [1.0],
+                                    ks=(1, 2, 4), routings=("jsq",))
+        assert len(gp) == 6
+        assert len(g.concat(g)) == 2 * len(g)
+        assert len(g.take(slice(0, 10))) == 10
+
+    def test_validation(self):
+        g = SweepGrid.from_points([1.0], [0.1], [1.0])
+        with pytest.raises(TypeError):
+            fleet_sweep(g)
+        gf = FleetGrid.from_points([1.0], 0.1, 1.0, k=2)
+        with pytest.raises(ValueError):
+            fleet_sweep(gf, q_cap=64, a_cap=32,
+                        n_steps=64, warmup=64)
+        with pytest.raises(TypeError):
+            g.concat(gf)
+
+
+class TestEvaluateFleetBackend:
+    def test_fleet_backend_and_promotion(self, fleet):
+        grid, r = fleet
+        # promotion: a plain SweepGrid becomes a k=1 fleet
+        g1 = SweepGrid.from_points([LAM1], ALPHA, TAU0)
+        (res,) = evaluate(g1, backend="fleet", **KW)
+        assert res.backend == "fleet" and res.k == 1
+        m = solve(LAM1, V100)
+        assert res.mean_latency == pytest.approx(m.mean_latency,
+                                                 rel=0.04)
+
+    def test_sweep_backend_rejects_fleet_grid(self):
+        gf = FleetGrid.from_points([1.0], 0.1, 1.0, k=2)
+        with pytest.raises(ValueError):
+            evaluate(gf, backend="sweep")
+
+    def test_single_server_backends_reject_multi_replica_grid(self):
+        """A k>1 FleetGrid on a single-server backend would silently
+        treat lam as one queue's rate — must raise instead."""
+        gf = FleetGrid.from_points([1.0], 0.1, 1.0, k=4)
+        for backend in ("analytic", "markov", "sim"):
+            with pytest.raises(ValueError):
+                evaluate(gf, backend=backend)
+
+    def test_simulate_jsq_fleet_backend(self):
+        """The re-implemented simulate_jsq agrees with the exact single
+        queue at k=1 (where JSQ is vacuous)."""
+        ew = simulate_jsq(LAM1, V100, 1, n_jobs=40_000, seed=2)
+        m = solve(LAM1, V100)
+        assert ew == pytest.approx(m.mean_latency, rel=0.05)
+        with pytest.raises(ValueError):
+            simulate_jsq(LAM1, V100, 2, backend="nope")
+
+
+class TestDeterminism:
+    """Same grid + seed ⇒ bitwise-identical results whether dispatched
+    as one vmap batch or sharded into two (guards the fold_in key
+    construction against shape-dependent key consumption)."""
+
+    def test_sweep_split_dispatch_bitwise(self):
+        g = SweepGrid.from_product([1.0, 2.0, 3.0], [0.1438],
+                                   [0.75, 1.8874])
+        full = sweep(g, n_batches=512, q_cap=256, seed=11)
+        a = sweep(g.take(slice(0, 2)), n_batches=512, q_cap=256, seed=11)
+        b = sweep(g.take(slice(2, None)), n_batches=512, q_cap=256,
+                  seed=11, key_offset=2)
+        for field in ("mean_latency", "mean_batch", "utilization"):
+            merged = np.concatenate([getattr(a, field),
+                                     getattr(b, field)])
+            assert np.array_equal(getattr(full, field), merged), field
+        assert np.array_equal(full.hist,
+                              np.concatenate([a.hist, b.hist]))
+
+    def test_fleet_split_dispatch_bitwise(self):
+        g = FleetGrid.from_points([1.0, 2.0, 2.0, 3.0], 0.1438, 1.8874,
+                                  k=[4, 4, 2, 4],
+                                  routing=["jsq", "random",
+                                           "round_robin", "jsq"])
+        kw = dict(n_steps=512, q_cap=64, a_cap=16)
+        full = fleet_sweep(g, seed=13, **kw)
+        a = fleet_sweep(g.take(slice(0, 2)), seed=13, **kw)
+        b = fleet_sweep(g.take(slice(2, None)), seed=13, key_offset=2,
+                        **kw)
+        for field in ("mean_latency", "mean_batch", "n_jobs"):
+            merged = np.concatenate([getattr(a, field),
+                                     getattr(b, field)])
+            assert np.array_equal(getattr(full, field), merged), field
+        assert np.array_equal(full.jobs_by_replica[:, :2],
+                              np.concatenate([a.jobs_by_replica,
+                                              b.jobs_by_replica])[:, :2])

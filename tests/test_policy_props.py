@@ -1,0 +1,84 @@
+"""Property-based tests for the batching policies (repro.core.policy).
+
+These pin the contracts every consumer of ``BatchPolicy`` relies on —
+the serving engine's event loop, the scalar simulator, and the sweep /
+fleet kernels' (b_max, wait_max, wait_target) encodings:
+
+- ``take(n)`` never exceeds the queue (or the cap) and is monotone in n,
+- ``release_time`` never travels back in time,
+- ``TimeoutBatch`` releases by ``oldest_arrival + max_wait`` at the
+  latest (unless that deadline already passed), and immediately once
+  ``target`` jobs wait.
+
+Runs under real `hypothesis` when installed, else the deterministic
+fallback sampler in tests/_hypothesis_compat.py.
+"""
+import pytest
+
+from repro.core.policy import BatchAllWaiting, CappedBatch, TimeoutBatch
+
+from _hypothesis_compat import given, settings, st
+
+POLICIES = [BatchAllWaiting(), CappedBatch(cap=8), CappedBatch(cap=64),
+            TimeoutBatch(max_wait=0.005, target=4, cap=16)]
+
+
+@settings(max_examples=80, deadline=None)
+@given(n=st.integers(min_value=0, max_value=10_000))
+def test_take_never_exceeds_waiting_or_cap(n):
+    for p in POLICIES:
+        b = p.take(n)
+        assert 0 <= b <= n
+        assert b <= p.b_max
+
+
+@settings(max_examples=80, deadline=None)
+@given(n1=st.integers(min_value=0, max_value=10_000),
+       n2=st.integers(min_value=0, max_value=10_000))
+def test_take_monotone_in_queue_length(n1, n2):
+    lo, hi = sorted((n1, n2))
+    for p in POLICIES:
+        assert p.take(lo) <= p.take(hi)
+
+
+@settings(max_examples=80, deadline=None)
+@given(now=st.floats(min_value=0.0, max_value=1e4),
+       age=st.floats(min_value=0.0, max_value=1e3),
+       n=st.integers(min_value=1, max_value=200))
+def test_release_time_never_in_the_past(now, age, n):
+    oldest = now - age
+    for p in POLICIES:
+        assert p.release_time(now, oldest, n) >= now
+
+
+@settings(max_examples=120, deadline=None)
+@given(now=st.floats(min_value=0.0, max_value=1e4),
+       age=st.floats(min_value=0.0, max_value=1e3),
+       n=st.integers(min_value=1, max_value=200),
+       max_wait=st.floats(min_value=1e-6, max_value=10.0),
+       target=st.integers(min_value=1, max_value=64))
+def test_timeout_release_bounded_by_deadline(now, age, n, max_wait,
+                                             target):
+    """The release never exceeds oldest_arrival + max_wait — except when
+    that deadline already passed, in which case it is exactly `now`."""
+    p = TimeoutBatch(max_wait=max_wait, target=target, cap=64)
+    oldest = now - age
+    rel = p.release_time(now, oldest, n)
+    deadline = oldest + max_wait
+    if n >= target:
+        assert rel == now
+    elif deadline <= now:
+        assert rel == now
+    else:
+        assert rel == deadline
+
+
+def test_non_timeout_policies_release_immediately():
+    for p in (BatchAllWaiting(), CappedBatch(cap=4)):
+        assert p.release_time(3.5, 1.0, 7) == 3.5
+
+
+def test_take_values_pin():
+    assert BatchAllWaiting().take(17) == 17
+    assert CappedBatch(cap=8).take(17) == 8
+    assert TimeoutBatch(cap=8).take(17) == 8
