@@ -34,6 +34,9 @@ class Row:
     name: str
     us_per_call: float          # wall time of producing this row (µs)
     derived: str                # the benchmark's payload (key=val;...)
+    payload: Optional[Dict[str, Any]] = None   # same, machine-readable
+    #   (run.py serializes it into BENCH_<module>.json so the perf
+    #   trajectory is tracked across PRs)
 
     def csv(self) -> str:
         return f"{self.name},{self.us_per_call:.1f},{self.derived}"
@@ -44,7 +47,7 @@ def timed(fn: Callable[[], Dict[str, Any]], name: str) -> Row:
     payload = fn()
     us = (time.perf_counter() - t0) * 1e6
     derived = ";".join(f"{k}={_fmt(v)}" for k, v in payload.items())
-    return Row(name, us, derived)
+    return Row(name, us, derived, payload)
 
 
 def _fmt(v: Any) -> str:

@@ -1,46 +1,166 @@
 """Beyond-paper: static (paper) vs continuous batching for generation.
 
-Simulation comparison at token-granular linear service, plus a real-engine
-spot check. Shows where the paper's request-level model stops applying to
-autoregressive generation and what replaces it (the per-step batch law).
+One jit dispatch pushes the full token-level grid — load × gen_tokens ×
+max_active × discipline — through the vectorized generate kernel
+(``repro.core.gen_sweep``), derives the static-vs-continuous crossover
+per (gen_tokens, max_active) cell, and times the kernel against the
+per-decode-step numpy loop at equal job counts.
+
+Loads are normalized by the *cap-limited* saturation rate
+cap / (prefill(cap·prompt) + gen·decode(cap)) — the b→∞ normalization
+of ``GenGrid.rho`` would make small-``max_active`` cells unstable at
+high nominal load — so every grid point is a stable queue and
+``dropped`` stays 0.
+
+The speedup row measures the regime the old benchmark burned its budget
+on: long generations at low load, where the Python loop pays
+~gen_tokens iterations per request while the kernel's run-length event
+skipping pays ~2 scan steps per request (see docs/theory.md
+§"Token-level service law").
 """
 from __future__ import annotations
 
 from typing import List
 
-from benchmarks.common import Row, timed
-from repro.core.continuous_sim import (GenServiceModel, simulate_continuous,
-                                       simulate_static_generate)
+import numpy as np
+
+from benchmarks.common import Row, enable_host_devices, timed
+from repro.core.continuous_sim import GenServiceModel
+
+enable_host_devices()          # before any JAX backend initialization
 
 # token-granular V100-like constants (ms): decode step α=0.14, τ0=1.9;
 # prefill ~4x decode throughput per token
 MODEL = GenServiceModel(alpha_decode=0.14, tau0_decode=1.9,
                         alpha_prefill=0.035, tau0_prefill=1.9)
+PROMPT = 128
+RHOS = [round(r, 4) for r in np.linspace(0.15, 0.85, 16)]
+GENS = (8, 32, 64, 256)
+CAPS = (8, 16, 32, 64)
+DISCS = ("static", "continuous")
 
 
-def run(n_jobs: int = 20_000) -> List[Row]:
+def capped_capacity(gen: int, cap: int) -> float:
+    return MODEL.capped_capacity(PROMPT, gen, cap)
+
+
+def _grid():
+    from repro.core.gen_sweep import GenGrid
+    lam, gens, caps, discs = [], [], [], []
+    for rho in RHOS:
+        for g in GENS:
+            for c in CAPS:
+                for d in DISCS:
+                    lam.append(rho * capped_capacity(g, c))
+                    gens.append(g)
+                    caps.append(c)
+                    discs.append(d)
+    return GenGrid.from_points(
+        lam, MODEL.alpha_decode, MODEL.tau0_decode, MODEL.alpha_prefill,
+        MODEL.tau0_prefill, prompt_len=PROMPT, gen_tokens=gens,
+        max_active=caps, discipline=discs)
+
+
+def idx(rho, gen, cap, disc):
+    return (((RHOS.index(rho) * len(GENS) + GENS.index(gen))
+             * len(CAPS) + CAPS.index(cap))
+            * len(DISCS) + DISCS.index(disc))
+
+
+def run(n_steps: int = 4096) -> List[Row]:
+    from repro.core.continuous_sim import simulate_continuous_numpy
+    from repro.core.gen_sweep import GenGrid, gen_sweep
+
     rows: List[Row] = []
-    gen = 32
-    # decode-capacity-normalized load
-    for rho in (0.2, 0.4, 0.6, 0.8):
-        # service capacity per request ≈ gen·α_d + prompt·α_p at b→∞
-        cap = 1.0 / (gen * MODEL.alpha_decode + 128 * MODEL.alpha_prefill)
-        lam = rho * cap
+    grid = _grid()
+    out = {}
 
-        def one(rho=rho, lam=lam):
-            st = simulate_static_generate(lam, MODEL, gen_tokens=gen,
-                                          b_max=64, n_jobs=n_jobs, seed=3)
-            ct = simulate_continuous(lam, MODEL, gen_tokens=gen,
-                                     max_active=64, n_jobs=n_jobs, seed=3)
-            return {
-                "rho": rho,
-                "EW_static": st.mean_latency,
-                "EW_continuous": ct.mean_latency,
-                "speedup": st.mean_latency / ct.mean_latency,
-                "p99_static": st.latency_p99,
-                "p99_continuous": ct.latency_p99,
-                "mean_batch_static": st.mean_active,
-                "mean_active_continuous": ct.mean_active,
-            }
-        rows.append(timed(one, f"continuous/rho={rho}"))
+    # -- 1) the token-level grid: 16 loads × 4 gen_tokens × 4
+    #       max_active × 2 disciplines = 512 points, one dispatch ------
+    def dispatch():
+        # a_cap must cover the densest indivisible window — the batched
+        # prefill of a full cap=64 batch (~290 ms) at the highest λ
+        # (~0.145/ms ⇒ ~43 expected arrivals) plus Poisson slack
+        out["r"] = gen_sweep(grid, n_steps=n_steps, q_cap=256,
+                             a_cap=96, seed=29)
+        return {"points": len(grid), "n_steps": n_steps,
+                "total_jobs": int(out["r"].n_jobs.sum()),
+                "dropped": int(out["r"].dropped.sum())}
+
+    rows.append(timed(dispatch, "continuous/gen_dispatch"))
+    r = out["r"]
+
+    # -- 2) static-vs-continuous crossover per (gen, cap) cell: at low
+    #       load iteration-level scheduling wins (no head-of-line
+    #       blocking); near saturation the paper's batch-all policy
+    #       amortizes the inline prefill better ----------------------
+    for gen in GENS:
+        for cap in (16, 64):
+
+            def one(gen=gen, cap=cap):
+                ew_s = np.array([r.mean_latency[idx(rho, gen, cap,
+                                                    "static")]
+                                 for rho in RHOS])
+                ew_c = np.array([r.mean_latency[idx(rho, gen, cap,
+                                                    "continuous")]
+                                 for rho in RHOS])
+                ratio = ew_s / ew_c
+                cross = next((rho for rho, q in zip(RHOS, ratio)
+                              if q < 1.0), None)
+                return {
+                    "gen": gen, "cap": cap,
+                    "speedup_low": float(ratio[0]),
+                    "speedup_high": float(ratio[-1]),
+                    "crossover_rho": cross if cross is not None
+                    else ">0.85",
+                }
+            rows.append(timed(one, f"continuous/crossover/gen={gen}"
+                                   f"/cap={cap}"))
+
+    # -- 3) wall-clock: gen kernel vs the per-decode-step numpy loop,
+    #       equal job counts at one (λ, gen, cap) point — the
+    #       long-generation low-load regime where the loop pays
+    #       ~gen_tokens Python iterations per request ----------------
+    gen, cap, rho = 256, 16, 0.35
+    lam = rho * capped_capacity(gen, cap)
+    # wide ladders amortize the vmap per-step cost; --quick keeps the
+    # numpy side (which pays per job) affordable via the ladder width —
+    # the per-point step count is pinned at the kernel's step bucket
+    # (anything smaller would silently round back up to it)
+    reps = 512 if n_steps >= 4096 else 128
+    jgrid = GenGrid.from_points(
+        [lam] * reps, MODEL.alpha_decode, MODEL.tau0_decode,
+        MODEL.alpha_prefill, MODEL.tau0_prefill, prompt_len=PROMPT,
+        gen_tokens=gen, max_active=cap, discipline="continuous")
+    kernel_kw = dict(n_steps=2048, q_cap=48, a_cap=16)
+    gen_sweep(jgrid, seed=5, **kernel_kw)      # compile outside timing
+    timing = {}
+
+    def kernel_side():
+        res = gen_sweep(jgrid, seed=31, **kernel_kw)
+        timing["jobs"] = int(res.n_jobs.sum())
+        return {"points": reps, "jobs": timing["jobs"],
+                "dropped": int(res.dropped.sum()),
+                "EW": float(res.mean_latency.mean())}
+
+    rows.append(timed(kernel_side,
+                      f"continuous/gen_kernel/gen={gen}/rho={rho}"))
+    t_kernel = rows[-1].us_per_call
+
+    def numpy_side():
+        ew = simulate_continuous_numpy(
+            lam, MODEL, prompt_len=PROMPT, gen_tokens=gen,
+            max_active=cap, n_jobs=timing["jobs"], seed=31)
+        return {"jobs": timing["jobs"], "EW": ew.mean_latency}
+
+    rows.append(timed(numpy_side,
+                      f"continuous/numpy_loop/gen={gen}/rho={rho}"))
+    t_numpy = rows[-1].us_per_call
+
+    def speedup():
+        return {"jobs": timing["jobs"],
+                "kernel_us_per_job": t_kernel / timing["jobs"],
+                "numpy_us_per_job": t_numpy / timing["jobs"],
+                "speedup": t_numpy / t_kernel}
+    rows.append(timed(speedup, "continuous/speedup_vs_numpy"))
     return rows

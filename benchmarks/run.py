@@ -1,21 +1,52 @@
 """Benchmark harness entry point — one module per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV (one row per measurement).
+Prints ``name,us_per_call,derived`` CSV (one row per measurement) and,
+unless ``--no-json`` is given, writes a machine-readable
+``BENCH_<module>.json`` per module (wall clock, per-row payloads, and
+points/sec for dispatch rows) so the perf trajectory is tracked across
+PRs.
 
   python -m benchmarks.run             # everything (≈ minutes)
   python -m benchmarks.run --quick     # smaller sims, fewer served jobs
   python -m benchmarks.run --only fig4 # single module
+  python -m benchmarks.run --json-dir out/   # JSON location (default .)
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
+import time
+from pathlib import Path
+
+
+def _row_json(row) -> dict:
+    d = {"name": row.name, "us_per_call": round(row.us_per_call, 1)}
+    payload = row.payload or {}
+    d["payload"] = {k: v for k, v in payload.items()}
+    # throughput rates only make sense for rows that actually timed the
+    # work named in the payload (dispatch/loop rows, ≥ms-scale) — a
+    # derived summary row also carries points/jobs keys but only times
+    # building its result dict
+    if row.us_per_call >= 1e4:
+        points = payload.get("points")
+        if points:
+            d["points_per_sec"] = round(points / (row.us_per_call / 1e6),
+                                        2)
+        jobs = payload.get("total_jobs", payload.get("jobs"))
+        if jobs:
+            d["jobs_per_sec"] = round(jobs / (row.us_per_call / 1e6), 1)
+    return d
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", default=None)
+    ap.add_argument("--json-dir", default=".",
+                    help="directory for BENCH_<module>.json files")
+    ap.add_argument("--no-json", action="store_true",
+                    help="skip writing BENCH_<module>.json")
     args = ap.parse_args()
 
     from benchmarks import (continuous, fig4_latency_bound,
@@ -43,7 +74,7 @@ def main() -> None:
         "policies": lambda: policies.run(
             n_jobs=30_000 if args.quick else 100_000),
         "continuous": lambda: continuous.run(
-            n_jobs=5_000 if args.quick else 20_000),
+            n_steps=2_048 if args.quick else 4_096),
         "tails": lambda: tails.run(
             n_batches=1_500 if args.quick else 6_000),
         "replicas": lambda: replicas.run(
@@ -55,13 +86,26 @@ def main() -> None:
         if not modules:
             sys.exit(f"unknown module {args.only!r}")
 
+    json_dir = Path(args.json_dir)
     print("name,us_per_call,derived")
     for name, fn in modules.items():
+        t0 = time.perf_counter()
         try:
-            for row in fn():
-                print(row.csv(), flush=True)
+            rows = list(fn())
         except Exception as e:  # noqa: BLE001
             print(f"{name}/ERROR,0,{type(e).__name__}: {e}", flush=True)
+            continue
+        wall_s = time.perf_counter() - t0
+        for row in rows:
+            print(row.csv(), flush=True)
+        if args.no_json:
+            continue
+        doc = {"module": name, "wall_s": round(wall_s, 3),
+               "quick": bool(args.quick),
+               "rows": [_row_json(r) for r in rows]}
+        json_dir.mkdir(parents=True, exist_ok=True)
+        path = json_dir / f"BENCH_{name}.json"
+        path.write_text(json.dumps(doc, indent=1, default=str) + "\n")
 
 
 if __name__ == "__main__":

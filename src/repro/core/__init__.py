@@ -31,12 +31,16 @@ from repro.core.policy import (  # noqa: F401
 )
 # NOTE: the jit sweep kernels are deliberately NOT re-exported here —
 # they are the one piece that imports JAX.  Reach them via
-# `evaluate(grid, backend="sweep"/"fleet")` (deferred import) or
-# explicitly via `from repro.core.sweep import sweep, fleet_sweep`;
+# `evaluate(grid, backend="sweep"/"fleet"/"gen")` (deferred import) or
+# explicitly via `from repro.core.sweep import sweep, fleet_sweep` /
+# `from repro.core.gen_sweep import gen_sweep`;
 # plain `import repro.core` stays JAX-free for analytic/scalar users.
 from repro.core.grid import (  # noqa: F401
+    DISC_CODE,
     FleetGrid,
     FleetResult,
+    GenGrid,
+    GenResult,
     ROUTE_CODE,
     SweepGrid,
     SweepResult,

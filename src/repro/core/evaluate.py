@@ -21,10 +21,17 @@ Markov-chain, and vectorized-sweep answers are interchangeable:
   count and a routing discipline (random / round_robin / jsq).  Takes a
   ``FleetGrid``; a plain ``SweepGrid`` is promoted to k = 1 fleets
   (which reduce exactly to the single-server model).
+- ``"gen"``       — the token-level generate kernel
+  (``repro.core.gen_sweep.gen_sweep``): requests are prefill +
+  ``gen_tokens`` decode steps under the per-step linear law, scheduled
+  statically (the paper's policy over whole requests) or continuously
+  (iteration-level).  Takes a ``GenGrid`` — the axes are different from
+  the request-level grids, so there is no promotion in either
+  direction.
 
 Backend-specific keyword arguments pass through (``n_jobs``/``seed``
 for ``sim``, ``n_batches``/``q_cap``/… for ``sweep``, ``n_steps``/… for
-``fleet``, ``truncation`` for ``markov``).
+``fleet`` and ``gen``, ``truncation`` for ``markov``).
 """
 from __future__ import annotations
 
@@ -34,12 +41,13 @@ from typing import List
 import numpy as np
 
 from repro.core import analytic as an
-from repro.core.grid import DIST_CODE, DIST_NAME, FleetGrid, SweepGrid
+from repro.core.grid import (DIST_CODE, DIST_NAME, FleetGrid, GenGrid,
+                             SweepGrid)
 from repro.core.results import SimResult
 
 __all__ = ["evaluate", "BACKENDS"]
 
-BACKENDS = ("analytic", "markov", "sim", "sweep", "fleet")
+BACKENDS = ("analytic", "markov", "sim", "sweep", "fleet", "gen")
 
 
 def _require(cond: bool, backend: str, what: str) -> None:
@@ -111,6 +119,17 @@ def evaluate(grid: SweepGrid, backend: str = "sweep",
              **kw) -> List[SimResult]:
     """Evaluate every grid point with the chosen backend (see module
     docstring); returns one unified ``SimResult`` per point."""
+    if backend == "gen":
+        from repro.core.gen_sweep import gen_sweep
+        if not isinstance(grid, GenGrid):
+            raise ValueError("backend 'gen' needs a GenGrid (token-level "
+                             "axes); request-level grids have no "
+                             "prompt/gen_tokens to promote")
+        return gen_sweep(grid, **kw).to_results()
+    if isinstance(grid, GenGrid):
+        # request-level backends would misread the token-level axes
+        raise ValueError(f"backend {backend!r} is request-level; this is "
+                         "a GenGrid — use backend='gen'")
     if backend != "fleet" and isinstance(grid, FleetGrid) \
             and bool(np.any(grid.k > 1)):
         # single-server backends would silently read lam as one queue's

@@ -1,0 +1,425 @@
+"""Vectorized token-level (generate) sweep kernel.
+
+The request-level kernels in ``repro.core.sweep`` advance one scan step
+per *batch*; autoregressive generation is finer-grained — a request is a
+prefill of ``prompt_len`` tokens plus ``gen_tokens`` decode steps, and
+iteration-level (Orca/vLLM-style) schedulers re-decide the batch at
+every decode step.  This module simulates both disciplines of
+``repro.core.continuous_sim`` entirely in JAX — one ``lax.scan`` step
+per scheduler *decision* — and ``vmap``s the kernel over a ``GenGrid``,
+so a dense (load, prompt_len, gen_tokens, max_active, discipline) grid
+runs in a single jit-compiled device dispatch.
+
+One scan step is one cycle of the iteration-level scheduler:
+
+1. if the system is empty, jump the clock to the next Poisson arrival
+   (memorylessness — exactly one arrival ends the idle period),
+2. admit waiting requests into free decode slots, FIFO, paying one
+   *batched* prefill  α_p·(prompt·n_join) + τ0_p  inline,
+3. run decode steps over the b active sequences (α_d·b + τ0_d each),
+   retiring sequences whose remaining-token count hits zero, and
+4. push the Poisson arrivals of the elapsed window into the waiting
+   ring (the same constructive exp-gap/cumsum draw as the
+   request-level kernels — see docs/theory.md).
+
+Step 3 uses *run-length event skipping*: between scheduler events the
+active set is frozen — no admission can happen before the next step
+boundary that follows an arrival (continuous) or the batch end
+(static), and no sequence retires before the smallest remaining-token
+count runs out — so the kernel advances j identical decode steps in
+closed form (time j·(α_d·b + τ0_d), batch-size moments weighted by j)
+and pays one scan step per *event*, not per token.  A static batch is
+one scan step; a lightly loaded continuous server spends ~1 step per
+request instead of ~gen_tokens.  This is the token-level analogue of
+the request-level kernel's batch-by-batch regeneration argument, and
+it is exact for the same reason (docs/theory.md §"Token-level service
+law").
+
+The two disciplines differ ONLY in the admission gate of step 2:
+
+- ``continuous`` admits whenever free slots exist (up to ``max_active``);
+- ``static`` admits only when NO sequence is active — admitted requests
+  then decode in lockstep and finish together, which reproduces the
+  paper's batch-held-to-completion service
+  prefill(b·prompt) + gen_tokens·decode(b) exactly, with ``max_active``
+  playing the role of b_max.
+
+So one kernel covers both, and the discipline is a per-point grid axis.
+
+State per grid point is a *tail-pointer* FIFO buffer of waiting arrival
+epochs: the waiting jobs are ``buf[head:tail]`` oldest-first, admission
+pops by advancing ``head`` (no data movement), window arrivals append
+at ``tail`` with one contiguous ``dynamic_update_slice`` (element-wise
+scatters with computed indices lower ~an order of magnitude slower
+under vmap on CPU), and the buffer is re-compacted to ``head = 0`` once
+per superstep — so the per-step cost of the waiting room is O(appended)
+instead of the O(q_cap) shift a compacted buffer pays.  On top of that
+sit a fixed ``s_cap``-slot decode pool (remaining-token count and
+arrival epoch per slot) and the carried next-arrival epoch
+``next_arr``, so no arrival is ever discarded between windows.  All
+randomness is drawn in one block per superstep (per-step threefry calls
+are the other dominant per-point cost of a wide vmap on CPU), and all
+times are relative to the current superstep origin; the clock is
+rebased — and the buffer compacted, and the bit-binned latency
+histogram scattered — once per ``_REBASE_EVERY`` steps (the superstep
+amortization proven in the fleet kernel).  Capacity overflows (waiting
+jobs beyond ``q_cap``; more than ``a_cap`` arrivals inside one window
+even after the run shrinks to a single decode step) clamp and count in
+``dropped`` — a correct run has ``dropped == 0`` (asserted by tests).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax import lax, random
+
+from repro.core.grid import (  # noqa: F401  (re-exported for callers)
+    DISC_CODE, DISC_NAME, GenGrid, GenResult, _EXP_MIN, _MANT,
+    _hist_percentiles, hist_edges)
+from repro.core.sweep import _point_keys
+
+__all__ = ["DISC_CODE", "DISC_NAME", "GenGrid", "GenResult", "gen_sweep"]
+
+_REBASE_EVERY = 16          # scan steps per clock rebase + hist scatter
+#   (smaller than the fleet kernel's 32: the tail buffer — and with it
+#   the scan carry — scales with the rebase window, and the carry copy
+#   is a first-order per-step cost on CPU)
+_STEP_BUCKET = 2048         # n_steps rounds up to this (bounds recompiles)
+
+
+@functools.lru_cache(maxsize=16)
+def _build_gen_kernel(n_steps: int, warmup: int, s_cap: int, q_cap: int,
+                      a_cap: int, n_bins: int, hist_every: int,
+                      n_dev: int):
+    """Compile-time specialization of the per-point token-level kernel.
+
+    ``s_cap`` (grid max of ``max_active``) sizes the decode pool;
+    ``q_cap`` the waiting buffer; ``a_cap`` the pre-drawn arrival chain
+    per step (size it near λ × one decode step — a denser window only
+    shrinks the run via ``k_cov`` below, exact but slower; drops need
+    more than ``a_cap`` arrivals inside a single decode step)."""
+
+    i32 = jnp.int32
+    f32 = jnp.float32
+    INF = jnp.float32(3.0e38)
+    BIG = jnp.int32(2 ** 24)
+    DISC_CONT = DISC_CODE["continuous"]
+    # the tail pointer can advance by every accepted arrival plus one
+    # idle consume per step between compactions; appends write a whole
+    # (a_cap + 1) block past the tail
+    buf_len = q_cap + (a_cap + 2) * _REBASE_EVERY + a_cap + 1
+    hist_base = (127 + _EXP_MIN) << _MANT
+    hist_shift = 23 - _MANT
+    REBASE_EVERY = _REBASE_EVERY
+
+    def run_point(p, key):
+        lam = p["lam"]
+        a_d, t0_d = p["alpha_decode"], p["tau0_decode"]
+        a_p, t0_p = p["alpha_prefill"], p["tau0_prefill"]
+        prompt = p["prompt_len"].astype(f32)
+        gen = p["gen_tokens"].astype(i32)
+        cap = jnp.clip(p["max_active"], 1, s_cap).astype(i32)
+        disc = p["discipline"]
+
+        def step(state, x):
+            i, gaps = x
+            (head, tail, buf, rem, arr_s, now, next_arr, lat_sum,
+             lat_n, sum_b, sum_b2, n_meas, busy, span, q_max,
+             dropped) = state
+            q = tail - head
+
+            t_step0 = now
+            active = rem > 0
+            n_act = jnp.sum(active.astype(i32))
+
+            # 1) idle: system empty — jump to the carried next arrival
+            #    and enqueue it.  The write lands at the tail
+            #    unconditionally (past-tail slots are garbage until a
+            #    later append overwrites them, so a non-idle step's
+            #    write is harmless); only the tail advance is gated.
+            due = (q == 0) & (n_act == 0)
+            now = jnp.where(due, jnp.maximum(now, next_arr), now)
+            buf = lax.dynamic_update_slice(buf, next_arr[None], (tail,))
+            tail = tail + due.astype(i32)
+            q = q + due.astype(i32)
+
+            # the pre-drawn arrival chain: epochs strictly after
+            # next_arr; entry 0 IS next_arr (consumed above in the idle
+            # case), the last entry is the coverage sentinel
+            ts_ext = next_arr + jnp.concatenate(
+                [jnp.zeros((1,), f32), jnp.cumsum(gaps)]) / lam
+
+            # 2) admission gate: continuous fills any free slot; static
+            #    only starts a fresh batch on an idle server (batch held
+            #    to completion).  Joiners are the FIFO prefix
+            #    buf[head:head+n_join]; slot s with free-rank r < n_join
+            #    reads buf[head + r]; the pop just advances the head.
+            gate = (disc == DISC_CONT) | (n_act == 0)
+            n_join = jnp.where(gate, jnp.minimum(q, cap - n_act), 0)
+            t_pf = jnp.where(n_join > 0,
+                             a_p * prompt * n_join.astype(f32) + t0_p,
+                             0.0)
+            rank = jnp.cumsum((~active).astype(i32)) - 1
+            take = ~active & (rank < n_join)
+            j_times = jnp.take(buf, jnp.clip(head + rank, 0,
+                                             buf_len - 1))
+            arr_s = jnp.where(take, j_times, arr_s)
+            rem = jnp.where(take, gen, rem)
+            head = head + n_join
+            q = q - n_join
+
+            # 3) run length: decode j identical steps in closed form
+            #    until the next event — the earliest retirement
+            #    (min remaining tokens), the first step boundary past
+            #    the next pending arrival (only when it could be
+            #    admitted: continuous AND a slot stays free), or the
+            #    edge of the pre-drawn arrival coverage
+            b = n_act + n_join
+            dt = a_d * b.astype(f32) + t0_d
+            t0r = now + t_pf
+            m_min = jnp.min(jnp.where(rem > 0, rem, BIG))
+            na = jnp.min(jnp.where(ts_ext > now, ts_ext, INF))
+            watch = (disc == DISC_CONT) & (b < cap)
+            k_arr = jnp.where(
+                watch & (na < INF),
+                jnp.ceil((na - t0r) / dt).astype(i32), BIG)
+            k_cov = jnp.floor((ts_ext[-1] - t0r) / dt).astype(i32)
+            k = jnp.clip(jnp.minimum(jnp.minimum(m_min, k_arr), k_cov),
+                         1, BIG)
+            kf = k.astype(f32)
+            t_end = t0r + kf * dt
+
+            # 4) window arrivals (now, t_end] join the waiting buffer.
+            #    The pushable block is the chain minus the consumed
+            #    entry 0 in the idle case — a dynamic one-entry shift —
+            #    and its accepted prefix is contiguous (the chain is
+            #    sorted and starts past ``now``), so one contiguous
+            #    ``dynamic_update_slice`` at q appends it FIFO.  The
+            #    sentinel stays beyond the window by construction of
+            #    ``k_cov`` and carries as a future ``next_arr``; if even
+            #    a single-step window outruns the chain, the unseen
+            #    arrivals are dropped+counted.
+            ts_push = lax.dynamic_slice(ts_ext, (due.astype(i32),),
+                                        (a_cap + 1,))
+            count = jnp.sum(((ts_push > now)
+                             & (ts_push <= t_end)).astype(i32))
+            a = jnp.minimum(count, q_cap - q)
+            dropped = dropped + (count - a) \
+                + (ts_ext[-1] <= t_end).astype(i32)
+            buf = lax.dynamic_update_slice(buf, ts_push.astype(f32),
+                                           (tail,))
+            tail = tail + a
+            q = q + a
+            unproc = jnp.where(ts_ext > t_end, ts_ext, INF)
+            mn = jnp.min(unproc)
+            next_arr = jnp.where(mn < INF, mn, ts_ext[-1])
+
+            # 5) the decode run retires exactly the rem == k sequences
+            #    (k <= m_min, so no retirement happens mid-run)
+            rem = jnp.where(rem > 0, rem - k, 0)
+            fin = (take | active) & (rem == 0)
+            lats = jnp.where(fin, t_end - arr_s, 0.0)
+            now = t_end
+
+            # statistics after warmup, weighted by the run length so
+            # they equal the per-decode-step accounting of the numpy
+            # reference; span includes the idle gap, so utilization =
+            # busy/span matches its whole-interval clock
+            meas = i >= warmup
+            mf = meas.astype(f32)
+            bf = b.astype(f32)
+            n_fin = jnp.sum(fin.astype(i32))
+            lat_sum = lat_sum + mf * lats.sum()
+            lat_n = lat_n + jnp.where(meas, n_fin, 0)
+            sum_b = sum_b + mf * kf * bf
+            sum_b2 = sum_b2 + mf * kf * bf * bf
+            n_meas = n_meas + jnp.where(meas, k, 0)
+            busy = busy + mf * (t_pf + kf * dt)
+            span = span + mf * (t_end - t_step0)
+            q_max = jnp.maximum(q_max, q)
+
+            # raw latencies ride out to the superstep, which does the
+            # bit-binning once per block (three fewer ops per step)
+            return (head, tail, buf, rem, arr_s, now, next_arr,
+                    lat_sum, lat_n, sum_b, sum_b2, n_meas, busy, span,
+                    q_max, dropped), (lats, fin & meas)
+
+        # histogram thinning (same contract as the fleet kernel): a
+        # fixed scrambled 1-in-N step subsample feeds the percentile
+        # histogram; means/counters always use every step.  NOTE: with
+        # run-length skipping a static batch is ONE step, so thinning
+        # is unbiased across batches; still prefer hist_every = 1 when
+        # percentiles matter.
+        hist_rows = np.sort(np.random.default_rng(0).permutation(
+            REBASE_EVERY)[:max(1, REBASE_EVERY // hist_every)])
+
+        def superstep(state, x):
+            i_base, k_sup = x
+            hist = state[-1]
+            # one block draw per superstep, consumed row-wise by the
+            # inner scan — per-step threefry calls would dominate the
+            # per-point cost of a wide vmap on CPU
+            arr_gaps = random.exponential(k_sup,
+                                          (REBASE_EVERY, a_cap + 1))
+            state, (lats, inc) = lax.scan(
+                step, state[:-1],
+                (i_base + jnp.arange(REBASE_EVERY), arr_gaps))
+            if hist_every > 1:
+                lats, inc = lats[hist_rows], inc[hist_rows]
+            lat_bits = lax.bitcast_convert_type(lats, jnp.int32)
+            bins = jnp.clip((lat_bits >> hist_shift) - hist_base,
+                            0, n_bins - 1)
+            hist = hist.at[bins.reshape(-1)].add(
+                inc.reshape(-1).astype(i32))
+            # rebase the clock to the superstep end and re-compact the
+            # tail buffer to head = 0: the only whole-buffer passes in
+            # the kernel, paid once per REBASE_EVERY steps
+            (head, tail, buf, rem, arr_s, now, next_arr, *accs) = state
+            buf = lax.dynamic_slice(
+                jnp.concatenate([buf, jnp.zeros((buf_len,), f32)]),
+                (head,), (buf_len,)) - now
+            arr_s = jnp.where(rem > 0, arr_s - now, 0.0)
+            return (jnp.zeros((), i32), tail - head, buf, rem, arr_s,
+                    jnp.zeros((), f32), next_arr - now,
+                    *accs, hist), None
+
+        key, k0 = random.split(key)
+        init = (jnp.zeros((), i32),                    # head
+                jnp.zeros((), i32),                    # tail
+                jnp.zeros((buf_len,), f32),            # buf
+                jnp.zeros((s_cap,), i32),              # rem
+                jnp.zeros((s_cap,), f32),              # arr_s
+                jnp.zeros((), f32),                    # now
+                random.exponential(k0) / lam,          # next_arr
+                jnp.zeros((), f32), jnp.zeros((), i32),  # lat_sum, lat_n
+                jnp.zeros((), f32), jnp.zeros((), f32),  # sum_b, sum_b2
+                jnp.zeros((), i32), jnp.zeros((), f32),  # n_meas, busy
+                jnp.zeros((), f32), jnp.zeros((), i32),  # span, q_max
+                jnp.zeros((), i32),                      # dropped
+                jnp.zeros((n_bins,), i32))               # hist
+        n_super = n_steps // REBASE_EVERY
+        (_, _, _, _, _, _, _, lat_sum, lat_n, sum_b, sum_b2, n_meas,
+         busy, span, q_max, dropped, hist), _ = lax.scan(
+            superstep, init,
+            (jnp.arange(n_super) * REBASE_EVERY,
+             random.split(key, n_super)))
+
+        jobs = jnp.maximum(lat_n, 1).astype(f32)
+        nst = jnp.maximum(n_meas, 1).astype(f32)
+        return {
+            "mean_latency": lat_sum / jobs,
+            "mean_batch": sum_b / nst,
+            "batch_m2": sum_b2 / nst,
+            "utilization": busy / jnp.maximum(span, 1e-30),
+            "n_jobs": lat_n,
+            "n_steps": n_meas,
+            "max_queue": q_max,
+            "dropped": dropped,
+            "hist": hist,
+        }
+
+    vm = jax.vmap(run_point)
+    if n_dev > 1:
+        return jax.pmap(vm)
+    return jax.jit(vm)
+
+
+def gen_sweep(grid: GenGrid, *, n_steps: int = 4096,
+              warmup: Optional[int] = None, q_cap: int = 256,
+              a_cap: int = 64, n_bins: int = 512, seed: int = 0,
+              key_offset: int = 0, hist_every: int = 1,
+              shard: Optional[bool] = None) -> GenResult:
+    """Simulate every grid point for ``n_steps`` scheduler decisions in
+    one jit+vmap device dispatch.
+
+    ``n_steps`` counts scan steps; each advances a *run* of identical
+    decode steps up to the next scheduler event, so a point completes
+    roughly one request per 1–3 steps at low load and
+    ``E[b]/gen_tokens`` requests per step at high load.  The value is
+    rounded up to a multiple of ``_STEP_BUCKET`` so nearby sizes share
+    one compiled kernel.  ``q_cap`` bounds the waiting buffer and
+    ``a_cap`` the arrival chain visible per step; exceeding either
+    clamps and counts in ``dropped`` (a correct run has
+    ``dropped == 0``).  Per-point PRNG keys come from
+    ``fold_in(PRNGKey(seed), key_offset + i)``, so a grid sharded into
+    several dispatches (``GenGrid.take`` + ``key_offset``) is
+    bitwise-identical to the one-dispatch run.  ``shard`` splits the
+    grid across local devices via pmap (same contract as
+    ``fleet_sweep``); default: shard whenever more than one device is
+    visible.
+    """
+    if not isinstance(grid, GenGrid):
+        raise TypeError("gen_sweep needs a GenGrid "
+                        "(see GenGrid.from_points/from_product)")
+    if len(grid) == 0:
+        raise ValueError("empty grid")
+    n_steps = -(-int(n_steps) // _STEP_BUCKET) * _STEP_BUCKET
+    if warmup is None:
+        warmup = max(1, n_steps // 10)
+    if not 0 <= warmup < n_steps:
+        raise ValueError(f"warmup {warmup} must lie in [0, {n_steps})")
+    s_cap = int(grid.max_active.max())
+    if s_cap > q_cap:
+        raise ValueError("max_active exceeds q_cap; raise q_cap")
+    if not set(np.unique(grid.discipline)) <= set(DISC_CODE.values()):
+        raise ValueError(f"unknown discipline code in grid "
+                         f"(valid: {DISC_CODE})")
+    n_dev = len(jax.local_devices()) if shard is not False else 1
+    n_dev = max(1, min(n_dev, len(grid)))
+    kernel = _build_gen_kernel(int(n_steps), int(warmup), s_cap,
+                               int(q_cap), int(a_cap), int(n_bins),
+                               int(hist_every), n_dev)
+
+    params = {
+        "lam": jnp.asarray(grid.lam),
+        "alpha_decode": jnp.asarray(grid.alpha_decode),
+        "tau0_decode": jnp.asarray(grid.tau0_decode),
+        "alpha_prefill": jnp.asarray(grid.alpha_prefill),
+        "tau0_prefill": jnp.asarray(grid.tau0_prefill),
+        "prompt_len": jnp.asarray(grid.prompt_len),
+        "gen_tokens": jnp.asarray(grid.gen_tokens),
+        "max_active": jnp.asarray(grid.max_active),
+        "discipline": jnp.asarray(grid.discipline),
+    }
+    keys = _point_keys(seed, key_offset, len(grid))
+
+    n = len(grid)
+    if n_dev > 1:
+        # pad (repeating the last point) to a device-divisible count;
+        # per-point keys make the padding harmless
+        per = -(-n // n_dev)
+        pad = per * n_dev - n
+
+        def shard_arr(a):
+            if pad:
+                a = jnp.concatenate([a, jnp.repeat(a[-1:], pad, axis=0)])
+            return a.reshape((n_dev, per) + a.shape[1:])
+
+        out = jax.device_get(kernel(
+            {kk: shard_arr(v) for kk, v in params.items()},
+            shard_arr(keys)))
+        out = {kk: np.asarray(v).reshape((n_dev * per,) + v.shape[2:])[:n]
+               for kk, v in out.items()}
+    else:
+        out = jax.device_get(kernel(params, keys))
+
+    p50, p95, p99 = _hist_percentiles(out["hist"], (50, 95, 99))
+    return GenResult(
+        grid=grid,
+        mean_latency=np.asarray(out["mean_latency"], dtype=np.float64),
+        latency_p50=p50, latency_p95=p95, latency_p99=p99,
+        mean_batch=np.asarray(out["mean_batch"], dtype=np.float64),
+        batch_m2=np.asarray(out["batch_m2"], dtype=np.float64),
+        utilization=np.clip(
+            np.asarray(out["utilization"], dtype=np.float64), 0.0, 1.0),
+        n_jobs=np.asarray(out["n_jobs"]),
+        n_steps=np.asarray(out["n_steps"]),
+        max_queue=np.asarray(out["max_queue"]),
+        dropped=np.asarray(out["dropped"]),
+        hist=np.asarray(out["hist"]),
+    )

@@ -14,7 +14,8 @@ import numpy as np
 from repro.core.results import SimResult
 
 __all__ = ["DIST_CODE", "DIST_NAME", "ROUTE_CODE", "ROUTE_NAME",
-           "SweepGrid", "SweepResult", "FleetGrid", "FleetResult",
+           "DISC_CODE", "DISC_NAME", "SweepGrid", "SweepResult",
+           "FleetGrid", "FleetResult", "GenGrid", "GenResult",
            "hist_edges"]
 
 DIST_CODE = {"det": 0, "exp": 1, "gamma": 2}
@@ -24,6 +25,13 @@ DIST_NAME = {v: k for k, v in DIST_CODE.items()}
 # assigned to one of the k replica queues.
 ROUTE_CODE = {"random": 0, "round_robin": 1, "jsq": 2}
 ROUTE_NAME = {v: k for k, v in ROUTE_CODE.items()}
+
+# Scheduling disciplines for the token-level generate kernel: "static" is
+# the paper's batch-held-to-completion policy applied to whole generate
+# requests; "continuous" is iteration-level (Orca/vLLM-style) scheduling
+# where waiting requests join the running batch between decode steps.
+DISC_CODE = {"static": 0, "continuous": 1}
+DISC_NAME = {v: k for k, v in DISC_CODE.items()}
 
 # Histogram binning: latencies are binned by their float32 bit pattern —
 # the top _MANT mantissa bits plus the exponent, i.e. 2**_MANT log-spaced
@@ -56,8 +64,33 @@ def _as_i32(x) -> np.ndarray:
     return np.asarray(x, dtype=np.int32).reshape(-1)
 
 
+class _GridOps:
+    """Shared struct-of-arrays grid mechanics (length, concat, shard)."""
+
+    def _arrays(self) -> Tuple[np.ndarray, ...]:
+        raise NotImplementedError
+
+    def __len__(self) -> int:
+        return int(self._arrays()[0].shape[0])
+
+    def concat(self, other):
+        if type(other) is not type(self):
+            raise TypeError(f"cannot concat {type(other).__name__} onto "
+                            f"{type(self).__name__}")
+        return type(self)(*[np.concatenate([a, b]) for a, b in
+                            zip(self._arrays(), other._arrays())])
+
+    def take(self, idx):
+        """Sub-grid at ``idx`` (a slice or an integer index array) —
+        dispatching subsets is the natural way to shard a grid, and the
+        determinism tests rely on it (a point's result must not depend
+        on which vmap batch it was dispatched in)."""
+        return type(self)(*[np.asarray(a[idx]).reshape(-1)
+                            for a in self._arrays()])
+
+
 @dataclass(frozen=True)
-class SweepGrid:
+class SweepGrid(_GridOps):
     """Struct-of-arrays parameter grid; one entry per simulated point.
 
     ``b_max = 0`` encodes an infinite maximum batch size (batch-all-
@@ -73,9 +106,6 @@ class SweepGrid:
     cv: np.ndarray
     wait_max: np.ndarray
     wait_target: np.ndarray
-
-    def __len__(self) -> int:
-        return int(self.lam.shape[0])
 
     @property
     def rho(self) -> np.ndarray:
@@ -126,21 +156,6 @@ class SweepGrid:
         """Grid over normalized loads ρ = λα for one service model."""
         lams = [r / alpha for r in rhos]
         return cls.from_product(lams, [alpha], [tau0], **kw)
-
-    def concat(self, other: "SweepGrid") -> "SweepGrid":
-        if type(other) is not type(self):
-            raise TypeError(f"cannot concat {type(other).__name__} onto "
-                            f"{type(self).__name__}")
-        return type(self)(*[np.concatenate([a, b]) for a, b in
-                            zip(self._arrays(), other._arrays())])
-
-    def take(self, idx) -> "SweepGrid":
-        """Sub-grid at ``idx`` (a slice or an integer index array) —
-        dispatching subsets is the natural way to shard a grid, and the
-        determinism tests rely on it (a point's result must not depend
-        on which vmap batch it was dispatched in)."""
-        return type(self)(*[np.asarray(a[idx]).reshape(-1)
-                            for a in self._arrays()])
 
     def _arrays(self) -> Tuple[np.ndarray, ...]:
         return (self.lam, self.alpha, self.tau0, self.b_max, self.dist,
@@ -247,6 +262,128 @@ class FleetGrid(SweepGrid):
         return (*super()._arrays(), self.k, self.routing)
 
 
+def _as_disc_codes(discipline) -> List[int]:
+    vals = ([discipline] if isinstance(discipline, str)
+            else list(np.atleast_1d(discipline)))
+    return [DISC_CODE[d] if isinstance(d, str) else int(d) for d in vals]
+
+
+@dataclass(frozen=True)
+class GenGrid(_GridOps):
+    """Parameter grid for the token-level generate kernel.
+
+    A request is a prefill of ``prompt_len`` tokens followed by
+    ``gen_tokens`` decode steps; service is linear at token granularity
+    (one decode step over b active sequences costs α_d·b + τ0_d, a
+    batched prefill of t tokens costs α_p·t + τ0_p).  ``max_active``
+    bounds the concurrent sequences (the static discipline's b_max);
+    ``discipline`` holds ``DISC_CODE`` integers.  Deliberately NOT a
+    ``SweepGrid``: the axes are different (no service-distribution or
+    timeout knobs — token-level service is deterministic here)."""
+
+    lam: np.ndarray
+    alpha_decode: np.ndarray
+    tau0_decode: np.ndarray
+    alpha_prefill: np.ndarray
+    tau0_prefill: np.ndarray
+    prompt_len: np.ndarray
+    gen_tokens: np.ndarray
+    max_active: np.ndarray
+    discipline: np.ndarray
+
+    @property
+    def rho(self) -> np.ndarray:
+        """Decode-capacity-normalized load: λ per request over the b→∞
+        per-request service rate 1/(gen·α_d + prompt·α_p)."""
+        return self.lam * (self.gen_tokens * self.alpha_decode
+                           + self.prompt_len * self.alpha_prefill)
+
+    @property
+    def discipline_names(self) -> List[str]:
+        return [DISC_NAME[int(d)] for d in self.discipline]
+
+    @property
+    def equivalent_alpha(self) -> np.ndarray:
+        """Per-request marginal of the *static* discipline's batch law:
+        a batch of b requests costs prefill(b·prompt) + gen·decode(b) =
+        equivalent_alpha·b + equivalent_tau0 — the paper's Assumption 4
+        at request granularity (see docs/theory.md)."""
+        return (self.prompt_len * self.alpha_prefill
+                + self.gen_tokens * self.alpha_decode)
+
+    @property
+    def equivalent_tau0(self) -> np.ndarray:
+        return self.tau0_prefill + self.gen_tokens * self.tau0_decode
+
+    @classmethod
+    def from_points(cls, lam, alpha_decode, tau0_decode, alpha_prefill,
+                    tau0_prefill, *, prompt_len=128, gen_tokens=32,
+                    max_active=64, discipline="continuous") -> "GenGrid":
+        arrays = [_as_f32(lam), _as_f32(alpha_decode), _as_f32(tau0_decode),
+                  _as_f32(alpha_prefill), _as_f32(tau0_prefill),
+                  _as_i32(prompt_len), _as_i32(gen_tokens),
+                  _as_i32(max_active),
+                  _as_i32(_as_disc_codes(discipline))]
+        n = max(a.shape[0] for a in arrays)
+        arrays = [np.broadcast_to(a, (n,)).copy() if a.shape[0] == 1 else a
+                  for a in arrays]
+        if any(a.shape[0] != n for a in arrays):
+            raise ValueError("per-point sequences have mismatched lengths")
+        if np.any(arrays[7] < 1):
+            raise ValueError("max_active must be >= 1")
+        if np.any(arrays[6] < 1):
+            raise ValueError("gen_tokens must be >= 1")
+        return cls(*arrays)
+
+    @classmethod
+    def from_product(cls, lams: Sequence[float], model, *,
+                     prompt_lens: Sequence[int] = (128,),
+                     gen_tokens: Sequence[int] = (32,),
+                     max_actives: Sequence[int] = (64,),
+                     disciplines: Sequence[str] = ("continuous",)
+                     ) -> "GenGrid":
+        """Cartesian product of the sweep axes for one token-level
+        service model (a ``GenServiceModel`` or anything with its four
+        constants)."""
+        disc = _as_i32(_as_disc_codes(list(disciplines)))
+        mesh = np.meshgrid(_as_f32(lams), _as_i32(prompt_lens),
+                           _as_i32(gen_tokens), _as_i32(max_actives),
+                           disc, indexing="ij")
+        flat = [m.reshape(-1) for m in mesh]
+        return cls.from_points(
+            flat[0].astype(np.float32), model.alpha_decode,
+            model.tau0_decode, model.alpha_prefill, model.tau0_prefill,
+            prompt_len=flat[1], gen_tokens=flat[2], max_active=flat[3],
+            discipline=flat[4])
+
+    @classmethod
+    def from_rhos(cls, rhos: Sequence[float], model, *,
+                  prompt_lens: Sequence[int] = (128,),
+                  gen_tokens: Sequence[int] = (32,),
+                  max_actives: Sequence[int] = (64,),
+                  disciplines: Sequence[str] = ("continuous",)
+                  ) -> "GenGrid":
+        """Product grid over decode-capacity-normalized loads ρ: each
+        (ρ, prompt, gen, ...) point gets λ = ρ/(gen·α_d + prompt·α_p),
+        so points at different token counts face the same relative
+        load."""
+        grid = cls.from_product([1.0] * len(rhos), model,
+                                prompt_lens=prompt_lens,
+                                gen_tokens=gen_tokens,
+                                max_actives=max_actives,
+                                disciplines=disciplines)
+        reps = len(grid) // len(rhos)
+        rho_pts = np.repeat(_as_f32(list(rhos)), reps)
+        lam = rho_pts / (grid.gen_tokens * grid.alpha_decode
+                         + grid.prompt_len * grid.alpha_prefill)
+        return cls(lam.astype(np.float32), *grid._arrays()[1:])
+
+    def _arrays(self) -> Tuple[np.ndarray, ...]:
+        return (self.lam, self.alpha_decode, self.tau0_decode,
+                self.alpha_prefill, self.tau0_prefill, self.prompt_len,
+                self.gen_tokens, self.max_active, self.discipline)
+
+
 # ---------------------------------------------------------------------------
 # results
 # ---------------------------------------------------------------------------
@@ -329,6 +466,64 @@ class FleetResult(SweepResult):
         k = int(self.grid.k[i])
         jobs = self.jobs_by_replica[i, :k].astype(np.float64)
         return jobs / max(1.0, jobs.sum())
+
+
+@dataclass
+class GenResult:
+    """Token-level sweep output (one entry per ``GenGrid`` point).
+
+    ``mean_batch``/``batch_m2`` are moments of the *active batch size
+    per decode step* (for the static discipline, with per-point-constant
+    ``gen_tokens``, these equal the per-request-batch moments, since
+    every batch contributes ``gen_tokens`` equal steps).  ``n_steps``
+    counts measured decode steps; ``n_jobs`` counts requests that
+    *finished* inside the measured window (their latencies feed
+    ``mean_latency`` and the histogram percentiles)."""
+
+    grid: GenGrid
+    mean_latency: np.ndarray
+    latency_p50: np.ndarray
+    latency_p95: np.ndarray
+    latency_p99: np.ndarray
+    mean_batch: np.ndarray
+    batch_m2: np.ndarray
+    utilization: np.ndarray
+    n_jobs: np.ndarray
+    n_steps: np.ndarray
+    max_queue: np.ndarray
+    dropped: np.ndarray                  # arrivals lost to capacity clamps
+    hist: np.ndarray = field(repr=False)           # (N, n_bins) counts
+
+    @property
+    def hist_bin_edges(self) -> np.ndarray:
+        return hist_edges(self.hist.shape[1])
+
+    def __len__(self) -> int:
+        return len(self.grid)
+
+    @property
+    def mean_active(self) -> np.ndarray:
+        """Readable alias: mean active sequences per decode step."""
+        return self.mean_batch
+
+    def point(self, i: int) -> SimResult:
+        return SimResult(
+            lam=float(self.grid.lam[i]),
+            n_jobs=int(self.n_jobs[i]),
+            mean_latency=float(self.mean_latency[i]),
+            mean_batch=float(self.mean_batch[i]),
+            batch_m2=float(self.batch_m2[i]),
+            utilization=float(self.utilization[i]),
+            latency_p50=float(self.latency_p50[i]),
+            latency_p95=float(self.latency_p95[i]),
+            latency_p99=float(self.latency_p99[i]),
+            n_batches=int(self.n_steps[i]),
+            backend="gen",
+            discipline=DISC_NAME[int(self.grid.discipline[i])],
+        )
+
+    def to_results(self) -> List[SimResult]:
+        return [self.point(i) for i in range(len(self))]
 
 
 def _hist_percentiles(hist: np.ndarray,

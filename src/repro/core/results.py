@@ -50,6 +50,9 @@ class SimResult:
     backend: str = ""                     # "sim" | "sweep" | "markov" | ...
     k: int = 1                            # replica count (1 = single server)
     routing: str = ""                     # fleet routing ("" outside fleets)
+    discipline: str = ""                  # generate scheduling discipline
+    #                                       ("static"/"continuous"; "" when
+    #                                       the backend is request-level)
     batch_sizes: Optional[np.ndarray] = field(default=None, repr=False)
     latencies: Optional[np.ndarray] = field(default=None, repr=False)
 

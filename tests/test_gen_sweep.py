@@ -1,0 +1,290 @@
+"""Statistical test harness for the token-level generate kernel.
+
+The gen kernel (``repro.core.gen_sweep.gen_sweep``) is pinned against
+three independent references:
+
+- the scalar numpy loops (``simulate_continuous_numpy`` /
+  ``simulate_static_generate_numpy``) on a shared seed ladder, within
+  3σ of the paired Monte Carlo error, for BOTH disciplines;
+- the exact truncated Markov chain and the scalar request-level
+  simulator: the static discipline is the paper's batch queue at the
+  equivalent request-level law α' = prompt·α_p + gen·α_d,
+  τ0' = τ0_p + gen·τ0_d (see docs/theory.md §"Token-level service
+  law"), so its mean must match ``markov.solve`` at (α', τ0', b_max);
+- the ``max_active = 1`` degenerate case, where both disciplines
+  collapse to the same single-slot queue — bitwise-identically, since
+  the admission gate is the only code path that differs.
+
+Plus the split-dispatch determinism contract pinned by the sweep/fleet
+kernels: a grid dispatched in one vmap batch must equal the same grid
+sharded into two dispatches (``take`` + ``key_offset``) bitwise.
+
+Most points share ONE module-scoped dispatch (and one kernel compile);
+keep any new points inside that grid if possible.
+"""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core.analytic import LinearServiceModel
+from repro.core.continuous_sim import (GenServiceModel,
+                                       simulate_continuous,
+                                       simulate_continuous_numpy,
+                                       simulate_static_generate_numpy)
+from repro.core.evaluate import evaluate
+from repro.core.gen_sweep import gen_sweep
+from repro.core.grid import DISC_CODE, FleetGrid, GenGrid, SweepGrid
+from repro.core.markov import solve
+from repro.core.simulate import simulate
+
+MODEL = GenServiceModel(alpha_decode=0.14, tau0_decode=1.9,
+                        alpha_prefill=0.035, tau0_prefill=1.9)
+GEN, PROMPT, CAP = 32, 128, 64
+ALPHA_EQ = PROMPT * MODEL.alpha_prefill + GEN * MODEL.alpha_decode
+TAU0_EQ = MODEL.tau0_prefill + GEN * MODEL.tau0_decode
+LAM = 0.5 / ALPHA_EQ              # decode-capacity-normalized rho = 0.5
+N_REPS = 5                        # seed-ladder width (kernel side)
+
+# one shared dispatch: all module points use this kernel configuration
+KW = dict(n_steps=8192, q_cap=256, seed=11)
+
+
+def _grid():
+    """Continuous + static rho=0.5 seed ladders, a low-load continuous
+    point, and a mid-load static point, all in one GenGrid."""
+    lam = [LAM] * (2 * N_REPS) + [0.1 / ALPHA_EQ, 0.6 / ALPHA_EQ]
+    disc = (["continuous"] * N_REPS + ["static"] * N_REPS
+            + ["continuous", "static"])
+    return GenGrid.from_points(
+        lam, MODEL.alpha_decode, MODEL.tau0_decode, MODEL.alpha_prefill,
+        MODEL.tau0_prefill, prompt_len=PROMPT, gen_tokens=GEN,
+        max_active=CAP, discipline=disc)
+
+
+@pytest.fixture(scope="module")
+def gen():
+    grid = _grid()
+    return grid, gen_sweep(grid, **KW)
+
+
+def _ladder_se(kernel_vals, ref_vals, floor_frac=0.015):
+    se = math.sqrt(kernel_vals.var(ddof=1) / len(kernel_vals)
+                   + np.var(ref_vals, ddof=1) / len(ref_vals))
+    return max(se, floor_frac * float(np.mean(ref_vals)))
+
+
+class TestNumpyParity:
+    def test_no_drops(self, gen):
+        _, r = gen
+        assert int(r.dropped.sum()) == 0
+
+    def test_continuous_matches_numpy_seed_ladder(self, gen):
+        _, r = gen
+        k = r.mean_latency[:N_REPS]
+        ref = np.array([simulate_continuous_numpy(
+            LAM, MODEL, prompt_len=PROMPT, gen_tokens=GEN,
+            max_active=CAP, n_jobs=12_000, seed=s).mean_latency
+            for s in range(3)])
+        se = _ladder_se(k, ref)
+        assert abs(k.mean() - ref.mean()) < 3.0 * se
+
+    def test_static_matches_numpy_seed_ladder(self, gen):
+        _, r = gen
+        k = r.mean_latency[N_REPS:2 * N_REPS]
+        ref = np.array([simulate_static_generate_numpy(
+            LAM, MODEL, prompt_len=PROMPT, gen_tokens=GEN, b_max=CAP,
+            n_jobs=12_000, seed=s).mean_latency for s in range(3)])
+        se = _ladder_se(k, ref)
+        assert abs(k.mean() - ref.mean()) < 3.0 * se
+
+    def test_utilization_parity_tight(self, gen):
+        """The numpy references' exact interval-by-interval busy/span
+        accounting (post-warmup window) matches the kernel's convention,
+        so utilization agrees tightly, per discipline."""
+        _, r = gen
+        for lo, fn, kw in (
+                (0, simulate_continuous_numpy, dict(max_active=CAP)),
+                (N_REPS, simulate_static_generate_numpy,
+                 dict(b_max=CAP))):
+            k = r.utilization[lo:lo + N_REPS].mean()
+            ref = np.mean([fn(LAM, MODEL, prompt_len=PROMPT,
+                              gen_tokens=GEN, n_jobs=12_000, seed=s,
+                              **kw).utilization for s in range(2)])
+            assert abs(k - ref) < 0.015
+
+    def test_mean_active_matches_numpy(self, gen):
+        _, r = gen
+        k = r.mean_batch[:N_REPS].mean()
+        ref = np.mean([simulate_continuous_numpy(
+            LAM, MODEL, prompt_len=PROMPT, gen_tokens=GEN,
+            max_active=CAP, n_jobs=12_000, seed=s).mean_batch
+            for s in range(2)])
+        assert k == pytest.approx(ref, rel=0.08)
+
+
+class TestExactReferences:
+    """The static discipline IS the paper's batch queue at the
+    equivalent request-level linear law — pin it to the exact chain and
+    to the independent scalar simulator."""
+
+    def test_equivalent_law_fields(self):
+        g = _grid()
+        assert g.equivalent_alpha[0] == pytest.approx(ALPHA_EQ)
+        assert g.equivalent_tau0[0] == pytest.approx(TAU0_EQ)
+        assert g.rho[0] == pytest.approx(0.5, rel=1e-5)
+
+    def test_static_matches_markov_exact(self, gen):
+        _, r = gen
+        m = solve(LAM, LinearServiceModel(ALPHA_EQ, TAU0_EQ), b_max=CAP)
+        k = r.mean_latency[N_REPS:2 * N_REPS]
+        assert k.mean() == pytest.approx(m.mean_latency, rel=0.04)
+        assert r.mean_batch[N_REPS:2 * N_REPS].mean() == pytest.approx(
+            m.mean_batch, rel=0.05)
+        assert r.utilization[N_REPS:2 * N_REPS].mean() == pytest.approx(
+            m.utilization, abs=0.02)
+
+    def test_static_matches_scalar_simulate(self, gen):
+        _, r = gen
+        k = r.mean_latency[N_REPS:2 * N_REPS]
+        ref = np.array([simulate(
+            LAM, LinearServiceModel(ALPHA_EQ, TAU0_EQ), b_max=CAP,
+            n_jobs=25_000, seed=s).mean_latency for s in range(3)])
+        se = _ladder_se(k, ref)
+        assert abs(k.mean() - ref.mean()) < 3.0 * se
+
+    def test_midload_static_matches_markov(self, gen):
+        grid, r = gen
+        i = 2 * N_REPS + 1
+        m = solve(float(grid.lam[i]),
+                  LinearServiceModel(ALPHA_EQ, TAU0_EQ), b_max=CAP)
+        assert r.mean_latency[i] == pytest.approx(m.mean_latency,
+                                                  rel=0.06)
+
+    def test_low_load_latency_floor(self, gen):
+        """A lightly loaded continuous server's E[W] sits at the solo
+        service floor prefill(prompt) + gen·decode(1)."""
+        _, r = gen
+        floor = MODEL.prefill(PROMPT) + GEN * MODEL.decode_step(1)
+        i = 2 * N_REPS
+        assert floor * 0.9 <= r.mean_latency[i] <= floor * 1.6
+
+    def test_max_active_one_disciplines_identical(self):
+        """With one slot the admission gate is the only code-path
+        difference between the disciplines — same seed, same point
+        index ⇒ bitwise-identical trajectories."""
+        lam1 = 0.4 / (ALPHA_EQ + TAU0_EQ)
+        res = {}
+        for disc in ("static", "continuous"):
+            g = GenGrid.from_points(
+                [lam1], MODEL.alpha_decode, MODEL.tau0_decode,
+                MODEL.alpha_prefill, MODEL.tau0_prefill,
+                prompt_len=PROMPT, gen_tokens=GEN, max_active=1,
+                discipline=disc)
+            res[disc] = gen_sweep(g, n_steps=4096, q_cap=128, seed=3)
+        for field in ("mean_latency", "mean_batch", "utilization",
+                      "n_jobs"):
+            assert np.array_equal(getattr(res["static"], field),
+                                  getattr(res["continuous"], field)), \
+                field
+        m = solve(lam1, LinearServiceModel(ALPHA_EQ, TAU0_EQ), b_max=1)
+        assert res["static"].mean_latency[0] == pytest.approx(
+            m.mean_latency, rel=0.05)
+
+
+class TestDeterminism:
+    def test_split_dispatch_bitwise(self):
+        """Same grid + seed ⇒ bitwise-identical results whether
+        dispatched as one vmap batch or sharded into two (guards the
+        fold_in key construction against shape-dependent key
+        consumption)."""
+        g = GenGrid.from_points(
+            [LAM, 0.8 * LAM, LAM, 0.6 * LAM], MODEL.alpha_decode,
+            MODEL.tau0_decode, MODEL.alpha_prefill, MODEL.tau0_prefill,
+            prompt_len=PROMPT, gen_tokens=[8, 16, 8, 32],
+            max_active=[16, 32, 16, 8],
+            discipline=["continuous", "static", "static", "continuous"])
+        kw = dict(n_steps=2048, q_cap=64)
+        full = gen_sweep(g, seed=13, **kw)
+        a = gen_sweep(g.take(slice(0, 2)), seed=13, **kw)
+        b = gen_sweep(g.take(slice(2, None)), seed=13, key_offset=2,
+                      **kw)
+        for field in ("mean_latency", "mean_batch", "utilization",
+                      "n_jobs"):
+            merged = np.concatenate([getattr(a, field),
+                                     getattr(b, field)])
+            assert np.array_equal(getattr(full, field), merged), field
+        assert np.array_equal(full.hist,
+                              np.concatenate([a.hist, b.hist]))
+
+
+class TestGridAndSchema:
+    def test_point_schema(self, gen):
+        _, r = gen
+        p = r.point(0)
+        assert p.backend == "gen" and p.discipline == "continuous"
+        p.check()
+        assert r.point(N_REPS).discipline == "static"
+
+    def test_grid_construction(self):
+        g = GenGrid.from_product(
+            [0.05, 0.1], MODEL, prompt_lens=(64, 128),
+            gen_tokens=(8, 32), max_actives=(16, 64),
+            disciplines=("static", "continuous"))
+        assert len(g) == 2 * 2 * 2 * 2 * 2
+        assert set(np.unique(g.discipline)) == set(DISC_CODE.values())
+        gr = GenGrid.from_rhos([0.2, 0.5, 0.8], MODEL,
+                               gen_tokens=(8, 32),
+                               disciplines=("static", "continuous"))
+        assert len(gr) == 3 * 2 * 2
+        assert np.allclose(gr.rho, np.repeat([0.2, 0.5, 0.8], 4),
+                           rtol=1e-5)
+        assert len(gr.concat(gr)) == 2 * len(gr)
+        assert len(gr.take(slice(0, 5))) == 5
+
+    def test_validation(self):
+        sg = SweepGrid.from_points([1.0], [0.1], [1.0])
+        with pytest.raises(TypeError):
+            gen_sweep(sg)
+        g1 = GenGrid.from_points([0.05], MODEL.alpha_decode,
+                                 MODEL.tau0_decode, MODEL.alpha_prefill,
+                                 MODEL.tau0_prefill, max_active=512)
+        with pytest.raises(ValueError):
+            gen_sweep(g1, q_cap=256)       # max_active > q_cap
+        with pytest.raises(ValueError):
+            GenGrid.from_points([0.05], 0.1, 1.0, 0.1, 1.0,
+                                max_active=0)
+        with pytest.raises(KeyError):
+            GenGrid.from_points([0.05], 0.1, 1.0, 0.1, 1.0,
+                                discipline="nope")
+
+    def test_evaluate_gen_backend(self, gen):
+        grid, r = gen
+        res = evaluate(grid.take(slice(0, 2)), backend="gen", **KW)
+        assert [x.backend for x in res] == ["gen", "gen"]
+        # evaluate() runs the same kernel+keys: bitwise-equal points
+        assert res[0].mean_latency == r.point(0).mean_latency
+        assert res[0].discipline == "continuous"
+
+    def test_evaluate_guards(self):
+        g = GenGrid.from_points([0.05], 0.1, 1.0, 0.1, 1.0)
+        for backend in ("analytic", "markov", "sim", "sweep", "fleet"):
+            with pytest.raises(ValueError):
+                evaluate(g, backend=backend)
+        sg = SweepGrid.from_points([1.0], [0.1], [1.0])
+        with pytest.raises(ValueError):
+            evaluate(sg, backend="gen")
+        fg = FleetGrid.from_points([1.0], 0.1, 1.0, k=2)
+        with pytest.raises(ValueError):
+            evaluate(fg, backend="gen")
+
+    def test_simulate_continuous_gen_backend(self):
+        """The wrapper dispatches one point through the kernel and maps
+        n_jobs to an equivalent step count."""
+        r = simulate_continuous(LAM, MODEL, prompt_len=PROMPT,
+                                gen_tokens=GEN, max_active=CAP,
+                                n_jobs=600, seed=1, backend="gen")
+        assert r.backend == "gen" and r.discipline == "continuous"
+        assert r.mean_latency > 0 and r.n_jobs > 100
+        with pytest.raises(ValueError):
+            simulate_continuous(LAM, MODEL, backend="nope")
