@@ -56,6 +56,40 @@ def _fmt(v: Any) -> str:
     return str(v)
 
 
+def timed_struct_vs_dense(rows: List[Row], name: str, model, *,
+                          b_cap: int, K: int, metric: str = "mean_latency",
+                          load_frac: float = 0.9) -> Row:
+    """Append the ``structured_vs_dense`` row: the same finite-b_max
+    chain solved at truncation K by the banded structured solver
+    (best-of-3) and by the dense LU it replaced (one shot — the dense
+    side costs seconds-to-minutes, and a single draw only biases the
+    reported speedup *down*), plus the relative deviation of
+    ``metric`` between the two as a correctness witness."""
+    from repro.core.analytic import stability_limit
+    from repro.core.markov import solve
+
+    lam = load_frac * stability_limit(model.alpha, model.tau0, b_cap)
+
+    def structured_vs_dense():
+        best = float("inf")
+        for _ in range(3):
+            t0 = time.perf_counter()
+            rs = solve(lam, model, b_max=b_cap, truncation=K,
+                       method="struct")
+            best = min(best, time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        rd = solve(lam, model, b_max=b_cap, truncation=K,
+                   method="dense")
+        dense_s = time.perf_counter() - t0
+        vs, vd = getattr(rs, metric), getattr(rd, metric)
+        return {"K": K, "b_max": b_cap, "dense_s": dense_s,
+                "structured_s": best, "speedup": dense_s / best,
+                f"{metric}_rel_dev": abs(vs - vd) / vd}
+    row = timed(structured_vs_dense, f"{name}/structured_vs_dense")
+    rows.append(row)
+    return row
+
+
 def timed_sweep(rows: List[Row], grid, name: str, *, n_batches: int,
                 seed: int, q_cap: int = 1024):
     """Run one jit+vmap sweep dispatch over ``grid``, appending its

@@ -7,7 +7,11 @@ all loads run as one jit+vmap device dispatch instead of one scalar
 simulation per point.  The exact column comes from one
 ``markov.solve_batch`` call per GPU (shared chain structure +
 warm-started truncation across the λ grid); a timed row compares it to
-per-λ ``solve`` calls.
+per-λ ``solve`` calls.  The ``structured_vs_dense`` row pits the
+banded structured solver against the legacy dense LU at the old
+``_TRUNC_CAP`` truncation (K = 8192, the 0.5 GB dense matrix) on a
+finite-b_max chain — the acceptance measurement for the structured
+exact-chain solver (target ≥ 50×).
 """
 from __future__ import annotations
 
@@ -16,10 +20,13 @@ from typing import List
 
 import numpy as np
 
-from benchmarks.common import P4, RHO_GRID, Row, V100, timed, timed_sweep
+from benchmarks.common import (P4, RHO_GRID, Row, V100, timed,
+                               timed_struct_vs_dense, timed_sweep)
 from repro.core.analytic import phi, phi0, phi1
 from repro.core.markov import solve, solve_batch
 from repro.core.sweep import SweepGrid
+
+LEGACY_K = 8192           # the pre-structured dense adaptive cap
 
 
 def run(n_batches: int = 4000) -> List[Row]:
@@ -78,6 +85,11 @@ def run(n_batches: int = 4000) -> List[Row]:
         return {"batch_s": t_batch, "per_lambda_dense_s": t_per,
                 "speedup": t_per / t_batch}
     rows.append(timed(solve_speedup, "fig4/markov_batch_speedup"))
+
+    # structured vs dense at the legacy truncation: the same finite-b
+    # chain solved at K = 8192 (the 0.5 GB dense matrix) by the banded
+    # structured solver and by the dense LU it replaced
+    timed_struct_vs_dense(rows, "fig4", V100, b_cap=64, K=LEGACY_K)
 
     for gi, (label, m) in enumerate(models):
         gaps = []

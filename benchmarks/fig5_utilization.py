@@ -1,25 +1,45 @@
 """Paper Fig. 5: server utilization 1−π0 vs ρ, with the upper bound
-min(1, λ(α+τ0)) — showing saturation far below ρ=1 (unlike M/D/1)."""
+min(1, λ(α+τ0)) — showing saturation far below ρ=1 (unlike M/D/1).
+
+The exact column runs as one ``markov.solve_batch`` call (shared chain
+structure + warm-started truncation across the ρ grid) instead of one
+cold ``solve`` per point; a ``structured_vs_dense`` row times the
+banded structured solver against the dense LU on a deep finite-b_max
+chain.
+"""
 from __future__ import annotations
 
 from typing import List
 
-from benchmarks.common import RHO_GRID, Row, V100, timed
+from benchmarks.common import (RHO_GRID, Row, V100, timed,
+                               timed_struct_vs_dense)
 from repro.core.analytic import utilization_upper
-from repro.core.markov import solve
+from repro.core.markov import solve_batch
 
 
-def run() -> List[Row]:
+def run(dense_K: int = 4096) -> List[Row]:
     rows: List[Row] = []
-    for rho in RHO_GRID:
-        lam = rho / V100.alpha
+    lams = [rho / V100.alpha for rho in RHO_GRID]
+    exact = {}
 
-        def one(rho=rho, lam=lam):
-            mk = solve(lam, V100)
+    def batch_solve():
+        exact["r"] = solve_batch(lams, V100)
+        return {"points": len(lams),
+                "max_truncation": max(x.truncation for x in exact["r"])}
+    rows.append(timed(batch_solve, "fig5/markov_solve_batch"))
+
+    for rho, lam, mk in zip(RHO_GRID, lams, exact["r"]):
+
+        def one(rho=rho, lam=lam, mk=mk):
             ub = float(utilization_upper(lam, V100.alpha, V100.tau0))
             return {"rho": rho, "utilization": mk.utilization,
                     "upper_bound": ub,
                     "holds": mk.utilization <= ub + 1e-9,
                     "saturated": mk.utilization > 0.99}
         rows.append(timed(one, f"fig5/rho={rho}"))
+
+    # structured vs dense on a deep finite-b chain (same row as
+    # fig4's, at a smaller K so the whole module stays fast)
+    timed_struct_vs_dense(rows, "fig5", V100, b_cap=32, K=dense_K,
+                          metric="utilization")
     return rows

@@ -1,24 +1,29 @@
 """Paper Fig. 8: finite maximum batch size b_max vs the infinite-b_max
 closed form φ — agreement away from each b_max's stability boundary.
 
-Each (b_max, load-fraction) point is checked two ways: the exact
-truncated-chain numerics, and the vectorized sweep engine (all points in
-one dispatch) as an independent Monte Carlo cross-check.
+Each (b_max, load-fraction) point is checked two ways: the exact chain
+— now the *batched* structured path, every (λ, b_max) cell solved by
+``markov.solve_grid`` in one jitted float64 dispatch — and the
+vectorized sweep engine (all points in one dispatch) as an independent
+Monte Carlo cross-check.  A ``structured_vs_dense`` row times the
+banded solver against the dense LU it replaced.
 """
 from __future__ import annotations
 
 from typing import List
 
-from benchmarks.common import Row, V100, timed, timed_sweep
+from benchmarks.common import (Row, V100, timed, timed_struct_vs_dense,
+                               timed_sweep)
 from repro.core.analytic import phi, stability_limit
-from repro.core.markov import solve
+from repro.core.grid import MarkovGrid
+from repro.core.markov import solve_grid
 from repro.core.sweep import SweepGrid
 
 B_MAXES = (2, 8, 16, 64)
 FRACS = (0.3, 0.6, 0.8, 0.95)
 
 
-def run(n_batches: int = 4000) -> List[Row]:
+def run(n_batches: int = 4000, dense_K: int = 4096) -> List[Row]:
     rows: List[Row] = []
     lams, bmaxes = [], []
     for b_max in B_MAXES:
@@ -29,19 +34,29 @@ def run(n_batches: int = 4000) -> List[Row]:
     grid = SweepGrid.from_points(lams, V100.alpha, V100.tau0, b_max=bmaxes)
     r = timed_sweep(rows, grid, "fig8", n_batches=n_batches, seed=31)
 
+    mgrid = MarkovGrid.from_points(lams, V100.alpha, V100.tau0,
+                                   b_max=bmaxes)
+    exact = {}
+
+    def exact_dispatch():
+        exact["r"] = solve_grid(mgrid, method="jax")
+        return {"points": len(mgrid), "truncation": exact["r"].truncation,
+                "max_tail_mass": float(exact["r"].tail_mass.max())}
+    rows.append(timed(exact_dispatch, "fig8/markov_grid_dispatch"))
+    mg = exact["r"]
+
     i = 0
     for b_max in B_MAXES:
         for frac in FRACS:
             lam = lams[i]
 
             def one(b_max=b_max, lam=lam, frac=frac, i=i):
-                mk = solve(lam, V100, b_max=b_max)
+                ew = float(mg.mean_latency[i])
                 ph = float(phi(lam, V100.alpha, V100.tau0))
-                rel = abs(mk.mean_latency - ph) / mk.mean_latency
-                sim_rel = abs(float(r.mean_latency[i]) - mk.mean_latency) \
-                    / mk.mean_latency
+                rel = abs(ew - ph) / ew
+                sim_rel = abs(float(r.mean_latency[i]) - ew) / ew
                 return {"b_max": b_max, "frac_of_limit": frac,
-                        "lam": lam, "EW_exact": mk.mean_latency,
+                        "lam": lam, "EW_exact": ew,
                         "EW_sweep": float(r.mean_latency[i]),
                         "sweep_vs_exact": sim_rel,
                         "phi_inf": ph, "rel_dev": rel,
@@ -50,4 +65,8 @@ def run(n_batches: int = 4000) -> List[Row]:
                                                if frac <= 0.6 else True)}
             rows.append(timed(one, f"fig8/bmax={b_max}/frac={frac}"))
             i += 1
+
+    # structured vs dense at a deep truncation of the hottest cell
+    timed_struct_vs_dense(rows, "fig8", V100, b_cap=B_MAXES[-1],
+                          K=dense_K)
     return rows

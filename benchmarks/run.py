@@ -59,13 +59,15 @@ def main() -> None:
         "table1": lambda: table1_throughput.run(),
         "fig4": lambda: fig4_latency_bound.run(
             n_batches=1_000 if args.quick else 4_000),
-        "fig5": lambda: fig5_utilization.run(),
+        "fig5": lambda: fig5_utilization.run(
+            dense_K=2048 if args.quick else 4096),
         "fig6": lambda: fig6_energy.run(
             n_jobs=30_000 if args.quick else 100_000),
         "fig7": lambda: fig7_tradeoff.run(
             n_batches=800 if args.quick else 3_000),
         "fig8": lambda: fig8_finite_bmax.run(
-            n_batches=1_000 if args.quick else 4_000),
+            n_batches=1_000 if args.quick else 4_000,
+            dense_K=2048 if args.quick else 4096),
         "fig9": lambda: fig9_batch_times.run(
             samples=2 if args.quick else 3,
             max_batch=16 if args.quick else 32),

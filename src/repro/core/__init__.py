@@ -41,9 +41,12 @@ from repro.core.grid import (  # noqa: F401
     FleetResult,
     GenGrid,
     GenResult,
+    MarkovGrid,
+    MarkovGridResult,
     ROUTE_CODE,
     SweepGrid,
     SweepResult,
 )
+from repro.core.markov import solve_grid as solve_markov_grid  # noqa: F401
 from repro.core.results import SimResult  # noqa: F401
 from repro.core.simulate import simulate  # noqa: F401

@@ -10,8 +10,13 @@ Markov-chain, and vectorized-sweep answers are interchangeable:
   the Remark-5 lower bound, ``utilization`` the Lemma-5 upper bound.
   Deterministic service, infinite b_max, no timeout (the paper's
   setting) — other points raise.
-- ``"markov"``    — exact truncated-chain numerics
-  (``repro.core.markov.solve``); deterministic service, no timeout.
+- ``"markov"``    — exact truncated-chain numerics; deterministic
+  service, no timeout.  A ``SweepGrid`` goes point-by-point through
+  ``repro.core.markov.solve`` (structured banded solver for finite
+  b_max, dense reference for ∞).  A ``MarkovGrid`` goes through
+  ``markov.solve_grid`` — the whole (λ, b_max) grid solved by the
+  structured chain solver, on the JAX path as one jitted float64
+  dispatch per chunk.
 - ``"sim"``       — the scalar NumPy event simulator, one point at a
   time (slow, exact, the legacy reference); no timeout policy.
 - ``"sweep"``     — the jit+vmap JAX engine (``repro.core.sweep``), all
@@ -42,7 +47,7 @@ import numpy as np
 
 from repro.core import analytic as an
 from repro.core.grid import (DIST_CODE, DIST_NAME, FleetGrid, GenGrid,
-                             SweepGrid)
+                             MarkovGrid, SweepGrid)
 from repro.core.results import SimResult
 
 __all__ = ["evaluate", "BACKENDS"]
@@ -119,6 +124,14 @@ def evaluate(grid: SweepGrid, backend: str = "sweep",
              **kw) -> List[SimResult]:
     """Evaluate every grid point with the chosen backend (see module
     docstring); returns one unified ``SimResult`` per point."""
+    if isinstance(grid, MarkovGrid):
+        if backend != "markov":
+            # the exact grid has no service-distribution/policy/replica
+            # axes — no other backend can read it
+            raise ValueError(f"backend {backend!r} cannot evaluate a "
+                             "MarkovGrid — use backend='markov'")
+        from repro.core.markov import solve_grid
+        return solve_grid(grid, **kw).to_results()
     if backend == "gen":
         from repro.core.gen_sweep import gen_sweep
         if not isinstance(grid, GenGrid):

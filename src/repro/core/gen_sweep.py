@@ -79,8 +79,10 @@ import jax.numpy as jnp
 from jax import lax, random
 
 from repro.core.grid import (  # noqa: F401  (re-exported for callers)
-    DISC_CODE, DISC_NAME, GenGrid, GenResult, _EXP_MIN, _MANT,
-    _hist_percentiles, hist_edges)
+    DISC_CODE, DISC_NAME, GenGrid, GenResult)
+from repro.core.hist import (bit_bins, hist_edges,
+                             hist_percentiles as _hist_percentiles,
+                             thinned_rows)
 from repro.core.sweep import _point_keys
 
 __all__ = ["DISC_CODE", "DISC_NAME", "GenGrid", "GenResult", "gen_sweep"]
@@ -113,8 +115,6 @@ def _build_gen_kernel(n_steps: int, warmup: int, s_cap: int, q_cap: int,
     # idle consume per step between compactions; appends write a whole
     # (a_cap + 1) block past the tail
     buf_len = q_cap + (a_cap + 2) * _REBASE_EVERY + a_cap + 1
-    hist_base = (127 + _EXP_MIN) << _MANT
-    hist_shift = 23 - _MANT
     REBASE_EVERY = _REBASE_EVERY
 
     def run_point(p, key):
@@ -255,8 +255,7 @@ def _build_gen_kernel(n_steps: int, warmup: int, s_cap: int, q_cap: int,
         # run-length skipping a static batch is ONE step, so thinning
         # is unbiased across batches; still prefer hist_every = 1 when
         # percentiles matter.
-        hist_rows = np.sort(np.random.default_rng(0).permutation(
-            REBASE_EVERY)[:max(1, REBASE_EVERY // hist_every)])
+        hist_rows = thinned_rows(REBASE_EVERY, hist_every)
 
         def superstep(state, x):
             i_base, k_sup = x
@@ -271,9 +270,7 @@ def _build_gen_kernel(n_steps: int, warmup: int, s_cap: int, q_cap: int,
                 (i_base + jnp.arange(REBASE_EVERY), arr_gaps))
             if hist_every > 1:
                 lats, inc = lats[hist_rows], inc[hist_rows]
-            lat_bits = lax.bitcast_convert_type(lats, jnp.int32)
-            bins = jnp.clip((lat_bits >> hist_shift) - hist_base,
-                            0, n_bins - 1)
+            bins = bit_bins(lats, n_bins)
             hist = hist.at[bins.reshape(-1)].add(
                 inc.reshape(-1).astype(i32))
             # rebase the clock to the superstep end and re-compact the

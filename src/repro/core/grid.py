@@ -7,7 +7,7 @@ holds the jit kernel, does.  See that module for the engine itself.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Iterable, List, Sequence, Tuple
+from typing import List, Sequence, Tuple
 
 import numpy as np
 
@@ -16,7 +16,7 @@ from repro.core.results import SimResult
 __all__ = ["DIST_CODE", "DIST_NAME", "ROUTE_CODE", "ROUTE_NAME",
            "DISC_CODE", "DISC_NAME", "SweepGrid", "SweepResult",
            "FleetGrid", "FleetResult", "GenGrid", "GenResult",
-           "hist_edges"]
+           "MarkovGrid", "MarkovGridResult", "hist_edges"]
 
 DIST_CODE = {"det": 0, "exp": 1, "gamma": 2}
 DIST_NAME = {v: k for k, v in DIST_CODE.items()}
@@ -33,23 +33,12 @@ ROUTE_NAME = {v: k for k, v in ROUTE_CODE.items()}
 DISC_CODE = {"static": 0, "continuous": 1}
 DISC_NAME = {v: k for k, v in DISC_CODE.items()}
 
-# Histogram binning: latencies are binned by their float32 bit pattern —
-# the top _MANT mantissa bits plus the exponent, i.e. 2**_MANT log-spaced
-# bins per octave (piecewise-linear within an octave).  Positive float32
-# bits are monotone in value, so this is an exact monotone binning that
-# costs one shift+subtract per sample on device (no transcendentals in
-# the scan).  _EXP_MIN sets the smallest resolved latency, 2**_EXP_MIN;
-# with _MANT = 3 and 512 bins the histogram spans 2**-32 … 2**32 at
-# ~9% per-bin resolution (refined by in-bin interpolation).
-_MANT = 3
-_EXP_MIN = -32
+# Histogram binning lives in ``repro.core.hist`` (shared by every
+# kernel); re-exported here for back-compat with older import sites.
+from repro.core.hist import (  # noqa: F401  (re-exports)
+    _EXP_MIN, _MANT, hist_edges, hist_percentiles)
 
-
-def hist_edges(n_bins: int) -> np.ndarray:
-    """The n_bins+1 latency values bounding the histogram bins."""
-    j = np.arange(n_bins + 1, dtype=np.int64)
-    bits = (j + ((127 + _EXP_MIN) << _MANT)) << (23 - _MANT)
-    return bits.astype(np.int32).view(np.float32).astype(np.float64)
+_hist_percentiles = hist_percentiles          # back-compat alias
 
 
 # ---------------------------------------------------------------------------
@@ -384,9 +373,123 @@ class GenGrid(_GridOps):
                 self.gen_tokens, self.max_active, self.discipline)
 
 
+@dataclass(frozen=True)
+class MarkovGrid(_GridOps):
+    """Parameter grid for the *exact* truncated-chain backend: one
+    (λ, α, τ0, b_max) cell per entry, solved by the structured
+    (banded level-recursion) chain solver — the whole grid in one jit
+    dispatch on the JAX path (``repro.core.markov.solve_grid``).
+
+    ``b_max`` must be a finite integer ≥ 1 for every cell: the
+    structured solver exploits the repeating (M/G/1-type) band that
+    only exists for finite maximum batch sizes.  For b_max = ∞ use the
+    scalar ``markov.solve`` (which routes to the dense reference).
+    ``lam`` is kept in float64 — the exact backend's answers resolve
+    far below float32."""
+
+    lam: np.ndarray
+    alpha: np.ndarray
+    tau0: np.ndarray
+    b_max: np.ndarray
+
+    @property
+    def rho(self) -> np.ndarray:
+        return self.lam * self.alpha
+
+    @property
+    def stability_limit(self) -> np.ndarray:
+        """Per-cell supremum of stable rates, b_max/(α·b_max + τ0)."""
+        return self.b_max / (self.alpha * self.b_max + self.tau0)
+
+    @classmethod
+    def from_points(cls, lam, alpha, tau0, *, b_max=1) -> "MarkovGrid":
+        arrays = [np.asarray(lam, dtype=np.float64).reshape(-1),
+                  np.asarray(alpha, dtype=np.float64).reshape(-1),
+                  np.asarray(tau0, dtype=np.float64).reshape(-1),
+                  _as_i32(b_max)]
+        n = max(a.shape[0] for a in arrays)
+        arrays = [np.broadcast_to(a, (n,)).copy() if a.shape[0] == 1 else a
+                  for a in arrays]
+        if any(a.shape[0] != n for a in arrays):
+            raise ValueError("per-cell sequences have mismatched lengths")
+        if np.any(arrays[3] < 1):
+            raise ValueError("MarkovGrid needs finite b_max >= 1 per "
+                             "cell (the structured exact solver has no "
+                             "repeating band at b_max = inf; use "
+                             "markov.solve for that case)")
+        return cls(*arrays)
+
+    @classmethod
+    def from_product(cls, lams: Sequence[float], alphas: Sequence[float],
+                     tau0s: Sequence[float], *,
+                     b_maxes: Sequence[int] = (1,)) -> "MarkovGrid":
+        mesh = np.meshgrid(np.asarray(lams, np.float64),
+                           np.asarray(alphas, np.float64),
+                           np.asarray(tau0s, np.float64),
+                           _as_i32(b_maxes), indexing="ij")
+        flat = [m.reshape(-1) for m in mesh]
+        return cls.from_points(flat[0], flat[1], flat[2],
+                               b_max=flat[3].astype(np.int32))
+
+    @classmethod
+    def from_fracs(cls, fracs: Sequence[float], alpha: float, tau0: float,
+                   *, b_maxes: Sequence[int] = (1,)) -> "MarkovGrid":
+        """The λ × b_max *surface* grid: each (frac, b_max) cell gets
+        λ = frac × that b_max's stability limit, so every column of the
+        surface is sampled at the same relative distance from its own
+        saturation point."""
+        lam_pts, b_pts = [], []
+        for b in b_maxes:
+            lim = b / (alpha * b + tau0)
+            for f in fracs:
+                lam_pts.append(f * lim)
+                b_pts.append(int(b))
+        return cls.from_points(lam_pts, alpha, tau0, b_max=b_pts)
+
+    def _arrays(self) -> Tuple[np.ndarray, ...]:
+        return (self.lam, self.alpha, self.tau0, self.b_max)
+
+
 # ---------------------------------------------------------------------------
 # results
 # ---------------------------------------------------------------------------
+
+@dataclass
+class MarkovGridResult:
+    """Exact-chain output for a ``MarkovGrid`` (one entry per cell).
+
+    ``tail_mass`` is the per-cell a-posteriori truncation witness
+    (stationary mass at the truncation cell K); ``truncation`` the
+    shared level K the dispatch converged at."""
+
+    grid: MarkovGrid
+    mean_latency: np.ndarray
+    mean_batch: np.ndarray
+    batch_m2: np.ndarray
+    utilization: np.ndarray
+    mean_queue: np.ndarray
+    pi0: np.ndarray
+    tail_mass: np.ndarray
+    truncation: int
+    method: str = "jax"
+
+    def __len__(self) -> int:
+        return len(self.grid)
+
+    def point(self, i: int) -> SimResult:
+        return SimResult(
+            lam=float(self.grid.lam[i]),
+            n_jobs=0,
+            mean_latency=float(self.mean_latency[i]),
+            mean_batch=float(self.mean_batch[i]),
+            batch_m2=float(self.batch_m2[i]),
+            utilization=float(self.utilization[i]),
+            backend="markov",
+        )
+
+    def to_results(self) -> List[SimResult]:
+        return [self.point(i) for i in range(len(self))]
+
 
 @dataclass
 class SweepResult:
@@ -526,24 +629,5 @@ class GenResult:
         return [self.point(i) for i in range(len(self))]
 
 
-def _hist_percentiles(hist: np.ndarray,
-                      qs: Iterable[float]) -> List[np.ndarray]:
-    """Percentiles from the per-point bit-binned histograms, with linear
-    in-bin interpolation (float32 bits are linear-in-value within a
-    bin, so value-space interpolation is the natural choice)."""
-    edges = hist_edges(hist.shape[1])
-    cum = np.cumsum(hist, axis=1)
-    total = cum[:, -1]
-    rows = np.arange(hist.shape[0])
-    out = []
-    for p in qs:
-        target = p / 100.0 * np.maximum(total, 1)
-        j = np.argmax(cum >= target[:, None], axis=1)
-        below = np.where(j > 0, cum[rows, np.maximum(j - 1, 0)], 0)
-        inbin = np.maximum(hist[rows, j], 1)
-        frac = np.clip((target - below) / inbin, 0.0, 1.0)
-        lat = edges[j] + frac * (edges[j + 1] - edges[j])
-        out.append(np.where(total > 0, lat, np.nan))
-    return out
 
 

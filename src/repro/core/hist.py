@@ -1,0 +1,83 @@
+"""Shared latency-histogram machinery for the sweep kernels.
+
+Every jit kernel (request-level sweep, k-replica fleet, token-level
+generate) bins per-job latencies by their float32 bit pattern — the top
+``_MANT`` mantissa bits plus the exponent, i.e. ``2**_MANT`` log-spaced
+bins per octave, piecewise-linear within an octave.  Positive float32
+bits are monotone in value, so this is an exact monotone binning that
+costs one shift + subtract per sample on device (no transcendentals in
+the scan).  ``_EXP_MIN`` sets the smallest resolved latency,
+``2**_EXP_MIN``; with ``_MANT = 3`` and 512 bins the histogram spans
+2**-32 … 2**32 at ~9% per-bin resolution (refined by in-bin
+interpolation at percentile time).
+
+The binning constants, the device-side bin computation, the host-side
+edge/percentile reconstruction, and the fixed histogram-thinning
+pattern used by the superstep kernels live here — one definition for
+all kernels (they were copy-pasted per kernel before).  The module is
+JAX-free at import time: ``bit_bins`` imports ``lax`` lazily because it
+only ever runs inside a kernel trace.
+"""
+from __future__ import annotations
+
+from typing import Iterable, List
+
+import numpy as np
+
+__all__ = ["hist_edges", "hist_percentiles", "bit_bins", "thinned_rows"]
+
+_MANT = 3
+_EXP_MIN = -32
+
+# bit-pattern binning constants: bin = (bits >> _BIN_SHIFT) - _BIN_BASE
+_BIN_BASE = (127 + _EXP_MIN) << _MANT
+_BIN_SHIFT = 23 - _MANT
+
+
+def hist_edges(n_bins: int) -> np.ndarray:
+    """The n_bins+1 latency values bounding the histogram bins."""
+    j = np.arange(n_bins + 1, dtype=np.int64)
+    bits = (j + ((127 + _EXP_MIN) << _MANT)) << (23 - _MANT)
+    return bits.astype(np.int32).view(np.float32).astype(np.float64)
+
+
+def bit_bins(lats, n_bins: int):
+    """Device-side bin indices for a float latency array (trace-time
+    helper: call inside a jit kernel; clips to [0, n_bins))."""
+    import jax.numpy as jnp
+    from jax import lax
+
+    lat_bits = lax.bitcast_convert_type(lats.astype(jnp.float32),
+                                        jnp.int32)
+    return jnp.clip((lat_bits >> _BIN_SHIFT) - _BIN_BASE, 0, n_bins - 1)
+
+
+def thinned_rows(rebase_every: int, hist_every: int) -> np.ndarray:
+    """The fixed scrambled 1-in-N step subsample the superstep kernels
+    feed to the percentile histogram when ``hist_every > 1`` (a fixed
+    scrambled offset pattern per superstep — not a lattice, which could
+    resonate with the event-parity structure of idle cycles).  Sorted,
+    deterministic, identical across kernels."""
+    return np.sort(np.random.default_rng(0).permutation(
+        rebase_every)[:max(1, rebase_every // hist_every)])
+
+
+def hist_percentiles(hist: np.ndarray,
+                     qs: Iterable[float]) -> List[np.ndarray]:
+    """Percentiles from per-point bit-binned histograms, with linear
+    in-bin interpolation (float32 bits are linear-in-value within a
+    bin, so value-space interpolation is the natural choice)."""
+    edges = hist_edges(hist.shape[1])
+    cum = np.cumsum(hist, axis=1)
+    total = cum[:, -1]
+    rows = np.arange(hist.shape[0])
+    out = []
+    for p in qs:
+        target = p / 100.0 * np.maximum(total, 1)
+        j = np.argmax(cum >= target[:, None], axis=1)
+        below = np.where(j > 0, cum[rows, np.maximum(j - 1, 0)], 0)
+        inbin = np.maximum(hist[rows, j], 1)
+        frac = np.clip((target - below) / inbin, 0.0, 1.0)
+        lat = edges[j] + frac * (edges[j + 1] - edges[j])
+        out.append(np.where(total > 0, lat, np.nan))
+    return out

@@ -13,25 +13,51 @@ truncated at K. Transition from l:
   l > 0 : batch b = min(l, b_max) starts; L' = (l−b) + Poisson(λ·τ[b])
 E[W] follows by Markov-regenerative renewal reward + Little's law.
 
-The transition matrix is built as one vectorized shifted-Poisson-row
-construction (row l is the Poisson(λ·τ[b(l)]) pmf shifted right by the
-carry l−b(l), tail mass absorbed in the truncation cell — no Python row
-loop), and the truncation K is chosen *adaptively*: start small, solve,
-and double K until the stationary mass at the truncation cell falls
-under ``tail_tol``.  The truncation cell absorbs the entire tail of
-every row, so ``tail_mass = π[K]`` is a direct a-posteriori error
-witness — empirically it tracks the relative error of E[W] to within an
-order of magnitude, and the conservative closed-form estimate the
-module previously used (K up to 20 000, a 3.2 GB dense matrix) is
-10–100× larger than needed.  An explicitly passed ``truncation`` is
-used as-is (one solve, no growth); values above ``_TRUNC_HARD`` raise
-rather than silently allocating gigabytes.
+Solver methods (``method=`` on ``solve``/``solve_batch``):
+
+- ``"auto"`` (default) — the structured banded solver for finite b_max,
+  the dense reference for b_max = ∞ (whose rows have no repeating band;
+  its adaptive truncation stays small because the ∞-chain's queue is
+  short).
+- ``"struct"`` / ``"gth"`` — the banded level recursion of
+  ``repro.core.chain_solver``: for finite b_max every level above b_max
+  has the identical shifted-Poisson row (an M/G/1-type chain with a
+  repeating Toeplitz band), so π is computed level-by-level on a
+  (K+1)×(V+1) band — O(K·V²) work and O(K·V) memory, no K×K matrix
+  ever materialized.  "struct" uses the LAPACK banded solve when SciPy
+  is present; "gth" forces the pure-NumPy censored-chain recursion.
+- ``"dense"`` — the legacy dense LU at O(K³)/O(K²), kept as the
+  cross-check the structured solver is pinned against (≤1e-10 on E[W])
+  and as the fallback outside the structured solver's
+  positive-recurrence domain.
+
+The dense transition matrix is built as one vectorized
+shifted-Poisson-row construction (row l is the Poisson(λ·τ[b(l)]) pmf
+shifted right by the carry l−b(l), tail mass absorbed in the truncation
+cell — no Python row loop), and the truncation K is chosen
+*adaptively*: start small, solve, and double K until the stationary
+mass at the truncation cell falls under ``tail_tol``.  The truncation
+cell absorbs the entire tail of every row, so ``tail_mass = π[K]`` is a
+direct a-posteriori error witness for *both* solvers — empirically it
+tracks the relative error of E[W] to within an order of magnitude.
+
+Truncation guards are per-method: the structured path is O(K·V) in
+memory, so its adaptive cap ``_TRUNC_CAP_STRUCT`` (65536) and hard
+guard sit far above the dense ones — the 0.5 GB dense matrix at
+K = 8192 is no longer the binding constraint, it only binds
+``method="dense"`` (``_TRUNC_CAP_DENSE``/``_TRUNC_HARD_DENSE``, where
+an explicit truncation beyond the hard cap still raises rather than
+silently allocating gigabytes).
 
 ``solve_batch`` runs a λ grid through the same machinery sharing the
-per-model structure (batch-size and service-time ladders, the
-log-factorial table) and warm-starting each λ's truncation from the
+per-model structure and warm-starting each λ's truncation from the
 previous one's converged K, so a sorted sweep skips the grow-and-retry
-solves entirely.
+solves entirely.  ``solve_grid`` takes a ``MarkovGrid`` of
+(λ, α, τ0, b_max) cells and solves the whole grid through the
+structured solver — on the JAX path as one jitted float64 dispatch per
+chunk (``repro.core.chain_solver.grid_solve``), which is what makes
+dense λ × b_max exact surfaces affordable (see
+``examples/exact_surface.py``).
 """
 from __future__ import annotations
 
@@ -41,14 +67,25 @@ from typing import List, Optional, Sequence
 
 import numpy as np
 
+from repro.core import chain_solver
 from repro.core.analytic import LinearServiceModel
+from repro.core.grid import MarkovGrid, MarkovGridResult
 
-__all__ = ["MarkovResult", "solve", "solve_batch", "poisson_pmf_row"]
+__all__ = ["MarkovResult", "solve", "solve_batch", "solve_grid",
+           "poisson_pmf_row"]
 
 _TRUNC_START = 256           # adaptive growth starts here
-_TRUNC_CAP = 8192            # adaptive growth stops here (0.5 GB dense)
-_TRUNC_HARD = 16384          # explicit truncation beyond this raises
+_TRUNC_CAP_DENSE = 8192      # dense adaptive growth stops here (0.5 GB)
+_TRUNC_HARD_DENSE = 16384    # explicit dense truncation beyond this raises
+_TRUNC_CAP_STRUCT = 65536    # structured adaptive cap (O(K·V) memory)
+_TRUNC_HARD_STRUCT = 1 << 20  # explicit structured truncation guard
 _TAIL_TOL = 1e-10            # stationary mass allowed at the truncation
+
+# back-compat aliases (pre-structured names; dense semantics)
+_TRUNC_CAP = _TRUNC_CAP_DENSE
+_TRUNC_HARD = _TRUNC_HARD_DENSE
+
+_STRUCT_METHODS = ("struct", "gth")
 
 
 def poisson_pmf_row(mean: float, kmax: int) -> np.ndarray:
@@ -76,6 +113,7 @@ class MarkovResult:
     pi: np.ndarray                   # stationary dist of waiting count L_n
     truncation: int
     tail_mass: float                 # stationary mass at the truncation cell
+    method: str = "dense"            # solver that produced this result
 
 
 # above this truncation the cached λ-independent log-pmf core —
@@ -90,7 +128,7 @@ class _ChainStructure:
     log-Poisson-pmf matrix  core[l, j] = j·log τ[b(l)] − log j!  —
     per λ the full log-pmf is just core + j·log λ − λ·τ[b(l)], two
     broadcast adds instead of an outer product, which is the bulk of
-    what ``solve_batch`` shares across a λ grid."""
+    what ``solve_batch`` shares across a λ grid on the dense path."""
 
     def __init__(self, model: LinearServiceModel, b_max: float, kmax: int):
         self.model, self.b_max, self.kmax = model, b_max, kmax
@@ -156,12 +194,20 @@ def _transition_matrix(lam: float, s: _ChainStructure, K: int, *,
     return P
 
 
+def _result_from_pi(lam: float, pi: np.ndarray, t_of: np.ndarray,
+                    b_of: np.ndarray, K: int, method: str) -> MarkovResult:
+    m = chain_solver.chain_metrics(lam, pi, t_of, b_of)
+    return MarkovResult(
+        lam=lam, mean_latency=m["mean_latency"],
+        mean_batch=m["mean_batch"], batch_m2=m["batch_m2"],
+        utilization=m["utilization"], mean_queue=m["mean_queue"],
+        pi=pi, truncation=K, tail_mass=m["tail_mass"], method=method)
+
+
 def _solve_at(lam: float, s: _ChainStructure, K: int, *,
               use_core: bool = False) -> MarkovResult:
-    """One truncated solve at a fixed K (the old solver's body)."""
+    """One dense truncated solve at a fixed K (the legacy solver)."""
     P = _transition_matrix(lam, s, K, use_core=use_core)
-    t_of, b_of = s.t_of[:K + 1], s.b_of[:K + 1]
-
     # stationary distribution: solve pi (P - I) = 0, sum(pi) = 1
     A = (P - np.eye(K + 1)).T
     A[-1, :] = 1.0
@@ -170,32 +216,40 @@ def _solve_at(lam: float, s: _ChainStructure, K: int, *,
     pi = np.linalg.solve(A, rhs)
     pi = np.clip(pi, 0.0, None)
     pi /= pi.sum()
+    return _result_from_pi(lam, pi, s.t_of[:K + 1], s.b_of[:K + 1], K,
+                           "dense")
 
-    # Markov-regenerative renewal-reward:
-    # cycle from completion(l): idle (only l=0) + service of batch b_of[l]
-    idle = np.where(np.arange(K + 1) == 0, 1.0 / lam, 0.0)
-    cyc_len = idle + t_of
-    # ∫ jobs-in-system dt over the cycle:
-    #  during idle: 0 jobs; during service: (l or 1 for l=0) + Poisson drift
-    in_sys = np.maximum(np.arange(K + 1), 1).astype(float)
-    integral = in_sys * t_of + lam * t_of ** 2 / 2.0
-    mean_cycle = float(pi @ cyc_len)
-    e_l = float(pi @ integral) / mean_cycle
-    utilization = float(pi @ t_of) / mean_cycle
 
-    eb = float(pi @ b_of)
-    eb2 = float(pi @ (b_of.astype(float) ** 2))
-    return MarkovResult(
-        lam=lam,
-        mean_latency=e_l / lam,
-        mean_batch=eb,
-        batch_m2=eb2,
-        utilization=utilization,
-        mean_queue=e_l,
-        pi=pi,
-        truncation=K,
-        tail_mass=float(pi[-1]),
-    )
+def _solve_struct_at(lam: float, model: LinearServiceModel, b_max: float,
+                     K: int, method: str) -> MarkovResult:
+    ch = chain_solver.build_chain(lam, model, b_max, K)
+    pi = chain_solver.solve_pi(
+        ch, method="gth" if method == "gth" else "band")
+    return _result_from_pi(lam, pi, ch.t_of, ch.b_of, K, method)
+
+
+def _resolve_method(method: str, b_max: float) -> str:
+    if method == "auto":
+        return "dense" if math.isinf(b_max) else "struct"
+    if method in _STRUCT_METHODS or method == "dense":
+        return method
+    raise ValueError(f"unknown method {method!r}; pick from "
+                     f"('auto', 'struct', 'gth', 'dense')")
+
+
+def _check_truncation(truncation: int, method: str) -> None:
+    if method == "dense":
+        if truncation > _TRUNC_HARD_DENSE:
+            raise ValueError(
+                f"truncation {truncation} would allocate a "
+                f"{(truncation + 1) ** 2 * 8 / 1e9:.1f} GB dense chain; "
+                f"the dense hard cap is {_TRUNC_HARD_DENSE} — use the "
+                "structured solver (method='struct', O(K·V) memory) for "
+                "deeper truncations")
+    elif truncation > _TRUNC_HARD_STRUCT:
+        raise ValueError(
+            f"truncation {truncation} exceeds the structured guard "
+            f"{_TRUNC_HARD_STRUCT}")
 
 
 def _start_truncation(lam: float, model: LinearServiceModel,
@@ -208,44 +262,66 @@ def _start_truncation(lam: float, model: LinearServiceModel,
     if not math.isinf(b_max):
         eb_est = min(eb_est, float(b_max) * 4 + lam * model.tau0)
     k = int(32 + 4 * eb_est)
-    return min(max(k, _TRUNC_START), _TRUNC_CAP)
+    return min(max(k, _TRUNC_START), _TRUNC_CAP_DENSE)
+
+
+def _adaptive_cap(method: str) -> int:
+    return _TRUNC_CAP_DENSE if method == "dense" else _TRUNC_CAP_STRUCT
 
 
 def solve(lam: float, model: LinearServiceModel, *,
           b_max: float = math.inf, truncation: int = 0,
-          tail_tol: float = _TAIL_TOL) -> MarkovResult:
+          tail_tol: float = _TAIL_TOL, method: str = "auto"
+          ) -> MarkovResult:
     """Solve the embedded chain and return exact (up to truncation)
     metrics.
 
     With ``truncation=0`` (default) the truncation level grows
     adaptively — doubling from a small start until the stationary mass
-    at the truncation cell is below ``tail_tol`` (or ``_TRUNC_CAP`` is
-    reached; the returned ``tail_mass`` always reports the achieved
-    level).  An explicit ``truncation`` is used as-is."""
+    at the truncation cell is below ``tail_tol`` (or the method's cap
+    is reached; the returned ``tail_mass`` always reports the achieved
+    level).  An explicit ``truncation`` is used as-is.  See the module
+    docstring for ``method``; with the default "auto", finite-b_max
+    cells outside the structured solver's positive-recurrence domain
+    fall back to the dense reference transparently."""
     if lam <= 0:
         raise ValueError("lam must be > 0")
+    auto = method == "auto"
+    method = _resolve_method(method, b_max)
+
+    def solve_at(K: int) -> MarkovResult:
+        if method == "dense":
+            return _solve_at(lam, _ChainStructure(model, b_max, K), K)
+        return _solve_struct_at(lam, model, b_max, K, method)
+
     if truncation:
-        if truncation > _TRUNC_HARD:
-            raise ValueError(
-                f"truncation {truncation} would allocate a "
-                f"{(truncation + 1) ** 2 * 8 / 1e9:.1f} GB dense chain; "
-                f"the hard cap is {_TRUNC_HARD} (the adaptive default "
-                "reaches the same accuracy at a fraction of the size)")
-        s = _ChainStructure(model, b_max, truncation)
-        return _solve_at(lam, s, truncation)
+        _check_truncation(truncation, method)
+        try:
+            return solve_at(truncation)
+        except ValueError:
+            if not (auto and method in _STRUCT_METHODS):
+                raise
+            method = "dense"
+            _check_truncation(truncation, method)
+            return solve_at(truncation)
     K = _start_truncation(lam, model, b_max)
-    s = _ChainStructure(model, b_max, K)
     while True:
-        res = _solve_at(lam, s, K)
-        if res.tail_mass <= tail_tol or K >= _TRUNC_CAP:
+        try:
+            res = solve_at(K)
+        except ValueError:
+            if not (auto and method in _STRUCT_METHODS):
+                raise
+            method = "dense"          # outside the structured domain
+            continue
+        if res.tail_mass <= tail_tol or K >= _adaptive_cap(method):
             return res
-        K = min(2 * K, _TRUNC_CAP)
-        s = s.grow(K)
+        K = min(2 * K, _adaptive_cap(method))
 
 
 def solve_batch(lams: Sequence[float], model: LinearServiceModel, *,
                 b_max: float = math.inf, truncation: int = 0,
-                tail_tol: float = _TAIL_TOL) -> List[MarkovResult]:
+                tail_tol: float = _TAIL_TOL, method: str = "auto"
+                ) -> List[MarkovResult]:
     """Solve the chain for every λ in one pass, reusing the shared
     per-model structure and warm-starting each λ's truncation level.
 
@@ -258,28 +334,92 @@ def solve_batch(lams: Sequence[float], model: LinearServiceModel, *,
         return []
     if any(lam <= 0 for lam in lams):
         raise ValueError("every lam must be > 0")
+    auto = method == "auto"
+    resolved = _resolve_method(method, b_max)
+    s: Optional[_ChainStructure] = None     # dense structure, lazy/shared
+
+    def solve_at(lam: float, K: int, meth: str) -> MarkovResult:
+        nonlocal s
+        if meth == "dense":
+            s = _ChainStructure(model, b_max, K) if s is None \
+                else s.grow(K)
+            return _solve_at(lam, s, K, use_core=True)
+        return _solve_struct_at(lam, model, b_max, K, meth)
+
     if truncation:
-        if truncation > _TRUNC_HARD:
-            raise ValueError(
-                f"truncation {truncation} would allocate a "
-                f"{(truncation + 1) ** 2 * 8 / 1e9:.1f} GB dense chain "
-                f"per point; the hard cap is {_TRUNC_HARD}")
-        s = _ChainStructure(model, b_max, truncation)
-        return [_solve_at(lam, s, truncation, use_core=True)
-                for lam in lams]
+        _check_truncation(truncation, resolved)
+        out: List[Optional[MarkovResult]] = []
+        for lam in lams:
+            try:
+                out.append(solve_at(float(lam), truncation, resolved))
+            except ValueError:
+                if not (auto and resolved in _STRUCT_METHODS):
+                    raise
+                _check_truncation(truncation, "dense")
+                out.append(solve_at(float(lam), truncation, "dense"))
+        return out       # type: ignore[return-value]
     order = np.argsort(lams)
-    K = _start_truncation(float(lams[order[0]]), model, b_max)
-    s = _ChainStructure(model, b_max, K)
-    out: List[Optional[MarkovResult]] = [None] * len(lams)
+    out = [None] * len(lams)
+    warm = 0
     for i in order:
         lam = float(lams[i])
-        K = max(K, _start_truncation(lam, model, b_max))
-        s = s.grow(K)
+        meth = resolved
+        K = max(warm, _start_truncation(lam, model, b_max))
+        K = min(K, _adaptive_cap(meth))
         while True:
-            res = _solve_at(lam, s, K, use_core=True)
-            if res.tail_mass <= tail_tol or K >= _TRUNC_CAP:
+            try:
+                res = solve_at(lam, K, meth)
+            except ValueError:
+                if not (auto and meth in _STRUCT_METHODS):
+                    raise
+                meth = "dense"       # outside the structured domain
+                K = min(K, _adaptive_cap(meth))
+                continue
+            if res.tail_mass <= tail_tol or K >= _adaptive_cap(meth):
                 break
-            K = min(2 * K, _TRUNC_CAP)
-            s = s.grow(K)
+            K = min(2 * K, _adaptive_cap(meth))
+        warm = max(warm, res.truncation)
         out[i] = res
     return out       # type: ignore[return-value]
+
+
+def solve_grid(grid: MarkovGrid, *, tail_tol: float = _TAIL_TOL,
+               truncation: int = 0, method: str = "jax",
+               cells_per_dispatch: int = 64) -> MarkovGridResult:
+    """Exact-chain metrics for a whole (λ, α, τ0, b_max) grid through
+    the structured solver.
+
+    ``method="jax"`` runs every cell in one jitted float64 dispatch per
+    ``cells_per_dispatch`` chunk (compiled once per truncation shape);
+    ``method="numpy"`` loops the banded CPU solver — same chain, same
+    answers, no compile step.  All cells share one truncation level K,
+    grown adaptively (doubling) until every cell's ``tail_mass``
+    witness clears ``tail_tol``; an explicit ``truncation`` is used
+    as-is."""
+    if not isinstance(grid, MarkovGrid):
+        raise TypeError("solve_grid takes a MarkovGrid (use "
+                        "MarkovGrid.from_product/from_fracs)")
+    if truncation:
+        _check_truncation(truncation, "struct")
+        K = truncation
+    else:
+        K = max(_start_truncation(float(grid.lam[i]),
+                                  LinearServiceModel(float(grid.alpha[i]),
+                                                     float(grid.tau0[i])),
+                                  float(grid.b_max[i]))
+                for i in range(len(grid)))
+        K = 1 << max(8, (K - 1).bit_length())        # pow2 bucket
+    while True:
+        out = chain_solver.grid_solve(
+            grid.lam, grid.alpha, grid.tau0, grid.b_max, K,
+            cells_per_dispatch=cells_per_dispatch, method=method)
+        if truncation or float(out["tail_mass"].max()) <= tail_tol \
+                or K >= _TRUNC_CAP_STRUCT:
+            break
+        K = min(2 * K, _TRUNC_CAP_STRUCT)
+    return MarkovGridResult(
+        grid=grid, mean_latency=out["mean_latency"],
+        mean_batch=out["mean_batch"], batch_m2=out["batch_m2"],
+        utilization=out["utilization"], mean_queue=out["mean_queue"],
+        pi0=out["pi0"], tail_mass=out["tail_mass"], truncation=K,
+        method=method)

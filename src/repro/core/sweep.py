@@ -56,7 +56,10 @@ from jax import lax, random
 
 from repro.core.grid import (  # noqa: F401  (re-exported for back-compat)
     DIST_CODE, DIST_NAME, ROUTE_CODE, ROUTE_NAME, FleetGrid, FleetResult,
-    SweepGrid, SweepResult, hist_edges, _EXP_MIN, _MANT, _hist_percentiles)
+    SweepGrid, SweepResult)
+from repro.core.hist import (bit_bins, hist_edges,
+                             hist_percentiles as _hist_percentiles,
+                             thinned_rows)
 
 __all__ = ["DIST_CODE", "DIST_NAME", "ROUTE_CODE", "ROUTE_NAME",
            "SweepGrid", "SweepResult", "FleetGrid", "FleetResult",
@@ -120,9 +123,6 @@ def _build_kernel(n_batches: int, warmup: int, q_cap: int, a_cap: int,
         # the free region (see invariant above)
         buf = lax.dynamic_update_slice(buf, times, (q,))
         return buf, q + a, dropped
-
-    hist_base = (127 + _EXP_MIN) << _MANT
-    hist_shift = 23 - _MANT
 
     def run_point(p, key):
         lam, alpha, tau0 = p["lam"], p["alpha"], p["tau0"]
@@ -200,9 +200,7 @@ def _build_kernel(n_batches: int, warmup: int, q_cap: int, a_cap: int,
             busy = busy + mf * s
             span = span + mf * depart     # wall-clock advanced this step
             q_max = jnp.maximum(q_max, q)
-            lat_bits = lax.bitcast_convert_type(lats.astype(f32), i32)
-            bins = jnp.clip((lat_bits >> hist_shift) - hist_base,
-                            0, n_bins - 1)
+            bins = bit_bins(lats, n_bins)
             hist = hist.at[bins].add((popmask & meas).astype(i32))
 
             return (q, buf, key, lat_sum, lat_n, sum_b, sum_b2,
@@ -353,8 +351,6 @@ def _build_fleet_kernel(n_steps: int, warmup: int, k_max: int, q_cap: int,
     BIG_LOAD = jnp.int32(2 ** 20)   # inactive-replica load; keeps the
     slots = jnp.arange(pop_cap)     # JSQ compare free of i32 overflow
     ridx = jnp.arange(k_max)
-    hist_base = (127 + _EXP_MIN) << _MANT
-    hist_shift = 23 - _MANT
     R_RANDOM, R_RR = ROUTE_CODE["random"], ROUTE_CODE["round_robin"]
 
     # rebase cadence: full-buffer clock rebases (the only whole-buffer
@@ -556,9 +552,7 @@ def _build_fleet_kernel(n_steps: int, warmup: int, k_max: int, q_cap: int,
             span = span + (meas & do_event).astype(f32) * (t_ev - clock)
             q_max = jnp.maximum(q_max, jnp.max(q))
             jobs_rep = jobs_rep + jnp.where(oh & mstart, b, 0)
-            lat_bits = lax.bitcast_convert_type(lats.astype(f32), i32)
-            bins = jnp.clip((lat_bits >> hist_shift) - hist_base,
-                            0, n_bins - 1)
+            bins = bit_bins(lats, n_bins)
 
             # the clock tracks the last processed event; the full-buffer
             # rebase — and the histogram scatter, whose per-call cost
@@ -573,12 +567,9 @@ def _build_fleet_kernel(n_steps: int, warmup: int, k_max: int, q_cap: int,
 
         # histogram thinning: scatter-adds cost per *element* under
         # vmap, so hist_every > 1 records only an unbiased 1-in-N batch
-        # subsample (a fixed scrambled offset pattern per superstep —
-        # not a lattice, which could resonate with the event-parity
-        # structure of idle cycles).  Means/counters always use every
-        # job; only the percentile sample thins.
-        hist_rows = np.sort(np.random.default_rng(0).permutation(
-            REBASE_EVERY)[:max(1, REBASE_EVERY // hist_every)])
+        # subsample.  Means/counters always use every job; only the
+        # percentile sample thins.
+        hist_rows = thinned_rows(REBASE_EVERY, hist_every)
 
         def superstep(state, x):
             i_base, k_sup = x
