@@ -1,7 +1,6 @@
 """Shared helpers for the benchmark harness."""
 from __future__ import annotations
 
-import os
 import time
 from dataclasses import dataclass
 from typing import Any, Callable, Dict, List, Optional
@@ -9,19 +8,11 @@ from typing import Any, Callable, Dict, List, Optional
 from repro.core.analytic import LinearServiceModel
 
 
-def enable_host_devices(n: Optional[int] = None) -> None:
-    """Expose CPU cores as separate XLA host devices so the fleet kernel
-    can pmap-shard a grid across them.  Must run before the first JAX
-    backend initialization (call it at benchmark-module import time);
-    a no-op if the flag is already set or only one core exists."""
-    if "xla_force_host_platform_device_count" in \
-            os.environ.get("XLA_FLAGS", ""):
-        return
-    n = n or os.cpu_count() or 1
-    if n > 1:
-        os.environ["XLA_FLAGS"] = (
-            os.environ.get("XLA_FLAGS", "")
-            + f" --xla_force_host_platform_device_count={n}").strip()
+from repro.core.engine import enable_host_devices  # noqa: F401
+#   (kept importable here for back-compat; the implementation moved to
+#   the shared superstep engine — it exposes CPU cores as XLA host
+#   devices so every sweep kernel's shard_map dispatch can use them,
+#   and must run before the first JAX backend initialization)
 
 V100 = LinearServiceModel(alpha=0.1438, tau0=1.8874)   # ms (paper §3.3)
 P4 = LinearServiceModel(alpha=0.5833, tau0=1.4284)     # ms
@@ -91,9 +82,11 @@ def timed_struct_vs_dense(rows: List[Row], name: str, model, *,
 
 
 def timed_sweep(rows: List[Row], grid, name: str, *, n_batches: int,
-                seed: int, q_cap: int = 1024):
-    """Run one jit+vmap sweep dispatch over ``grid``, appending its
-    timing/size row to ``rows``; returns the SweepResult."""
+                seed: int, q_cap: Optional[int] = None):
+    """Run one sweep dispatch over ``grid`` through the engine defaults
+    (adaptive ``q_cap``/``a_cap``, sharded over the visible devices),
+    appending its timing/size row to ``rows``; returns the
+    SweepResult."""
     from repro.core.sweep import sweep
 
     out = {}
@@ -105,3 +98,37 @@ def timed_sweep(rows: List[Row], grid, name: str, *, n_batches: int,
                 "dropped": int(out["r"].dropped.sum())}
     rows.append(timed(dispatch, f"{name}/sweep_dispatch"))
     return out["r"]
+
+
+def timed_engine_speedup(rows: List[Row], name: str,
+                         legacy_fn: Callable[[], Dict[str, Any]],
+                         engine_fn: Callable[[], Dict[str, Any]]) -> Row:
+    """Append the ``engine_speedup`` row: the same dispatch through the
+    pre-engine configuration (single device, the old fixed buffer
+    sizing) vs the engine default (sharded over the visible devices,
+    adaptive sizing).
+
+    The legacy side runs twice — cold (compile + run) then warm — and
+    the engine side once more (its kernel is already compiled by the
+    benchmark's main dispatch row), so the reported ``speedup`` is the
+    *sustained* sweep-portion ratio, uncontaminated by XLA compile
+    time; the cold legacy wall clock rides along in the payload."""
+    import jax
+
+    t0 = time.perf_counter()
+    legacy_fn()
+    legacy_cold = time.perf_counter() - t0
+    rows.append(timed(legacy_fn, f"{name}/legacy_single_dev_dispatch"))
+    t_legacy = rows[-1].us_per_call
+    rows.append(timed(engine_fn, f"{name}/engine_warm_dispatch"))
+    t_engine = rows[-1].us_per_call
+
+    def speedup():
+        return {"n_dev": len(jax.devices()),
+                "legacy_cold_s": legacy_cold,
+                "legacy_single_dev_s": t_legacy / 1e6,
+                "engine_s": t_engine / 1e6,
+                "speedup": t_legacy / t_engine}
+    row = timed(speedup, f"{name}/engine_speedup")
+    rows.append(row)
+    return row

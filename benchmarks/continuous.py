@@ -24,7 +24,8 @@ from typing import List
 
 import numpy as np
 
-from benchmarks.common import Row, enable_host_devices, timed
+from benchmarks.common import (Row, enable_host_devices, timed,
+                               timed_engine_speedup)
 from repro.core.continuous_sim import GenServiceModel
 
 enable_host_devices()          # before any JAX backend initialization
@@ -78,17 +79,32 @@ def run(n_steps: int = 4096) -> List[Row]:
     # -- 1) the token-level grid: 16 loads × 4 gen_tokens × 4
     #       max_active × 2 disciplines = 512 points, one dispatch ------
     def dispatch():
-        # a_cap must cover the densest indivisible window — the batched
-        # prefill of a full cap=64 batch (~290 ms) at the highest λ
-        # (~0.145/ms ⇒ ~43 expected arrivals) plus Poisson slack
-        out["r"] = gen_sweep(grid, n_steps=n_steps, q_cap=256,
-                             a_cap=96, seed=29)
+        # adaptive a_cap covers the densest indivisible window — the
+        # batched prefill of a full cap=64 batch (~290 ms) at the
+        # highest λ (~0.145/ms ⇒ ~43 expected arrivals) plus tail slack
+        out["r"] = gen_sweep(grid, n_steps=n_steps, seed=29)
         return {"points": len(grid), "n_steps": n_steps,
                 "total_jobs": int(out["r"].n_jobs.sum()),
                 "dropped": int(out["r"].dropped.sum())}
 
     rows.append(timed(dispatch, "continuous/gen_dispatch"))
     r = out["r"]
+
+    # engine acceptance row: the same grid the pre-engine way — one
+    # device, the old hand-sized caps — vs the engine default (sharded,
+    # adaptive sizing), warm-vs-warm
+    def legacy_dispatch():
+        res = gen_sweep(grid, n_steps=n_steps, q_cap=256, a_cap=96,
+                        seed=29, shard=1)
+        return {"points": len(grid), "n_steps": n_steps, "q_cap": 256,
+                "total_jobs": int(res.n_jobs.sum())}
+
+    def engine_dispatch():
+        res = gen_sweep(grid, n_steps=n_steps, seed=29)
+        return {"points": len(grid), "n_steps": n_steps,
+                "total_jobs": int(res.n_jobs.sum())}
+    timed_engine_speedup(rows, "continuous", legacy_dispatch,
+                         engine_dispatch)
 
     # -- 2) static-vs-continuous crossover per (gen, cap) cell: at low
     #       load iteration-level scheduling wins (no head-of-line

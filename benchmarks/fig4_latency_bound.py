@@ -20,13 +20,19 @@ from typing import List
 
 import numpy as np
 
-from benchmarks.common import (P4, RHO_GRID, Row, V100, timed,
+from benchmarks.common import (P4, RHO_GRID, Row, V100,
+                               enable_host_devices, timed,
+                               timed_engine_speedup,
                                timed_struct_vs_dense, timed_sweep)
-from repro.core.analytic import phi, phi0, phi1
-from repro.core.markov import solve, solve_batch
-from repro.core.sweep import SweepGrid
+
+enable_host_devices()          # before any JAX backend initialization
+
+from repro.core.analytic import phi, phi0, phi1          # noqa: E402
+from repro.core.markov import solve, solve_batch         # noqa: E402
+from repro.core.sweep import SweepGrid                   # noqa: E402
 
 LEGACY_K = 8192           # the pre-structured dense adaptive cap
+LEGACY_Q_CAP = 1024       # the pre-engine global worst-case buffer
 
 
 def run(n_batches: int = 4000) -> List[Row]:
@@ -35,6 +41,24 @@ def run(n_batches: int = 4000) -> List[Row]:
     grid = SweepGrid.from_rhos(RHO_GRID, V100.alpha, V100.tau0).concat(
         SweepGrid.from_rhos(RHO_GRID, P4.alpha, P4.tau0))
     r = timed_sweep(rows, grid, "fig4", n_batches=n_batches, seed=17)
+
+    # the engine acceptance row: the same grid dispatched the pre-engine
+    # way — one device, the old global worst-case q_cap — vs the engine
+    # default (sharded, adaptive sizing), warm-vs-warm
+    from repro.core.sweep import sweep
+
+    def legacy_dispatch():
+        res = sweep(grid, n_batches=n_batches, q_cap=LEGACY_Q_CAP,
+                    seed=17, shard=1)
+        return {"points": len(grid), "n_batches": n_batches,
+                "q_cap": LEGACY_Q_CAP,
+                "total_jobs": int(res.n_jobs.sum())}
+
+    def engine_dispatch():
+        res = sweep(grid, n_batches=n_batches, seed=17)
+        return {"points": len(grid), "n_batches": n_batches,
+                "total_jobs": int(res.n_jobs.sum())}
+    timed_engine_speedup(rows, "fig4", legacy_dispatch, engine_dispatch)
 
     # exact chain: one shared-structure batch solve per GPU, timed
     # against fresh per-λ solves on the same grid (which rebuild the

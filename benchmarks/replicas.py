@@ -17,7 +17,8 @@ from __future__ import annotations
 
 from typing import List
 
-from benchmarks.common import Row, V100, enable_host_devices, timed
+from benchmarks.common import (Row, V100, enable_host_devices, timed,
+                               timed_engine_speedup)
 
 enable_host_devices()          # before any JAX backend initialization
 
@@ -49,14 +50,31 @@ def run(n_steps: int = 4000) -> List[Row]:
     out = {}
 
     def dispatch():
-        out["r"] = fleet_sweep(grid, n_steps=n_steps, q_cap=256,
-                               a_cap=32, hist_every=4, seed=17)
+        out["r"] = fleet_sweep(grid, n_steps=n_steps, a_cap=32,
+                               hist_every=4, seed=17)
         return {"points": len(grid), "n_steps": n_steps,
                 "total_jobs": int(out["r"].n_jobs.sum()),
                 "dropped": int(out["r"].dropped.sum())}
 
     rows.append(timed(dispatch, "replicas/fleet_dispatch"))
     r = out["r"]
+
+    # engine acceptance row: the same grid the pre-engine way — one
+    # device, the old fixed q_cap — vs the engine default (sharded,
+    # adaptive sizing), warm-vs-warm
+    def legacy_dispatch():
+        res = fleet_sweep(grid, n_steps=n_steps, q_cap=256, a_cap=32,
+                          hist_every=4, seed=17, shard=1)
+        return {"points": len(grid), "n_steps": n_steps, "q_cap": 256,
+                "total_jobs": int(res.n_jobs.sum())}
+
+    def engine_dispatch():
+        res = fleet_sweep(grid, n_steps=n_steps, a_cap=32,
+                          hist_every=4, seed=17)
+        return {"points": len(grid), "n_steps": n_steps,
+                "total_jobs": int(res.n_jobs.sum())}
+    timed_engine_speedup(rows, "replicas", legacy_dispatch,
+                         engine_dispatch)
 
     # -- 2) consolidation-gain curve over k at fixed total load: even
     #       JSQ cannot close the gap to one consolidated server --------

@@ -10,6 +10,14 @@ PRs.
   python -m benchmarks.run --quick     # smaller sims, fewer served jobs
   python -m benchmarks.run --only fig4 # single module
   python -m benchmarks.run --json-dir out/   # JSON location (default .)
+  python -m benchmarks.run --quick --compare benchmarks/baselines/
+      # after running, diff wall clock + payloads against the committed
+      # baselines; exit nonzero on a >25% wall-clock regression
+
+``--compare`` also works without running anything (``--only none``) if
+the ``--json-dir`` already holds fresh BENCH JSONs.  The report is
+printed and written to ``BENCH_compare.txt`` in ``--json-dir`` (CI
+uploads it as an artifact).
 """
 from __future__ import annotations
 
@@ -18,6 +26,85 @@ import json
 import sys
 import time
 from pathlib import Path
+
+# wall-clock regression tolerance for --compare (shared-CI-runner noise
+# plus real regressions; deliberately loose — payload deltas catch the
+# rest)
+WALL_REGRESSION_TOL = 0.25
+
+# payload keys worth diffing between baseline and current rows: rates
+# and speedups (higher = better); absolute seconds are covered by the
+# module wall clock
+_RATE_KEYS = ("points_per_sec", "jobs_per_sec")
+
+
+def _load_bench(dirpath: Path) -> dict:
+    docs = {}
+    for p in sorted(dirpath.glob("BENCH_*.json")):
+        try:
+            doc = json.loads(p.read_text())
+        except (OSError, json.JSONDecodeError) as e:  # noqa: PERF203
+            print(f"--compare: skipping unreadable {p}: {e}")
+            continue
+        docs[doc.get("module", p.stem.replace("BENCH_", ""))] = doc
+    return docs
+
+
+def _row_rates(doc: dict) -> dict:
+    out = {}
+    for row in doc.get("rows", []):
+        rates = {k: row[k] for k in _RATE_KEYS if k in row}
+        sp = (row.get("payload") or {}).get("speedup")
+        if sp is not None:
+            rates["speedup"] = sp
+        if rates:
+            out[row["name"]] = rates
+    return out
+
+
+def compare_runs(baseline_dir: Path, current_dir: Path) -> tuple:
+    """Per-module wall-clock and payload deltas vs the committed
+    baselines.  Returns (report_lines, regressed_module_names)."""
+    base, cur = _load_bench(baseline_dir), _load_bench(current_dir)
+    lines = [f"benchmark comparison: {current_dir} vs baseline "
+             f"{baseline_dir}",
+             f"{'module':<12} {'base_s':>8} {'now_s':>8} {'delta':>8}"]
+    regressed = []
+    for mod in sorted(set(base) & set(cur)):
+        b, c = base[mod], cur[mod]
+        if b.get("quick") != c.get("quick"):
+            lines.append(f"{mod:<12} SKIP (quick flag differs: baseline="
+                         f"{b.get('quick')} current={c.get('quick')})")
+            continue
+        bw, cw = float(b["wall_s"]), float(c["wall_s"])
+        delta = (cw - bw) / bw if bw > 0 else 0.0
+        flag = ""
+        if delta > WALL_REGRESSION_TOL:
+            flag = "  << REGRESSION"
+            regressed.append(mod)
+        lines.append(f"{mod:<12} {bw:8.2f} {cw:8.2f} {delta:+8.1%}{flag}")
+        brates, crates = _row_rates(b), _row_rates(c)
+        for name in sorted(set(brates) & set(crates)):
+            for key in sorted(set(brates[name]) & set(crates[name])):
+                bv, cv = float(brates[name][key]), float(crates[name][key])
+                if bv <= 0:
+                    continue
+                rd = (cv - bv) / bv
+                if abs(rd) >= 0.10:     # only report moving payloads
+                    lines.append(f"    {name} {key}: {bv:.6g} -> "
+                                 f"{cv:.6g} ({rd:+.1%})")
+    for mod in sorted(set(base) - set(cur)):
+        lines.append(f"{mod:<12} MISSING from current run")
+    for mod in sorted(set(cur) - set(base)):
+        lines.append(f"{mod:<12} NEW (no baseline)")
+    if regressed:
+        lines.append(f"FAIL: wall-clock regression >"
+                     f"{WALL_REGRESSION_TOL:.0%} in: "
+                     + ", ".join(regressed))
+    else:
+        lines.append("OK: no module regressed beyond "
+                     f"{WALL_REGRESSION_TOL:.0%}")
+    return lines, regressed
 
 
 def _row_json(row) -> dict:
@@ -47,7 +134,16 @@ def main() -> None:
                     help="directory for BENCH_<module>.json files")
     ap.add_argument("--no-json", action="store_true",
                     help="skip writing BENCH_<module>.json")
+    ap.add_argument("--compare", default=None, metavar="BASELINE_DIR",
+                    help="after running, diff --json-dir against the "
+                         "baseline BENCH JSONs in this directory; exit "
+                         "nonzero on a >25%% wall-clock regression")
     args = ap.parse_args()
+    if args.compare and args.no_json:
+        # --no-json writes nothing into --json-dir, so the comparison
+        # would silently diff stale (or missing) files
+        sys.exit("--compare needs the fresh BENCH JSONs; "
+                 "drop --no-json")
 
     from benchmarks import (continuous, fig4_latency_bound,
                             fig5_utilization, fig6_energy, fig7_tradeoff,
@@ -85,7 +181,7 @@ def main() -> None:
     }
     if args.only:
         modules = {k: v for k, v in modules.items() if k == args.only}
-        if not modules:
+        if not modules and args.only != "none":
             sys.exit(f"unknown module {args.only!r}")
 
     json_dir = Path(args.json_dir)
@@ -108,6 +204,15 @@ def main() -> None:
         json_dir.mkdir(parents=True, exist_ok=True)
         path = json_dir / f"BENCH_{name}.json"
         path.write_text(json.dumps(doc, indent=1, default=str) + "\n")
+
+    if args.compare:
+        lines, regressed = compare_runs(Path(args.compare), json_dir)
+        report = "\n".join(lines) + "\n"
+        print(report, end="", flush=True)
+        json_dir.mkdir(parents=True, exist_ok=True)
+        (json_dir / "BENCH_compare.txt").write_text(report)
+        if regressed:
+            sys.exit(1)
 
 
 if __name__ == "__main__":

@@ -14,11 +14,18 @@ real engine.
 
 Run:  PYTHONPATH=src python examples/continuous_batching.py
 """
+import time
+
 import numpy as np
 
-from repro.configs import get_config, reduced
-from repro.core.continuous_sim import GenServiceModel
-from repro.serving.continuous import ContinuousEngine
+from repro.core.engine import enable_host_devices
+
+enable_host_devices()       # before any JAX backend initialization:
+#   exposes CPU cores as devices so the sharded default has a mesh
+
+from repro.configs import get_config, reduced            # noqa: E402
+from repro.core.continuous_sim import GenServiceModel    # noqa: E402
+from repro.serving.continuous import ContinuousEngine    # noqa: E402
 
 MODEL = GenServiceModel(alpha_decode=0.14, tau0_decode=1.9,
                         alpha_prefill=0.035, tau0_prefill=1.9)
@@ -46,12 +53,24 @@ def main() -> None:
         lam, MODEL.alpha_decode, MODEL.tau0_decode, MODEL.alpha_prefill,
         MODEL.tau0_prefill, prompt_len=PROMPT, gen_tokens=gens,
         max_active=CAP, discipline=discs)
-    r = gen_sweep(grid, n_steps=4096, q_cap=256, a_cap=96, seed=7)
+    import jax
+    t0 = time.time()
+    r = gen_sweep(grid, n_steps=4096, seed=7)
+    t_multi = time.time() - t0
     assert int(r.dropped.sum()) == 0
     ew = r.mean_latency.reshape(len(GENS), len(RHOS), 2)
-
+    n_dev = len(jax.devices())
     print(f"== static-vs-continuous crossover frontier "
-          f"({len(grid)} points, one dispatch) ==")
+          f"({len(grid)} points, one dispatch, {n_dev} devices: "
+          f"{t_multi:.1f}s) ==")
+    if n_dev > 1:
+        t0 = time.time()
+        gen_sweep(grid, n_steps=4096, seed=7, shard=1)
+        t_single = time.time() - t0
+        print(f"   (single-device re-run: {t_single:.1f}s -> sharded "
+              f"speedup {t_single / t_multi:.2f}x, bitwise-identical "
+              "per-point results; both walls include one-time XLA "
+              "compilation)")
     print(f"{'gen':>5} {'EW ratio @rho=0.15':>19} "
           f"{'@rho=0.9':>9} {'crossover rho*':>15}")
     for gi, g in enumerate(GENS):

@@ -55,7 +55,6 @@ rest of the process keeps its default float32 semantics).
 """
 from __future__ import annotations
 
-import functools
 import math
 from dataclasses import dataclass
 from typing import Dict
@@ -63,6 +62,7 @@ from typing import Dict
 import numpy as np
 
 from repro.core.analytic import LinearServiceModel
+from repro.core.engine import kernel_cache
 
 __all__ = ["BandedChain", "build_chain", "solve_pi", "solve_pi_gth",
            "solve_pi_banded", "chain_metrics", "grid_solve", "BAND_TOL"]
@@ -283,7 +283,7 @@ def _grid_shapes(lams: np.ndarray, alphas: np.ndarray, tau0s: np.ndarray,
     return V, D
 
 
-@functools.lru_cache(maxsize=8)
+@kernel_cache(maxsize=8)
 def _build_grid_kernel(K: int, V: int, D: int):
     """jit+vmap GTH level recursion, specialized to (K, V, D).
 

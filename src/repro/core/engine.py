@@ -1,0 +1,415 @@
+"""Unified superstep engine: the machinery every Monte Carlo sweep
+kernel shares, plus the multi-device dispatch layer.
+
+The three jit kernels (request-level ``repro.core.sweep.sweep``, the
+k-replica fleet ``fleet_sweep``, the token-level ``gen_sweep``) used to
+re-implement the same building blocks — constructive Poisson window
+draws, capacity-clamped FIFO buffer ops, superstep histogram scatter,
+fold_in per-point PRNG keys, repeated-last-point grid padding, and a
+per-kernel ``jax.pmap`` wrapper with its own padding arithmetic.  This
+module is the single home for all of it:
+
+- **Per-point keys** (``point_keys``): ``fold_in(PRNGKey(seed), i)``
+  per global point index, so a grid dispatched as one vmap batch,
+  sharded over devices, or split into several dispatches
+  (``Grid.take`` + ``key_offset``) produces bitwise-identical per-point
+  results.  This is the contract that makes sharding invisible.
+- **Sharded dispatch** (``resolve_shards`` / ``shard_kernel`` /
+  ``dispatch``): the default execution mode is ``shard_map`` over a 1-D
+  device mesh — one jit-compiled program whose vmapped per-point kernel
+  runs on an ``n/n_dev`` slice of the grid per device.  Unlike the
+  deprecated ``jax.pmap`` path it replaces, arrays keep their flat
+  point axis (no leading device axis to reshape around), padding is
+  implemented once (``pad_tail``: repeat the last point up to a
+  device-divisible count, slice the outputs back), and the kernels'
+  carry buffers alias in place inside the scan (see ``shard_kernel``
+  on donation).  Per-point results are bitwise independent of the shard
+  count: every lane computes the same per-point program from the same
+  fold_in key, and no cross-point collective exists anywhere in the
+  kernels.
+- **Trace-time kernel helpers** (``exp_gaps`` / ``exp_offsets`` /
+  ``fifo_append`` / ``fifo_pop_shift`` / ``accept_window`` /
+  ``push_poisson_window`` / ``scatter_hist``): the constructive
+  Poisson-process draw (arrival epochs are partial sums of Exp(1)/λ
+  gaps — exact, branch-free, no Poisson sampler), the contiguous
+  tail-append / prefix-pop buffer ops every kernel's FIFO waiting room
+  is built from (contiguous ``dynamic_slice``/``dynamic_update_slice``
+  lower to vectorized copies on every XLA backend; element-wise
+  scatters with computed indices are ~an order of magnitude slower
+  under vmap on CPU), and the thinned superstep histogram scatter.
+- **Adaptive capacity sizing** (``queue_capacity`` /
+  ``window_capacity``): ``q_cap``/``a_cap`` are compile-time *shape*
+  parameters; the kernels used to default them to a global worst case
+  (e.g. ``q_cap=1024`` for every request-level sweep).  These helpers
+  size them from the grid actually being dispatched — occupancy scale
+  ``m = λτ₀/(1−u)`` (u = effective utilization, finite-b_max aware)
+  plus a fluctuation term ``∝ √(m/(1−u²))`` from the AR(1)-like
+  batch-size recursion — so light grids stop paying worst-case buffer
+  passes.  Overflow is still detected, never silent: the kernels count
+  every clamped arrival in ``dropped`` and a correct run has
+  ``dropped == 0`` (asserted by the tests).
+- **Bounded kernel caches** (``kernel_cache``): an LRU for the
+  compile-time-specialized kernel builders.  Long grid campaigns walk
+  many truncation/capacity shapes; an unbounded cache accumulates one
+  compiled XLA program per shape forever.  Eviction calls the wrapped
+  function's ``clear_cache()`` (every ``jax.jit`` wrapper has one), so
+  the compiled executables are actually released, not just the Python
+  wrapper.
+
+JAX is imported lazily inside functions: building grids and calling
+``enable_host_devices`` must not initialize the JAX backend (the
+``XLA_FLAGS`` device-count override only takes effect before first
+backend use), and ``repro.core.grid`` stays importable without JAX.
+
+Why sharding preserves the simulation's correctness argument: each
+kernel's per-point program is a deterministic function of (params[i],
+fold_in(seed, key_offset + i)) — the regenerative batch-by-batch /
+event-by-event law argued exact in docs/theory.md.  ``shard_map`` only
+partitions the *point axis*; it changes which device evaluates a lane,
+never what the lane computes.  See docs/theory.md §"Superstep engine".
+"""
+from __future__ import annotations
+
+import os
+from collections import OrderedDict
+from typing import Any, Callable, Dict, Optional, Sequence, Union
+
+import numpy as np
+
+__all__ = ["enable_host_devices", "point_keys", "resolve_shards",
+           "shard_kernel", "pad_tail", "dispatch", "exp_gaps",
+           "exp_offsets", "fifo_append", "fifo_pop_shift",
+           "accept_window", "push_poisson_window", "scatter_hist",
+           "queue_capacity", "window_capacity", "kernel_cache"]
+
+ShardSpec = Union[None, bool, int]
+
+
+def enable_host_devices(n: Optional[int] = None) -> None:
+    """Expose CPU cores as separate XLA host devices so the sweep
+    kernels can shard a grid across them.  Must run before the first
+    JAX backend initialization (call it at script/module import time);
+    a no-op if the flag is already set or only one core exists."""
+    if "xla_force_host_platform_device_count" in \
+            os.environ.get("XLA_FLAGS", ""):
+        return
+    n = n or os.cpu_count() or 1
+    if n > 1:
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "")
+            + f" --xla_force_host_platform_device_count={n}").strip()
+
+
+# ---------------------------------------------------------------------------
+# per-point PRNG keys
+# ---------------------------------------------------------------------------
+
+def point_keys(seed: int, offset: int, n: int):
+    """Per-point PRNG keys via ``fold_in(PRNGKey(seed), point_index)``.
+
+    Unlike ``random.split(key, n)`` — whose i-th key depends on n — a
+    point's key depends only on its global index, so a grid dispatched
+    in one vmap batch, sharded over devices, or split into several
+    dispatches (``Grid.take`` + ``key_offset``) produces
+    bitwise-identical per-point results."""
+    import jax
+    import jax.numpy as jnp
+    from jax import random
+
+    base = random.PRNGKey(seed)
+    return jax.vmap(lambda i: random.fold_in(base, i))(
+        jnp.arange(offset, offset + n))
+
+
+# ---------------------------------------------------------------------------
+# sharded dispatch (the shard_map layer that replaced jax.pmap)
+# ---------------------------------------------------------------------------
+
+def resolve_shards(shard: ShardSpec, n_points: int) -> int:
+    """Number of mesh shards for a dispatch.
+
+    ``None``/``True`` → every visible device; ``False`` → 1; an int →
+    that many shards (clamped to the visible device count — per-point
+    results are shard-count invariant, so clamping is harmless).
+    Always clamped to the point count."""
+    import jax
+
+    if shard is False:
+        return 1
+    avail = len(jax.devices())
+    if shard is None or shard is True:
+        n_dev = avail
+    else:
+        n_dev = int(shard)
+        if n_dev < 1:
+            raise ValueError(f"shard must be >= 1 (got {shard})")
+    return max(1, min(n_dev, avail, n_points))
+
+
+def shard_kernel(vm: Callable, n_dev: int, *,
+                 donate: Sequence[int] = ()) -> Callable:
+    """Wrap a vmapped per-point kernel ``vm(params, keys)`` for
+    ``n_dev``-way sharded dispatch.
+
+    ``n_dev == 1`` is a plain ``jax.jit``; otherwise the kernel runs
+    under ``shard_map`` over a 1-D device mesh, each device vmapping
+    its slice of the point axis — still one jit-compiled program, no
+    leading device axis.
+
+    On buffer donation: the kernels' large buffers are all *scan
+    carries* (FIFO rings, histograms, accumulators), which XLA's
+    while-loop lowering already aliases in place — nothing to donate
+    there.  The dispatch *inputs* (params, keys) are tiny and alias no
+    output shape/dtype, so donating them only triggers XLA's "donated
+    buffers were not usable" warning; ``donate`` therefore defaults to
+    empty and exists for callers whose kernels do return an
+    input-shaped buffer."""
+    import jax
+
+    if n_dev <= 1:
+        return jax.jit(vm, donate_argnums=tuple(donate))
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import Mesh, PartitionSpec
+
+    mesh = Mesh(np.array(jax.devices()[:n_dev]), ("points",))
+    spec = PartitionSpec("points")
+    return jax.jit(shard_map(vm, mesh=mesh, in_specs=(spec, spec),
+                             out_specs=spec),
+                   donate_argnums=tuple(donate))
+
+
+def pad_tail(a, pad: int):
+    """Pad an array's point axis by repeating its last entry ``pad``
+    times — THE grid-padding rule for point counts not divisible by the
+    shard count.  Per-point fold_in keys make the duplicate lanes
+    compute the (discarded) last point again rather than perturbing
+    anything; ``dispatch`` slices the outputs back to the true count.
+    One implementation, shared by every kernel (it used to be
+    duplicated, and separately tested, per kernel)."""
+    if pad <= 0:
+        return a
+    import jax.numpy as jnp
+    return jnp.concatenate([a, jnp.repeat(a[-1:], pad, axis=0)])
+
+
+def dispatch(kernel: Callable, params: Dict[str, Any], keys, n: int,
+             n_dev: int) -> Dict[str, np.ndarray]:
+    """Run one sharded kernel dispatch over ``n`` points.
+
+    Pads every input's point axis to an ``n_dev``-divisible count
+    (``pad_tail``), runs the (possibly shard_map-wrapped) kernel, and
+    returns host numpy outputs sliced back to ``n`` points."""
+    import jax
+
+    pad = (-n) % n_dev
+    if pad:
+        params = {k: pad_tail(v, pad) for k, v in params.items()}
+        keys = pad_tail(keys, pad)
+    out = jax.device_get(kernel(params, keys))
+    if pad:
+        out = {k: v[:n] for k, v in out.items()}
+    return out
+
+
+# ---------------------------------------------------------------------------
+# trace-time kernel building blocks (call inside a jit kernel)
+# ---------------------------------------------------------------------------
+
+def exp_gaps(key, n: int, rate):
+    """n i.i.d. Exp(rate) inter-arrival gaps (one vectorized draw)."""
+    from jax import random
+    return random.exponential(key, (n,)) / rate
+
+
+def exp_offsets(key, n: int, rate):
+    """Constructive Poisson-process epochs: partial sums of n Exp(1)
+    gaps, scaled by 1/rate.  Exact — the count inside a window of
+    length w is exactly Poisson(rate·w) — and branch-free."""
+    import jax.numpy as jnp
+    from jax import random
+    return jnp.cumsum(random.exponential(key, (n,))) / rate
+
+
+def fifo_append(buf, pos, block):
+    """Contiguous FIFO tail-append: write ``block`` at ``buf[pos:]``.
+
+    The whole fixed-size block is written unconditionally; entries past
+    the accepted count land in the free region, where they stay garbage
+    until a later append overwrites them — the shared buffer invariant
+    of every kernel ("live slots are exactly the tracked range")."""
+    from jax import lax
+    return lax.dynamic_update_slice(buf, block, (pos,))
+
+
+def fifo_pop_shift(buf, k, max_shift: int):
+    """Drop the ``k`` oldest entries of a linear-compacted FIFO buffer
+    by shifting the remainder down (``k <= max_shift`` statically).
+    Contiguous ``dynamic_slice`` — a vectorized copy, not a scatter."""
+    import jax.numpy as jnp
+    from jax import lax
+    n = buf.shape[0]
+    return lax.dynamic_slice(
+        jnp.concatenate([buf, jnp.zeros((max_shift,), buf.dtype)]),
+        (k,), (n,))
+
+
+def accept_window(count, q, q_cap: int):
+    """Clamp a window's arrival count by queue capacity: returns
+    ``(accepted, overflow)`` — overflow feeds the ``dropped`` counter
+    (a correct run has ``dropped == 0``)."""
+    import jax.numpy as jnp
+    a = jnp.minimum(count, q_cap - q)
+    return a, count - a
+
+
+def push_poisson_window(buf, q, dropped, key, rate, t0, win, *,
+                        a_cap: int, q_cap: int):
+    """Append the Poisson-process arrivals of a window of length
+    ``win`` starting at ``t0`` to a linear-compacted FIFO buffer,
+    FIFO-ordered.  Uses the constructive definition (``exp_offsets``)
+    so it is exact and needs no Poisson sampler; ``dropped`` counts
+    both arrivals beyond ``a_cap`` per window (detected via the
+    sentinel (a_cap+1)-th gap) and arrivals clamped by queue
+    capacity."""
+    import jax.numpy as jnp
+
+    i32, f32 = jnp.int32, jnp.float32
+    offs = exp_offsets(key, a_cap + 1, rate)
+    count = jnp.sum(offs[:-1] <= win).astype(i32)
+    dropped = dropped + (offs[-1] <= win).astype(i32)
+    a, over = accept_window(count, q, q_cap)
+    dropped = dropped + over
+    buf = fifo_append(buf, q, (t0 + offs[:-1]).astype(f32))
+    return buf, q + a, dropped
+
+
+def scatter_hist(hist, bins, inc, hist_rows=None):
+    """One flattened scatter-add of a superstep block's histogram rows
+    (optionally thinned to the fixed ``hist_rows`` subsample).  The
+    per-call cost of a scatter under vmap dwarfs its per-element cost
+    on CPU, so the superstep kernels batch a whole block per call."""
+    import jax.numpy as jnp
+    if hist_rows is not None and len(hist_rows) < bins.shape[0]:
+        bins, inc = bins[hist_rows], inc[hist_rows]
+    return hist.at[bins.reshape(-1)].add(
+        inc.reshape(-1).astype(jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# adaptive capacity sizing
+# ---------------------------------------------------------------------------
+
+def _pow2ceil(x: float) -> int:
+    return 1 << max(0, int(np.ceil(np.log2(max(1.0, float(x))))))
+
+
+def _occupancy_scale(lam, alpha, tau0, b_max, wait_max=0.0):
+    """Per-point (mean, sd) scale of the waiting-room occupancy.
+
+    Effective utilization is finite-b_max aware: a capped server
+    saturates at λ·(α + τ0/b_max) → 1, not λα → 1.  The mean occupancy
+    scale is the batch fixed-cost window's worth of arrivals inflated
+    by 1/(1−u) (the paper's E[B] ≈ λτ₀/(1−ρ) law, Remark 5), plus the
+    timeout policy's deliberate accumulation λ·wait_max.  The sd comes
+    from the AR(1)-like batch recursion B' ~ Poisson(λ·τ(B)), whose
+    stationary variance is the per-window variance inflated by
+    1/(1−u²)."""
+    lam = np.asarray(lam, dtype=np.float64)
+    cap = np.where(np.asarray(b_max) > 0, np.asarray(b_max), np.inf)
+    u = np.clip(lam * (np.asarray(alpha) + np.asarray(tau0) / cap),
+                0.0, 0.98)
+    m = lam * np.asarray(tau0) / (1.0 - u) + lam * np.asarray(wait_max)
+    sd = np.sqrt(np.maximum(m, 1.0) / np.maximum(1.0 - u * u, 0.04))
+    return m, sd
+
+
+def queue_capacity(lam, alpha, tau0, b_max, wait_max=0.0, *,
+                   floor: int = 64, ceil: int = 8192) -> int:
+    """Adaptive ``q_cap`` for a request-level grid: sized from the
+    dispatched grid's own maximum load instead of a global worst case.
+
+    Power-of-two bucketed (bounds recompiles across campaigns), with a
+    ~10σ fluctuation margin over the occupancy scale so multi-thousand
+    -step runs keep ``dropped == 0`` (overflow is still counted, never
+    silent — the kernels report it and the tests assert on it)."""
+    m, sd = _occupancy_scale(lam, alpha, tau0, b_max, wait_max)
+    need = float(np.max(m + 10.0 * sd)) + 32.0
+    b_top = float(np.max(np.where(np.asarray(b_max) > 0, b_max, 0)))
+    return int(min(ceil, max(floor, _pow2ceil(max(need, 2.0 * b_top)))))
+
+
+def window_capacity(lam, window, *, slack: float = 8.0, floor: int = 16,
+                    bucket: int = 16, ceil: int = 4096) -> int:
+    """Adaptive ``a_cap``: arrivals that must be visible inside one
+    indivisible kernel window (one service period, one decode-step +
+    batched-prefill run, …).  Poisson mean + ``slack``·√mean tail
+    margin, bucketed to multiples of ``bucket`` to bound recompiles."""
+    mu = float(np.max(np.asarray(lam, dtype=np.float64)
+                      * np.asarray(window, dtype=np.float64)))
+    need = mu + slack * np.sqrt(mu + 1.0) + slack
+    return int(min(ceil, max(floor, -(-int(np.ceil(need)) // bucket)
+                             * bucket)))
+
+
+# ---------------------------------------------------------------------------
+# bounded kernel caches
+# ---------------------------------------------------------------------------
+
+class _KernelCache:
+    """LRU over a kernel-builder function, keyed by the builder's
+    (hashable) compile-time arguments.
+
+    Eviction calls ``clear_cache()`` on the evicted value when present
+    — every ``jax.jit`` wrapper has one — so the compiled XLA programs
+    a long grid campaign walks through are released instead of
+    accumulating for the life of the process."""
+
+    def __init__(self, fn: Callable, maxsize: int):
+        self.fn = fn
+        self.maxsize = int(maxsize)
+        self.builds = 0
+        self.evictions = 0
+        self._cache: "OrderedDict" = OrderedDict()
+        self.__name__ = getattr(fn, "__name__", "kernel")
+        self.__doc__ = fn.__doc__
+
+    def __call__(self, *key):
+        hit = self._cache.get(key)
+        if hit is not None:
+            self._cache.move_to_end(key)
+            return hit
+        val = self.fn(*key)
+        self.builds += 1
+        self._cache[key] = val
+        while len(self._cache) > self.maxsize:
+            _, old = self._cache.popitem(last=False)
+            self.evictions += 1
+            self._release(old)
+        return val
+
+    @staticmethod
+    def _release(val) -> None:
+        clear = getattr(val, "clear_cache", None)
+        if callable(clear):
+            clear()
+
+    def cache_len(self) -> int:
+        return len(self._cache)
+
+    def cache_keys(self):
+        return list(self._cache.keys())
+
+    def cache_clear(self) -> None:
+        for val in self._cache.values():
+            self._release(val)
+        self._cache.clear()
+
+
+def kernel_cache(maxsize: int) -> Callable[[Callable], _KernelCache]:
+    """Decorator: bound a kernel builder with an evicting LRU (see
+    ``_KernelCache``).  Drop-in for ``functools.lru_cache`` at the
+    builder call sites, plus ``builds``/``evictions``/``cache_len()``
+    introspection the cache-eviction regression tests use."""
+    def deco(fn: Callable) -> _KernelCache:
+        return _KernelCache(fn, maxsize)
+    return deco

@@ -36,7 +36,13 @@ Markov-chain, and vectorized-sweep answers are interchangeable:
 
 Backend-specific keyword arguments pass through (``n_jobs``/``seed``
 for ``sim``, ``n_batches``/``q_cap``/… for ``sweep``, ``n_steps``/… for
-``fleet`` and ``gen``, ``truncation`` for ``markov``).
+``fleet`` and ``gen``, ``truncation`` for ``markov``).  The three JAX
+kernels all sit on the shared superstep engine (``repro.core.engine``):
+they default to adaptive ``q_cap``/``a_cap`` sizing and to sharding the
+grid over every visible device via ``shard_map`` — pass ``shard`` to
+pin the mesh width (``False``/1 → single device).  Per-point results
+are bitwise shard-count invariant, so ``evaluate`` answers do not
+depend on the machine's device topology.
 """
 from __future__ import annotations
 

@@ -69,7 +69,6 @@ even after the run shrinks to a single decode step) clamp and count in
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import numpy as np
@@ -78,12 +77,13 @@ import jax
 import jax.numpy as jnp
 from jax import lax, random
 
+from repro.core import engine
+from repro.core.engine import ShardSpec
 from repro.core.grid import (  # noqa: F401  (re-exported for callers)
     DISC_CODE, DISC_NAME, GenGrid, GenResult)
 from repro.core.hist import (bit_bins, hist_edges,
                              hist_percentiles as _hist_percentiles,
                              thinned_rows)
-from repro.core.sweep import _point_keys
 
 __all__ = ["DISC_CODE", "DISC_NAME", "GenGrid", "GenResult", "gen_sweep"]
 
@@ -94,7 +94,7 @@ _REBASE_EVERY = 16          # scan steps per clock rebase + hist scatter
 _STEP_BUCKET = 2048         # n_steps rounds up to this (bounds recompiles)
 
 
-@functools.lru_cache(maxsize=16)
+@engine.kernel_cache(maxsize=16)
 def _build_gen_kernel(n_steps: int, warmup: int, s_cap: int, q_cap: int,
                       a_cap: int, n_bins: int, hist_every: int,
                       n_dev: int):
@@ -111,10 +111,17 @@ def _build_gen_kernel(n_steps: int, warmup: int, s_cap: int, q_cap: int,
     INF = jnp.float32(3.0e38)
     BIG = jnp.int32(2 ** 24)
     DISC_CONT = DISC_CODE["continuous"]
-    # the tail pointer can advance by every accepted arrival plus one
-    # idle consume per step between compactions; appends write a whole
-    # (a_cap + 1) block past the tail
-    buf_len = q_cap + (a_cap + 2) * _REBASE_EVERY + a_cap + 1
+    # tail headroom past the q_cap waiting room between compactions,
+    # the tighter of two bounds on (tail − q): (a) per-step appends —
+    # every accepted arrival plus one idle consume per step,
+    # ≤ (a_cap + 2)·R; (b) conservation — tail = waiting + popped,
+    # waiting is clamped at q_cap (the leading term) and pops are
+    # ≤ s_cap joiners (+1) per step, so ≤ (s_cap + 1)·R.  Appends write
+    # a whole (a_cap + 1) block past the tail.  The buffer rides in the
+    # scan carry, whose copy is a first-order per-step cost on CPU —
+    # the tighter bound is a direct kernel speedup.
+    buf_len = q_cap + min((a_cap + 2) * _REBASE_EVERY,
+                          (s_cap + 1) * _REBASE_EVERY) + a_cap + 1
     REBASE_EVERY = _REBASE_EVERY
 
     def run_point(p, key):
@@ -270,16 +277,12 @@ def _build_gen_kernel(n_steps: int, warmup: int, s_cap: int, q_cap: int,
                 (i_base + jnp.arange(REBASE_EVERY), arr_gaps))
             if hist_every > 1:
                 lats, inc = lats[hist_rows], inc[hist_rows]
-            bins = bit_bins(lats, n_bins)
-            hist = hist.at[bins.reshape(-1)].add(
-                inc.reshape(-1).astype(i32))
+            hist = engine.scatter_hist(hist, bit_bins(lats, n_bins), inc)
             # rebase the clock to the superstep end and re-compact the
             # tail buffer to head = 0: the only whole-buffer passes in
             # the kernel, paid once per REBASE_EVERY steps
             (head, tail, buf, rem, arr_s, now, next_arr, *accs) = state
-            buf = lax.dynamic_slice(
-                jnp.concatenate([buf, jnp.zeros((buf_len,), f32)]),
-                (head,), (buf_len,)) - now
+            buf = engine.fifo_pop_shift(buf, head, buf_len) - now
             arr_s = jnp.where(rem > 0, arr_s - now, 0.0)
             return (jnp.zeros((), i32), tail - head, buf, rem, arr_s,
                     jnp.zeros((), f32), next_arr - now,
@@ -320,17 +323,14 @@ def _build_gen_kernel(n_steps: int, warmup: int, s_cap: int, q_cap: int,
             "hist": hist,
         }
 
-    vm = jax.vmap(run_point)
-    if n_dev > 1:
-        return jax.pmap(vm)
-    return jax.jit(vm)
+    return engine.shard_kernel(jax.vmap(run_point), n_dev)
 
 
 def gen_sweep(grid: GenGrid, *, n_steps: int = 4096,
-              warmup: Optional[int] = None, q_cap: int = 256,
-              a_cap: int = 64, n_bins: int = 512, seed: int = 0,
-              key_offset: int = 0, hist_every: int = 1,
-              shard: Optional[bool] = None) -> GenResult:
+              warmup: Optional[int] = None, q_cap: Optional[int] = None,
+              a_cap: Optional[int] = None, n_bins: int = 512,
+              seed: int = 0, key_offset: int = 0, hist_every: int = 1,
+              shard: ShardSpec = None) -> GenResult:
     """Simulate every grid point for ``n_steps`` scheduler decisions in
     one jit+vmap device dispatch.
 
@@ -342,13 +342,23 @@ def gen_sweep(grid: GenGrid, *, n_steps: int = 4096,
     one compiled kernel.  ``q_cap`` bounds the waiting buffer and
     ``a_cap`` the arrival chain visible per step; exceeding either
     clamps and counts in ``dropped`` (a correct run has
-    ``dropped == 0``).  Per-point PRNG keys come from
+    ``dropped == 0``).  The defaults (``None``) size both adaptively
+    from the dispatched grid: ``q_cap`` from the static-equivalent
+    request-level law (``GenGrid.equivalent_alpha``/``equivalent_tau0``
+    through ``engine.queue_capacity``), ``a_cap`` from the densest
+    indivisible window — a full-batch batched prefill plus one decode
+    step at the grid's highest λ (``engine.window_capacity``).
+    Per-point PRNG keys come from
     ``fold_in(PRNGKey(seed), key_offset + i)``, so a grid sharded into
     several dispatches (``GenGrid.take`` + ``key_offset``) is
-    bitwise-identical to the one-dispatch run.  ``shard`` splits the
-    grid across local devices via pmap (same contract as
-    ``fleet_sweep``); default: shard whenever more than one device is
-    visible.
+    bitwise-identical to the one-dispatch run — provided the dispatches
+    share compiled shapes, i.e. pin ``q_cap``/``a_cap`` explicitly when
+    splitting (the adaptive defaults are sized per dispatched grid).
+    ``shard`` picks the
+    device-mesh width for the shard_map dispatch (same contract as
+    ``fleet_sweep``: ``None`` → all visible devices, ``False``/1 →
+    single device, an int → that many shards); per-point results are
+    shard-count invariant.
     """
     if not isinstance(grid, GenGrid):
         raise TypeError("gen_sweep needs a GenGrid "
@@ -361,13 +371,25 @@ def gen_sweep(grid: GenGrid, *, n_steps: int = 4096,
     if not 0 <= warmup < n_steps:
         raise ValueError(f"warmup {warmup} must lie in [0, {n_steps})")
     s_cap = int(grid.max_active.max())
+    if q_cap is None:
+        q_cap = engine.queue_capacity(
+            grid.lam, grid.equivalent_alpha, grid.equivalent_tau0,
+            grid.max_active)
+    if a_cap is None:
+        # the densest indivisible window: the batched prefill of a full
+        # batch plus the decode step it precedes
+        window = (grid.alpha_prefill * grid.prompt_len * grid.max_active
+                  + grid.tau0_prefill
+                  + grid.alpha_decode * grid.max_active
+                  + grid.tau0_decode)
+        a_cap = engine.window_capacity(grid.lam, window)
     if s_cap > q_cap:
         raise ValueError("max_active exceeds q_cap; raise q_cap")
     if not set(np.unique(grid.discipline)) <= set(DISC_CODE.values()):
         raise ValueError(f"unknown discipline code in grid "
                          f"(valid: {DISC_CODE})")
-    n_dev = len(jax.local_devices()) if shard is not False else 1
-    n_dev = max(1, min(n_dev, len(grid)))
+    n = len(grid)
+    n_dev = engine.resolve_shards(shard, n)
     kernel = _build_gen_kernel(int(n_steps), int(warmup), s_cap,
                                int(q_cap), int(a_cap), int(n_bins),
                                int(hist_every), n_dev)
@@ -383,27 +405,8 @@ def gen_sweep(grid: GenGrid, *, n_steps: int = 4096,
         "max_active": jnp.asarray(grid.max_active),
         "discipline": jnp.asarray(grid.discipline),
     }
-    keys = _point_keys(seed, key_offset, len(grid))
-
-    n = len(grid)
-    if n_dev > 1:
-        # pad (repeating the last point) to a device-divisible count;
-        # per-point keys make the padding harmless
-        per = -(-n // n_dev)
-        pad = per * n_dev - n
-
-        def shard_arr(a):
-            if pad:
-                a = jnp.concatenate([a, jnp.repeat(a[-1:], pad, axis=0)])
-            return a.reshape((n_dev, per) + a.shape[1:])
-
-        out = jax.device_get(kernel(
-            {kk: shard_arr(v) for kk, v in params.items()},
-            shard_arr(keys)))
-        out = {kk: np.asarray(v).reshape((n_dev * per,) + v.shape[2:])[:n]
-               for kk, v in out.items()}
-    else:
-        out = jax.device_get(kernel(params, keys))
+    keys = engine.point_keys(seed, key_offset, n)
+    out = engine.dispatch(kernel, params, keys, n, n_dev)
 
     p50, p95, p99 = _hist_percentiles(out["hist"], (50, 95, 99))
     return GenResult(

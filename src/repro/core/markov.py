@@ -57,7 +57,10 @@ solves entirely.  ``solve_grid`` takes a ``MarkovGrid`` of
 structured solver — on the JAX path as one jitted float64 dispatch per
 chunk (``repro.core.chain_solver.grid_solve``), which is what makes
 dense λ × b_max exact surfaces affordable (see
-``examples/exact_surface.py``).
+``examples/exact_surface.py``).  The per-truncation-shape jit kernels
+behind that path sit in an evicting LRU (``engine.kernel_cache`` in
+``chain_solver``), so a long campaign walking many (K, V, D) shapes
+releases stale compiled programs instead of accumulating them.
 """
 from __future__ import annotations
 

@@ -45,7 +45,6 @@ Policies (the three in ``repro.core.policy``) are encoded per point by
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import numpy as np
@@ -54,6 +53,8 @@ import jax
 import jax.numpy as jnp
 from jax import lax, random
 
+from repro.core import engine
+from repro.core.engine import ShardSpec
 from repro.core.grid import (  # noqa: F401  (re-exported for back-compat)
     DIST_CODE, DIST_NAME, ROUTE_CODE, ROUTE_NAME, FleetGrid, FleetResult,
     SweepGrid, SweepResult)
@@ -65,25 +66,24 @@ __all__ = ["DIST_CODE", "DIST_NAME", "ROUTE_CODE", "ROUTE_NAME",
            "SweepGrid", "SweepResult", "FleetGrid", "FleetResult",
            "sweep", "fleet_sweep", "hist_edges"]
 
-
-def _point_keys(seed: int, offset: int, n: int) -> jax.Array:
-    """Per-point PRNG keys via ``fold_in(PRNGKey(seed), point_index)``.
-
-    Unlike ``random.split(key, n)`` — whose i-th key depends on n — a
-    point's key depends only on its global index, so a grid dispatched in
-    one vmap batch or sharded into several (``SweepGrid.take`` +
-    ``key_offset``) produces bitwise-identical per-point results."""
-    base = random.PRNGKey(seed)
-    return jax.vmap(lambda i: random.fold_in(base, i))(
-        jnp.arange(offset, offset + n))
+# per-point fold_in keys live in the shared engine layer now; the alias
+# keeps older import sites working
+_point_keys = engine.point_keys
 
 # ---------------------------------------------------------------------------
 # the kernel
 # ---------------------------------------------------------------------------
 
-@functools.lru_cache(maxsize=32)
+# scan steps per superstep: the histogram scatter (single-server and
+# fleet kernels) and the fleet kernel's full-buffer clock rebase are
+# amortized to one pass per _REBASE_EVERY steps
+_REBASE_EVERY = 32
+
+
+@engine.kernel_cache(maxsize=32)
 def _build_kernel(n_batches: int, warmup: int, q_cap: int, a_cap: int,
-                  n_bins: int, has_timeout: bool, all_det: bool):
+                  n_bins: int, has_timeout: bool, all_det: bool,
+                  n_dev: int):
     """Compile-time specialization of the per-point scan kernel.
 
     The waiting room is a *linear compacted* buffer: waiting jobs always
@@ -104,25 +104,13 @@ def _build_kernel(n_batches: int, warmup: int, q_cap: int, a_cap: int,
     slots = jnp.arange(q_cap)
 
     def push_arrivals(buf, q, dropped, k_u, rate, t0, win):
-        """Append the Poisson-process arrivals of a window of length
-        ``win`` starting at ``t0``, FIFO-ordered.  Uses the constructive
-        definition — arrival epochs are partial sums of Exp(1)/λ gaps;
-        the count is how many land inside the window — so it is exact,
-        needs no Poisson sampler, and is branch-free (one vectorized
-        exponential draw + cumsum per window).  ``dropped`` counts both
-        arrivals beyond ``a_cap`` per window (detected via the sentinel
-        (a_cap+1)-th gap) and arrivals clamped by queue capacity."""
-        gaps = random.exponential(k_u, (a_cap + 1,))
-        offs = jnp.cumsum(gaps) / rate
-        count = jnp.sum(offs[:-1] <= win).astype(i32)
-        dropped = dropped + (offs[-1] <= win).astype(i32)
-        a = jnp.minimum(count, q_cap - q)
-        dropped = dropped + (count - a)
-        times = (t0 + offs[:-1]).astype(f32)
-        # whole a_cap block is written; entries beyond `a` are garbage in
-        # the free region (see invariant above)
-        buf = lax.dynamic_update_slice(buf, times, (q,))
-        return buf, q + a, dropped
+        """Constructive Poisson window push — the shared engine helper
+        (exp-gap/cumsum epochs, sentinel coverage detection, capacity
+        clamp, contiguous tail-append; see ``engine.push_poisson_window``
+        for the exactness argument)."""
+        return engine.push_poisson_window(buf, q, dropped, k_u, rate,
+                                          t0, win, a_cap=a_cap,
+                                          q_cap=q_cap)
 
     def run_point(p, key):
         lam, alpha, tau0 = p["lam"], p["alpha"], p["tau0"]
@@ -137,7 +125,7 @@ def _build_kernel(n_batches: int, warmup: int, q_cap: int, a_cap: int,
             # not by total simulated time — n_batches can grow without
             # degrading per-job latency resolution.
             (q, buf, key, lat_sum, lat_n, sum_b, sum_b2, sum_bs,
-             n_meas, busy, span, q_max, dropped, hist) = state
+             n_meas, busy, span, q_max, dropped) = state
             ks = random.split(key, 5)
             key = ks[0]
 
@@ -176,9 +164,7 @@ def _build_kernel(n_batches: int, warmup: int, q_cap: int, a_cap: int,
             # ends at `depart`; shift the remainder down by b
             popmask = slots < b
             lats = jnp.where(popmask, depart - buf[:q_cap], 0.0)
-            buf = lax.dynamic_slice(
-                jnp.concatenate([buf, jnp.zeros((q_cap,), f32)]),
-                (b,), (buf_len,))
+            buf = engine.fifo_pop_shift(buf, b, q_cap)
             q = q - b
 
             # arrivals during the service period join the queue
@@ -200,11 +186,19 @@ def _build_kernel(n_batches: int, warmup: int, q_cap: int, a_cap: int,
             busy = busy + mf * s
             span = span + mf * depart     # wall-clock advanced this step
             q_max = jnp.maximum(q_max, q)
-            bins = bit_bins(lats, n_bins)
-            hist = hist.at[bins].add((popmask & meas).astype(i32))
 
+            # the histogram scatter — whose per-call cost under vmap
+            # dwarfs its per-element cost on CPU — is amortized to the
+            # superstep wrapper; bins ride out as scan outputs
             return (q, buf, key, lat_sum, lat_n, sum_b, sum_b2,
-                    sum_bs, n_meas, busy, span, q_max, dropped, hist), None
+                    sum_bs, n_meas, busy, span, q_max, dropped), \
+                (bit_bins(lats, n_bins), popmask & meas)
+
+        def superstep(carry, i_base):
+            state, hist = carry
+            state, (bins, inc) = lax.scan(
+                step, state, i_base + jnp.arange(_REBASE_EVERY))
+            return (state, engine.scatter_hist(hist, bins, inc)), None
 
         init = (jnp.zeros((), i32),
                 jnp.zeros((buf_len,), f32), key,
@@ -213,10 +207,12 @@ def _build_kernel(n_batches: int, warmup: int, q_cap: int, a_cap: int,
                 jnp.zeros((), f32),                       # sum_bs
                 jnp.zeros((), i32), jnp.zeros((), f32),   # n_meas, busy
                 jnp.zeros((), f32), jnp.zeros((), i32),   # span, q_max
-                jnp.zeros((), i32), jnp.zeros((n_bins,), i32))
-        (_, _, _, lat_sum, lat_n, sum_b, sum_b2, sum_bs, n_meas,
-         busy, span, _q_max, dropped, hist), _ = lax.scan(
-            step, init, jnp.arange(n_batches))
+                jnp.zeros((), i32))
+        ((_, _, _, lat_sum, lat_n, sum_b, sum_b2, sum_bs, n_meas,
+          busy, span, _q_max, dropped),
+         hist), _ = lax.scan(
+            superstep, (init, jnp.zeros((n_bins,), i32)),
+            jnp.arange(n_batches // _REBASE_EVERY) * _REBASE_EVERY)
 
         jobs = jnp.maximum(lat_n, 1).astype(jnp.float32)
         nb = jnp.maximum(n_meas, 1).astype(jnp.float32)
@@ -233,39 +229,69 @@ def _build_kernel(n_batches: int, warmup: int, q_cap: int, a_cap: int,
             "hist": hist,
         }
 
-    return jax.jit(jax.vmap(run_point))
+    return engine.shard_kernel(jax.vmap(run_point), n_dev)
 
 
 def sweep(grid: SweepGrid, *, n_batches: int = 3000,
-          warmup: Optional[int] = None, q_cap: int = 512,
+          warmup: Optional[int] = None, q_cap: Optional[int] = None,
           a_cap: Optional[int] = None, n_bins: int = 512,
-          seed: int = 0, key_offset: int = 0) -> SweepResult:
+          seed: int = 0, key_offset: int = 0,
+          shard: ShardSpec = None) -> SweepResult:
     """Simulate every grid point for ``n_batches`` service completions in
-    one jit+vmap device dispatch.
+    one jit-compiled device dispatch, sharded over the visible devices
+    by default.  ``n_batches`` rounds up to a multiple of the superstep
+    length (32): the per-job latency histogram is scattered once per
+    superstep block rather than once per step (the scatter's per-call
+    cost under vmap dwarfs its per-element cost on CPU).
 
     ``q_cap`` bounds the waiting-room and ``a_cap`` the per-service-period
     arrival draw; both are *shape* parameters (compile-time), so points
-    whose dynamics exceed them clamp and report via ``dropped``.  Size
-    them above λ·E[W] and λ·max service time respectively — for the
-    paper's grids the defaults are ample up to ρ ≈ 0.95.
+    whose dynamics exceed them clamp and report via ``dropped``.  The
+    default (``None``) sizes them adaptively from the dispatched grid's
+    own maximum load (``engine.queue_capacity``) instead of a global
+    worst case; pass explicit values to pin the compiled shape.
+    ``shard`` picks the device-mesh width (``None`` → all visible
+    devices — on CPU, set ``XLA_FLAGS=--xla_force_host_platform_``
+    ``device_count=<cores>`` before the first JAX call, e.g. via
+    ``engine.enable_host_devices``; ``False``/1 → single device; an int
+    → that many shards).  Per-point fold_in keys make per-point results
+    bitwise-invariant to the shard count.
     """
     if len(grid) == 0:
         raise ValueError("empty grid")
+    if warmup is not None and not 0 <= warmup < int(n_batches):
+        raise ValueError(f"warmup {warmup} must lie in [0, {n_batches})")
+    # the kernel scatters its histogram once per _REBASE_EVERY steps
+    n_batches = -(-int(n_batches) // _REBASE_EVERY) * _REBASE_EVERY
     if warmup is None:
         warmup = max(1, n_batches // 10)
-    if not 0 <= warmup < n_batches:
-        raise ValueError(f"warmup {warmup} must lie in [0, {n_batches})")
+    has_timeout = bool(np.any(grid.wait_max > 0.0))
+    all_det = bool(np.all(grid.dist == DIST_CODE["det"]))
+    if q_cap is None:
+        q_cap = engine.queue_capacity(grid.lam, grid.alpha, grid.tau0,
+                                      grid.b_max, grid.wait_max)
     if a_cap is None:
-        a_cap = q_cap
+        if all_det and not has_timeout and not np.any(grid.b_max == 0):
+            # deterministic service with a finite cap hard-bounds the
+            # service window at α·b_max + τ0, so the per-window arrival
+            # draw can be provably window-sized; random service or an
+            # unbounded batch has no such bound (a queue excursion can
+            # stretch the window toward τ(q_cap)), so those keep the
+            # conservative a_cap = q_cap coupling
+            window = grid.alpha * grid.b_max + grid.tau0
+            a_cap = min(int(q_cap),
+                        engine.window_capacity(grid.lam, window))
+        else:
+            a_cap = q_cap
     if a_cap > q_cap:
         raise ValueError("a_cap must be <= q_cap (ring-buffer invariant)")
     if np.any(grid.b_max > q_cap):
         raise ValueError("b_max exceeds q_cap; raise q_cap")
-
-    has_timeout = bool(np.any(grid.wait_max > 0.0))
-    all_det = bool(np.all(grid.dist == DIST_CODE["det"]))
+    n = len(grid)
+    n_dev = engine.resolve_shards(shard, n)
     kernel = _build_kernel(int(n_batches), int(warmup), int(q_cap),
-                           int(a_cap), int(n_bins), has_timeout, all_det)
+                           int(a_cap), int(n_bins), has_timeout, all_det,
+                           n_dev)
 
     params = {
         "lam": jnp.asarray(grid.lam), "alpha": jnp.asarray(grid.alpha),
@@ -274,8 +300,8 @@ def sweep(grid: SweepGrid, *, n_batches: int = 3000,
         "wait_max": jnp.asarray(grid.wait_max),
         "wait_target": jnp.asarray(grid.wait_target),
     }
-    keys = _point_keys(seed, key_offset, len(grid))
-    out = jax.device_get(kernel(params, keys))
+    keys = engine.point_keys(seed, key_offset, n)
+    out = engine.dispatch(kernel, params, keys, n, n_dev)
 
     p50, p95, p99 = _hist_percentiles(out["hist"], (50, 95, 99))
     return SweepResult(
@@ -299,10 +325,7 @@ def sweep(grid: SweepGrid, *, n_batches: int = 3000,
 # the fleet kernel: k replica queues + routing per grid point
 # ---------------------------------------------------------------------------
 
-_REBASE_EVERY = 32          # fleet events per full-buffer clock rebase
-
-
-@functools.lru_cache(maxsize=16)
+@engine.kernel_cache(maxsize=16)
 def _build_fleet_kernel(n_steps: int, warmup: int, k_max: int, q_cap: int,
                         a_cap: int, pop_cap: int, n_bins: int,
                         has_timeout: bool, all_det: bool, has_jsq: bool,
@@ -380,7 +403,7 @@ def _build_fleet_kernel(n_steps: int, warmup: int, k_max: int, q_cap: int,
             # data and vmap-sharding a grid cannot perturb a point
             ka, kb = random.split(karr)
             u_route = random.uniform(ka, (a_cap,))
-            gaps = random.exponential(kb, (a_cap,)) / lam
+            gaps = engine.exp_gaps(kb, a_cap, lam)
 
             # 1) route the arrivals that precede the earliest pending
             #    decision.  No departures happen inside the window, so
@@ -578,10 +601,7 @@ def _build_fleet_kernel(n_steps: int, warmup: int, k_max: int, q_cap: int,
                 step, state[:-1],
                 (i_base + jnp.arange(REBASE_EVERY),
                  random.split(k_sup, REBASE_EVERY)))
-            if hist_every > 1:
-                bins, inc = bins[hist_rows], inc[hist_rows]
-            hist = hist.at[bins.reshape(-1)].add(
-                inc.reshape(-1).astype(i32))
+            hist = engine.scatter_hist(hist, bins, inc, hist_rows)
             # rebase time to the last processed event (one buffer pass
             # per REBASE_EVERY events)
             (q, head, buf, in_service, committed, t_free, next_arr, rr,
@@ -633,20 +653,14 @@ def _build_fleet_kernel(n_steps: int, warmup: int, k_max: int, q_cap: int,
             "jobs_by_replica": jobs_rep,
         }
 
-    vm = jax.vmap(run_point)
-    if n_dev > 1:
-        # shard the grid over host devices (XLA_FLAGS=
-        # --xla_force_host_platform_device_count=N on CPU, or real
-        # accelerator devices): still one dispatch, one program
-        return jax.pmap(vm)
-    return jax.jit(vm)
+    return engine.shard_kernel(jax.vmap(run_point), n_dev)
 
 
 def fleet_sweep(grid: FleetGrid, *, n_steps: int = 6000,
-                warmup: Optional[int] = None, q_cap: int = 256,
+                warmup: Optional[int] = None, q_cap: Optional[int] = None,
                 a_cap: int = 32, n_bins: int = 512, seed: int = 0,
                 key_offset: int = 0, hist_every: int = 1,
-                shard: Optional[bool] = None) -> FleetResult:
+                shard: ShardSpec = None) -> FleetResult:
     """Simulate every fleet point for ``n_steps`` replica decisions in one
     jit+vmap device dispatch.
 
@@ -659,17 +673,19 @@ def fleet_sweep(grid: FleetGrid, *, n_steps: int = 6000,
     low-load and very-high-load points complete somewhat fewer batches.)
     ``q_cap`` bounds each replica's waiting room; overflowing it is the
     one true capacity loss, counted in ``dropped`` (a correct run has
-    ``dropped == 0``).  ``a_cap`` only tiles the arrival routing — a
-    denser window defers its event a step, exact but slower, so size
-    ``a_cap`` near the expected batch size.  ``hist_every = N > 1``
-    records a 1-in-N batch subsample in the latency histogram (the
-    scatter-add is the costliest op on CPU); means and counters always
-    use every job, only the percentile sample thins.  ``shard`` splits
-    the grid across local devices via pmap (on CPU, set
-    ``XLA_FLAGS=--xla_force_host_platform_device_count=<cores>`` before
-    the first JAX call); per-point keys are global, so sharding never
-    changes a point's result.  Default: shard whenever more than one
-    device is visible.
+    ``dropped == 0``); the default (``None``) sizes it adaptively from
+    the grid's per-replica load (``engine.queue_capacity`` at rate
+    λ/k).  ``a_cap`` only tiles the arrival routing — a denser window
+    defers its event a step, exact but slower, so size ``a_cap`` near
+    the expected batch size.  ``hist_every = N > 1`` records a 1-in-N
+    batch subsample in the latency histogram (the scatter-add is the
+    costliest op on CPU); means and counters always use every job, only
+    the percentile sample thins.  ``shard`` picks the device-mesh width
+    for the shard_map dispatch (``None`` → all visible devices — on
+    CPU, set ``XLA_FLAGS=--xla_force_host_platform_device_count=``
+    ``<cores>`` before the first JAX call; ``False``/1 → single device;
+    an int → that many shards); per-point keys are global, so sharding
+    never changes a point's result.
     """
     if not isinstance(grid, FleetGrid):
         raise TypeError("fleet_sweep needs a FleetGrid "
@@ -684,6 +700,13 @@ def fleet_sweep(grid: FleetGrid, *, n_steps: int = 6000,
         raise ValueError(f"warmup {warmup} must lie in [0, {n_steps})")
     if np.any(grid.k < 1):
         raise ValueError("k must be >= 1")
+    if q_cap is None:
+        # each replica sees ~λ/k of the stream under every modelled
+        # routing (JSQ only evens out transients), so size the
+        # per-replica ring from the per-replica load
+        q_cap = engine.queue_capacity(grid.lam / np.maximum(grid.k, 1),
+                                      grid.alpha, grid.tau0, grid.b_max,
+                                      grid.wait_max)
     if np.any(grid.b_max > q_cap):
         raise ValueError("b_max exceeds q_cap; raise q_cap")
     if not set(np.unique(grid.routing)) <= set(ROUTE_CODE.values()):
@@ -697,8 +720,8 @@ def fleet_sweep(grid: FleetGrid, *, n_steps: int = 6000,
     pop_cap = (int(q_cap) if np.any(grid.b_max == 0)
                else int(grid.b_max.max()))
     has_jsq = bool(np.any(grid.routing == ROUTE_CODE["jsq"]))
-    n_dev = len(jax.local_devices()) if shard is not False else 1
-    n_dev = max(1, min(n_dev, len(grid)))
+    n = len(grid)
+    n_dev = engine.resolve_shards(shard, n)
     kernel = _build_fleet_kernel(int(n_steps), int(warmup), k_max,
                                  int(q_cap), int(a_cap), pop_cap,
                                  int(n_bins), has_timeout, all_det,
@@ -712,27 +735,8 @@ def fleet_sweep(grid: FleetGrid, *, n_steps: int = 6000,
         "wait_target": jnp.asarray(grid.wait_target),
         "k": jnp.asarray(grid.k), "routing": jnp.asarray(grid.routing),
     }
-    keys = _point_keys(seed, key_offset, len(grid))
-
-    n = len(grid)
-    if n_dev > 1:
-        # pad (repeating the last point) to a device-divisible count and
-        # add the pmap axis; per-point keys make the padding harmless
-        per = -(-n // n_dev)
-        pad = per * n_dev - n
-
-        def shard_arr(a):
-            if pad:
-                a = jnp.concatenate([a, jnp.repeat(a[-1:], pad, axis=0)])
-            return a.reshape((n_dev, per) + a.shape[1:])
-
-        out = jax.device_get(kernel(
-            {kk: shard_arr(v) for kk, v in params.items()},
-            shard_arr(keys)))
-        out = {kk: np.asarray(v).reshape((n_dev * per,) + v.shape[2:])[:n]
-               for kk, v in out.items()}
-    else:
-        out = jax.device_get(kernel(params, keys))
+    keys = engine.point_keys(seed, key_offset, n)
+    out = engine.dispatch(kernel, params, keys, n, n_dev)
 
     p50, p95, p99 = _hist_percentiles(out["hist"], (50, 95, 99))
     return FleetResult(

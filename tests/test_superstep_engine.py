@@ -1,0 +1,245 @@
+"""Tests for the unified superstep engine (``repro.core.engine``).
+
+Three contracts:
+
+- **Shard invariance**: all three sweep kernels produce bitwise-
+  identical per-point results under 1, 2, and 4 forced host devices.
+  Runs in a subprocess with ``XLA_FLAGS=--xla_force_host_platform_``
+  ``device_count=4`` (the flag only takes effect before JAX backend
+  initialization, which the parent test process has long passed), and
+  parametrizes the mesh size via the kernels' ``shard`` argument.
+- **Shared grid padding**: point counts not divisible by the shard
+  count pad by repeating the last point and slice back — one
+  implementation (``engine.pad_tail``/``engine.dispatch``) for every
+  kernel, exercised directly and through the kernels (5 points over 4
+  shards in the subprocess).
+- **Bounded kernel caches**: the LRU actually evicts — size stays at
+  ``maxsize``, eviction releases the compiled programs
+  (``clear_cache``), and a re-requested evicted shape rebuilds.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.core import engine
+
+# ---------------------------------------------------------------------------
+# adaptive capacity sizing
+# ---------------------------------------------------------------------------
+
+
+class TestAdaptiveCaps:
+    def test_queue_capacity_monotone_in_load(self):
+        alpha, tau0 = 0.1438, 1.8874
+        caps = [engine.queue_capacity([rho / alpha], [alpha], [tau0],
+                                      [0], [0.0])
+                for rho in (0.1, 0.5, 0.9)]
+        assert caps == sorted(caps)
+        assert caps[0] >= 64                       # floor
+        assert caps[-1] <= 8192                    # ceiling
+        assert all(c & (c - 1) == 0 for c in caps)  # pow2 bucketed
+
+    def test_queue_capacity_covers_bmax(self):
+        c = engine.queue_capacity([0.01], [0.1], [1.0], [700], [0.0])
+        assert c >= 1400
+
+    def test_queue_capacity_light_grids_shrink(self):
+        """The point of adaptive sizing: a light grid stops paying the
+        old global worst case (1024)."""
+        alpha, tau0 = 0.1438, 1.8874
+        light = engine.queue_capacity(
+            [0.3 / alpha], [alpha], [tau0], [0], [0.0])
+        assert light < 1024
+
+    def test_window_capacity(self):
+        a = engine.window_capacity([0.145], [300.0])
+        assert a % 16 == 0 and a >= 0.145 * 300
+        assert engine.window_capacity([1e-9], [1.0], slack=0.0) == 16
+
+
+# ---------------------------------------------------------------------------
+# shared padding + dispatch
+# ---------------------------------------------------------------------------
+
+
+class TestPadding:
+    def test_pad_tail_repeats_last_point(self):
+        a = engine.pad_tail(np.arange(5.0), 3)
+        assert np.array_equal(np.asarray(a),
+                              [0.0, 1.0, 2.0, 3.0, 4.0, 4.0, 4.0, 4.0])
+        b = np.arange(6.0).reshape(3, 2)
+        padded = np.asarray(engine.pad_tail(b, 2))
+        assert padded.shape == (5, 2)
+        assert np.array_equal(padded[3], b[-1])
+        assert engine.pad_tail(a, 0) is a          # no-op passthrough
+
+    def test_dispatch_pads_and_slices_back(self):
+        """``dispatch`` pads every input's point axis to a shard-
+        divisible count and slices the outputs back — checked through a
+        trivial jitted kernel with a deliberately indivisible count."""
+        import jax
+        import jax.numpy as jnp
+
+        calls = {}
+
+        @jax.jit
+        def kernel(params, keys):
+            return {"x": params["a"] * 2.0,
+                    "k": keys[:, 0]}
+
+        def probe(params, keys):
+            calls["n"] = int(params["a"].shape[0])
+            return kernel(params, keys)
+
+        params = {"a": jnp.arange(5.0)}
+        keys = engine.point_keys(0, 0, 5)
+        out = engine.dispatch(probe, params, keys, 5, 4)
+        assert calls["n"] == 8                     # padded to 4-divisible
+        assert out["x"].shape == (5,)              # sliced back
+        assert np.array_equal(out["x"], 2.0 * np.arange(5.0))
+
+    def test_resolve_shards(self):
+        import jax
+        avail = len(jax.devices())
+        assert engine.resolve_shards(False, 100) == 1
+        assert engine.resolve_shards(None, 100) == avail
+        assert engine.resolve_shards(1, 100) == 1
+        # ints clamp to availability and point count (shard-invariant
+        # results make clamping harmless)
+        assert engine.resolve_shards(64, 100) == avail
+        assert engine.resolve_shards(None, 1) == 1
+        with pytest.raises(ValueError):
+            engine.resolve_shards(0, 4)
+
+
+# ---------------------------------------------------------------------------
+# bounded kernel caches
+# ---------------------------------------------------------------------------
+
+
+class _FakeKernel:
+    def __init__(self):
+        self.cleared = False
+
+    def clear_cache(self):
+        self.cleared = True
+
+
+class TestKernelCache:
+    def test_lru_evicts_and_releases(self):
+        """Regression: the cache must actually evict — bounded size,
+        FIFO-by-recency order, compiled programs released via
+        ``clear_cache`` — and rebuild evicted shapes on demand."""
+        built = []
+
+        @engine.kernel_cache(maxsize=2)
+        def build(shape):
+            k = _FakeKernel()
+            built.append((shape, k))
+            return k
+
+        k0, k1 = build(0), build(1)
+        assert build(0) is k0                      # hit, no rebuild
+        assert build.builds == 2
+        build(0)                                   # 0 most recent
+        k2 = build(2)                              # evicts 1, not 0
+        assert build.cache_len() == 2
+        assert build.evictions == 1
+        assert k1.cleared and not k0.cleared and not k2.cleared
+        assert build(0) is k0                      # survivor still cached
+        assert build(1) is not k1                  # evicted -> rebuilt
+        assert build.builds == 4
+        build.cache_clear()
+        assert build.cache_len() == 0 and k0.cleared
+
+    def test_kernel_builders_are_bounded(self):
+        """Every per-shape kernel builder (the three sweep kernels and
+        the chain solver's grid kernel) sits behind the evicting LRU."""
+        from repro.core import chain_solver, gen_sweep, sweep
+        for builder, bound in ((sweep._build_kernel, 32),
+                               (sweep._build_fleet_kernel, 16),
+                               (gen_sweep._build_gen_kernel, 16),
+                               (chain_solver._build_grid_kernel, 8)):
+            assert isinstance(builder, engine._KernelCache)
+            assert builder.maxsize == bound
+
+    def test_jitted_kernels_release_compiled_programs(self):
+        """End to end on a real jitted builder: eviction drops the
+        compiled-program count back (``clear_cache`` works on jit
+        wrappers)."""
+        import jax
+        import jax.numpy as jnp
+
+        @engine.kernel_cache(maxsize=1)
+        def build(n):
+            return jax.jit(lambda x: x * n)
+
+        f0 = build(2)
+        f0(jnp.ones(3))
+        assert f0._cache_size() == 1
+        build(3)                                   # evicts f0
+        assert f0._cache_size() == 0               # programs released
+
+
+# ---------------------------------------------------------------------------
+# shard invariance of the three kernels (subprocess: the forced host
+# device count must be set before JAX backend initialization)
+# ---------------------------------------------------------------------------
+
+_SHARD_SCRIPT = textwrap.dedent("""
+    import numpy as np
+    import jax
+
+    assert len(jax.devices()) == 4, jax.devices()
+
+    from repro.core.sweep import SweepGrid, FleetGrid, sweep, fleet_sweep
+    from repro.core.gen_sweep import GenGrid, gen_sweep
+
+    def check(name, runs):
+        ref = runs[0]
+        for r in runs[1:]:
+            for field in ("mean_latency", "mean_batch", "utilization",
+                          "n_jobs", "hist"):
+                a, b = getattr(ref, field), getattr(r, field)
+                assert np.array_equal(a, b), (name, field)
+        assert int(ref.dropped.sum()) == 0, name
+        print(name, "ok")
+
+    # 5 points: indivisible by 2 and 4, so the shared repeated-last-
+    # point padding is on the line for every sharded run
+    g = SweepGrid.from_rhos([0.2, 0.4, 0.6, 0.8, 0.9], 0.1438, 1.8874)
+    check("sweep", [sweep(g, n_batches=256, seed=7, shard=s)
+                    for s in (1, 2, 4, None)])
+
+    fg = FleetGrid.from_rhos([0.3, 0.7], 0.1438, 1.8874, ks=(1, 3),
+                             routings=("random", "jsq")).take(slice(0, 7))
+    assert len(fg) % 4 != 0 and len(fg) % 2 != 0
+    check("fleet", [fleet_sweep(fg, n_steps=256, seed=3, shard=s)
+                    for s in (1, 2, 4)])
+
+    gg = GenGrid.from_points(
+        [0.02] * 5, 0.14, 1.9, 0.035, 1.9, prompt_len=64,
+        gen_tokens=16, max_active=8,
+        discipline=["static", "continuous"] * 2 + ["static"])
+    check("gen", [gen_sweep(gg, n_steps=2048, seed=11, shard=s)
+                  for s in (1, 2, 4)])
+""")
+
+
+@pytest.mark.slow
+def test_kernels_shard_invariant_under_forced_devices():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(os.path.dirname(__file__), "..", "src")]
+        + env.get("PYTHONPATH", "").split(os.pathsep))
+    proc = subprocess.run([sys.executable, "-c", _SHARD_SCRIPT],
+                          env=env, capture_output=True, text=True,
+                          timeout=900)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert proc.stdout.split() == ["sweep", "ok", "fleet", "ok",
+                                   "gen", "ok"], proc.stdout
