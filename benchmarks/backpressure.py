@@ -1,0 +1,132 @@
+"""Beyond-paper: SLO-aware admission control under dynamic batching.
+
+One jit dispatch pushes the full backpressure grid — load (ρ up to 1.3,
+overload is the loss regimes' home turf) × waiting room q_max ×
+deadline × overflow mode ("429" reject-at-arrival / "503"
+drop-at-formation) × retry feedback — through the sweep kernel, then
+derives
+
+- the goodput-vs-latency frontier a waiting-room knob traces at fixed
+  overload (the operator's dial: smaller rooms shed more but serve
+  faster),
+- a cross-check of the kernel's reject fractions against the *exact*
+  finite-waiting-room chain (``markov.solve_loss``, banded solver) on
+  the q_max-only subset, and
+- the closed-loop cost of retries: re-offered traffic inflates the
+  effective arrival rate and erodes the goodput the room bought.
+
+All service times in ms (the paper's V100 ResNet-50 law).
+"""
+from __future__ import annotations
+
+from typing import List
+
+import numpy as np
+
+from benchmarks.common import Row, V100, enable_host_devices, timed
+
+enable_host_devices()          # before any JAX backend initialization
+
+B_MAX = 8
+RHOS = [0.7, 0.9, 1.1, 1.3]
+Q_MAXES = [4, 8, 16, 32]
+DEADLINES = [0.0, 6.0, 12.0]           # ms; 0 = no deadline
+OVERFLOWS = ("reject", "drop")
+RETRY_RATES = [0.0, 0.2]               # per-ms orbit re-offer rate
+
+
+def run(n_batches: int = 3000) -> List[Row]:
+    from repro.core.grid import OVERFLOW_CODE, SweepGrid
+    from repro.core.markov import solve_loss
+    from repro.core.sweep import sweep
+
+    rows: List[Row] = []
+    cap = B_MAX / V100.tau(B_MAX)              # jobs/ms at full batches
+    lams = [rho * cap for rho in RHOS]
+
+    # -- 1) the backpressure grid: 4 loads × 4 rooms × 3 deadlines × 2
+    #       overflow modes × 2 retry rates = 192 points, one dispatch --
+    grid = SweepGrid.from_product(lams, [V100.alpha], [V100.tau0],
+                                  b_maxes=[B_MAX], q_maxes=Q_MAXES,
+                                  deadlines=DEADLINES,
+                                  overflows=OVERFLOWS,
+                                  retry_rates=RETRY_RATES)
+    out = {}
+
+    def dispatch():
+        out["r"] = sweep(grid, n_batches=n_batches, a_cap=64, r_cap=96,
+                         seed=29)
+        return {"points": len(grid), "n_batches": n_batches,
+                "total_jobs": int(out["r"].n_jobs.sum()),
+                "buffer_dropped": int(out["r"].buffer_dropped.sum())}
+
+    rows.append(timed(dispatch, "backpressure/sweep_dispatch"))
+    r = out["r"]
+
+    def mask(rho=None, q_max=None, deadline=None, overflow=None,
+             retry=None):
+        m = np.ones(len(grid), dtype=bool)
+        if rho is not None:
+            m &= np.isclose(grid.lam, np.float32(rho * cap))
+        if q_max is not None:
+            m &= grid.q_max == q_max
+        if deadline is not None:
+            m &= grid.deadline == np.float32(deadline)
+        if overflow is not None:
+            m &= grid.overflow == OVERFLOW_CODE[overflow]
+        if retry is not None:
+            m &= grid.retry_rate == np.float32(retry)
+        return m
+
+    # -- 2) goodput-vs-latency frontier: at fixed overload the room
+    #       size trades served-within-SLO rate against waiting time ---
+    for q_max in Q_MAXES:
+
+        def frontier(q_max=q_max):
+            (i,) = np.flatnonzero(mask(rho=1.1, q_max=q_max,
+                                       deadline=12.0, overflow="reject",
+                                       retry=0.0))
+            return {
+                "rho": 1.1, "deadline_ms": 12.0,
+                "EW_ms": float(r.mean_latency[i]),
+                "goodput_frac": float(r.goodput_frac[i]),
+                "reject_frac": float(r.reject_frac[i]),
+                "abandon_frac": float(r.abandon_frac[i]),
+                "goodput_jobs_per_ms": float(r.goodput[i]),
+            }
+        rows.append(timed(frontier, f"backpressure/frontier/q={q_max}"))
+
+    # -- 3) exact-chain cross-check on the q_max-only subset (no
+    #       deadline, no retry, reject mode): kernel vs solve_loss ----
+    def chain_check():
+        errs, cells = [], 0
+        for rho in RHOS:
+            for q_max in Q_MAXES:
+                (i,) = np.flatnonzero(mask(rho=rho, q_max=q_max,
+                                           deadline=0.0,
+                                           overflow="reject",
+                                           retry=0.0))
+                ex = solve_loss(float(grid.lam[i]), V100, q_max=q_max,
+                                b_max=B_MAX)
+                errs.append(abs(float(r.reject_frac[i]) - ex.loss_frac))
+                cells += 1
+        return {"cells": cells, "max_abs_err": float(max(errs)),
+                "mean_abs_err": float(np.mean(errs))}
+    rows.append(timed(chain_check, "backpressure/chain_crosscheck"))
+
+    # -- 4) the retry tax: closed-loop re-offers inflate the effective
+    #       load and claw back the goodput the room bought ------------
+    def retry_tax():
+        sel = dict(rho=1.3, q_max=8, deadline=12.0, overflow="reject")
+        (i0,) = np.flatnonzero(mask(retry=0.0, **sel))
+        (i1,) = np.flatnonzero(mask(retry=0.2, **sel))
+        return {
+            "rho": 1.3, "q_max": 8,
+            "retry_inflation": float(r.retry_inflation[i1]),
+            "goodput_frac_no_retry": float(r.goodput_frac[i0]),
+            "goodput_frac_retry": float(r.goodput_frac[i1]),
+            "EW_ms_no_retry": float(r.mean_latency[i0]),
+            "EW_ms_retry": float(r.mean_latency[i1]),
+        }
+    rows.append(timed(retry_tax, "backpressure/retry_tax"))
+    return rows

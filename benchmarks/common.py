@@ -95,7 +95,7 @@ def timed_sweep(rows: List[Row], grid, name: str, *, n_batches: int,
         out["r"] = sweep(grid, n_batches=n_batches, q_cap=q_cap, seed=seed)
         return {"points": len(grid), "n_batches": n_batches,
                 "total_jobs": int(out["r"].n_jobs.sum()),
-                "dropped": int(out["r"].dropped.sum())}
+                "buffer_dropped": int(out["r"].buffer_dropped.sum())}
     rows.append(timed(dispatch, f"{name}/sweep_dispatch"))
     return out["r"]
 

@@ -10,7 +10,7 @@ Loads are normalized by the *cap-limited* saturation rate
 cap / (prefill(cap·prompt) + gen·decode(cap)) — the b→∞ normalization
 of ``GenGrid.rho`` would make small-``max_active`` cells unstable at
 high nominal load — so every grid point is a stable queue and
-``dropped`` stays 0.
+``buffer_dropped`` stays 0.
 
 The speedup row measures the regime the old benchmark burned its budget
 on: long generations at low load, where the Python loop pays
@@ -85,7 +85,7 @@ def run(n_steps: int = 4096) -> List[Row]:
         out["r"] = gen_sweep(grid, n_steps=n_steps, seed=29)
         return {"points": len(grid), "n_steps": n_steps,
                 "total_jobs": int(out["r"].n_jobs.sum()),
-                "dropped": int(out["r"].dropped.sum())}
+                "buffer_dropped": int(out["r"].buffer_dropped.sum())}
 
     rows.append(timed(dispatch, "continuous/gen_dispatch"))
     r = out["r"]
@@ -156,7 +156,7 @@ def run(n_steps: int = 4096) -> List[Row]:
         res = gen_sweep(jgrid, seed=31, **kernel_kw)
         timing["jobs"] = int(res.n_jobs.sum())
         return {"points": reps, "jobs": timing["jobs"],
-                "dropped": int(res.dropped.sum()),
+                "buffer_dropped": int(res.buffer_dropped.sum()),
                 "EW": float(res.mean_latency.mean())}
 
     rows.append(timed(kernel_side,

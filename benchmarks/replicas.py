@@ -54,7 +54,7 @@ def run(n_steps: int = 4000) -> List[Row]:
                                hist_every=4, seed=17)
         return {"points": len(grid), "n_steps": n_steps,
                 "total_jobs": int(out["r"].n_jobs.sum()),
-                "dropped": int(out["r"].dropped.sum())}
+                "buffer_dropped": int(out["r"].buffer_dropped.sum())}
 
     rows.append(timed(dispatch, "replicas/fleet_dispatch"))
     r = out["r"]
@@ -113,7 +113,7 @@ def run(n_steps: int = 4000) -> List[Row]:
     def fleet_side():
         res = fleet_sweep(jgrid, seed=23, **fleet_kw)
         timing["jobs"] = int(res.n_jobs.sum())
-        return {"jobs": timing["jobs"], "dropped": int(res.dropped.sum()),
+        return {"jobs": timing["jobs"], "buffer_dropped": int(res.buffer_dropped.sum()),
                 "EW": float(res.mean_latency.mean())}
 
     rows.append(timed(fleet_side, f"replicas/jsq_fleet/k={k}/rho={rho}"))

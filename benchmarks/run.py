@@ -145,7 +145,7 @@ def main() -> None:
         sys.exit("--compare needs the fresh BENCH JSONs; "
                  "drop --no-json")
 
-    from benchmarks import (continuous, fig4_latency_bound,
+    from benchmarks import (backpressure, continuous, fig4_latency_bound,
                             fig5_utilization, fig6_energy, fig7_tradeoff,
                             fig8_finite_bmax, fig9_batch_times,
                             fig11_served_latency, policies, replicas,
@@ -177,6 +177,8 @@ def main() -> None:
             n_batches=1_500 if args.quick else 6_000),
         "replicas": lambda: replicas.run(
             n_steps=1_500 if args.quick else 4_000),
+        "backpressure": lambda: backpressure.run(
+            n_batches=1_200 if args.quick else 3_000),
         "roofline": lambda: roofline.run(),
     }
     if args.only:

@@ -57,7 +57,7 @@ def main() -> None:
     t0 = time.time()
     r = gen_sweep(grid, n_steps=4096, seed=7)
     t_multi = time.time() - t0
-    assert int(r.dropped.sum()) == 0
+    assert int(r.buffer_dropped.sum()) == 0
     ew = r.mean_latency.reshape(len(GENS), len(RHOS), 2)
     n_dev = len(jax.devices())
     print(f"== static-vs-continuous crossover frontier "

@@ -64,8 +64,8 @@ def main() -> None:
     t_multi = time.time() - t0
     n_dev = len(jax.devices())
     print(f"one dispatch, {n_dev} devices: {t_multi:.1f}s, "
-          f"{int(r.n_jobs.sum()):,} jobs, dropped={int(r.dropped.sum())}")
-    assert int(r.dropped.sum()) == 0
+          f"{int(r.n_jobs.sum()):,} jobs, dropped={int(r.buffer_dropped.sum())}")
+    assert int(r.buffer_dropped.sum()) == 0
     if n_dev > 1:
         t0 = time.time()
         fleet_sweep(grid, seed=2, shard=1, **kw)

@@ -62,7 +62,7 @@ def main() -> None:
     print(f"one jit+vmap dispatch: {dt:.1f}s "
           f"({1e3 * dt / len(grid):.1f} ms/point, "
           f"{int(r.n_jobs.sum()):,} simulated jobs, "
-          f"dropped={int(r.dropped.sum())})")
+          f"dropped={int(r.buffer_dropped.sum())})")
 
     # -- Theorem 2: E[W] <= phi on infinite-b_max points ------------------
     inf_mask = grid.b_max == 0

@@ -65,7 +65,8 @@ from repro.core.analytic import LinearServiceModel
 from repro.core.engine import kernel_cache
 
 __all__ = ["BandedChain", "build_chain", "solve_pi", "solve_pi_gth",
-           "solve_pi_banded", "chain_metrics", "grid_solve", "BAND_TOL"]
+           "solve_pi_banded", "chain_metrics", "chain_loss_metrics",
+           "grid_solve", "BAND_TOL"]
 
 # per-row probability mass the band construction may drop (absorbed at
 # the band edge, exactly like the dense solver's truncation cell) — far
@@ -257,6 +258,70 @@ def chain_metrics(lam: float, pi: np.ndarray, t_of: np.ndarray,
         "mean_queue": e_l,
         "pi0": float(pi[0]),
         "tail_mass": float(pi[-1]),
+    }
+
+
+def chain_loss_metrics(lam: float, pi: np.ndarray, t_of: np.ndarray,
+                       b_of: np.ndarray, q_max: int) -> Dict[str, float]:
+    """Renewal-reward metrics when the truncation IS the waiting room.
+
+    The truncated chain at K = q_max is *exactly* the embedded chain of
+    the finite-waiting-room M/D[b]/1/q_max system under
+    reject-at-arrival ("429") admission: each row's tail mass past K —
+    which the truncated construction lumps at state K — is precisely
+    the event "the room filled mid-service and later arrivals were
+    turned away", so π[K] is legitimate stationary mass, not a
+    truncation-error witness.  What changes versus ``chain_metrics``
+    is only the reward structure of a cycle from level l
+    (``w = max(l − b, 0)`` carried jobs, room ``m = q_max − w``,
+    A ~ Poisson(λτ[b])):
+
+    - rejected jobs per cycle  E[(A − m)⁺] = Σ_{j} p_j (j − m)⁺,
+    - the occupancy integral clips at the full room:
+      ∫₀^τ E[min(N(t), m)] dt = λτ²/2 − E[(A−m)⁺(A−m−1)⁺]/(2λ)
+      (swap the sum in Σ_{k>m} ∫₀^τ P(N(t) ≥ k) dt, using
+      ∫₀^τ P(N_t ≥ k) dt = E[(A − k)⁺]/λ),
+
+    giving loss_frac = π·E[(A−m)⁺] / (λ·E[cycle]) and, by Little's law
+    over *admitted* jobs, E[W] = E[L] / (λ(1 − loss_frac))."""
+    K = len(pi) - 1
+    if K != q_max:
+        raise ValueError("loss metrics need the chain truncated at the "
+                         f"waiting room itself (K={K}, q_max={q_max})")
+    ls = np.arange(K + 1)
+    w = np.maximum(0, ls - b_of)
+    m = q_max - w                                      # room in service
+    mu = lam * t_of
+    _, phi = _poisson_window(mu)
+    n_max = int(phi.max())
+    j = np.arange(n_max + 1)
+    cumlogfact = np.concatenate(
+        [[0.0], np.cumsum(np.log(np.arange(1, n_max + 1, dtype=float)))])
+    p = np.exp(j[None, :] * np.log(mu)[:, None] - cumlogfact[None, :]
+               - mu[:, None])                          # (K+1, n_max+1)
+    ex1 = np.maximum(j[None, :] - m[:, None], 0.0)     # (A − m)⁺
+    e_excess = (p * ex1).sum(axis=1)
+    x_clip = (p * ex1 * np.maximum(ex1 - 1.0, 0.0)).sum(axis=1) \
+        / (2.0 * lam)
+
+    idle = np.where(ls == 0, 1.0 / lam, 0.0)
+    mean_cycle = float(pi @ (idle + t_of))
+    loss_frac = float(pi @ e_excess) / mean_cycle / lam
+    in_sys = np.maximum(ls, 1).astype(float)
+    integral = in_sys * t_of + lam * t_of ** 2 / 2.0 - x_clip
+    e_l = float(pi @ integral) / mean_cycle
+    lam_adm = lam * (1.0 - loss_frac)
+    bf = b_of.astype(float)
+    return {
+        "mean_latency": e_l / lam_adm,
+        "mean_batch": float(pi @ bf),
+        "batch_m2": float(pi @ (bf * bf)),
+        "utilization": float(pi @ t_of) / mean_cycle,
+        "mean_queue": e_l,
+        "pi0": float(pi[0]),
+        "loss_frac": loss_frac,
+        "goodput": lam_adm,
+        "pi_full": float(pi[-1]),
     }
 
 

@@ -133,11 +133,11 @@ def _gen_kernel_point(lam: float, model: GenServiceModel, *,
                                  gen_tokens=gen_tokens,
                                  max_active=max_active, n_jobs=n_jobs)
     r = gen_sweep(grid, n_steps=n_steps, seed=seed)
-    if int(r.dropped.sum()):
+    if int(r.buffer_dropped.sum()):
         # same contract as the fleet wrapper: a capacity-clamped run is
         # biased, never return it silently
         raise RuntimeError(
-            f"gen kernel dropped {int(r.dropped.sum())} arrivals "
+            f"gen kernel dropped {int(r.buffer_dropped.sum())} arrivals "
             "(waiting queue or per-step arrival chain overflowed); "
             "the point is likely overloaded — lower the load or call "
             "gen_sweep directly with larger q_cap/a_cap")

@@ -37,6 +37,16 @@ module is the single home for all of it:
   lower to vectorized copies on every XLA backend; element-wise
   scatters with computed indices are ~an order of magnitude slower
   under vmap on CPU), and the thinned superstep histogram scatter.
+- **Admission-control ops** (``push_poisson_window_loss`` /
+  ``renege_prefix`` / ``orbit_draws`` / ``orbit_file``): the shared
+  implementation of the loss regimes every kernel exposes — a
+  room-aware window push for the immediate-reject ("429") overflow
+  mode, the deadline-renege prefix pop (expired jobs form a contiguous
+  FIFO prefix because arrival times are ascending), and the bounded
+  retry orbit (lost jobs re-arrive after Exp(retry_rate) backoff; the
+  per-step re-arrival count is an exact Binomial thinning drawn from a
+  fixed-shape uniform block so RNG consumption never depends on
+  state).
 - **Adaptive capacity sizing** (``queue_capacity`` /
   ``window_capacity``): ``q_cap``/``a_cap`` are compile-time *shape*
   parameters; the kernels used to default them to a global worst case
@@ -46,8 +56,10 @@ module is the single home for all of it:
   plus a fluctuation term ``∝ √(m/(1−u²))`` from the AR(1)-like
   batch-size recursion — so light grids stop paying worst-case buffer
   passes.  Overflow is still detected, never silent: the kernels count
-  every clamped arrival in ``dropped`` and a correct run has
-  ``dropped == 0`` (asserted by the tests).
+  every clamped arrival in ``buffer_dropped`` and a correct run has
+  ``buffer_dropped == 0`` (asserted by the tests).  This capacity
+  witness is distinct from ``overflow_dropped`` — the *measured*
+  losses of a finite ``q_max`` waiting room, a legitimate output.
 - **Bounded kernel caches** (``kernel_cache``): an LRU for the
   compile-time-specialized kernel builders.  Long grid campaigns walk
   many truncation/capacity shapes; an unbounded cache accumulates one
@@ -79,8 +91,10 @@ import numpy as np
 __all__ = ["enable_host_devices", "point_keys", "resolve_shards",
            "shard_kernel", "pad_tail", "dispatch", "exp_gaps",
            "exp_offsets", "fifo_append", "fifo_pop_shift",
-           "accept_window", "push_poisson_window", "scatter_hist",
-           "queue_capacity", "window_capacity", "kernel_cache"]
+           "accept_window", "push_poisson_window",
+           "push_poisson_window_loss", "renege_prefix", "orbit_draws",
+           "orbit_file", "scatter_hist", "queue_capacity",
+           "window_capacity", "orbit_capacity", "kernel_cache"]
 
 ShardSpec = Union[None, bool, int]
 
@@ -255,8 +269,8 @@ def fifo_pop_shift(buf, k, max_shift: int):
 
 def accept_window(count, q, q_cap: int):
     """Clamp a window's arrival count by queue capacity: returns
-    ``(accepted, overflow)`` — overflow feeds the ``dropped`` counter
-    (a correct run has ``dropped == 0``)."""
+    ``(accepted, overflow)`` — overflow feeds the ``buffer_dropped``
+    counter (a correct run has ``buffer_dropped == 0``)."""
     import jax.numpy as jnp
     a = jnp.minimum(count, q_cap - q)
     return a, count - a
@@ -270,7 +284,7 @@ def push_poisson_window(buf, q, dropped, key, rate, t0, win, *,
     so it is exact and needs no Poisson sampler; ``dropped`` counts
     both arrivals beyond ``a_cap`` per window (detected via the
     sentinel (a_cap+1)-th gap) and arrivals clamped by queue
-    capacity."""
+    capacity (the ``buffer_dropped`` capacity witness)."""
     import jax.numpy as jnp
 
     i32, f32 = jnp.int32, jnp.float32
@@ -281,6 +295,77 @@ def push_poisson_window(buf, q, dropped, key, rate, t0, win, *,
     dropped = dropped + over
     buf = fifo_append(buf, q, (t0 + offs[:-1]).astype(f32))
     return buf, q + a, dropped
+
+
+def push_poisson_window_loss(buf, q, dropped, key, rate, t0, win, *,
+                             a_cap: int, q_cap: int, room):
+    """``push_poisson_window`` with a *physical* waiting-room bound.
+
+    ``room`` is the per-point admission limit each arrival is tested
+    against at its own epoch (the immediate-reject "429" regime — for
+    the "drop" regime pass ``room = q_cap`` and trim at formation
+    instead).  Occupancy only grows inside a window, so admission is
+    prefix-greedy: exactly the first ``(room − q)⁺`` arrivals enter.
+    Returns ``(buf, q, dropped, accepted, rejected)`` — ``rejected``
+    is a *measured* loss (``overflow_dropped``), while ``dropped``
+    keeps counting only the ``a_cap`` sentinel + buffer clamp, the
+    ``buffer_dropped`` capacity witness."""
+    import jax.numpy as jnp
+
+    i32, f32 = jnp.int32, jnp.float32
+    offs = exp_offsets(key, a_cap + 1, rate)
+    count = jnp.sum(offs[:-1] <= win).astype(i32)
+    dropped = dropped + (offs[-1] <= win).astype(i32)
+    admit = jnp.minimum(count, jnp.maximum(room - q, 0).astype(i32))
+    rejected = count - admit
+    a, over = accept_window(admit, q, q_cap)
+    dropped = dropped + over
+    buf = fifo_append(buf, q, (t0 + offs[:-1]).astype(f32))
+    return buf, q + a, dropped, a, rejected
+
+
+def renege_prefix(buf, q, now, deadline, max_pop: int):
+    """Pop the deadline-expired jobs from a linear-compacted FIFO wait
+    buffer of arrival times.  Arrival times ascend, so the expired jobs
+    (age ``now − buf[i] > deadline``) form a contiguous prefix — one
+    mask-count plus one ``fifo_pop_shift``.  ``deadline <= 0`` disables
+    reneging.  Returns ``(buf, q, n_expired)``."""
+    import jax.numpy as jnp
+
+    idx = jnp.arange(buf.shape[0])
+    n_exp = jnp.sum((idx < q) & (buf < now - deadline)).astype(jnp.int32)
+    n_exp = jnp.where(deadline > 0, n_exp, 0)
+    buf = fifo_pop_shift(buf, n_exp, max_pop)
+    return buf, q - n_exp, n_exp
+
+
+def orbit_draws(key, R, p, r_cap: int):
+    """Number of retry-orbit jobs re-arriving this step: an exact
+    Binomial(R, p) thinning (each orbit job independently fires with
+    probability ``p = 1 − exp(−retry_rate·elapsed)``), drawn from a
+    fixed ``r_cap``-shaped uniform block so the kernel's RNG
+    consumption never depends on the traced orbit size."""
+    import jax.numpy as jnp
+    from jax import random
+
+    u = random.uniform(key, (r_cap,))
+    return jnp.sum((jnp.arange(r_cap) < R) & (u < p)).astype(jnp.int32)
+
+
+def orbit_file(R, lost_a, lost_b, r_cap: int, enabled):
+    """File this step's losses into the bounded retry orbit.
+
+    ``lost_a`` has priority over ``lost_b`` for the remaining orbit
+    room (the kernels pass abandoned, then overflow).  Losses that do
+    not fit (orbit at ``r_cap``) — or all of them when ``enabled`` is
+    false (``retry_rate == 0``) — stay in their class as *terminal*
+    losses.  Returns ``(R, final_a, final_b)``."""
+    import jax.numpy as jnp
+
+    room = jnp.where(enabled, jnp.maximum(r_cap - R, 0), 0)
+    take_a = jnp.minimum(lost_a, room)
+    take_b = jnp.minimum(lost_b, room - take_a)
+    return R + take_a + take_b, lost_a - take_a, lost_b - take_b
 
 
 def scatter_hist(hist, bins, inc, hist_rows=None):
@@ -324,16 +409,32 @@ def _occupancy_scale(lam, alpha, tau0, b_max, wait_max=0.0):
 
 
 def queue_capacity(lam, alpha, tau0, b_max, wait_max=0.0, *,
-                   floor: int = 64, ceil: int = 8192) -> int:
+                   q_max=None, floor: int = 64, ceil: int = 8192) -> int:
     """Adaptive ``q_cap`` for a request-level grid: sized from the
     dispatched grid's own maximum load instead of a global worst case.
 
     Power-of-two bucketed (bounds recompiles across campaigns), with a
     ~10σ fluctuation margin over the occupancy scale so multi-thousand
-    -step runs keep ``dropped == 0`` (overflow is still counted, never
-    silent — the kernels report it and the tests assert on it)."""
+    -step runs keep ``buffer_dropped == 0`` (overflow is still counted,
+    never silent — the kernels report it and the tests assert on it).
+
+    A finite waiting room caps a point's need regardless of its load:
+    with ``q_max`` given, a ``q_max > 0`` point never holds more than
+    ``q_max`` waiting jobs plus one window's worth of pre-trim ("drop"
+    mode) arrivals — this is what keeps super-critical (ρ > 1) loss
+    points inside finite buffers."""
     m, sd = _occupancy_scale(lam, alpha, tau0, b_max, wait_max)
-    need = float(np.max(m + 10.0 * sd)) + 32.0
+    need = np.maximum(m + 10.0 * sd, 0.0) + 32.0
+    if q_max is not None:
+        lam64 = np.asarray(lam, dtype=np.float64)
+        qm = np.asarray(q_max, dtype=np.float64) * np.ones_like(lam64)
+        cap = np.where(np.asarray(b_max) > 0, np.asarray(b_max), np.inf)
+        b_eff = np.minimum(np.maximum(qm, 1.0), cap)
+        w_mu = lam64 * (np.asarray(alpha) * b_eff + np.asarray(tau0)
+                        + np.asarray(wait_max))
+        room_need = qm + w_mu + 10.0 * np.sqrt(w_mu + 1.0) + 32.0
+        need = np.where(qm > 0, np.minimum(need, room_need), need)
+    need = float(np.max(need))
     b_top = float(np.max(np.where(np.asarray(b_max) > 0, b_max, 0)))
     return int(min(ceil, max(floor, _pow2ceil(max(need, 2.0 * b_top)))))
 
@@ -349,6 +450,22 @@ def window_capacity(lam, window, *, slack: float = 8.0, floor: int = 16,
     need = mu + slack * np.sqrt(mu + 1.0) + slack
     return int(min(ceil, max(floor, -(-int(np.ceil(need)) // bucket)
                              * bucket)))
+
+
+def orbit_capacity(lam, retry_rate, *, floor: int = 16,
+                   ceil: int = 1024) -> int:
+    """Adaptive ``r_cap``: the retry orbit's compile-time bound.
+
+    The orbit's drift balances at ``R* = λ/retry_rate`` even when
+    *every* arrival is lost (input rate ≤ λ, output rate R·retry_rate),
+    so ``R* + 10·√R*`` bounds its excursions; power-of-two bucketed.
+    Reaching ``r_cap`` is a modeled regime (the excess loss becomes
+    terminal — a finite retry budget), not a silent clamp."""
+    lam64 = np.asarray(lam, dtype=np.float64)
+    rr = np.asarray(retry_rate, dtype=np.float64) * np.ones_like(lam64)
+    r_star = np.where(rr > 0, lam64 / np.maximum(rr, 1e-12), 0.0)
+    need = float(np.max(r_star + 10.0 * np.sqrt(r_star + 1.0))) + 8.0
+    return int(min(ceil, max(floor, _pow2ceil(need))))
 
 
 # ---------------------------------------------------------------------------

@@ -72,6 +72,9 @@ def _analytic(grid: SweepGrid) -> List[SimResult]:
     _require(bool(np.all(grid.b_max == 0)), "analytic", "infinite b_max")
     _require(bool(np.all(grid.wait_max == 0.0)), "analytic",
              "the no-wait policy")
+    _require(not grid.has_loss, "analytic",
+             "lossless points (no q_max/deadline/retry — Theorem 2 "
+             "assumes an infinite patient queue)")
     out = []
     for i in range(len(grid)):
         lam = float(grid.lam[i])
@@ -90,18 +93,42 @@ def _analytic(grid: SweepGrid) -> List[SimResult]:
 
 
 def _markov(grid: SweepGrid, **kw) -> List[SimResult]:
-    from repro.core.markov import solve
+    from repro.core.markov import solve, solve_loss
+    from repro.core.grid import OVERFLOW_CODE
     _require(bool(np.all(grid.dist == DIST_CODE["det"])), "markov",
              "deterministic service")
     _require(bool(np.all(grid.wait_max == 0.0)), "markov",
              "the no-wait policy")
+    if grid.has_loss:
+        # the exact chain covers exactly the finite-waiting-room reject
+        # regime; impatience and retry feedback have no embedded-chain
+        # representation (use the MC kernels for those)
+        _require(bool(np.all(grid.deadline == 0.0)), "markov",
+                 "q_max-only loss points (no deadlines)")
+        _require(bool(np.all(grid.retry_rate == 0.0)), "markov",
+                 "q_max-only loss points (no retry feedback)")
+        _require(bool(np.all((grid.q_max == 0)
+                             | (grid.overflow
+                                == OVERFLOW_CODE["reject"]))),
+                 "markov", "the reject ('429') overflow mode")
     out = []
     for i in range(len(grid)):
         b_max = float(grid.b_max[i]) if grid.b_max[i] > 0 else math.inf
-        m = solve(float(grid.lam[i]),
-                  an.LinearServiceModel(float(grid.alpha[i]),
-                                        float(grid.tau0[i])),
-                  b_max=b_max, **kw)
+        model = an.LinearServiceModel(float(grid.alpha[i]),
+                                      float(grid.tau0[i]))
+        if grid.has_loss and grid.q_max[i] > 0:
+            r = solve_loss(float(grid.lam[i]), model, b_max=b_max,
+                           q_max=int(grid.q_max[i]), **kw)
+            out.append(SimResult(
+                lam=r.lam, n_jobs=0, mean_latency=r.mean_latency,
+                mean_batch=r.mean_batch, batch_m2=r.batch_m2,
+                utilization=r.utilization, backend="markov",
+                goodput_frac=1.0 - r.loss_frac,
+                reject_frac=r.loss_frac, abandon_frac=0.0,
+                retry_inflation=1.0,
+            ))
+            continue
+        m = solve(float(grid.lam[i]), model, b_max=b_max, **kw)
         out.append(SimResult(
             lam=m.lam, n_jobs=0, mean_latency=m.mean_latency,
             mean_batch=m.mean_batch, batch_m2=m.batch_m2,
@@ -114,6 +141,9 @@ def _sim(grid: SweepGrid, **kw) -> List[SimResult]:
     from repro.core.simulate import simulate
     _require(bool(np.all(grid.wait_max == 0.0)), "sim",
              "the no-wait policy (use backend='sweep' for timeouts)")
+    _require(not grid.has_loss, "sim",
+             "lossless points (the scalar simulator has no admission "
+             "control; use backend='sweep' or repro.core.loss_ref)")
     out = []
     for i in range(len(grid)):
         b_max = float(grid.b_max[i]) if grid.b_max[i] > 0 else math.inf
@@ -181,6 +211,8 @@ def evaluate(grid: SweepGrid, backend: str = "sweep",
             grid = FleetGrid.from_points(
                 grid.lam, grid.alpha, grid.tau0, k=1, routing="random",
                 b_max=grid.b_max, dist=grid.dist, cv=grid.cv,
-                wait_max=grid.wait_max, wait_target=grid.wait_target)
+                wait_max=grid.wait_max, wait_target=grid.wait_target,
+                q_max=grid.q_max, deadline=grid.deadline,
+                overflow=grid.overflow, retry_rate=grid.retry_rate)
         return fleet_sweep(grid, **kw).to_results()
     raise ValueError(f"unknown backend {backend!r}; pick from {BACKENDS}")

@@ -65,7 +65,11 @@ histogram scattered — once per ``_REBASE_EVERY`` steps (the superstep
 amortization proven in the fleet kernel).  Capacity overflows (waiting
 jobs beyond ``q_cap``; more than ``a_cap`` arrivals inside one window
 even after the run shrinks to a single decode step) clamp and count in
-``dropped`` — a correct run has ``dropped == 0`` (asserted by tests).
+``buffer_dropped`` — a correct run has ``buffer_dropped == 0``
+(asserted by tests).  Admission-control losses (finite ``q_max``,
+deadlines, retries — see ``repro.core.grid``) are separate *measured*
+outputs: ``overflow_dropped`` / ``abandoned`` and the goodput fractions
+derived from them.
 """
 from __future__ import annotations
 
@@ -80,12 +84,14 @@ from jax import lax, random
 from repro.core import engine
 from repro.core.engine import ShardSpec
 from repro.core.grid import (  # noqa: F401  (re-exported for callers)
-    DISC_CODE, DISC_NAME, GenGrid, GenResult)
+    DISC_CODE, DISC_NAME, OVERFLOW_CODE, GenGrid, GenResult)
 from repro.core.hist import (bit_bins, hist_edges,
                              hist_percentiles as _hist_percentiles,
                              thinned_rows)
 
 __all__ = ["DISC_CODE", "DISC_NAME", "GenGrid", "GenResult", "gen_sweep"]
+
+_OV_REJECT = OVERFLOW_CODE["reject"]
 
 _REBASE_EVERY = 16          # scan steps per clock rebase + hist scatter
 #   (smaller than the fleet kernel's 32: the tail buffer — and with it
@@ -96,15 +102,27 @@ _STEP_BUCKET = 2048         # n_steps rounds up to this (bounds recompiles)
 
 @engine.kernel_cache(maxsize=16)
 def _build_gen_kernel(n_steps: int, warmup: int, s_cap: int, q_cap: int,
-                      a_cap: int, n_bins: int, hist_every: int,
-                      n_dev: int):
+                      a_cap: int, n_bins: int, has_loss: bool,
+                      r_cap: int, hist_every: int, n_dev: int):
     """Compile-time specialization of the per-point token-level kernel.
 
     ``s_cap`` (grid max of ``max_active``) sizes the decode pool;
     ``q_cap`` the waiting buffer; ``a_cap`` the pre-drawn arrival chain
     per step (size it near λ × one decode step — a denser window only
     shrinks the run via ``k_cov`` below, exact but slower; drops need
-    more than ``a_cap`` arrivals inside a single decode step)."""
+    more than ``a_cap`` arrivals inside a single decode step).
+
+    ``has_loss = False`` traces exactly the pre-admission-control
+    kernel (loss-free grids stay bitwise-pinned).  ``has_loss = True``
+    adds, per step: deadline reneging of expired waiting jobs after
+    the idle jump (a head advance — waiting epochs are FIFO-sorted, so
+    the expired set is a prefix), reject-mode admission of the window
+    arrivals against the per-point room (prefix-greedy: occupancy only
+    grows inside a run), the drop-mode tail trim to ``q_max`` after
+    admission, and the bounded retry orbit assessed at each run end
+    (re-arrivals join the tail at ``t_end``).  Reneging can empty an
+    otherwise-idle queue: that step forms no batch (``b = 0``),
+    advances no time, and the next step idles."""
 
     i32 = jnp.int32
     f32 = jnp.float32
@@ -120,8 +138,16 @@ def _build_gen_kernel(n_steps: int, warmup: int, s_cap: int, q_cap: int,
     # a whole (a_cap + 1) block past the tail.  The buffer rides in the
     # scan carry, whose copy is a first-order per-step cost on CPU —
     # the tighter bound is a direct kernel speedup.
-    buf_len = q_cap + min((a_cap + 2) * _REBASE_EVERY,
-                          (s_cap + 1) * _REBASE_EVERY) + a_cap + 1
+    #   With loss regimes, retries append ≤ r_cap more per step (a
+    # whole r_cap block write), and reneging breaks the conservation
+    # bound (b) (a renege pops up to q_cap in one step), so only the
+    # append bound (a) applies.
+    if has_loss:
+        buf_len = (q_cap + (a_cap + 2 + r_cap) * _REBASE_EVERY
+                   + a_cap + 1 + r_cap)
+    else:
+        buf_len = q_cap + min((a_cap + 2) * _REBASE_EVERY,
+                              (s_cap + 1) * _REBASE_EVERY) + a_cap + 1
     REBASE_EVERY = _REBASE_EVERY
 
     def run_point(p, key):
@@ -132,12 +158,31 @@ def _build_gen_kernel(n_steps: int, warmup: int, s_cap: int, q_cap: int,
         gen = p["gen_tokens"].astype(i32)
         cap = jnp.clip(p["max_active"], 1, s_cap).astype(i32)
         disc = p["discipline"]
+        if has_loss:
+            q_lim = p["q_max"].astype(i32)
+            deadline = p["deadline"]
+            retry_rate = p["retry_rate"]
+            retry_on = retry_rate > 0.0
+            is_reject = p["overflow"] == _OV_REJECT
+            roomv = jnp.where((q_lim > 0) & is_reject, q_lim, q_cap)
+            trim_to = jnp.where((q_lim > 0) & ~is_reject, q_lim, q_cap)
+            retry_room = jnp.where(q_lim > 0,
+                                   jnp.minimum(q_lim, q_cap), q_cap)
+            idxb = jnp.arange(buf_len)
+            jr = jnp.arange(r_cap)
 
         def step(state, x):
-            i, gaps = x
-            (head, tail, buf, rem, arr_s, now, next_arr, lat_sum,
-             lat_n, sum_b, sum_b2, n_meas, busy, span, q_max,
-             dropped) = state
+            if has_loss:
+                i, gaps, u_row = x
+                (head, tail, buf, rem, arr_s, now, next_arr, lat_sum,
+                 lat_n, sum_b, sum_b2, n_meas, busy, span, q_max,
+                 dropped, orbit, ov_n, ab_n, slo_n, fresh_n,
+                 retry_n) = state
+            else:
+                i, gaps = x
+                (head, tail, buf, rem, arr_s, now, next_arr, lat_sum,
+                 lat_n, sum_b, sum_b2, n_meas, busy, span, q_max,
+                 dropped) = state
             q = tail - head
 
             t_step0 = now
@@ -154,6 +199,20 @@ def _build_gen_kernel(n_steps: int, warmup: int, s_cap: int, q_cap: int,
             buf = lax.dynamic_update_slice(buf, next_arr[None], (tail,))
             tail = tail + due.astype(i32)
             q = q + due.astype(i32)
+
+            if has_loss:
+                # deadline reneging at the scheduler epoch: the live
+                # range buf[head:tail] is FIFO-sorted arrival epochs,
+                # so the expired set is a prefix — a pure head advance.
+                # (The idle arrival just enqueued has age 0.)
+                live = (idxb >= head) & (idxb < tail)
+                n_exp = jnp.sum(
+                    (live & (buf < now - deadline)).astype(i32))
+                n_exp = jnp.where(deadline > 0.0, n_exp, 0)
+                head = head + n_exp
+                q = q - n_exp
+                lost_ab = n_exp
+                lost_ov = jnp.zeros((), i32)
 
             # the pre-drawn arrival chain: epochs strictly after
             # next_arr; entry 0 IS next_arr (consumed above in the idle
@@ -180,6 +239,15 @@ def _build_gen_kernel(n_steps: int, warmup: int, s_cap: int, q_cap: int,
             head = head + n_join
             q = q - n_join
 
+            if has_loss:
+                # drop-mode ("503") eviction at the formation epoch:
+                # the NEWEST waiting jobs beyond q_max leave by a tail
+                # cut (later appends overwrite the slots)
+                trim = jnp.maximum(q - trim_to, 0)
+                tail = tail - trim
+                q = q - trim
+                lost_ov = lost_ov + trim
+
             # 3) run length: decode j identical steps in closed form
             #    until the next event — the earliest retirement
             #    (min remaining tokens), the first step boundary past
@@ -188,6 +256,12 @@ def _build_gen_kernel(n_steps: int, warmup: int, s_cap: int, q_cap: int,
             #    edge of the pre-drawn arrival coverage
             b = n_act + n_join
             dt = a_d * b.astype(f32) + t0_d
+            if has_loss:
+                # reneging can empty an otherwise-idle queue: b = 0
+                # forms no batch and the step advances no time (the
+                # next step idles); dt keeps a safe divisor
+                has_b = b > 0
+                dt = jnp.where(has_b, dt, 1.0)
             t0r = now + t_pf
             m_min = jnp.min(jnp.where(rem > 0, rem, BIG))
             na = jnp.min(jnp.where(ts_ext > now, ts_ext, INF))
@@ -198,8 +272,12 @@ def _build_gen_kernel(n_steps: int, warmup: int, s_cap: int, q_cap: int,
             k_cov = jnp.floor((ts_ext[-1] - t0r) / dt).astype(i32)
             k = jnp.clip(jnp.minimum(jnp.minimum(m_min, k_arr), k_cov),
                          1, BIG)
+            if has_loss:
+                k = jnp.where(has_b, k, 1)
             kf = k.astype(f32)
             t_end = t0r + kf * dt
+            if has_loss:
+                t_end = jnp.where(has_b, t_end, now)
 
             # 4) window arrivals (now, t_end] join the waiting buffer.
             #    The pushable block is the chain minus the consumed
@@ -215,9 +293,20 @@ def _build_gen_kernel(n_steps: int, warmup: int, s_cap: int, q_cap: int,
                                         (a_cap + 1,))
             count = jnp.sum(((ts_push > now)
                              & (ts_push <= t_end)).astype(i32))
-            a = jnp.minimum(count, q_cap - q)
-            dropped = dropped + (count - a) \
-                + (ts_ext[-1] <= t_end).astype(i32)
+            if has_loss:
+                # admission against the per-point room: occupancy only
+                # grows inside a run, so the accepted set is exactly
+                # the first (room − q)⁺ arrivals — per-arrival 429
+                # semantics with one contiguous append.  A turned-away
+                # arrival is a measured overflow; only the coverage
+                # sentinel still feeds the buffer_dropped witness.
+                a = jnp.minimum(count, jnp.maximum(roomv - q, 0))
+                lost_ov = lost_ov + (count - a)
+                dropped = dropped + (ts_ext[-1] <= t_end).astype(i32)
+            else:
+                a = jnp.minimum(count, q_cap - q)
+                dropped = dropped + (count - a) \
+                    + (ts_ext[-1] <= t_end).astype(i32)
             buf = lax.dynamic_update_slice(buf, ts_push.astype(f32),
                                            (tail,))
             tail = tail + a
@@ -245,16 +334,54 @@ def _build_gen_kernel(n_steps: int, warmup: int, s_cap: int, q_cap: int,
             lat_n = lat_n + jnp.where(meas, n_fin, 0)
             sum_b = sum_b + mf * kf * bf
             sum_b2 = sum_b2 + mf * kf * bf * bf
-            n_meas = n_meas + jnp.where(meas, k, 0)
-            busy = busy + mf * (t_pf + kf * dt)
+            if has_loss:
+                n_meas = n_meas + jnp.where(meas & has_b, k, 0)
+                busy = busy + mf * jnp.where(has_b, t_pf + kf * dt, 0.0)
+            else:
+                n_meas = n_meas + jnp.where(meas, k, 0)
+                busy = busy + mf * (t_pf + kf * dt)
             span = span + mf * (t_end - t_step0)
             q_max = jnp.maximum(q_max, q)
 
+            if has_loss:
+                # bounded retry orbit, assessed at the run end (exact
+                # Binomial thinning over the whole step, pre-drawn
+                # uniform block); admitted re-arrivals join the tail
+                # with arrival epoch t_end
+                p_fire = 1.0 - jnp.exp(-retry_rate * (t_end - t_step0))
+                n_r = jnp.sum(((jr < orbit)
+                               & (u_row < p_fire)).astype(i32))
+                orbit = orbit - n_r
+                admit_r = jnp.minimum(
+                    n_r, jnp.maximum(retry_room - q, 0))
+                orbit = orbit + (n_r - admit_r)
+                buf = lax.dynamic_update_slice(
+                    buf, jnp.full((r_cap,), t_end, f32), (tail,))
+                tail = tail + admit_r
+                q = q + admit_r
+                # file this step's fresh losses — abandoned first
+                orbit, term_ab, term_ov = engine.orbit_file(
+                    orbit, lost_ab, lost_ov, r_cap, retry_on)
+                mi = meas.astype(i32)
+                ab_n = ab_n + mi * term_ab
+                ov_n = ov_n + mi * term_ov
+                in_slo = jnp.where(
+                    deadline > 0.0,
+                    jnp.sum((fin & (lats <= deadline)).astype(i32)),
+                    n_fin)
+                slo_n = slo_n + mi * in_slo
+                fresh_n = fresh_n + mi * (due.astype(i32) + count)
+                retry_n = retry_n + mi * n_r
+
             # raw latencies ride out to the superstep, which does the
             # bit-binning once per block (three fewer ops per step)
-            return (head, tail, buf, rem, arr_s, now, next_arr,
-                    lat_sum, lat_n, sum_b, sum_b2, n_meas, busy, span,
-                    q_max, dropped), (lats, fin & meas)
+            out_state = (head, tail, buf, rem, arr_s, now, next_arr,
+                         lat_sum, lat_n, sum_b, sum_b2, n_meas, busy,
+                         span, q_max, dropped)
+            if has_loss:
+                out_state = out_state + (orbit, ov_n, ab_n, slo_n,
+                                         fresh_n, retry_n)
+            return out_state, (lats, fin & meas)
 
         # histogram thinning (same contract as the fleet kernel): a
         # fixed scrambled 1-in-N step subsample feeds the percentile
@@ -269,12 +396,19 @@ def _build_gen_kernel(n_steps: int, warmup: int, s_cap: int, q_cap: int,
             hist = state[-1]
             # one block draw per superstep, consumed row-wise by the
             # inner scan — per-step threefry calls would dominate the
-            # per-point cost of a wide vmap on CPU
+            # per-point cost of a wide vmap on CPU.  The retry block
+            # folds in its own key so the arrival draw stays
+            # bitwise-pinned for loss-free points of a mixed grid.
             arr_gaps = random.exponential(k_sup,
                                           (REBASE_EVERY, a_cap + 1))
-            state, (lats, inc) = lax.scan(
-                step, state[:-1],
-                (i_base + jnp.arange(REBASE_EVERY), arr_gaps))
+            if has_loss:
+                retry_u = random.uniform(random.fold_in(k_sup, 0x0b17),
+                                         (REBASE_EVERY, r_cap))
+                xs = (i_base + jnp.arange(REBASE_EVERY), arr_gaps,
+                      retry_u)
+            else:
+                xs = (i_base + jnp.arange(REBASE_EVERY), arr_gaps)
+            state, (lats, inc) = lax.scan(step, state[:-1], xs)
             if hist_every > 1:
                 lats, inc = lats[hist_rows], inc[hist_rows]
             hist = engine.scatter_hist(hist, bit_bins(lats, n_bins), inc)
@@ -300,18 +434,23 @@ def _build_gen_kernel(n_steps: int, warmup: int, s_cap: int, q_cap: int,
                 jnp.zeros((), f32), jnp.zeros((), f32),  # sum_b, sum_b2
                 jnp.zeros((), i32), jnp.zeros((), f32),  # n_meas, busy
                 jnp.zeros((), f32), jnp.zeros((), i32),  # span, q_max
-                jnp.zeros((), i32),                      # dropped
-                jnp.zeros((n_bins,), i32))               # hist
+                jnp.zeros((), i32))                      # dropped
+        if has_loss:
+            # orbit, ov_n, ab_n, slo_n, fresh_n, retry_n
+            init = init + tuple(jnp.zeros((), i32) for _ in range(6))
+        init = init + (jnp.zeros((n_bins,), i32),)       # hist
         n_super = n_steps // REBASE_EVERY
-        (_, _, _, _, _, _, _, lat_sum, lat_n, sum_b, sum_b2, n_meas,
-         busy, span, q_max, dropped, hist), _ = lax.scan(
+        state, _ = lax.scan(
             superstep, init,
             (jnp.arange(n_super) * REBASE_EVERY,
              random.split(key, n_super)))
+        (lat_sum, lat_n, sum_b, sum_b2, n_meas, busy, span, q_max,
+         dropped) = state[7:16]
+        hist = state[-1]
 
         jobs = jnp.maximum(lat_n, 1).astype(f32)
         nst = jnp.maximum(n_meas, 1).astype(f32)
-        return {
+        out = {
             "mean_latency": lat_sum / jobs,
             "mean_batch": sum_b / nst,
             "batch_m2": sum_b2 / nst,
@@ -322,13 +461,19 @@ def _build_gen_kernel(n_steps: int, warmup: int, s_cap: int, q_cap: int,
             "dropped": dropped,
             "hist": hist,
         }
+        if has_loss:
+            (_orbit, ov_n, ab_n, slo_n, fresh_n, retry_n) = state[16:22]
+            out.update(overflow_dropped=ov_n, abandoned=ab_n,
+                       n_in_slo=slo_n, n_fresh=fresh_n, n_retry=retry_n)
+        return out
 
     return engine.shard_kernel(jax.vmap(run_point), n_dev)
 
 
 def gen_sweep(grid: GenGrid, *, n_steps: int = 4096,
               warmup: Optional[int] = None, q_cap: Optional[int] = None,
-              a_cap: Optional[int] = None, n_bins: int = 512,
+              a_cap: Optional[int] = None, r_cap: Optional[int] = None,
+              n_bins: int = 512,
               seed: int = 0, key_offset: int = 0, hist_every: int = 1,
               shard: ShardSpec = None) -> GenResult:
     """Simulate every grid point for ``n_steps`` scheduler decisions in
@@ -341,8 +486,9 @@ def gen_sweep(grid: GenGrid, *, n_steps: int = 4096,
     rounded up to a multiple of ``_STEP_BUCKET`` so nearby sizes share
     one compiled kernel.  ``q_cap`` bounds the waiting buffer and
     ``a_cap`` the arrival chain visible per step; exceeding either
-    clamps and counts in ``dropped`` (a correct run has
-    ``dropped == 0``).  The defaults (``None``) size both adaptively
+    clamps and counts in ``buffer_dropped`` (a correct run has
+    ``buffer_dropped == 0``).  The defaults (``None``) size both
+    adaptively
     from the dispatched grid: ``q_cap`` from the static-equivalent
     request-level law (``GenGrid.equivalent_alpha``/``equivalent_tau0``
     through ``engine.queue_capacity``), ``a_cap`` from the densest
@@ -371,10 +517,12 @@ def gen_sweep(grid: GenGrid, *, n_steps: int = 4096,
     if not 0 <= warmup < n_steps:
         raise ValueError(f"warmup {warmup} must lie in [0, {n_steps})")
     s_cap = int(grid.max_active.max())
+    has_loss = grid.has_loss
     if q_cap is None:
         q_cap = engine.queue_capacity(
             grid.lam, grid.equivalent_alpha, grid.equivalent_tau0,
-            grid.max_active)
+            grid.max_active,
+            q_max=grid.q_max if has_loss else None)
     if a_cap is None:
         # the densest indivisible window: the batched prefill of a full
         # batch plus the decode step it precedes
@@ -388,10 +536,18 @@ def gen_sweep(grid: GenGrid, *, n_steps: int = 4096,
     if not set(np.unique(grid.discipline)) <= set(DISC_CODE.values()):
         raise ValueError(f"unknown discipline code in grid "
                          f"(valid: {DISC_CODE})")
+    if has_loss:
+        if np.any(grid.q_max > q_cap):
+            raise ValueError("q_max exceeds q_cap; raise q_cap")
+        if r_cap is None:
+            r_cap = engine.orbit_capacity(grid.lam, grid.retry_rate)
+    else:
+        r_cap = 0
     n = len(grid)
     n_dev = engine.resolve_shards(shard, n)
     kernel = _build_gen_kernel(int(n_steps), int(warmup), s_cap,
                                int(q_cap), int(a_cap), int(n_bins),
+                               has_loss, int(r_cap),
                                int(hist_every), n_dev)
 
     params = {
@@ -405,8 +561,30 @@ def gen_sweep(grid: GenGrid, *, n_steps: int = 4096,
         "max_active": jnp.asarray(grid.max_active),
         "discipline": jnp.asarray(grid.discipline),
     }
+    if has_loss:
+        params.update(
+            q_max=jnp.asarray(grid.q_max),
+            deadline=jnp.asarray(grid.deadline),
+            overflow=jnp.asarray(grid.overflow),
+            retry_rate=jnp.asarray(grid.retry_rate))
     keys = engine.point_keys(seed, key_offset, n)
     out = engine.dispatch(kernel, params, keys, n, n_dev)
+
+    n_jobs = np.asarray(out["n_jobs"])
+    if has_loss:
+        loss_kw = dict(
+            overflow_dropped=np.asarray(out["overflow_dropped"]),
+            abandoned=np.asarray(out["abandoned"]),
+            n_in_slo=np.asarray(out["n_in_slo"]),
+            n_fresh=np.asarray(out["n_fresh"]),
+            n_retry=np.asarray(out["n_retry"]))
+    else:
+        loss_kw = dict(
+            overflow_dropped=np.zeros_like(n_jobs),
+            abandoned=np.zeros_like(n_jobs),
+            n_in_slo=n_jobs.copy(),
+            n_fresh=n_jobs.copy(),
+            n_retry=np.zeros_like(n_jobs))
 
     p50, p95, p99 = _hist_percentiles(out["hist"], (50, 95, 99))
     return GenResult(
@@ -417,9 +595,10 @@ def gen_sweep(grid: GenGrid, *, n_steps: int = 4096,
         batch_m2=np.asarray(out["batch_m2"], dtype=np.float64),
         utilization=np.clip(
             np.asarray(out["utilization"], dtype=np.float64), 0.0, 1.0),
-        n_jobs=np.asarray(out["n_jobs"]),
+        n_jobs=n_jobs,
         n_steps=np.asarray(out["n_steps"]),
         max_queue=np.asarray(out["max_queue"]),
-        dropped=np.asarray(out["dropped"]),
+        buffer_dropped=np.asarray(out["dropped"]),
         hist=np.asarray(out["hist"]),
+        **loss_kw,
     )

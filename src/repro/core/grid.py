@@ -14,12 +14,21 @@ import numpy as np
 from repro.core.results import SimResult
 
 __all__ = ["DIST_CODE", "DIST_NAME", "ROUTE_CODE", "ROUTE_NAME",
-           "DISC_CODE", "DISC_NAME", "SweepGrid", "SweepResult",
-           "FleetGrid", "FleetResult", "GenGrid", "GenResult",
-           "MarkovGrid", "MarkovGridResult", "hist_edges"]
+           "DISC_CODE", "DISC_NAME", "OVERFLOW_CODE", "OVERFLOW_NAME",
+           "SweepGrid", "SweepResult", "FleetGrid", "FleetResult",
+           "GenGrid", "GenResult", "MarkovGrid", "MarkovGridResult",
+           "hist_edges"]
 
 DIST_CODE = {"det": 0, "exp": 1, "gamma": 2}
 DIST_NAME = {v: k for k, v in DIST_CODE.items()}
+
+# Finite-waiting-room overflow modes: "reject" turns an arrival away at
+# its arrival epoch when q_max jobs already wait (an immediate 429);
+# "drop" always buffers the arrival but evicts the newest jobs beyond
+# q_max at the next batch-formation epoch (a 503 after queueing).  Both
+# count in ``overflow_dropped``; ``q_max = 0`` means an infinite room.
+OVERFLOW_CODE = {"reject": 0, "drop": 1}
+OVERFLOW_NAME = {v: k for k, v in OVERFLOW_CODE.items()}
 
 # Routing disciplines for the k-replica fleet kernel: how each arrival is
 # assigned to one of the k replica queues.
@@ -78,6 +87,13 @@ class _GridOps:
                             for a in self._arrays()])
 
 
+def _as_overflow_codes(overflow) -> List[int]:
+    vals = ([overflow] if isinstance(overflow, str)
+            else list(np.atleast_1d(overflow)))
+    return [OVERFLOW_CODE[o] if isinstance(o, str) else int(o)
+            for o in vals]
+
+
 @dataclass(frozen=True)
 class SweepGrid(_GridOps):
     """Struct-of-arrays parameter grid; one entry per simulated point.
@@ -85,7 +101,15 @@ class SweepGrid(_GridOps):
     ``b_max = 0`` encodes an infinite maximum batch size (batch-all-
     waiting).  ``dist`` holds ``DIST_CODE`` integers; ``cv`` is only read
     for the gamma family.  ``wait_max``/``wait_target`` encode the
-    timeout policy (0 ⇒ no artificial delay)."""
+    timeout policy (0 ⇒ no artificial delay).
+
+    The admission-control axes (all off by default): ``q_max`` bounds the
+    waiting room (0 ⇒ infinite), ``overflow`` picks the ``OVERFLOW_CODE``
+    regime used when it binds, ``deadline`` is the per-request SLO —
+    waiting jobs renege (abandon) once their age exceeds it, and
+    completions beyond it count against goodput (0 ⇒ no deadline) — and
+    ``retry_rate`` closes the loop: every finally-lost job re-arrives
+    after an Exp(retry_rate) backoff (0 ⇒ lost jobs leave forever)."""
 
     lam: np.ndarray
     alpha: np.ndarray
@@ -95,14 +119,29 @@ class SweepGrid(_GridOps):
     cv: np.ndarray
     wait_max: np.ndarray
     wait_target: np.ndarray
+    q_max: np.ndarray
+    deadline: np.ndarray
+    overflow: np.ndarray
+    retry_rate: np.ndarray
 
     @property
     def rho(self) -> np.ndarray:
         return self.lam * self.alpha
 
+    @property
+    def has_loss(self) -> bool:
+        """True when any point enables an admission-control regime."""
+        return bool(np.any(self.q_max > 0) or np.any(self.deadline > 0)
+                    or np.any(self.retry_rate > 0))
+
+    @property
+    def overflow_names(self) -> List[str]:
+        return [OVERFLOW_NAME[int(o)] for o in self.overflow]
+
     @classmethod
     def from_points(cls, lam, alpha, tau0, *, b_max=0, dist="det", cv=0.5,
-                    wait_max=0.0, wait_target=0) -> "SweepGrid":
+                    wait_max=0.0, wait_target=0, q_max=0, deadline=0.0,
+                    overflow="reject", retry_rate=0.0) -> "SweepGrid":
         """Build a grid from parallel per-point sequences (broadcast
         scalars to the common length)."""
         dist_codes = ([DIST_CODE[d] if isinstance(d, str) else int(d)
@@ -110,7 +149,10 @@ class SweepGrid(_GridOps):
                       if not isinstance(dist, str) else [DIST_CODE[dist]])
         arrays = [_as_f32(lam), _as_f32(alpha), _as_f32(tau0),
                   _as_i32(b_max), _as_i32(dist_codes), _as_f32(cv),
-                  _as_f32(wait_max), _as_i32(wait_target)]
+                  _as_f32(wait_max), _as_i32(wait_target),
+                  _as_i32(q_max), _as_f32(deadline),
+                  _as_i32(_as_overflow_codes(overflow)),
+                  _as_f32(retry_rate)]
         n = max(a.shape[0] for a in arrays)
         arrays = [np.broadcast_to(a, (n,)).copy() if a.shape[0] == 1 else a
                   for a in arrays]
@@ -125,19 +167,29 @@ class SweepGrid(_GridOps):
                      dists: Sequence[str] = ("det",),
                      cvs: Sequence[float] = (0.5,),
                      wait_maxes: Sequence[float] = (0.0,),
-                     wait_targets: Sequence[int] = (0,)) -> "SweepGrid":
+                     wait_targets: Sequence[int] = (0,),
+                     q_maxes: Sequence[int] = (0,),
+                     deadlines: Sequence[float] = (0.0,),
+                     overflows: Sequence[str] = ("reject",),
+                     retry_rates: Sequence[float] = (0.0,)
+                     ) -> "SweepGrid":
         """Cartesian product of per-axis values, flattened to one grid."""
         dist_codes = [DIST_CODE[d] if isinstance(d, str) else int(d)
                       for d in dists]
         mesh = np.meshgrid(_as_f32(lams), _as_f32(alphas), _as_f32(tau0s),
                            _as_i32(b_maxes), _as_i32(dist_codes),
                            _as_f32(cvs), _as_f32(wait_maxes),
-                           _as_i32(wait_targets), indexing="ij")
+                           _as_i32(wait_targets), _as_i32(q_maxes),
+                           _as_f32(deadlines),
+                           _as_i32(_as_overflow_codes(list(overflows))),
+                           _as_f32(retry_rates), indexing="ij")
         flat = [m.reshape(-1) for m in mesh]
         return cls(flat[0].astype(np.float32), flat[1].astype(np.float32),
                    flat[2].astype(np.float32), flat[3].astype(np.int32),
                    flat[4].astype(np.int32), flat[5].astype(np.float32),
-                   flat[6].astype(np.float32), flat[7].astype(np.int32))
+                   flat[6].astype(np.float32), flat[7].astype(np.int32),
+                   flat[8].astype(np.int32), flat[9].astype(np.float32),
+                   flat[10].astype(np.int32), flat[11].astype(np.float32))
 
     @classmethod
     def from_rhos(cls, rhos: Sequence[float], alpha: float, tau0: float,
@@ -148,7 +200,8 @@ class SweepGrid(_GridOps):
 
     def _arrays(self) -> Tuple[np.ndarray, ...]:
         return (self.lam, self.alpha, self.tau0, self.b_max, self.dist,
-                self.cv, self.wait_max, self.wait_target)
+                self.cv, self.wait_max, self.wait_target, self.q_max,
+                self.deadline, self.overflow, self.retry_rate)
 
 
 def _as_route_codes(routing) -> List[int]:
@@ -181,11 +234,14 @@ class FleetGrid(SweepGrid):
 
     @classmethod
     def from_points(cls, lam, alpha, tau0, *, k=1, routing="jsq", b_max=0,
-                    dist="det", cv=0.5, wait_max=0.0,
-                    wait_target=0) -> "FleetGrid":
+                    dist="det", cv=0.5, wait_max=0.0, wait_target=0,
+                    q_max=0, deadline=0.0, overflow="reject",
+                    retry_rate=0.0) -> "FleetGrid":
         base = SweepGrid.from_points(lam, alpha, tau0, b_max=b_max,
                                      dist=dist, cv=cv, wait_max=wait_max,
-                                     wait_target=wait_target)
+                                     wait_target=wait_target, q_max=q_max,
+                                     deadline=deadline, overflow=overflow,
+                                     retry_rate=retry_rate)
         n = len(base)
         ks = _as_i32(k)
         routes = _as_i32(_as_route_codes(routing))
@@ -204,13 +260,21 @@ class FleetGrid(SweepGrid):
                      dists: Sequence[str] = ("det",),
                      cvs: Sequence[float] = (0.5,),
                      wait_maxes: Sequence[float] = (0.0,),
-                     wait_targets: Sequence[int] = (0,)) -> "FleetGrid":
+                     wait_targets: Sequence[int] = (0,),
+                     q_maxes: Sequence[int] = (0,),
+                     deadlines: Sequence[float] = (0.0,),
+                     overflows: Sequence[str] = ("reject",),
+                     retry_rates: Sequence[float] = (0.0,)
+                     ) -> "FleetGrid":
         dist_codes = [DIST_CODE[d] if isinstance(d, str) else int(d)
                       for d in dists]
         mesh = np.meshgrid(_as_f32(lams), _as_f32(alphas), _as_f32(tau0s),
                            _as_i32(b_maxes), _as_i32(dist_codes),
                            _as_f32(cvs), _as_f32(wait_maxes),
-                           _as_i32(wait_targets), _as_i32(ks),
+                           _as_i32(wait_targets), _as_i32(q_maxes),
+                           _as_f32(deadlines),
+                           _as_i32(_as_overflow_codes(list(overflows))),
+                           _as_f32(retry_rates), _as_i32(ks),
                            _as_i32(_as_route_codes(routings)),
                            indexing="ij")
         flat = [m.reshape(-1) for m in mesh]
@@ -218,14 +282,17 @@ class FleetGrid(SweepGrid):
                    flat[2].astype(np.float32), flat[3].astype(np.int32),
                    flat[4].astype(np.int32), flat[5].astype(np.float32),
                    flat[6].astype(np.float32), flat[7].astype(np.int32),
-                   flat[8].astype(np.int32), flat[9].astype(np.int32))
+                   flat[8].astype(np.int32), flat[9].astype(np.float32),
+                   flat[10].astype(np.int32), flat[11].astype(np.float32),
+                   flat[12].astype(np.int32), flat[13].astype(np.int32))
 
     @classmethod
     def from_rhos(cls, rhos: Sequence[float], alpha: float, tau0: float,
                   *, ks: Sequence[int] = (1,),
                   routings: Sequence[str] = ("jsq",), b_max=0,
                   dist="det", cv=0.5, wait_max=0.0,
-                  wait_target=0) -> "FleetGrid":
+                  wait_target=0, q_max=0, deadline=0.0,
+                  overflow="reject", retry_rate=0.0) -> "FleetGrid":
         """Grid over *per-replica* loads ρ = λα/k for one service model —
         each (ρ, k) point gets total rate λ = kρ/α, so replicas face the
         same offered load regardless of k.
@@ -245,7 +312,9 @@ class FleetGrid(SweepGrid):
         return cls.from_points(lam_pts, alpha, tau0, k=k_pts,
                                routing=route_pts, b_max=b_max,
                                dist=dist, cv=cv, wait_max=wait_max,
-                               wait_target=wait_target)
+                               wait_target=wait_target, q_max=q_max,
+                               deadline=deadline, overflow=overflow,
+                               retry_rate=retry_rate)
 
     def _arrays(self) -> Tuple[np.ndarray, ...]:
         return (*super()._arrays(), self.k, self.routing)
@@ -279,6 +348,20 @@ class GenGrid(_GridOps):
     gen_tokens: np.ndarray
     max_active: np.ndarray
     discipline: np.ndarray
+    q_max: np.ndarray
+    deadline: np.ndarray
+    overflow: np.ndarray
+    retry_rate: np.ndarray
+
+    @property
+    def has_loss(self) -> bool:
+        """True when any point enables an admission-control regime."""
+        return bool(np.any(self.q_max > 0) or np.any(self.deadline > 0)
+                    or np.any(self.retry_rate > 0))
+
+    @property
+    def overflow_names(self) -> List[str]:
+        return [OVERFLOW_NAME[int(o)] for o in self.overflow]
 
     @property
     def rho(self) -> np.ndarray:
@@ -307,12 +390,17 @@ class GenGrid(_GridOps):
     @classmethod
     def from_points(cls, lam, alpha_decode, tau0_decode, alpha_prefill,
                     tau0_prefill, *, prompt_len=128, gen_tokens=32,
-                    max_active=64, discipline="continuous") -> "GenGrid":
+                    max_active=64, discipline="continuous", q_max=0,
+                    deadline=0.0, overflow="reject",
+                    retry_rate=0.0) -> "GenGrid":
         arrays = [_as_f32(lam), _as_f32(alpha_decode), _as_f32(tau0_decode),
                   _as_f32(alpha_prefill), _as_f32(tau0_prefill),
                   _as_i32(prompt_len), _as_i32(gen_tokens),
                   _as_i32(max_active),
-                  _as_i32(_as_disc_codes(discipline))]
+                  _as_i32(_as_disc_codes(discipline)),
+                  _as_i32(q_max), _as_f32(deadline),
+                  _as_i32(_as_overflow_codes(overflow)),
+                  _as_f32(retry_rate)]
         n = max(a.shape[0] for a in arrays)
         arrays = [np.broadcast_to(a, (n,)).copy() if a.shape[0] == 1 else a
                   for a in arrays]
@@ -329,7 +417,11 @@ class GenGrid(_GridOps):
                      prompt_lens: Sequence[int] = (128,),
                      gen_tokens: Sequence[int] = (32,),
                      max_actives: Sequence[int] = (64,),
-                     disciplines: Sequence[str] = ("continuous",)
+                     disciplines: Sequence[str] = ("continuous",),
+                     q_maxes: Sequence[int] = (0,),
+                     deadlines: Sequence[float] = (0.0,),
+                     overflows: Sequence[str] = ("reject",),
+                     retry_rates: Sequence[float] = (0.0,)
                      ) -> "GenGrid":
         """Cartesian product of the sweep axes for one token-level
         service model (a ``GenServiceModel`` or anything with its four
@@ -337,20 +429,27 @@ class GenGrid(_GridOps):
         disc = _as_i32(_as_disc_codes(list(disciplines)))
         mesh = np.meshgrid(_as_f32(lams), _as_i32(prompt_lens),
                            _as_i32(gen_tokens), _as_i32(max_actives),
-                           disc, indexing="ij")
+                           disc, _as_i32(q_maxes), _as_f32(deadlines),
+                           _as_i32(_as_overflow_codes(list(overflows))),
+                           _as_f32(retry_rates), indexing="ij")
         flat = [m.reshape(-1) for m in mesh]
         return cls.from_points(
             flat[0].astype(np.float32), model.alpha_decode,
             model.tau0_decode, model.alpha_prefill, model.tau0_prefill,
             prompt_len=flat[1], gen_tokens=flat[2], max_active=flat[3],
-            discipline=flat[4])
+            discipline=flat[4], q_max=flat[5], deadline=flat[6],
+            overflow=flat[7], retry_rate=flat[8])
 
     @classmethod
     def from_rhos(cls, rhos: Sequence[float], model, *,
                   prompt_lens: Sequence[int] = (128,),
                   gen_tokens: Sequence[int] = (32,),
                   max_actives: Sequence[int] = (64,),
-                  disciplines: Sequence[str] = ("continuous",)
+                  disciplines: Sequence[str] = ("continuous",),
+                  q_maxes: Sequence[int] = (0,),
+                  deadlines: Sequence[float] = (0.0,),
+                  overflows: Sequence[str] = ("reject",),
+                  retry_rates: Sequence[float] = (0.0,)
                   ) -> "GenGrid":
         """Product grid over decode-capacity-normalized loads ρ: each
         (ρ, prompt, gen, ...) point gets λ = ρ/(gen·α_d + prompt·α_p),
@@ -360,7 +459,10 @@ class GenGrid(_GridOps):
                                 prompt_lens=prompt_lens,
                                 gen_tokens=gen_tokens,
                                 max_actives=max_actives,
-                                disciplines=disciplines)
+                                disciplines=disciplines,
+                                q_maxes=q_maxes, deadlines=deadlines,
+                                overflows=overflows,
+                                retry_rates=retry_rates)
         reps = len(grid) // len(rhos)
         rho_pts = np.repeat(_as_f32(list(rhos)), reps)
         lam = rho_pts / (grid.gen_tokens * grid.alpha_decode
@@ -370,7 +472,9 @@ class GenGrid(_GridOps):
     def _arrays(self) -> Tuple[np.ndarray, ...]:
         return (self.lam, self.alpha_decode, self.tau0_decode,
                 self.alpha_prefill, self.tau0_prefill, self.prompt_len,
-                self.gen_tokens, self.max_active, self.discipline)
+                self.gen_tokens, self.max_active, self.discipline,
+                self.q_max, self.deadline, self.overflow,
+                self.retry_rate)
 
 
 @dataclass(frozen=True)
@@ -491,10 +595,73 @@ class MarkovGridResult:
         return [self.point(i) for i in range(len(self))]
 
 
+class _LossAccounting:
+    """Derived goodput/loss metrics shared by the MC result classes.
+
+    Every *measured* job is counted exactly once at its terminal outcome
+    (a retried job is one offered job; its re-arrivals only inflate
+    ``n_retry``): ``offered = n_jobs + overflow_dropped + abandoned``,
+    and ``goodput_frac + late_frac + reject_frac + abandon_frac = 1``
+    exactly.  Without loss regimes every fraction degenerates correctly
+    (goodput_frac = 1, losses = 0, retry_inflation = 1)."""
+
+    @property
+    def offered(self) -> np.ndarray:
+        """Measured jobs reaching a terminal outcome (done or lost)."""
+        return (self.n_jobs + self.overflow_dropped
+                + self.abandoned).astype(np.float64)
+
+    @property
+    def _offered_safe(self) -> np.ndarray:
+        return np.maximum(self.offered, 1.0)
+
+    @property
+    def goodput_frac(self) -> np.ndarray:
+        """Fraction of offered jobs completed within their deadline."""
+        return self.n_in_slo / self._offered_safe
+
+    @property
+    def reject_frac(self) -> np.ndarray:
+        """Fraction of offered jobs finally lost to the waiting room."""
+        return self.overflow_dropped / self._offered_safe
+
+    @property
+    def abandon_frac(self) -> np.ndarray:
+        """Fraction of offered jobs that finally reneged in queue."""
+        return self.abandoned / self._offered_safe
+
+    @property
+    def late_frac(self) -> np.ndarray:
+        """Fraction completed but past deadline (0 with no deadline)."""
+        return (self.n_jobs - self.n_in_slo) / self._offered_safe
+
+    @property
+    def goodput(self) -> np.ndarray:
+        """Rate of jobs completed within SLO, λ·goodput_frac."""
+        return self.grid.lam * self.goodput_frac
+
+    @property
+    def throughput(self) -> np.ndarray:
+        """Rate of jobs completed at all, λ·(n_jobs/offered)."""
+        return self.grid.lam * (self.n_jobs / self._offered_safe)
+
+    @property
+    def retry_inflation(self) -> np.ndarray:
+        """Arrival-stream inflation (fresh+retry)/fresh ≥ 1."""
+        return ((self.n_fresh + self.n_retry)
+                / np.maximum(self.n_fresh, 1.0))
+
+
 @dataclass
-class SweepResult:
+class SweepResult(_LossAccounting):
     """Struct-of-arrays sweep output; ``point(i)``/``to_results()`` view it
-    through the backend-independent ``SimResult`` schema."""
+    through the backend-independent ``SimResult`` schema.
+
+    ``buffer_dropped`` is the capacity-sizing witness — arrivals lost to
+    the *internal* buffer clamps (``q_cap``/``a_cap``), which must stay 0
+    in a well-sized run.  ``overflow_dropped``/``abandoned`` are the
+    *measured* admission-control losses (finite ``q_max`` overflow and
+    deadline reneging) — legitimate outputs, not witnesses."""
 
     grid: SweepGrid
     mean_latency: np.ndarray
@@ -508,7 +675,12 @@ class SweepResult:
     n_jobs: np.ndarray
     n_batches: np.ndarray
     max_queue: np.ndarray
-    dropped: np.ndarray                  # arrivals lost to capacity clamps
+    buffer_dropped: np.ndarray        # arrivals lost to capacity clamps
+    overflow_dropped: np.ndarray      # finite-q_max losses (both modes)
+    abandoned: np.ndarray             # deadline reneges in queue
+    n_in_slo: np.ndarray              # completions within deadline
+    n_fresh: np.ndarray               # measured first-time arrivals
+    n_retry: np.ndarray               # measured orbit re-arrivals
     hist: np.ndarray = field(repr=False)           # (N, n_bins) counts
 
     @property
@@ -542,6 +714,10 @@ class SweepResult:
             latency_p99=float(self.latency_p99[i]),
             n_batches=int(self.n_batches[i]),
             backend="sweep",
+            goodput_frac=float(self.goodput_frac[i]),
+            reject_frac=float(self.reject_frac[i]),
+            abandon_frac=float(self.abandon_frac[i]),
+            retry_inflation=float(self.retry_inflation[i]),
         )
 
     def to_results(self) -> List[SimResult]:
@@ -572,7 +748,7 @@ class FleetResult(SweepResult):
 
 
 @dataclass
-class GenResult:
+class GenResult(_LossAccounting):
     """Token-level sweep output (one entry per ``GenGrid`` point).
 
     ``mean_batch``/``batch_m2`` are moments of the *active batch size
@@ -581,7 +757,10 @@ class GenResult:
     every batch contributes ``gen_tokens`` equal steps).  ``n_steps``
     counts measured decode steps; ``n_jobs`` counts requests that
     *finished* inside the measured window (their latencies feed
-    ``mean_latency`` and the histogram percentiles)."""
+    ``mean_latency`` and the histogram percentiles).  The loss counters
+    follow the ``SweepResult`` split: ``buffer_dropped`` is the capacity
+    witness (must stay 0), ``overflow_dropped``/``abandoned`` the
+    measured admission-control losses."""
 
     grid: GenGrid
     mean_latency: np.ndarray
@@ -594,7 +773,12 @@ class GenResult:
     n_jobs: np.ndarray
     n_steps: np.ndarray
     max_queue: np.ndarray
-    dropped: np.ndarray                  # arrivals lost to capacity clamps
+    buffer_dropped: np.ndarray        # arrivals lost to capacity clamps
+    overflow_dropped: np.ndarray      # finite-q_max losses (both modes)
+    abandoned: np.ndarray             # deadline reneges in queue
+    n_in_slo: np.ndarray              # completions within deadline
+    n_fresh: np.ndarray               # measured first-time arrivals
+    n_retry: np.ndarray               # measured orbit re-arrivals
     hist: np.ndarray = field(repr=False)           # (N, n_bins) counts
 
     @property
@@ -623,6 +807,10 @@ class GenResult:
             n_batches=int(self.n_steps[i]),
             backend="gen",
             discipline=DISC_NAME[int(self.grid.discipline[i])],
+            goodput_frac=float(self.goodput_frac[i]),
+            reject_frac=float(self.reject_frac[i]),
+            abandon_frac=float(self.abandon_frac[i]),
+            retry_inflation=float(self.retry_inflation[i]),
         )
 
     def to_results(self) -> List[SimResult]:

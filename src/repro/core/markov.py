@@ -74,8 +74,8 @@ from repro.core import chain_solver
 from repro.core.analytic import LinearServiceModel
 from repro.core.grid import MarkovGrid, MarkovGridResult
 
-__all__ = ["MarkovResult", "solve", "solve_batch", "solve_grid",
-           "poisson_pmf_row"]
+__all__ = ["MarkovResult", "MarkovLossResult", "solve", "solve_batch",
+           "solve_grid", "solve_loss", "poisson_pmf_row"]
 
 _TRUNC_START = 256           # adaptive growth starts here
 _TRUNC_CAP_DENSE = 8192      # dense adaptive growth stops here (0.5 GB)
@@ -319,6 +319,91 @@ def solve(lam: float, model: LinearServiceModel, *,
         if res.tail_mass <= tail_tol or K >= _adaptive_cap(method):
             return res
         K = min(2 * K, _adaptive_cap(method))
+
+
+@dataclass
+class MarkovLossResult:
+    """Exact metrics of the finite-waiting-room M/D[b]/1/q_max chain
+    under reject-at-arrival admission (the "429" overflow mode)."""
+
+    lam: float
+    q_max: int
+    mean_latency: float              # E[W] of *admitted* jobs (Little)
+    mean_batch: float
+    batch_m2: float
+    utilization: float
+    mean_queue: float                # time-average jobs in system
+    loss_frac: float                 # P(arrival finds the room full)
+    goodput: float                   # λ·(1 − loss_frac)
+    pi: np.ndarray                   # stationary dist over 0..q_max
+    method: str = "band"
+
+
+def solve_loss(lam: float, model: LinearServiceModel, *,
+               q_max: int, b_max: float = math.inf,
+               method: str = "auto") -> MarkovLossResult:
+    """Solve the finite-waiting-room chain exactly — no truncation
+    error at all, because the waiting room IS the state space.
+
+    The embedded chain of the q_max-room system under reject admission
+    coincides with the K = q_max *truncated* chain: lumping each row's
+    tail at state K is exactly "the room filled and later arrivals were
+    rejected".  So the banded machinery of ``repro.core.chain_solver``
+    applies verbatim — only the renewal-reward layer changes
+    (``chain_loss_metrics``: loss fraction from the per-cycle expected
+    excess, occupancy integral clipped at the room, Little's law over
+    admitted jobs).  Unlike the infinite-room chain this one is
+    positive recurrent at ANY load — ρ > 1 is a perfectly good regime
+    (that is what admission control is for) — but the *banded* path
+    inherits ``build_chain``'s diagonal-attachment domain, so
+    ``method="auto"`` (default) takes the band and falls back to the
+    dense LU transparently; "band"/"gth"/"dense" force a path."""
+    if lam <= 0:
+        raise ValueError("lam must be > 0")
+    if q_max < 1:
+        raise ValueError("q_max must be >= 1 (use the lossless solve "
+                         "for an infinite room)")
+    if not math.isinf(b_max) and b_max < 1:
+        raise ValueError("b_max must be >= 1")
+    if method not in ("auto", "band", "gth", "dense"):
+        raise ValueError(f"unknown method {method!r}; pick from "
+                         f"('auto', 'band', 'gth', 'dense')")
+    K = int(q_max)
+    _check_truncation(K, "dense" if method == "dense" else "struct")
+
+    resolved = method
+    if method == "dense":
+        pi = None
+    else:
+        try:
+            ch = chain_solver.build_chain(lam, model, b_max, K)
+            pi = chain_solver.solve_pi(
+                ch, method="gth" if method == "gth" else "band")
+            resolved = "gth" if method == "gth" else "band"
+        except ValueError:
+            if method != "auto":
+                raise
+            pi = None
+    if pi is None:
+        s = _ChainStructure(model, b_max, K)
+        P = _transition_matrix(lam, s, K)
+        A = (P - np.eye(K + 1)).T
+        A[-1, :] = 1.0
+        rhs = np.zeros(K + 1)
+        rhs[-1] = 1.0
+        pi = np.clip(np.linalg.solve(A, rhs), 0.0, None)
+        pi /= pi.sum()
+        t_of, b_of = s.t_of[:K + 1], s.b_of[:K + 1]
+        resolved = "dense"
+    else:
+        t_of, b_of = ch.t_of, ch.b_of
+    m = chain_solver.chain_loss_metrics(lam, pi, t_of, b_of, K)
+    return MarkovLossResult(
+        lam=lam, q_max=K, mean_latency=m["mean_latency"],
+        mean_batch=m["mean_batch"], batch_m2=m["batch_m2"],
+        utilization=m["utilization"], mean_queue=m["mean_queue"],
+        loss_frac=m["loss_frac"], goodput=m["goodput"], pi=pi,
+        method=resolved)
 
 
 def solve_batch(lams: Sequence[float], model: LinearServiceModel, *,

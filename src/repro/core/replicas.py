@@ -94,9 +94,9 @@ def fleet_latency(lams: Sequence[float], model: LinearServiceModel,
                                  k=list(ks), routing=routing)
     r = fleet_sweep(grid, n_steps=n_steps, seed=seed, q_cap=q_cap,
                     a_cap=a_cap, hist_every=hist_every)
-    if require_clean and int(r.dropped.sum()):
+    if require_clean and int(r.buffer_dropped.sum()):
         raise RuntimeError(
-            f"fleet sweep dropped {int(r.dropped.sum())} arrivals; "
+            f"fleet sweep dropped {int(r.buffer_dropped.sum())} arrivals; "
             "raise q_cap (or lower the load)")
     return r.mean_latency
 

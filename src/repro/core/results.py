@@ -53,6 +53,12 @@ class SimResult:
     discipline: str = ""                  # generate scheduling discipline
     #                                       ("static"/"continuous"; "" when
     #                                       the backend is request-level)
+    # -- SLO / admission-control metrics (NaN when the point ran without
+    #    loss regimes on a backend that predates them) ---------------------
+    goodput_frac: float = _NAN            # P(job completes within deadline)
+    reject_frac: float = _NAN             # P(job finally lost to q_max)
+    abandon_frac: float = _NAN            # P(job finally reneges in queue)
+    retry_inflation: float = _NAN         # (fresh+retry)/fresh arrivals
     batch_sizes: Optional[np.ndarray] = field(default=None, repr=False)
     latencies: Optional[np.ndarray] = field(default=None, repr=False)
 
@@ -73,8 +79,19 @@ class SimResult:
 
     @property
     def throughput(self) -> float:
-        """Mean departure rate = λ in steady state (sanity/reporting)."""
-        return self.lam
+        """Mean departure rate: λ in a lossless steady state, scaled by
+        the completing fraction when admission-control losses are on."""
+        if math.isnan(self.reject_frac) or math.isnan(self.abandon_frac):
+            return self.lam
+        return self.lam * (1.0 - self.reject_frac - self.abandon_frac)
+
+    @property
+    def goodput(self) -> float:
+        """Rate of jobs completed within SLO, λ·goodput_frac (λ when the
+        point ran without loss regimes)."""
+        if math.isnan(self.goodput_frac):
+            return self.lam
+        return self.lam * self.goodput_frac
 
     def check(self) -> "SimResult":
         """Cheap internal-consistency assertions (used by tests).
@@ -86,4 +103,10 @@ class SimResult:
         if not math.isnan(self.latency_p50):
             assert (self.latency_p50 <= self.latency_p95 + 1e-12
                     <= self.latency_p99 + 2e-12)
+        for frac in (self.goodput_frac, self.reject_frac,
+                     self.abandon_frac):
+            if not math.isnan(frac):
+                assert -1e-9 <= frac <= 1.0 + 1e-9
+        if not math.isnan(self.retry_inflation):
+            assert self.retry_inflation >= 1.0 - 1e-9
         return self

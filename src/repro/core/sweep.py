@@ -56,15 +56,16 @@ from jax import lax, random
 from repro.core import engine
 from repro.core.engine import ShardSpec
 from repro.core.grid import (  # noqa: F401  (re-exported for back-compat)
-    DIST_CODE, DIST_NAME, ROUTE_CODE, ROUTE_NAME, FleetGrid, FleetResult,
-    SweepGrid, SweepResult)
+    DIST_CODE, DIST_NAME, OVERFLOW_CODE, OVERFLOW_NAME, ROUTE_CODE,
+    ROUTE_NAME, FleetGrid, FleetResult, SweepGrid, SweepResult)
 from repro.core.hist import (bit_bins, hist_edges,
                              hist_percentiles as _hist_percentiles,
                              thinned_rows)
 
-__all__ = ["DIST_CODE", "DIST_NAME", "ROUTE_CODE", "ROUTE_NAME",
-           "SweepGrid", "SweepResult", "FleetGrid", "FleetResult",
-           "sweep", "fleet_sweep", "hist_edges"]
+__all__ = ["DIST_CODE", "DIST_NAME", "OVERFLOW_CODE", "OVERFLOW_NAME",
+           "ROUTE_CODE", "ROUTE_NAME", "SweepGrid", "SweepResult",
+           "FleetGrid", "FleetResult", "sweep", "fleet_sweep",
+           "hist_edges"]
 
 # per-point fold_in keys live in the shared engine layer now; the alias
 # keeps older import sites working
@@ -80,10 +81,13 @@ _point_keys = engine.point_keys
 _REBASE_EVERY = 32
 
 
+_OV_REJECT = OVERFLOW_CODE["reject"]
+
+
 @engine.kernel_cache(maxsize=32)
 def _build_kernel(n_batches: int, warmup: int, q_cap: int, a_cap: int,
                   n_bins: int, has_timeout: bool, all_det: bool,
-                  n_dev: int):
+                  has_loss: bool, r_cap: int, n_dev: int):
     """Compile-time specialization of the per-point scan kernel.
 
     The waiting room is a *linear compacted* buffer: waiting jobs always
@@ -96,27 +100,67 @@ def _build_kernel(n_batches: int, warmup: int, q_cap: int, a_cap: int,
     beyond ``q`` hold garbage from past appends; they can only become
     live through a later append that overwrites them first, so the
     invariant "``buf[0:q]`` = the waiting jobs, oldest first" holds
-    throughout."""
+    throughout.
+
+    ``has_loss = False`` traces exactly the pre-admission-control
+    kernel (every loss op sits behind this compile-time flag), so
+    loss-free grids keep their bitwise-pinned results.  With
+    ``has_loss = True`` the step adds, in order: reject-mode admission
+    inside every window push (prefix-greedy against the per-point
+    ``room``), deadline reneging of the expired FIFO prefix at the
+    formation epoch, the drop-mode tail trim to ``q_max`` after the
+    pop, and the bounded retry orbit assessed at the departure epoch
+    (re-arrivals join with arrival time ``depart``; a batch emptied by
+    reneging has ``b = 0``, costs no service time, and the next step
+    idles)."""
 
     i32 = jnp.int32
     f32 = jnp.float32
-    buf_len = q_cap + a_cap              # append region starts at q <= q_cap
+    #  append region starts at q <= q_cap; the retry block appends after
+    #  the service-window block, also at q <= q_cap
+    buf_len = q_cap + a_cap + (r_cap if has_loss else 0)
     slots = jnp.arange(q_cap)
-
-    def push_arrivals(buf, q, dropped, k_u, rate, t0, win):
-        """Constructive Poisson window push — the shared engine helper
-        (exp-gap/cumsum epochs, sentinel coverage detection, capacity
-        clamp, contiguous tail-append; see ``engine.push_poisson_window``
-        for the exactness argument)."""
-        return engine.push_poisson_window(buf, q, dropped, k_u, rate,
-                                          t0, win, a_cap=a_cap,
-                                          q_cap=q_cap)
 
     def run_point(p, key):
         lam, alpha, tau0 = p["lam"], p["alpha"], p["tau0"]
         b_max = jnp.where(p["b_max"] > 0, p["b_max"], q_cap).astype(i32)
         dist, cv = p["dist"], p["cv"]
         wait_max, wait_target = p["wait_max"], p["wait_target"]
+        if has_loss:
+            q_lim = p["q_max"].astype(i32)
+            deadline = p["deadline"]
+            retry_rate = p["retry_rate"]
+            retry_on = retry_rate > 0.0
+            is_reject = p["overflow"] == _OV_REJECT
+            # instantaneous-admission bound ("429"): binds per arrival
+            # in reject mode, q_cap (buffer only) in drop mode
+            roomv = jnp.where((q_lim > 0) & is_reject, q_lim, q_cap)
+            # formation-epoch bound ("503"): drop mode trims the newest
+            # waiting jobs beyond q_max after each pop
+            trim_to = jnp.where((q_lim > 0) & ~is_reject, q_lim, q_cap)
+            # retries re-enter against the physical room in both modes
+            retry_room = jnp.where(q_lim > 0,
+                                   jnp.minimum(q_lim, q_cap), q_cap)
+
+        def push_arrivals(buf, q, dropped, lost_ov, offered, k_u, rate,
+                          t0, win):
+            """Constructive Poisson window push — the shared engine
+            helpers (exp-gap/cumsum epochs, sentinel coverage detection,
+            capacity clamp, contiguous tail-append; see
+            ``engine.push_poisson_window`` for the exactness argument).
+            The loss variant additionally tests each arrival against the
+            per-point admission ``room`` and accounts the rejected ones
+            as measured overflow losses."""
+            if has_loss:
+                buf, q, dropped, acc, rej = \
+                    engine.push_poisson_window_loss(
+                        buf, q, dropped, k_u, rate, t0, win,
+                        a_cap=a_cap, q_cap=q_cap, room=roomv)
+                return buf, q, dropped, lost_ov + rej, offered + acc + rej
+            buf, q, dropped = engine.push_poisson_window(
+                buf, q, dropped, k_u, rate, t0, win, a_cap=a_cap,
+                q_cap=q_cap)
+            return buf, q, dropped, lost_ov, offered
 
         def step(state, i):
             # All times in the step are RELATIVE to the previous batch
@@ -124,10 +168,23 @@ def _build_kernel(n_batches: int, warmup: int, q_cap: int, a_cap: int,
             # so float32 precision is set by queue sojourn magnitudes,
             # not by total simulated time — n_batches can grow without
             # degrading per-job latency resolution.
-            (q, buf, key, lat_sum, lat_n, sum_b, sum_b2, sum_bs,
-             n_meas, busy, span, q_max, dropped) = state
+            if has_loss:
+                (q, buf, key, lat_sum, lat_n, sum_b, sum_b2, sum_bs,
+                 n_meas, busy, span, q_max, dropped,
+                 orbit, ov_n, ab_n, slo_n, fresh_n, retry_n) = state
+            else:
+                (q, buf, key, lat_sum, lat_n, sum_b, sum_b2, sum_bs,
+                 n_meas, busy, span, q_max, dropped) = state
+            # the split count must not depend on has_loss — split(k, n)
+            # re-keys ALL children when n changes, which would unpin the
+            # neutral-grid bitwise reduction; the orbit key is derived
+            # by fold_in instead
             ks = random.split(key, 5)
             key = ks[0]
+            if has_loss:
+                korb = random.fold_in(ks[0], 0x0b17)
+            zero = jnp.zeros((), i32)
+            lost_ov = lost_ab = fresh = zero
 
             # idle period: the step begins when a job arrives to an
             # empty system (a.s. exactly one arrival ends the idle);
@@ -137,6 +194,7 @@ def _build_kernel(n_batches: int, warmup: int, q_cap: int, a_cap: int,
             now = jnp.where(empty, gap, 0.0)
             buf = buf.at[0].set(jnp.where(empty, now, buf[0]))
             q = q + empty.astype(i32)
+            fresh = fresh + empty.astype(i32)
 
             # optional timeout delay before service starts
             if has_timeout:
@@ -144,10 +202,18 @@ def _build_kernel(n_batches: int, warmup: int, q_cap: int, a_cap: int,
                 do_wait = (wait_max > 0.0) & (q < wait_target)
                 release = jnp.where(
                     do_wait, jnp.maximum(now, oldest + wait_max), now)
-                buf, q, dropped = push_arrivals(
-                    buf, q, dropped, ks[2], lam, now, release - now)
+                buf, q, dropped, lost_ov, fresh = push_arrivals(
+                    buf, q, dropped, lost_ov, fresh, ks[2], lam, now,
+                    release - now)
             else:
                 release = now
+
+            if has_loss:
+                # deadline reneging at the formation epoch: expired
+                # jobs are a contiguous FIFO prefix (ascending ages)
+                buf, q, n_exp = engine.renege_prefix(
+                    buf, q, release, deadline, q_cap)
+                lost_ab = lost_ab + n_exp
 
             # form the batch: policy take = min(waiting, cap), FIFO
             b = jnp.minimum(q, b_max)
@@ -158,6 +224,10 @@ def _build_kernel(n_batches: int, warmup: int, q_cap: int, a_cap: int,
                 kshape = jnp.where(dist == 1, 1.0, 1.0 / (cv * cv))
                 g = random.gamma(ks[3], kshape) / kshape
                 s = jnp.where(dist == 0, mean_s, mean_s * g)
+            if has_loss:
+                # a queue emptied by reneging forms no batch: no
+                # service time elapses and the next step idles
+                s = jnp.where(b > 0, s, 0.0)
             depart = release + s
 
             # pop the b oldest jobs (the buffer prefix); their latency
@@ -167,14 +237,52 @@ def _build_kernel(n_batches: int, warmup: int, q_cap: int, a_cap: int,
             buf = engine.fifo_pop_shift(buf, b, q_cap)
             q = q - b
 
+            if has_loss:
+                # drop-mode ("503") eviction: the newest waiting jobs
+                # beyond q_max leave at the formation epoch
+                trim = jnp.maximum(q - trim_to, 0)
+                q = q - trim
+                lost_ov = lost_ov + trim
+
             # arrivals during the service period join the queue
-            buf, q, dropped = push_arrivals(
-                buf, q, dropped, ks[4], lam, release, s)
+            buf, q, dropped, lost_ov, fresh = push_arrivals(
+                buf, q, dropped, lost_ov, fresh, ks[4], lam, release, s)
+
+            meas = i >= warmup
+            if has_loss:
+                # bounded retry orbit, assessed at the departure epoch:
+                # each orbit job fires with p = 1 − exp(−rate·elapsed)
+                # (exact Binomial thinning, fixed-shape RNG); admitted
+                # re-arrivals join with arrival time `depart`, the rest
+                # return to the orbit.  THEN this step's fresh losses
+                # are filed — abandoned before overflow — and whatever
+                # the orbit cannot hold becomes a terminal loss.
+                p_fire = 1.0 - jnp.exp(-retry_rate * depart)
+                n_r = engine.orbit_draws(korb, orbit, p_fire, r_cap)
+                orbit = orbit - n_r
+                admit_r = jnp.minimum(
+                    n_r, jnp.maximum(retry_room - q, 0))
+                orbit = orbit + (n_r - admit_r)
+                buf = engine.fifo_append(
+                    buf, q, jnp.full((r_cap,), depart, f32))
+                q = q + admit_r
+                orbit, term_ab, term_ov = engine.orbit_file(
+                    orbit, lost_ab, lost_ov, r_cap, retry_on)
+                mi = meas.astype(i32)
+                ab_n = ab_n + mi * term_ab
+                ov_n = ov_n + mi * term_ov
+                fresh_n = fresh_n + mi * fresh
+                retry_n = retry_n + mi * n_r
+                in_slo = jnp.where(
+                    deadline > 0.0,
+                    jnp.sum((popmask & (lats <= deadline))
+                            .astype(i32)), b)
+                slo_n = slo_n + mi * in_slo
+
             # rebase the clock: the departure becomes the next origin
             buf = buf - depart
 
             # accumulate statistics after warmup
-            meas = i >= warmup
             mf = meas.astype(jnp.float32)
             bf = b.astype(jnp.float32)
             lat_sum = lat_sum + mf * lats.sum()
@@ -182,7 +290,13 @@ def _build_kernel(n_batches: int, warmup: int, q_cap: int, a_cap: int,
             sum_b = sum_b + mf * bf
             sum_b2 = sum_b2 + mf * bf * bf
             sum_bs = sum_bs + mf * bf * s
-            n_meas = n_meas + meas.astype(i32)
+            if has_loss:
+                # a b = 0 step (queue emptied by reneging) is not a
+                # batch; wall-clock/busy accumulators are untouched
+                # anyway (s = 0, depart = release)
+                n_meas = n_meas + (meas & (b > 0)).astype(i32)
+            else:
+                n_meas = n_meas + meas.astype(i32)
             busy = busy + mf * s
             span = span + mf * depart     # wall-clock advanced this step
             q_max = jnp.maximum(q_max, q)
@@ -190,9 +304,14 @@ def _build_kernel(n_batches: int, warmup: int, q_cap: int, a_cap: int,
             # the histogram scatter — whose per-call cost under vmap
             # dwarfs its per-element cost on CPU — is amortized to the
             # superstep wrapper; bins ride out as scan outputs
-            return (q, buf, key, lat_sum, lat_n, sum_b, sum_b2,
-                    sum_bs, n_meas, busy, span, q_max, dropped), \
-                (bit_bins(lats, n_bins), popmask & meas)
+            if has_loss:
+                out_state = (q, buf, key, lat_sum, lat_n, sum_b, sum_b2,
+                             sum_bs, n_meas, busy, span, q_max, dropped,
+                             orbit, ov_n, ab_n, slo_n, fresh_n, retry_n)
+            else:
+                out_state = (q, buf, key, lat_sum, lat_n, sum_b, sum_b2,
+                             sum_bs, n_meas, busy, span, q_max, dropped)
+            return out_state, (bit_bins(lats, n_bins), popmask & meas)
 
         def superstep(carry, i_base):
             state, hist = carry
@@ -208,15 +327,17 @@ def _build_kernel(n_batches: int, warmup: int, q_cap: int, a_cap: int,
                 jnp.zeros((), i32), jnp.zeros((), f32),   # n_meas, busy
                 jnp.zeros((), f32), jnp.zeros((), i32),   # span, q_max
                 jnp.zeros((), i32))
-        ((_, _, _, lat_sum, lat_n, sum_b, sum_b2, sum_bs, n_meas,
-          busy, span, _q_max, dropped),
-         hist), _ = lax.scan(
+        if has_loss:
+            init = init + tuple(jnp.zeros((), i32) for _ in range(6))
+        (state, hist), _ = lax.scan(
             superstep, (init, jnp.zeros((n_bins,), i32)),
             jnp.arange(n_batches // _REBASE_EVERY) * _REBASE_EVERY)
+        (_, _, _, lat_sum, lat_n, sum_b, sum_b2, sum_bs, n_meas,
+         busy, span, _q_max, dropped) = state[:13]
 
         jobs = jnp.maximum(lat_n, 1).astype(jnp.float32)
         nb = jnp.maximum(n_meas, 1).astype(jnp.float32)
-        return {
+        out = {
             "mean_latency": lat_sum / jobs,
             "mean_batch": sum_b / nb,
             "batch_m2": sum_b2 / nb,
@@ -228,14 +349,19 @@ def _build_kernel(n_batches: int, warmup: int, q_cap: int, a_cap: int,
             "dropped": dropped,
             "hist": hist,
         }
+        if has_loss:
+            (_orbit, ov_n, ab_n, slo_n, fresh_n, retry_n) = state[13:]
+            out.update(overflow_dropped=ov_n, abandoned=ab_n,
+                       n_in_slo=slo_n, n_fresh=fresh_n, n_retry=retry_n)
+        return out
 
     return engine.shard_kernel(jax.vmap(run_point), n_dev)
 
 
 def sweep(grid: SweepGrid, *, n_batches: int = 3000,
           warmup: Optional[int] = None, q_cap: Optional[int] = None,
-          a_cap: Optional[int] = None, n_bins: int = 512,
-          seed: int = 0, key_offset: int = 0,
+          a_cap: Optional[int] = None, r_cap: Optional[int] = None,
+          n_bins: int = 512, seed: int = 0, key_offset: int = 0,
           shard: ShardSpec = None) -> SweepResult:
     """Simulate every grid point for ``n_batches`` service completions in
     one jit-compiled device dispatch, sharded over the visible devices
@@ -246,7 +372,8 @@ def sweep(grid: SweepGrid, *, n_batches: int = 3000,
 
     ``q_cap`` bounds the waiting-room and ``a_cap`` the per-service-period
     arrival draw; both are *shape* parameters (compile-time), so points
-    whose dynamics exceed them clamp and report via ``dropped``.  The
+    whose dynamics exceed them clamp and report via ``buffer_dropped``.
+    The
     default (``None``) sizes them adaptively from the dispatched grid's
     own maximum load (``engine.queue_capacity``) instead of a global
     worst case; pass explicit values to pin the compiled shape.
@@ -256,6 +383,12 @@ def sweep(grid: SweepGrid, *, n_batches: int = 3000,
     ``engine.enable_host_devices``; ``False``/1 → single device; an int
     → that many shards).  Per-point fold_in keys make per-point results
     bitwise-invariant to the shard count.
+
+    Grids with loss regimes (any of ``q_max``/``deadline``/``retry_rate``
+    set) compile the loss-capable kernel variant; ``r_cap`` bounds the
+    retry orbit (defaults adaptively via ``engine.orbit_capacity``).
+    Loss-free grids trace the identical pre-admission-control kernel, so
+    their results stay bitwise-pinned.
     """
     if len(grid) == 0:
         raise ValueError("empty grid")
@@ -267,9 +400,12 @@ def sweep(grid: SweepGrid, *, n_batches: int = 3000,
         warmup = max(1, n_batches // 10)
     has_timeout = bool(np.any(grid.wait_max > 0.0))
     all_det = bool(np.all(grid.dist == DIST_CODE["det"]))
+    has_loss = grid.has_loss
     if q_cap is None:
         q_cap = engine.queue_capacity(grid.lam, grid.alpha, grid.tau0,
-                                      grid.b_max, grid.wait_max)
+                                      grid.b_max, grid.wait_max,
+                                      q_max=grid.q_max if has_loss
+                                      else None)
     if a_cap is None:
         if all_det and not has_timeout and not np.any(grid.b_max == 0):
             # deterministic service with a finite cap hard-bounds the
@@ -287,11 +423,18 @@ def sweep(grid: SweepGrid, *, n_batches: int = 3000,
         raise ValueError("a_cap must be <= q_cap (ring-buffer invariant)")
     if np.any(grid.b_max > q_cap):
         raise ValueError("b_max exceeds q_cap; raise q_cap")
+    if has_loss:
+        if np.any(grid.q_max > q_cap):
+            raise ValueError("q_max exceeds q_cap; raise q_cap")
+        if r_cap is None:
+            r_cap = engine.orbit_capacity(grid.lam, grid.retry_rate)
+    else:
+        r_cap = 0
     n = len(grid)
     n_dev = engine.resolve_shards(shard, n)
     kernel = _build_kernel(int(n_batches), int(warmup), int(q_cap),
                            int(a_cap), int(n_bins), has_timeout, all_det,
-                           n_dev)
+                           has_loss, int(r_cap), n_dev)
 
     params = {
         "lam": jnp.asarray(grid.lam), "alpha": jnp.asarray(grid.alpha),
@@ -300,8 +443,31 @@ def sweep(grid: SweepGrid, *, n_batches: int = 3000,
         "wait_max": jnp.asarray(grid.wait_max),
         "wait_target": jnp.asarray(grid.wait_target),
     }
+    if has_loss:
+        params.update(
+            q_max=jnp.asarray(grid.q_max),
+            deadline=jnp.asarray(grid.deadline),
+            overflow=jnp.asarray(grid.overflow),
+            retry_rate=jnp.asarray(grid.retry_rate))
     keys = engine.point_keys(seed, key_offset, n)
     out = engine.dispatch(kernel, params, keys, n, n_dev)
+
+    n_jobs = np.asarray(out["n_jobs"])
+    if has_loss:
+        loss_kw = dict(
+            overflow_dropped=np.asarray(out["overflow_dropped"]),
+            abandoned=np.asarray(out["abandoned"]),
+            n_in_slo=np.asarray(out["n_in_slo"]),
+            n_fresh=np.asarray(out["n_fresh"]),
+            n_retry=np.asarray(out["n_retry"]))
+    else:
+        # a loss-free grid completes every measured arrival in SLO
+        loss_kw = dict(
+            overflow_dropped=np.zeros_like(n_jobs),
+            abandoned=np.zeros_like(n_jobs),
+            n_in_slo=n_jobs.copy(),
+            n_fresh=n_jobs.copy(),
+            n_retry=np.zeros_like(n_jobs))
 
     p50, p95, p99 = _hist_percentiles(out["hist"], (50, 95, 99))
     return SweepResult(
@@ -313,11 +479,12 @@ def sweep(grid: SweepGrid, *, n_batches: int = 3000,
         mean_service=np.asarray(out["mean_service"], dtype=np.float64),
         utilization=np.clip(
             np.asarray(out["utilization"], dtype=np.float64), 0.0, 1.0),
-        n_jobs=np.asarray(out["n_jobs"]),
+        n_jobs=n_jobs,
         n_batches=np.asarray(out["n_batches"]),
         max_queue=np.asarray(out["max_queue"]),
-        dropped=np.asarray(out["dropped"]),
+        buffer_dropped=np.asarray(out["dropped"]),
         hist=np.asarray(out["hist"]),
+        **loss_kw,
     )
 
 
@@ -329,6 +496,7 @@ def sweep(grid: SweepGrid, *, n_batches: int = 3000,
 def _build_fleet_kernel(n_steps: int, warmup: int, k_max: int, q_cap: int,
                         a_cap: int, pop_cap: int, n_bins: int,
                         has_timeout: bool, all_det: bool, has_jsq: bool,
+                        has_loss: bool, r_cap: int,
                         hist_every: int, n_dev: int):
     """Compile-time specialization of the per-point fleet scan kernel.
 
@@ -357,8 +525,9 @@ def _build_fleet_kernel(n_steps: int, warmup: int, k_max: int, q_cap: int,
     the event is deferred to the next outer step, which resumes routing
     where this one stopped — exact, it just spends an extra step.  Only
     a replica queue exceeding ``q_cap`` actually loses arrivals, counted
-    in ``dropped`` (a correct run has ``dropped == 0``, the same
-    convention as the single-server kernel).  All times are rebased to
+    in ``buffer_dropped`` (a correct run has ``buffer_dropped == 0``,
+    the same convention as the single-server kernel).  All times are
+    rebased to
     the last processed event, keeping float32 precision window-sized.
 
     Replica invariant: a replica is *free* (not committed) iff its queue
@@ -367,6 +536,21 @@ def _build_fleet_kernel(n_steps: int, warmup: int, k_max: int, q_cap: int,
     at its own epoch (plus the policy's timeout delay).  Hence every
     batch start happens at a scheduled decision and is handled uniformly
     in the outer step.
+
+    ``has_loss = True`` adds, all behind this compile-time flag:
+    reject-mode arrival admission against the per-replica room (a
+    rejected arrival is a measured overflow, not a capacity artifact),
+    deadline reneging of the deciding replica's expired FIFO prefix at
+    each of its decision events (which requires ``pop_cap = q_cap`` so
+    the row gather sees every waiting job), the drop-mode tail trim
+    after each pop, and the bounded retry orbit assessed once per
+    event: the orbit's re-arrival block is routed whole to ONE replica
+    by the point's own routing discipline — retries are bursty
+    re-submissions of a single client batch, and a one-destination
+    block keeps the scatter O(r_cap) instead of O(r_cap·k).  A deciding
+    replica whose queue empties by reneging forms no batch and
+    un-commits (it can go free with jobs expired, unlike the lossless
+    kernel where committed ⇒ work pending).
     """
     i32 = jnp.int32
     f32 = jnp.float32
@@ -390,13 +574,35 @@ def _build_fleet_kernel(n_steps: int, warmup: int, k_max: int, q_cap: int,
         k = jnp.clip(p["k"], 1, k_max).astype(i32)
         routing = p["routing"]
         active = ridx < k
+        if has_loss:
+            q_lim = p["q_max"].astype(i32)
+            deadline = p["deadline"]
+            retry_rate = p["retry_rate"]
+            retry_on = retry_rate > 0.0
+            is_reject = p["overflow"] == _OV_REJECT
+            # instantaneous per-replica admission bound ("429") vs the
+            # physical ring in drop mode ("503": buffer, evict later)
+            roomv = jnp.where((q_lim > 0) & is_reject, q_lim, q_cap)
+            trim_to = jnp.where((q_lim > 0) & ~is_reject, q_lim, q_cap)
+            retry_room = jnp.where(q_lim > 0,
+                                   jnp.minimum(q_lim, q_cap), q_cap)
 
         def step(state, x):
             i, kstep = x
-            (q, head, buf, in_service, committed, t_free, next_arr, rr,
-             clock, lat_sum, lat_n, sum_b, sum_b2, sum_bs, n_meas, busy,
-             span, q_max, dropped, jobs_rep) = state
+            if has_loss:
+                (q, head, buf, in_service, committed, t_free, next_arr,
+                 rr, clock, lat_sum, lat_n, sum_b, sum_b2, sum_bs,
+                 n_meas, busy, span, q_max, dropped, jobs_rep,
+                 orbit, ov_n, ab_n, slo_n, fresh_n, retry_n) = state
+            else:
+                (q, head, buf, in_service, committed, t_free, next_arr,
+                 rr, clock, lat_sum, lat_n, sum_b, sum_b2, sum_bs,
+                 n_meas, busy, span, q_max, dropped, jobs_rep) = state
+            # split count must not depend on has_loss (split(k, n)
+            # re-keys all children with n); the orbit key folds in
             ksvc, karr = random.split(kstep)
+            if has_loss:
+                korb = random.fold_in(kstep, 0x0b17)
 
             # per-window randomness, drawn as two vectorized blocks; the
             # block shape is fixed, so key consumption never depends on
@@ -501,8 +707,18 @@ def _build_fleet_kernel(n_steps: int, warmup: int, k_max: int, q_cap: int,
             prior_self = jnp.sum(prior * onehot.astype(i32), axis=1)
             fill = jnp.sum(jnp.where(onehot, q[None, :], 0), axis=1) \
                 + prior_self
-            ok = proc & (fill < q_cap)
-            dropped = dropped + jnp.sum((proc & ~ok).astype(i32))
+            if has_loss:
+                # admission against the per-replica room; a turned-away
+                # arrival is a measured overflow loss, not a capacity
+                # artifact (prefix-greedy: later window arrivals still
+                # see the fill the rejected one never added, matching
+                # the per-arrival 429 semantics)
+                ok = proc & (fill < roomv)
+                lost_ov = jnp.sum((proc & ~ok).astype(i32))
+                lost_ab = jnp.zeros((), i32)
+            else:
+                ok = proc & (fill < q_cap)
+                dropped = dropped + jnp.sum((proc & ~ok).astype(i32))
             pos = (jnp.sum(jnp.where(onehot, head[None, :], 0), axis=1)
                    + fill) % q_cap
             flat = jnp.where(ok, dest * q_cap + pos, k_max * q_cap)
@@ -523,6 +739,21 @@ def _build_fleet_kernel(n_steps: int, warmup: int, k_max: int, q_cap: int,
                            r * q_cap + (hr + slots) % q_cap,
                            mode="clip")
 
+            if has_loss:
+                # deadline reneging: the deciding replica's expired jobs
+                # are a contiguous FIFO prefix of its row (pop_cap =
+                # q_cap whenever a deadline is set, so the gather covers
+                # the whole queue); qr = 0 masks this when no event
+                # fires, and t_ev = INF makes the age test vacuous then
+                n_exp = jnp.sum(((slots < qr)
+                                 & (row < t_ev - deadline)).astype(i32))
+                n_exp = jnp.where(deadline > 0.0, n_exp, 0)
+                qr = qr - n_exp
+                row = lax.dynamic_slice(
+                    jnp.concatenate([row, jnp.zeros((pop_cap,), f32)]),
+                    (n_exp,), (pop_cap,))
+                lost_ab = lost_ab + n_exp
+
             # a completion whose queue holds jobs re-decides right away:
             # with no (applicable) timeout delay it starts the next batch
             # in this same step; a delayed one schedules the release
@@ -535,6 +766,10 @@ def _build_fleet_kernel(n_steps: int, warmup: int, k_max: int, q_cap: int,
             else:
                 rel_next = t_ev
                 form = release | (qr > 0)
+            if has_loss:
+                # reneging can empty a committed replica's queue: the
+                # scheduled release then forms nothing and un-commits
+                form = form & (qr > 0)
 
             # batch formation (release events and immediate re-starts)
             b = jnp.minimum(qr, b_max)
@@ -552,8 +787,20 @@ def _build_fleet_kernel(n_steps: int, warmup: int, k_max: int, q_cap: int,
             popmask = slots < b
             lats = jnp.where(popmask, depart - row, 0.0)
 
-            q = q - jnp.where(oh & form, b, 0)
-            head = jnp.where(oh & form, (hr + b) % q_cap, head)
+            if has_loss:
+                # prefix removals (reneged + popped) advance the head;
+                # the drop-mode trim evicts the NEWEST waiting jobs
+                # beyond q_max at the formation epoch, a tail cut that
+                # only shrinks q (later pushes overwrite the slots)
+                trim = jnp.where(form,
+                                 jnp.maximum(qr - b - trim_to, 0), 0)
+                lost_ov = lost_ov + trim
+                take = n_exp + jnp.where(form, b, 0)
+                q = q - jnp.where(oh, take + trim, 0)
+                head = jnp.where(oh, (hr + take) % q_cap, head)
+            else:
+                q = q - jnp.where(oh & form, b, 0)
+                head = jnp.where(oh & form, (hr + b) % q_cap, head)
             in_service = jnp.where(oh, jnp.where(form, b, 0), in_service)
             committed = jnp.where(oh, form | (qr > 0), committed)
             t_free = jnp.where(oh, jnp.where(form, depart, rel_next),
@@ -575,6 +822,71 @@ def _build_fleet_kernel(n_steps: int, warmup: int, k_max: int, q_cap: int,
             span = span + (meas & do_event).astype(f32) * (t_ev - clock)
             q_max = jnp.maximum(q_max, jnp.max(q))
             jobs_rep = jobs_rep + jnp.where(oh & mstart, b, 0)
+
+            if has_loss:
+                in_slo = jnp.where(
+                    deadline > 0.0,
+                    jnp.sum((popmask & (lats <= deadline)).astype(i32)),
+                    b)
+                # bounded retry orbit, assessed once per processed
+                # event (exact Binomial thinning over the inter-event
+                # gap, fixed-shape RNG).  The firing block re-arrives
+                # at t_ev and is routed WHOLE to one replica by the
+                # point's own discipline — retries model one client's
+                # bursty re-submission, and a single destination keeps
+                # the scatter O(r_cap); round-robin reuses the cursor
+                # without advancing it (the arrival stream owns it)
+                k_draw, k_route = random.split(korb)
+                elapsed = jnp.maximum(t_ev - clock, 0.0)
+                p_fire = jnp.where(
+                    do_event, 1.0 - jnp.exp(-retry_rate * elapsed), 0.0)
+                n_r = engine.orbit_draws(k_draw, orbit, p_fire, r_cap)
+                orbit = orbit - n_r
+                u_r = random.uniform(k_route)
+                d_rand = jnp.minimum(
+                    (u_r * k.astype(f32)).astype(i32), k - 1)
+                load2 = jnp.where(active, q + in_service, BIG_LOAD)
+                d_jsq = jnp.argmin(load2).astype(i32)
+                dest_r = jnp.where(
+                    routing == R_RANDOM, d_rand,
+                    jnp.where(routing == R_RR, rr % k, d_jsq)
+                ).astype(i32)
+                oh_r = ridx == dest_r
+                q_d = jnp.sum(jnp.where(oh_r, q, 0))
+                h_d = jnp.sum(jnp.where(oh_r, head, 0))
+                admit_r = jnp.minimum(
+                    n_r, jnp.maximum(retry_room - q_d, 0))
+                orbit = orbit + (n_r - admit_r)
+                jr = jnp.arange(r_cap)
+                flat_r = jnp.where(
+                    jr < admit_r,
+                    dest_r * q_cap + (h_d + q_d + jr) % q_cap,
+                    k_max * q_cap)
+                buf = buf.at[flat_r].set(t_ev, mode="drop")
+                q = q + jnp.where(oh_r, admit_r, 0)
+                # an idle destination schedules its decision at t_ev
+                # (plus the policy's timeout delay), like any arrival
+                was_comm = jnp.any(oh_r & committed)
+                if has_timeout:
+                    do_wait_r = (wait_max > 0.0) & (wait_target > 1)
+                    rel_r = jnp.where(do_wait_r, t_ev + wait_max, t_ev)
+                else:
+                    rel_r = t_ev
+                sched_r = (~was_comm) & (admit_r > 0)
+                committed = committed | (oh_r & sched_r)
+                t_free = jnp.where(oh_r & sched_r, rel_r, t_free)
+                # file this step's fresh losses — abandoned first, then
+                # overflow; whatever the orbit cannot hold (or retries
+                # are off) is a terminal loss in its own class
+                orbit, term_ab, term_ov = engine.orbit_file(
+                    orbit, lost_ab, lost_ov, r_cap, retry_on)
+                mi = meas.astype(i32)
+                ab_n = ab_n + mi * term_ab
+                ov_n = ov_n + mi * term_ov
+                slo_n = slo_n + jnp.where(mstart, in_slo, 0)
+                fresh_n = fresh_n + mi * jnp.sum(proc.astype(i32))
+                retry_n = retry_n + mi * n_r
+
             bins = bit_bins(lats, n_bins)
 
             # the clock tracks the last processed event; the full-buffer
@@ -583,10 +895,14 @@ def _build_fleet_kernel(n_steps: int, warmup: int, k_max: int, q_cap: int,
             # the superstep wrapper (bins ride out as scan outputs)
             clock = jnp.where(do_event, t_ev, clock)
 
-            return (q, head, buf, in_service, committed, t_free,
-                    next_arr, rr, clock, lat_sum, lat_n, sum_b, sum_b2,
-                    sum_bs, n_meas, busy, span, q_max, dropped,
-                    jobs_rep), (bins, popmask & mstart)
+            out_state = (q, head, buf, in_service, committed, t_free,
+                         next_arr, rr, clock, lat_sum, lat_n, sum_b,
+                         sum_b2, sum_bs, n_meas, busy, span, q_max,
+                         dropped, jobs_rep)
+            if has_loss:
+                out_state = out_state + (orbit, ov_n, ab_n, slo_n,
+                                         fresh_n, retry_n)
+            return out_state, (bins, popmask & mstart)
 
         # histogram thinning: scatter-adds cost per *element* under
         # vmap, so hist_every > 1 records only an unbiased 1-in-N batch
@@ -627,18 +943,22 @@ def _build_fleet_kernel(n_steps: int, warmup: int, k_max: int, q_cap: int,
                 jnp.zeros((), i32), jnp.zeros((), f32),  # n_meas, busy
                 jnp.zeros((), f32), jnp.zeros((), i32),  # span, q_max
                 jnp.zeros((), i32),                      # dropped
-                jnp.zeros((k_max,), i32),                # jobs_rep
-                jnp.zeros((n_bins,), i32))               # hist (superstep)
-        (_, _, _, _, _, _, _, _, _, lat_sum, lat_n, sum_b, sum_b2,
-         sum_bs, n_meas, busy, span, q_max, dropped, jobs_rep,
-         hist), _ = lax.scan(
+                jnp.zeros((k_max,), i32))                # jobs_rep
+        if has_loss:
+            # orbit, ov_n, ab_n, slo_n, fresh_n, retry_n
+            init = init + tuple(jnp.zeros((), i32) for _ in range(6))
+        init = init + (jnp.zeros((n_bins,), i32),)       # hist (superstep)
+        state, _ = lax.scan(
             superstep, init,
             (jnp.arange(n_super) * REBASE_EVERY,
              random.split(key, n_super)))
+        (lat_sum, lat_n, sum_b, sum_b2, sum_bs, n_meas, busy, span,
+         q_max, dropped, jobs_rep) = state[9:20]
+        hist = state[-1]
 
         jobs = jnp.maximum(lat_n, 1).astype(f32)
         nb = jnp.maximum(n_meas, 1).astype(f32)
-        return {
+        out = {
             "mean_latency": lat_sum / jobs,
             "mean_batch": sum_b / nb,
             "batch_m2": sum_b2 / nb,
@@ -652,13 +972,19 @@ def _build_fleet_kernel(n_steps: int, warmup: int, k_max: int, q_cap: int,
             "hist": hist,
             "jobs_by_replica": jobs_rep,
         }
+        if has_loss:
+            (_orbit, ov_n, ab_n, slo_n, fresh_n, retry_n) = state[20:26]
+            out.update(overflow_dropped=ov_n, abandoned=ab_n,
+                       n_in_slo=slo_n, n_fresh=fresh_n, n_retry=retry_n)
+        return out
 
     return engine.shard_kernel(jax.vmap(run_point), n_dev)
 
 
 def fleet_sweep(grid: FleetGrid, *, n_steps: int = 6000,
                 warmup: Optional[int] = None, q_cap: Optional[int] = None,
-                a_cap: int = 32, n_bins: int = 512, seed: int = 0,
+                a_cap: int = 32, r_cap: Optional[int] = None,
+                n_bins: int = 512, seed: int = 0,
                 key_offset: int = 0, hist_every: int = 1,
                 shard: ShardSpec = None) -> FleetResult:
     """Simulate every fleet point for ``n_steps`` replica decisions in one
@@ -672,9 +998,10 @@ def fleet_sweep(grid: FleetGrid, *, n_steps: int = 6000,
     arrival windows denser than ``a_cap`` consume extra events, so
     low-load and very-high-load points complete somewhat fewer batches.)
     ``q_cap`` bounds each replica's waiting room; overflowing it is the
-    one true capacity loss, counted in ``dropped`` (a correct run has
-    ``dropped == 0``); the default (``None``) sizes it adaptively from
-    the grid's per-replica load (``engine.queue_capacity`` at rate
+    one true capacity loss, counted in ``buffer_dropped`` (a correct
+    run has ``buffer_dropped == 0``); the default (``None``) sizes it
+    adaptively from the grid's per-replica load
+    (``engine.queue_capacity`` at rate
     λ/k).  ``a_cap`` only tiles the arrival routing — a denser window
     defers its event a step, exact but slower, so size ``a_cap`` near
     the expected batch size.  ``hist_every = N > 1`` records a 1-in-N
@@ -686,6 +1013,13 @@ def fleet_sweep(grid: FleetGrid, *, n_steps: int = 6000,
     ``<cores>`` before the first JAX call; ``False``/1 → single device;
     an int → that many shards); per-point keys are global, so sharding
     never changes a point's result.
+
+    Grids with loss regimes (``q_max``/``deadline``/``retry_rate``)
+    compile the loss-capable kernel variant; ``q_max`` bounds each
+    replica's waiting room and ``r_cap`` the shared retry orbit
+    (defaults via ``engine.orbit_capacity``).  A deadline forces
+    ``pop_cap = q_cap`` (the renege scan must see the whole queue).
+    Loss-free grids trace the identical pre-admission-control kernel.
     """
     if not isinstance(grid, FleetGrid):
         raise TypeError("fleet_sweep needs a FleetGrid "
@@ -700,24 +1034,37 @@ def fleet_sweep(grid: FleetGrid, *, n_steps: int = 6000,
         raise ValueError(f"warmup {warmup} must lie in [0, {n_steps})")
     if np.any(grid.k < 1):
         raise ValueError("k must be >= 1")
+    has_loss = grid.has_loss
     if q_cap is None:
         # each replica sees ~λ/k of the stream under every modelled
         # routing (JSQ only evens out transients), so size the
         # per-replica ring from the per-replica load
         q_cap = engine.queue_capacity(grid.lam / np.maximum(grid.k, 1),
                                       grid.alpha, grid.tau0, grid.b_max,
-                                      grid.wait_max)
+                                      grid.wait_max,
+                                      q_max=grid.q_max if has_loss
+                                      else None)
     if np.any(grid.b_max > q_cap):
         raise ValueError("b_max exceeds q_cap; raise q_cap")
     if not set(np.unique(grid.routing)) <= set(ROUTE_CODE.values()):
         raise ValueError(f"unknown routing code in grid "
                          f"(valid: {ROUTE_CODE})")
+    if has_loss:
+        if np.any(grid.q_max > q_cap):
+            raise ValueError("q_max exceeds q_cap; raise q_cap")
+        if r_cap is None:
+            r_cap = engine.orbit_capacity(grid.lam, grid.retry_rate)
+    else:
+        r_cap = 0
 
     k_max = int(grid.k.max())
     has_timeout = bool(np.any(grid.wait_max > 0.0))
     all_det = bool(np.all(grid.dist == DIST_CODE["det"]))
-    # all-finite-b_max grids get narrower per-job latency ops
-    pop_cap = (int(q_cap) if np.any(grid.b_max == 0)
+    # all-finite-b_max grids get narrower per-job latency ops — unless
+    # a deadline is set, whose renege scan must see the whole ring
+    pop_cap = (int(q_cap)
+               if np.any(grid.b_max == 0)
+               or (has_loss and np.any(grid.deadline > 0.0))
                else int(grid.b_max.max()))
     has_jsq = bool(np.any(grid.routing == ROUTE_CODE["jsq"]))
     n = len(grid)
@@ -725,7 +1072,8 @@ def fleet_sweep(grid: FleetGrid, *, n_steps: int = 6000,
     kernel = _build_fleet_kernel(int(n_steps), int(warmup), k_max,
                                  int(q_cap), int(a_cap), pop_cap,
                                  int(n_bins), has_timeout, all_det,
-                                 has_jsq, int(hist_every), n_dev)
+                                 has_jsq, has_loss, int(r_cap),
+                                 int(hist_every), n_dev)
 
     params = {
         "lam": jnp.asarray(grid.lam), "alpha": jnp.asarray(grid.alpha),
@@ -735,8 +1083,30 @@ def fleet_sweep(grid: FleetGrid, *, n_steps: int = 6000,
         "wait_target": jnp.asarray(grid.wait_target),
         "k": jnp.asarray(grid.k), "routing": jnp.asarray(grid.routing),
     }
+    if has_loss:
+        params.update(
+            q_max=jnp.asarray(grid.q_max),
+            deadline=jnp.asarray(grid.deadline),
+            overflow=jnp.asarray(grid.overflow),
+            retry_rate=jnp.asarray(grid.retry_rate))
     keys = engine.point_keys(seed, key_offset, n)
     out = engine.dispatch(kernel, params, keys, n, n_dev)
+
+    n_jobs = np.asarray(out["n_jobs"])
+    if has_loss:
+        loss_kw = dict(
+            overflow_dropped=np.asarray(out["overflow_dropped"]),
+            abandoned=np.asarray(out["abandoned"]),
+            n_in_slo=np.asarray(out["n_in_slo"]),
+            n_fresh=np.asarray(out["n_fresh"]),
+            n_retry=np.asarray(out["n_retry"]))
+    else:
+        loss_kw = dict(
+            overflow_dropped=np.zeros_like(n_jobs),
+            abandoned=np.zeros_like(n_jobs),
+            n_in_slo=n_jobs.copy(),
+            n_fresh=n_jobs.copy(),
+            n_retry=np.zeros_like(n_jobs))
 
     p50, p95, p99 = _hist_percentiles(out["hist"], (50, 95, 99))
     return FleetResult(
@@ -748,10 +1118,11 @@ def fleet_sweep(grid: FleetGrid, *, n_steps: int = 6000,
         mean_service=np.asarray(out["mean_service"], dtype=np.float64),
         utilization=np.clip(
             np.asarray(out["utilization"], dtype=np.float64), 0.0, 1.0),
-        n_jobs=np.asarray(out["n_jobs"]),
+        n_jobs=n_jobs,
         n_batches=np.asarray(out["n_batches"]),
         max_queue=np.asarray(out["max_queue"]),
-        dropped=np.asarray(out["dropped"]),
+        buffer_dropped=np.asarray(out["dropped"]),
         hist=np.asarray(out["hist"]),
         jobs_by_replica=np.asarray(out["jobs_by_replica"]),
+        **loss_kw,
     )

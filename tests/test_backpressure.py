@@ -1,0 +1,328 @@
+"""Statistical regression harness for the SLO/admission-control paths.
+
+Every loss regime of the three MC kernels — finite waiting room in both
+overflow modes ("429" reject-at-arrival / "503" drop-at-formation),
+deadlines with reneging, and the bounded retry orbit — is pinned
+against the independent chronological numpy mirrors in
+``repro.core.loss_ref`` on seed ladders (3σ of the paired MC error,
+house convention), plus exact structural accounting and two bitwise
+invariances:
+
+- split-dispatch determinism WITH loss enabled (guards the fold_in
+  key/orbit-key construction against shape-dependent key consumption),
+- neutral-reduction: a q_max=0/deadline=0/retry=0 point dispatched
+  through the loss-capable kernel is bitwise identical to the base
+  kernel at pinned caps — the loss machinery must cost *nothing*, not
+  just approximately nothing, on lossless points.
+
+Each kernel's loss points share ONE module-scoped dispatch: the seed
+ladder is built from repeated identical grid points (per-point fold_in
+keys make them independent streams).
+"""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core.analytic import LinearServiceModel
+from repro.core.continuous_sim import GenServiceModel
+from repro.core.gen_sweep import gen_sweep
+from repro.core.grid import FleetGrid, GenGrid, SweepGrid
+from repro.core.loss_ref import (simulate_fleet_loss_numpy,
+                                 simulate_gen_loss_numpy,
+                                 simulate_loss_numpy)
+from repro.core.sweep import fleet_sweep, sweep
+
+MODEL = LinearServiceModel(alpha=0.05, tau0=1.0)
+GMODEL = GenServiceModel(alpha_decode=0.14, tau0_decode=1.9,
+                         alpha_prefill=0.035, tau0_prefill=1.9)
+GEN, PROMPT, CAP = 32, 128, 64
+ALPHA_EQ = GMODEL.alpha_decode * GEN + GMODEL.alpha_prefill * PROMPT
+
+N_REPS = 6                  # ladder width on the kernel side
+N_REF = 3                   # seeds on the numpy-reference side
+FIELDS = ("goodput_frac", "reject_frac", "abandon_frac",
+          "retry_inflation", "mean_latency")
+
+# (q_max, deadline, overflow, retry_rate, lam): moderate reject,
+# moderate drop, and an overloaded tight-deadline point so every loss
+# class (overflow, abandonment, retry, late) actually fires
+SW_CFG = [(10, 6.0, "reject", 0.5, 6.0),
+          (10, 6.0, "drop", 0.5, 6.0),
+          (24, 3.0, "reject", 0.3, 7.5)]
+FL_CFG = [("random", "reject", 6, 4.0, 0.5),
+          ("jsq", "drop", 12, 1.8, 0.5)]    # tight deadline: reneging
+FL_LAM, FL_K, FL_B = 8.0, 2, 4
+GEN_LAM = 1.08 / ALPHA_EQ                    # ~1.2× the decode capacity
+GEN_CFG = [("continuous", "reject", 20, 40.0, 0.05),
+           ("static", "drop", 20, 40.0, 0.05)]
+
+
+def _ladder_se(kernel_vals, ref_vals, floor_frac=0.015,
+               floor_abs=0.0):
+    se = math.sqrt(kernel_vals.var(ddof=1) / len(kernel_vals)
+                   + ref_vals.var(ddof=1) / len(ref_vals))
+    return max(se, floor_frac * abs(float(ref_vals.mean())), floor_abs)
+
+
+def _gate(kernel_vals, ref_vals, label):
+    # fractions can legitimately sit at 0 — give them an absolute floor
+    se = _ladder_se(kernel_vals, ref_vals, floor_abs=0.004)
+    assert abs(kernel_vals.mean() - ref_vals.mean()) < 3.0 * se, \
+        (label, float(kernel_vals.mean()), float(ref_vals.mean()))
+
+
+@pytest.fixture(scope="module")
+def sweep_loss():
+    cfg = [c for c in SW_CFG for _ in range(N_REPS)]
+    g = SweepGrid.from_points([c[4] for c in cfg], MODEL.alpha,
+                              MODEL.tau0, b_max=8,
+                              q_max=[c[0] for c in cfg],
+                              deadline=[c[1] for c in cfg],
+                              overflow=[c[2] for c in cfg],
+                              retry_rate=[c[3] for c in cfg])
+    return g, sweep(g, n_batches=6000, q_cap=64, a_cap=64, r_cap=64,
+                    seed=11)
+
+
+@pytest.fixture(scope="module")
+def fleet_loss():
+    cfg = [c for c in FL_CFG for _ in range(N_REPS)]
+    g = FleetGrid.from_points([FL_LAM] * len(cfg), MODEL.alpha,
+                              MODEL.tau0, k=FL_K,
+                              routing=[c[0] for c in cfg], b_max=FL_B,
+                              q_max=[c[2] for c in cfg],
+                              deadline=[c[3] for c in cfg],
+                              overflow=[c[1] for c in cfg],
+                              retry_rate=[c[4] for c in cfg])
+    return g, fleet_sweep(g, n_steps=8000, q_cap=64, a_cap=32,
+                          r_cap=64, seed=7)
+
+
+@pytest.fixture(scope="module")
+def gen_loss():
+    cfg = [c for c in GEN_CFG for _ in range(N_REPS)]
+    g = GenGrid.from_points(
+        [GEN_LAM] * len(cfg), GMODEL.alpha_decode, GMODEL.tau0_decode,
+        GMODEL.alpha_prefill, GMODEL.tau0_prefill, prompt_len=PROMPT,
+        gen_tokens=GEN, max_active=CAP,
+        discipline=[c[0] for c in cfg],
+        q_max=[c[2] for c in cfg], deadline=[c[3] for c in cfg],
+        overflow=[c[1] for c in cfg], retry_rate=[c[4] for c in cfg])
+    # a_cap sized so the pre-drawn arrival chain always covers its
+    # windows: the run-structured numpy mirror has no coverage splits
+    return g, gen_sweep(g, n_steps=6000, q_cap=64, a_cap=96, r_cap=64,
+                        seed=5)
+
+
+class TestSweepVsNumpyRef:
+    @pytest.mark.parametrize("ci", range(len(SW_CFG)))
+    def test_loss_metrics_seed_ladder(self, sweep_loss, ci):
+        _, r = sweep_loss
+        qm, dl, ov, rr, lam = SW_CFG[ci]
+        sl = slice(ci * N_REPS, (ci + 1) * N_REPS)
+        refs = [simulate_loss_numpy(lam, MODEL, 8, q_max=qm,
+                                    deadline=dl, overflow=ov,
+                                    retry_rate=rr, q_cap=64, r_cap=64,
+                                    n_batches=20_000, seed=s)
+                for s in range(N_REF)]
+        for f in FIELDS:
+            _gate(np.asarray(getattr(r, f)[sl], dtype=float),
+                  np.array([getattr(x, f) for x in refs]),
+                  (ci, f))
+
+
+class TestFleetVsNumpyRef:
+    @pytest.mark.parametrize("ci", range(len(FL_CFG)))
+    def test_loss_metrics_seed_ladder(self, fleet_loss, ci):
+        _, r = fleet_loss
+        route, ov, qm, dl, rr = FL_CFG[ci]
+        sl = slice(ci * N_REPS, (ci + 1) * N_REPS)
+        refs = [simulate_fleet_loss_numpy(FL_LAM, MODEL, FL_B, k=FL_K,
+                                          routing=route, q_max=qm,
+                                          deadline=dl, overflow=ov,
+                                          retry_rate=rr, q_cap=64,
+                                          r_cap=64, n_events=40_000,
+                                          seed=s)
+                for s in range(N_REF)]
+        for f in FIELDS:
+            _gate(np.asarray(getattr(r, f)[sl], dtype=float),
+                  np.array([getattr(x, f) for x in refs]),
+                  (ci, f))
+
+
+class TestGenVsNumpyRef:
+    @pytest.mark.parametrize("ci", range(len(GEN_CFG)))
+    def test_loss_metrics_seed_ladder(self, gen_loss, ci):
+        _, r = gen_loss
+        disc, ov, qm, dl, rr = GEN_CFG[ci]
+        sl = slice(ci * N_REPS, (ci + 1) * N_REPS)
+        refs = [simulate_gen_loss_numpy(GEN_LAM, GMODEL,
+                                        prompt_len=PROMPT,
+                                        gen_tokens=GEN, max_active=CAP,
+                                        discipline=disc, q_max=qm,
+                                        deadline=dl, overflow=ov,
+                                        retry_rate=rr, q_cap=64,
+                                        r_cap=64, n_steps=20_000,
+                                        seed=s)
+                for s in range(N_REF)]
+        for f in FIELDS:
+            _gate(np.asarray(getattr(r, f)[sl], dtype=float),
+                  np.array([getattr(x, f) for x in refs]),
+                  (ci, f))
+
+
+class TestAccounting:
+    """Exact (not statistical) conservation laws on every loss run."""
+
+    def _check(self, r):
+        assert int(r.buffer_dropped.sum()) == 0
+        offered = r.n_jobs + r.overflow_dropped + r.abandoned
+        assert np.array_equal(r.offered, offered)
+        total = (r.goodput_frac + r.late_frac + r.reject_frac
+                 + r.abandon_frac)
+        assert np.allclose(total[offered > 0], 1.0, atol=1e-6)
+        assert np.all(r.n_in_slo <= r.n_jobs)
+        assert np.all(r.retry_inflation >= 1.0 - 1e-6)
+
+    def test_sweep(self, sweep_loss):
+        self._check(sweep_loss[1])
+        # retries are on in every config — inflation must be real
+        assert np.all(sweep_loss[1].retry_inflation > 1.01)
+
+    def test_fleet(self, fleet_loss):
+        self._check(fleet_loss[1])
+
+    def test_gen(self, gen_loss):
+        self._check(gen_loss[1])
+
+    def test_lossless_results_synthesize_clean_loss_fields(self):
+        g = SweepGrid.from_points([2.0], MODEL.alpha, MODEL.tau0,
+                                  b_max=8)
+        r = sweep(g, n_batches=1000, q_cap=64, a_cap=64, seed=1)
+        assert int(r.overflow_dropped.sum()) == 0
+        assert int(r.abandoned.sum()) == 0
+        assert np.array_equal(r.n_in_slo, r.n_jobs)
+        assert np.all(r.goodput_frac == 1.0)
+        assert np.all(r.retry_inflation == 1.0)
+
+
+class TestDeterminism:
+    """Bitwise invariances with loss enabled: per-point results must
+    not depend on which dispatch carried the point."""
+
+    def test_sweep_split_dispatch_bitwise(self):
+        g = SweepGrid.from_points(
+            [6.0, 7.0, 6.0, 5.0], MODEL.alpha, MODEL.tau0, b_max=8,
+            q_max=[10, 12, 0, 8], deadline=[6.0, 0.0, 0.0, 3.0],
+            overflow=["reject", "drop", "reject", "reject"],
+            retry_rate=[0.5, 0.0, 0.0, 1.0])
+        kw = dict(n_batches=512, q_cap=64, a_cap=64, r_cap=32)
+        full = sweep(g, seed=11, **kw)
+        a = sweep(g.take(slice(0, 2)), seed=11, **kw)
+        b = sweep(g.take(slice(2, None)), seed=11, key_offset=2, **kw)
+        for f in ("mean_latency", "n_jobs", "overflow_dropped",
+                  "abandoned", "n_in_slo", "n_retry", "goodput_frac"):
+            merged = np.concatenate([getattr(a, f), getattr(b, f)])
+            assert np.array_equal(getattr(full, f), merged), f
+
+    def test_fleet_split_dispatch_bitwise(self):
+        g = FleetGrid.from_points(
+            [8.0, 8.0, 6.0, 8.0], MODEL.alpha, MODEL.tau0,
+            k=[2, 2, 1, 2], routing=["random", "jsq", "round_robin",
+                                     "jsq"],
+            b_max=4, q_max=[6, 12, 0, 8], deadline=[4.0, 1.8, 0.0, 0.0],
+            overflow=["reject", "drop", "reject", "drop"],
+            retry_rate=[0.5, 0.5, 0.0, 0.0])
+        kw = dict(n_steps=512, q_cap=64, a_cap=16, r_cap=32)
+        full = fleet_sweep(g, seed=13, **kw)
+        a = fleet_sweep(g.take(slice(0, 2)), seed=13, **kw)
+        b = fleet_sweep(g.take(slice(2, None)), seed=13, key_offset=2,
+                        **kw)
+        for f in ("mean_latency", "n_jobs", "overflow_dropped",
+                  "abandoned", "n_in_slo", "n_retry"):
+            merged = np.concatenate([getattr(a, f), getattr(b, f)])
+            assert np.array_equal(getattr(full, f), merged), f
+
+    def test_gen_split_dispatch_bitwise(self):
+        g = GenGrid.from_points(
+            [GEN_LAM] * 4, GMODEL.alpha_decode, GMODEL.tau0_decode,
+            GMODEL.alpha_prefill, GMODEL.tau0_prefill,
+            prompt_len=PROMPT, gen_tokens=GEN, max_active=[16, 32, 16,
+                                                           8],
+            discipline=["continuous", "static", "static",
+                        "continuous"],
+            q_max=[20, 0, 12, 20], deadline=[40.0, 30.0, 0.0, 0.0],
+            overflow=["reject", "drop", "drop", "reject"],
+            retry_rate=[0.05, 0.0, 0.1, 0.0])
+        kw = dict(n_steps=1024, q_cap=64, a_cap=64, r_cap=32)
+        full = gen_sweep(g, seed=13, **kw)
+        a = gen_sweep(g.take(slice(0, 2)), seed=13, **kw)
+        b = gen_sweep(g.take(slice(2, None)), seed=13, key_offset=2,
+                      **kw)
+        for f in ("mean_latency", "n_jobs", "overflow_dropped",
+                  "abandoned", "n_in_slo", "n_retry"):
+            merged = np.concatenate([getattr(a, f), getattr(b, f)])
+            assert np.array_equal(getattr(full, f), merged), f
+
+
+class TestNeutralReduction:
+    """A q_max=0 / deadline=0 / retry=0 point dispatched through the
+    loss-capable kernel must be BITWISE the base kernel's answer at
+    pinned caps — the loss machinery reduces exactly, not
+    approximately, on lossless points."""
+
+    BASE_FIELDS = ("mean_latency", "mean_batch", "utilization",
+                   "n_jobs", "latency_p50", "latency_p99")
+
+    def test_sweep(self):
+        g = SweepGrid.from_points(
+            [6.0, 4.0, 5.0], MODEL.alpha, MODEL.tau0, b_max=8,
+            q_max=[10, 0, 0], deadline=[6.0, 0.0, 0.0],
+            retry_rate=[0.5, 0.0, 0.0])
+        assert g.has_loss and not g.take(slice(1, None)).has_loss
+        kw = dict(n_batches=1024, q_cap=64, a_cap=64)
+        mixed = sweep(g, seed=11, r_cap=32, **kw)
+        base = sweep(g.take(slice(1, None)), seed=11, key_offset=1,
+                     **kw)
+        for f in self.BASE_FIELDS:
+            assert np.array_equal(getattr(mixed, f)[1:],
+                                  getattr(base, f)), f
+        assert int(mixed.overflow_dropped[1:].sum()) == 0
+        assert int(mixed.abandoned[1:].sum()) == 0
+        assert np.all(mixed.goodput_frac[1:] == 1.0)
+
+    def test_fleet(self):
+        # neutral points use b_max=0 so the base kernel's pop_cap
+        # (q_cap) matches the loss kernel's deadline-widened one
+        g = FleetGrid.from_points(
+            [8.0, 4.0, 6.0], MODEL.alpha, MODEL.tau0, k=[2, 2, 1],
+            routing=["jsq", "random", "round_robin"], b_max=[4, 0, 0],
+            q_max=[6, 0, 0], deadline=[4.0, 0.0, 0.0],
+            retry_rate=[0.5, 0.0, 0.0])
+        kw = dict(n_steps=1024, q_cap=64, a_cap=16)
+        mixed = fleet_sweep(g, seed=13, r_cap=32, **kw)
+        base = fleet_sweep(g.take(slice(1, None)), seed=13,
+                           key_offset=1, **kw)
+        for f in self.BASE_FIELDS:
+            assert np.array_equal(getattr(mixed, f)[1:],
+                                  getattr(base, f)), f
+        assert int(mixed.overflow_dropped[1:].sum()) == 0
+
+    def test_gen(self):
+        g = GenGrid.from_points(
+            [GEN_LAM, 0.6 * GEN_LAM, 0.4 * GEN_LAM],
+            GMODEL.alpha_decode, GMODEL.tau0_decode,
+            GMODEL.alpha_prefill, GMODEL.tau0_prefill,
+            prompt_len=PROMPT, gen_tokens=GEN, max_active=[32, 32, 16],
+            discipline=["continuous", "continuous", "static"],
+            q_max=[20, 0, 0], deadline=[40.0, 0.0, 0.0],
+            retry_rate=[0.05, 0.0, 0.0])
+        kw = dict(n_steps=1024, q_cap=64, a_cap=64)
+        mixed = gen_sweep(g, seed=13, r_cap=32, **kw)
+        base = gen_sweep(g.take(slice(1, None)), seed=13, key_offset=1,
+                         **kw)
+        for f in self.BASE_FIELDS:
+            assert np.array_equal(getattr(mixed, f)[1:],
+                                  getattr(base, f)), f
+        assert int(mixed.overflow_dropped[1:].sum()) == 0

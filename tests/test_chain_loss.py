@@ -1,0 +1,160 @@
+"""Exact finite-waiting-room chain (``markov.solve_loss``) pins.
+
+Three independent cross-checks of the q_max-room M/D[b]/1/q_max chain:
+
+- banded / GTH structured solves vs the dense LU reference (≤ 1e-10,
+  same chain, independent linear algebra) across b_max × load —
+  including ρ > 1, where the *infinite*-room chain is not positive
+  recurrent but the finite room makes every load a legitimate regime
+  (no recurrence guard may trip: the band path itself must solve it),
+- the MC sweep kernel's reject ("429") mode on a seed ladder (3σ),
+- structural facts: loss fraction monotone decreasing in the room,
+  renewal-reward sanity, and the metrics-layer K = q_max guard.
+"""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import chain_solver, markov
+from repro.core.analytic import LinearServiceModel
+from repro.core.grid import SweepGrid
+from repro.core.sweep import sweep
+
+MODEL = LinearServiceModel(alpha=0.05, tau0=1.0)
+B_MAXES = (1, 4, 32)
+RHOS = (0.6, 0.9, 1.2)
+
+
+def _lam(b_max: int, rho: float) -> float:
+    return rho * b_max / (MODEL.alpha * b_max + MODEL.tau0)
+
+
+class TestSolverParity:
+    def test_band_and_gth_match_dense(self):
+        """Same chain, three solvers, ≤ 1e-10 — across the full
+        b_max × ρ × q_max cube, overload included."""
+        for b_max in B_MAXES:
+            for rho in RHOS:
+                lam = _lam(b_max, rho)
+                for q_max in (4, 24):
+                    rd = markov.solve_loss(lam, MODEL, q_max=q_max,
+                                           b_max=b_max, method="dense")
+                    for meth in ("band", "gth"):
+                        r = markov.solve_loss(lam, MODEL, q_max=q_max,
+                                              b_max=b_max, method=meth)
+                        assert r.method == meth
+                        assert r.mean_latency == pytest.approx(
+                            rd.mean_latency, rel=1e-10)
+                        assert abs(r.loss_frac - rd.loss_frac) < 1e-10
+                        assert abs(r.utilization
+                                   - rd.utilization) < 1e-10
+
+    def test_overload_stable_on_band_path(self):
+        """ρ > 1 is the whole point of admission control: the banded
+        path must solve it directly (no fallback, no guard trip), and
+        the answers must be a proper loss equilibrium."""
+        for b_max in B_MAXES:
+            lam = _lam(b_max, 1.2)
+            r = markov.solve_loss(lam, MODEL, q_max=16, b_max=b_max)
+            assert r.method == "band"
+            assert 0.0 < r.loss_frac < 1.0
+            assert 0.0 < r.utilization <= 1.0 + 1e-12
+            # the admitted rate must fit inside the service capacity
+            cap = b_max / MODEL.tau(b_max)
+            assert r.goodput <= cap * (1 + 1e-9)
+            assert np.all(r.pi >= 0) and r.pi.sum() == pytest.approx(1.0)
+
+    def test_infinite_bmax_room(self):
+        """b_max = ∞ with a finite room: every completion drains the
+        queue, so the loss comes only from within-service overflow."""
+        r = markov.solve_loss(2.0, MODEL, q_max=8, b_max=math.inf)
+        rd = markov.solve_loss(2.0, MODEL, q_max=8, b_max=math.inf,
+                               method="dense")
+        assert r.mean_latency == pytest.approx(rd.mean_latency,
+                                               rel=1e-10)
+        assert r.loss_frac < 0.05
+
+
+class TestAgainstMC:
+    def test_reject_mode_seed_ladder(self):
+        """Exact chain vs the sweep kernel's q_max reject regime, per
+        (b_max, ρ) cell on a seed ladder — all cells in ONE dispatched
+        grid per seed."""
+        cells = [(b, r) for b in B_MAXES for r in RHOS]
+        q_max = 12
+        g = SweepGrid.from_points([_lam(b, r) for b, r in cells],
+                                  MODEL.alpha, MODEL.tau0,
+                                  b_max=[b for b, _ in cells],
+                                  q_max=q_max, overflow="reject")
+        n_seeds = 5
+        W = np.empty((n_seeds, len(cells)))
+        L = np.empty((n_seeds, len(cells)))
+        for s in range(n_seeds):
+            res = sweep(g, n_batches=8000, q_cap=64, a_cap=64,
+                        seed=100 + s)
+            W[s], L[s] = res.mean_latency, res.reject_frac
+        for i, (b_max, rho) in enumerate(cells):
+            ex = markov.solve_loss(_lam(b_max, rho), MODEL,
+                                   q_max=q_max, b_max=b_max)
+            se_w = max(W[:, i].std(ddof=1) / math.sqrt(n_seeds),
+                       0.01 * ex.mean_latency)
+            se_l = max(L[:, i].std(ddof=1) / math.sqrt(n_seeds), 0.003)
+            assert abs(W[:, i].mean() - ex.mean_latency) < 3.0 * se_w, \
+                (b_max, rho, "mean_latency")
+            assert abs(L[:, i].mean() - ex.loss_frac) < 3.0 * se_l, \
+                (b_max, rho, "loss_frac")
+
+    def test_evaluate_markov_backend_routes_loss_points(self):
+        g = SweepGrid.from_points([_lam(4, 1.2)], MODEL.alpha,
+                                  MODEL.tau0, b_max=[4], q_max=[12],
+                                  overflow="reject")
+        from repro.core.evaluate import evaluate
+        (r,) = evaluate(g, backend="markov")
+        # the grid stores λ/α/τ0 in float32 — compare at stored values
+        ex = markov.solve_loss(
+            float(g.lam[0]),
+            LinearServiceModel(float(g.alpha[0]), float(g.tau0[0])),
+            q_max=12, b_max=4)
+        assert r.reject_frac == pytest.approx(ex.loss_frac, rel=1e-12)
+        assert r.goodput == pytest.approx(ex.goodput, rel=1e-12)
+        assert r.throughput == pytest.approx(ex.goodput, rel=1e-12)
+        r.check()
+
+
+class TestStructure:
+    def test_loss_monotone_in_room(self):
+        lam = _lam(4, 1.1)
+        losses = [markov.solve_loss(lam, MODEL, q_max=q, b_max=4
+                                    ).loss_frac
+                  for q in (2, 4, 8, 16, 32)]
+        assert all(a > b - 1e-12 for a, b in zip(losses, losses[1:]))
+        # overload floor: an infinite room cannot push loss below
+        # 1 − capacity/λ
+        floor = 1.0 - (4 / MODEL.tau(4)) / lam
+        assert losses[-1] > floor - 1e-9
+
+    def test_large_room_approaches_lossless_chain(self):
+        lam = _lam(4, 0.7)
+        r = markov.solve_loss(lam, MODEL, q_max=64, b_max=4)
+        m = markov.solve(lam, MODEL, b_max=4)
+        assert r.loss_frac < 1e-8
+        assert r.mean_latency == pytest.approx(m.mean_latency, rel=1e-6)
+        assert r.mean_batch == pytest.approx(m.mean_batch, rel=1e-6)
+
+    def test_metrics_layer_guard_and_validation(self):
+        with pytest.raises(ValueError):
+            markov.solve_loss(1.0, MODEL, q_max=0)
+        with pytest.raises(ValueError):
+            markov.solve_loss(-1.0, MODEL, q_max=4)
+        with pytest.raises(ValueError):
+            markov.solve_loss(1.0, MODEL, q_max=4, method="nope")
+        with pytest.raises(ValueError):
+            markov.solve_loss(1.0, MODEL, q_max=4, b_max=0)
+        ch = chain_solver.build_chain(1.0, MODEL, 4, K=16)
+        pi = chain_solver.solve_pi(ch)
+        with pytest.raises(ValueError):
+            # the loss reward structure only makes sense when the
+            # truncation IS the room
+            chain_solver.chain_loss_metrics(1.0, pi, ch.t_of, ch.b_of,
+                                            q_max=8)

@@ -65,7 +65,7 @@ def fleet():
 class TestParity:
     def test_no_drops(self, fleet):
         _, r = fleet
-        assert int(r.dropped.sum()) == 0
+        assert int(r.buffer_dropped.sum()) == 0
 
     def test_k1_matches_markov_all_routings(self, fleet):
         """k = 1 reduces to the single-server queue whatever the

@@ -80,7 +80,7 @@ def _ladder_se(kernel_vals, ref_vals, floor_frac=0.015):
 class TestNumpyParity:
     def test_no_drops(self, gen):
         _, r = gen
-        assert int(r.dropped.sum()) == 0
+        assert int(r.buffer_dropped.sum()) == 0
 
     def test_continuous_matches_numpy_seed_ladder(self, gen):
         _, r = gen

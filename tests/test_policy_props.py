@@ -1,4 +1,5 @@
-"""Property-based tests for the batching policies (repro.core.policy).
+"""Property-based tests for the batching policies (repro.core.policy)
+and the SLO/admission-control accounting laws.
 
 These pin the contracts every consumer of ``BatchPolicy`` relies on —
 the serving engine's event loop, the scalar simulator, and the sweep /
@@ -10,11 +11,24 @@ fleet kernels' (b_max, wait_max, wait_target) encodings:
   latest (unless that deadline already passed), and immediately once
   ``target`` jobs wait.
 
+The admission-control block drives ``repro.core.loss_ref`` (the
+chronological numpy mirror of the kernels' loss semantics) over random
+(λ, q_max, deadline, overflow, retry) points and asserts the laws that
+must hold for EVERY loss configuration, not just the pinned ones in
+test_backpressure.py:
+
+- the four terminal classes partition the offered jobs exactly,
+- goodput ≤ throughput ≤ λ (as rates, via the measured fractions),
+- at a fixed seed, tightening only the deadline never increases the
+  goodput fraction.
+
 Runs under real `hypothesis` when installed, else the deterministic
 fallback sampler in tests/_hypothesis_compat.py.
 """
 import pytest
 
+from repro.core.analytic import LinearServiceModel
+from repro.core.loss_ref import simulate_loss_numpy
 from repro.core.policy import BatchAllWaiting, CappedBatch, TimeoutBatch
 
 from _hypothesis_compat import given, settings, st
@@ -82,3 +96,79 @@ def test_take_values_pin():
     assert BatchAllWaiting().take(17) == 17
     assert CappedBatch(cap=8).take(17) == 8
     assert TimeoutBatch(cap=8).take(17) == 8
+
+
+# --------------------------------------------------------------------------
+# Admission-control accounting laws (loss_ref over random configurations)
+# --------------------------------------------------------------------------
+
+_MODEL = LinearServiceModel(alpha=0.05, tau0=1.0)
+
+
+def _loss_point(lam, q_max, deadline, overflow_i, retry_rate, seed,
+                n_batches=2500):
+    return simulate_loss_numpy(
+        lam, _MODEL, 8, q_max=q_max, deadline=deadline,
+        overflow=("reject", "drop")[overflow_i], retry_rate=retry_rate,
+        q_cap=128, r_cap=64, n_batches=n_batches, seed=seed)
+
+
+@settings(max_examples=12, deadline=None)
+@given(lam=st.floats(min_value=1.0, max_value=9.0),
+       q_max=st.integers(min_value=1, max_value=40),
+       deadline=st.floats(min_value=0.0, max_value=12.0),
+       overflow_i=st.integers(min_value=0, max_value=1),
+       retry_rate=st.floats(min_value=0.0, max_value=1.0),
+       seed=st.integers(min_value=0, max_value=10_000))
+def test_terminal_classes_partition_offered(lam, q_max, deadline,
+                                            overflow_i, retry_rate,
+                                            seed):
+    r = _loss_point(lam, q_max, deadline, overflow_i, retry_rate, seed)
+    assert r.offered == r.n_jobs + r.overflow_dropped + r.abandoned
+    for f in (r.goodput_frac, r.reject_frac, r.abandon_frac,
+              r.late_frac):
+        assert -1e-12 <= f <= 1.0 + 1e-12
+    assert (r.goodput_frac + r.late_frac + r.reject_frac
+            + r.abandon_frac) == pytest.approx(1.0, abs=1e-9)
+    assert r.retry_inflation >= 1.0 - 1e-12
+    assert r.n_in_slo <= r.n_jobs <= r.offered
+
+
+@settings(max_examples=12, deadline=None)
+@given(lam=st.floats(min_value=1.0, max_value=9.0),
+       q_max=st.integers(min_value=1, max_value=40),
+       deadline=st.floats(min_value=0.0, max_value=12.0),
+       overflow_i=st.integers(min_value=0, max_value=1),
+       retry_rate=st.floats(min_value=0.0, max_value=1.0),
+       seed=st.integers(min_value=0, max_value=10_000))
+def test_goodput_below_throughput_below_offered_rate(lam, q_max,
+                                                     deadline,
+                                                     overflow_i,
+                                                     retry_rate, seed):
+    """As rates over the offered stream: λ·goodput_frac ≤
+    λ·(completing fraction) ≤ λ — admission control can only shed or
+    delay work, never manufacture it."""
+    r = _loss_point(lam, q_max, deadline, overflow_i, retry_rate, seed)
+    complete_frac = 1.0 - r.reject_frac - r.abandon_frac
+    assert r.goodput_frac <= complete_frac + 1e-12
+    assert complete_frac <= 1.0 + 1e-12
+
+
+@settings(max_examples=8, deadline=None)
+@given(lam=st.floats(min_value=3.0, max_value=8.0),
+       q_max=st.integers(min_value=4, max_value=24),
+       deadline=st.floats(min_value=2.0, max_value=8.0),
+       overflow_i=st.integers(min_value=0, max_value=1),
+       seed=st.integers(min_value=0, max_value=10_000))
+def test_goodput_monotone_in_deadline_at_fixed_seed(lam, q_max,
+                                                    deadline,
+                                                    overflow_i, seed):
+    """Tightening ONLY the deadline at a fixed seed cannot raise the
+    goodput fraction (small MC slack: reneging perturbs the queue path,
+    so the comparison is statistical, not path-wise)."""
+    fracs = [
+        _loss_point(lam, q_max, deadline * s, overflow_i, 0.0, seed,
+                    n_batches=4000).goodput_frac
+        for s in (1.5, 1.0, 1.0 / 1.5)]
+    assert fracs[0] >= fracs[1] - 0.02
+    assert fracs[1] >= fracs[2] - 0.02

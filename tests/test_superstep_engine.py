@@ -206,7 +206,7 @@ _SHARD_SCRIPT = textwrap.dedent("""
                           "n_jobs", "hist"):
                 a, b = getattr(ref, field), getattr(r, field)
                 assert np.array_equal(a, b), (name, field)
-        assert int(ref.dropped.sum()) == 0, name
+        assert int(ref.buffer_dropped.sum()) == 0, name
         print(name, "ok")
 
     # 5 points: indivisible by 2 and 4, so the shared repeated-last-

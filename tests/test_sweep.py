@@ -33,7 +33,7 @@ class TestAgainstScalarSim:
 
     def test_mean_latency_and_batches(self, base_result):
         grid, r = base_result
-        assert int(r.dropped.sum()) == 0
+        assert int(r.buffer_dropped.sum()) == 0
         for i, rho in enumerate(RHOS):
             lam = rho / V100.alpha
             s = simulate(lam, V100, n_jobs=120_000, seed=3)
@@ -72,7 +72,7 @@ class TestPaperBoundsOnGrid:
         grid = SweepGrid.from_product(
             [1.0, 2.0, 3.0], [0.1438, 0.25], [0.75, 1.8874])
         r = sweep(grid, n_batches=4000, q_cap=1024, seed=13)
-        assert int(r.dropped.sum()) == 0
+        assert int(r.buffer_dropped.sum()) == 0
         bounds = np.array([an.phi(l, a, t) for l, a, t in
                            zip(grid.lam, grid.alpha, grid.tau0)])
         # the bound is tight at moderate/high load, so allow MC noise up
