@@ -82,17 +82,26 @@ def timed_struct_vs_dense(rows: List[Row], name: str, model, *,
 
 
 def timed_sweep(rows: List[Row], grid, name: str, *, n_batches: int,
-                seed: int, q_cap: Optional[int] = None):
+                seed: int, q_cap: Optional[int] = None,
+                sketch: bool = False,
+                superstep_backend: Optional[str] = None,
+                metrics_tap=None):
     """Run one sweep dispatch over ``grid`` through the engine defaults
     (adaptive ``q_cap``/``a_cap``, sharded over the visible devices),
     appending its timing/size row to ``rows``; returns the
-    SweepResult."""
+    SweepResult.  The superstep knobs pass through: ``sketch`` for the
+    streaming quantile sketch, ``superstep_backend`` to pin the fused
+    pallas vs lax path, ``metrics_tap`` to stream per-superstep
+    telemetry (see ``benchmarks/superstep.py``)."""
     from repro.core.sweep import sweep
 
     out = {}
 
     def dispatch():
-        out["r"] = sweep(grid, n_batches=n_batches, q_cap=q_cap, seed=seed)
+        out["r"] = sweep(grid, n_batches=n_batches, q_cap=q_cap,
+                         seed=seed, sketch=sketch,
+                         superstep_backend=superstep_backend,
+                         metrics_tap=metrics_tap)
         return {"points": len(grid), "n_batches": n_batches,
                 "total_jobs": int(out["r"].n_jobs.sum()),
                 "buffer_dropped": int(out["r"].buffer_dropped.sum())}

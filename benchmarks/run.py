@@ -52,7 +52,11 @@ def _load_bench(dirpath: Path) -> dict:
 
 def _row_rates(doc: dict) -> dict:
     out = {}
-    for row in doc.get("rows", []):
+    for row in doc.get("rows") or []:
+        # tolerate hand-edited / truncated baselines: a malformed row
+        # (non-dict, or missing its name) is just not comparable
+        if not isinstance(row, dict) or not row.get("name"):
+            continue
         rates = {k: row[k] for k in _RATE_KEYS if k in row}
         sp = (row.get("payload") or {}).get("speedup")
         if sp is not None:
@@ -76,13 +80,26 @@ def compare_runs(baseline_dir: Path, current_dir: Path) -> tuple:
             lines.append(f"{mod:<12} SKIP (quick flag differs: baseline="
                          f"{b.get('quick')} current={c.get('quick')})")
             continue
-        bw, cw = float(b["wall_s"]), float(c["wall_s"])
-        delta = (cw - bw) / bw if bw > 0 else 0.0
-        flag = ""
-        if delta > WALL_REGRESSION_TOL:
-            flag = "  << REGRESSION"
-            regressed.append(mod)
-        lines.append(f"{mod:<12} {bw:8.2f} {cw:8.2f} {delta:+8.1%}{flag}")
+        try:
+            bw, cw = float(b["wall_s"]), float(c["wall_s"])
+        except (KeyError, TypeError, ValueError):
+            lines.append(
+                f"{mod:<12} SKIP (missing/non-numeric wall_s: baseline="
+                f"{b.get('wall_s')!r} current={c.get('wall_s')!r})")
+            continue
+        if bw > 0:
+            delta = (cw - bw) / bw
+            flag = ""
+            if delta > WALL_REGRESSION_TOL:
+                flag = "  << REGRESSION"
+                regressed.append(mod)
+            lines.append(f"{mod:<12} {bw:8.2f} {cw:8.2f} "
+                         f"{delta:+8.1%}{flag}")
+        else:
+            # a zero/negative baseline wall clock cannot gate anything
+            # (the delta is undefined) — report it, never flag it
+            lines.append(f"{mod:<12} {bw:8.2f} {cw:8.2f} {'n/a':>8}"
+                         "  (degenerate baseline wall_s; not gated)")
         brates, crates = _row_rates(b), _row_rates(c)
         for name in sorted(set(brates) & set(crates)):
             for key in sorted(set(brates[name]) & set(crates[name])):
@@ -134,6 +151,10 @@ def main() -> None:
                     help="directory for BENCH_<module>.json files")
     ap.add_argument("--no-json", action="store_true",
                     help="skip writing BENCH_<module>.json")
+    ap.add_argument("--metrics-dir", default=None,
+                    help="directory for streaming campaign metrics "
+                         "(JSONL + Prometheus text); defaults to "
+                         "--json-dir")
     ap.add_argument("--compare", default=None, metavar="BASELINE_DIR",
                     help="after running, diff --json-dir against the "
                          "baseline BENCH JSONs in this directory; exit "
@@ -149,7 +170,8 @@ def main() -> None:
                             fig5_utilization, fig6_energy, fig7_tradeoff,
                             fig8_finite_bmax, fig9_batch_times,
                             fig11_served_latency, policies, replicas,
-                            roofline, table1_throughput, tails)
+                            roofline, superstep, table1_throughput,
+                            tails)
 
     modules = {
         "table1": lambda: table1_throughput.run(),
@@ -180,6 +202,9 @@ def main() -> None:
         "backpressure": lambda: backpressure.run(
             n_batches=1_200 if args.quick else 3_000),
         "roofline": lambda: roofline.run(),
+        "superstep": lambda: superstep.run(
+            n_batches=1_024 if args.quick else 3_000,
+            metrics_dir=args.metrics_dir or args.json_dir),
     }
     if args.only:
         modules = {k: v for k, v in modules.items() if k == args.only}

@@ -364,10 +364,22 @@ def _build_grid_kernel(K: int, V: int, D: int):
     import jax.numpy as jnp
     from jax import lax
 
+    # Build-time guard (PR 4 footgun): constants materialized in this
+    # body are baked into the trace, so the builder itself must run
+    # inside an enable_x64 scope — outside it, any float constant is
+    # silently float32 and the whole level recursion degrades.  The
+    # check fires at *build* time, long before the first dispatch.
+    if jnp.result_type(float) != jnp.float64:
+        raise RuntimeError(
+            "_build_grid_kernel called outside an enable_x64 scope; "
+            "build-time jnp constants would be float32 and silently "
+            "truncate the GTH recursion (wrap the build + dispatch in "
+            "jax.experimental.enable_x64)")
+
     f64, i32 = jnp.float64, jnp.int32
-    # kept as NumPy here: the jnp constant must be created at *trace*
-    # time, inside the caller's enable_x64 scope — materializing it at
-    # build time would silently truncate the table to float32
+    # kept as NumPy here: the factorial table is the one constant big
+    # enough to matter, and keeping it NumPy until trace time makes the
+    # dtype explicit at the single jnp.asarray below
     cumlogfact_np = np.concatenate(
         [[0.0],
          np.cumsum(np.log(np.arange(1, K + V + 2, dtype=np.float64)))])
@@ -525,9 +537,11 @@ def grid_solve(lams, alphas, tau0s, b_maxes, K: int, *,
     from jax.experimental import enable_x64
 
     V, D = _grid_shapes(lams, alphas, tau0s, b_maxes, K)
-    kernel = _build_grid_kernel(K, V, D)
     chunk = min(cells_per_dispatch, n)
     with enable_x64():
+        # build INSIDE the x64 scope: the builder bakes trace-time
+        # constants, and enforces this placement with a RuntimeError
+        kernel = _build_grid_kernel(K, V, D)
         for lo in range(0, n, chunk):
             hi = min(lo + chunk, n)
             # pad the tail chunk (repeating its last cell) so every

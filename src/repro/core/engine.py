@@ -66,7 +66,17 @@ module is the single home for all of it:
   compiled XLA program per shape forever.  Eviction calls the wrapped
   function's ``clear_cache()`` (every ``jax.jit`` wrapper has one), so
   the compiled executables are actually released, not just the Python
-  wrapper.
+  wrapper.  The cache keys on the builder's FULL positional argument
+  tuple — every compile-time flag (superstep backend, sketch mode, the
+  metrics tap) must be a builder argument, never a closure or global,
+  so a kernel specialized one way can never be served for a request
+  specialized another (asserted by the cache-key regression tests).
+
+The fused histogram/FIFO superstep update (pallas kernel + lax
+fallback) lives in ``repro.kernels.superstep``; ``scatter_hist`` /
+``scatter_hist_sums`` here are its lax building blocks, kept in the
+engine so the fallback path is exactly the pre-pallas op sequence
+(bitwise-pinned by the backend-parity tests).
 
 JAX is imported lazily inside functions: building grids and calling
 ``enable_host_devices`` must not initialize the JAX backend (the
@@ -93,8 +103,9 @@ __all__ = ["enable_host_devices", "point_keys", "resolve_shards",
            "exp_offsets", "fifo_append", "fifo_pop_shift",
            "accept_window", "push_poisson_window",
            "push_poisson_window_loss", "renege_prefix", "orbit_draws",
-           "orbit_file", "scatter_hist", "queue_capacity",
-           "window_capacity", "orbit_capacity", "kernel_cache"]
+           "orbit_file", "scatter_hist", "scatter_hist_sums",
+           "queue_capacity", "window_capacity", "orbit_capacity",
+           "kernel_cache"]
 
 ShardSpec = Union[None, bool, int]
 
@@ -378,6 +389,18 @@ def scatter_hist(hist, bins, inc, hist_rows=None):
         bins, inc = bins[hist_rows], inc[hist_rows]
     return hist.at[bins.reshape(-1)].add(
         inc.reshape(-1).astype(jnp.int32))
+
+
+def scatter_hist_sums(sums, bins, inc, vals):
+    """Companion scatter for the streaming-sketch mode: accumulate the
+    measured latencies (``vals`` where ``inc``) into per-bin float sums
+    alongside the counts, so streaming consumers can report in-bin
+    means without keeping samples.  Same flattened-block amortization
+    as ``scatter_hist``; callers thin ``bins``/``inc``/``vals``
+    together before the call."""
+    import jax.numpy as jnp
+    masked = jnp.where(inc, vals, 0.0).reshape(-1)
+    return sums.at[bins.reshape(-1)].add(masked)
 
 
 # ---------------------------------------------------------------------------

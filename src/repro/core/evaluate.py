@@ -42,7 +42,12 @@ they default to adaptive ``q_cap``/``a_cap`` sizing and to sharding the
 grid over every visible device via ``shard_map`` — pass ``shard`` to
 pin the mesh width (``False``/1 → single device).  Per-point results
 are bitwise shard-count invariant, so ``evaluate`` answers do not
-depend on the machine's device topology.
+depend on the machine's device topology.  The kernels' superstep knobs
+pass through the same way: ``sketch=True`` switches to the
+bounded-memory streaming quantile sketch, ``superstep_backend=`` picks
+the fused pallas vs lax histogram path (bitwise identical), and
+``metrics_tap=`` attaches a ``repro.core.metrics.MetricsTap`` that
+streams per-superstep telemetry without changing any output.
 """
 from __future__ import annotations
 

@@ -81,15 +81,17 @@ import jax
 import jax.numpy as jnp
 from jax import lax, random
 
-from repro.core import engine
+from repro.core import engine, metrics
 from repro.core.engine import ShardSpec
 from repro.core.grid import (  # noqa: F401  (re-exported for callers)
     DISC_CODE, DISC_NAME, OVERFLOW_CODE, GenGrid, GenResult)
-from repro.core.hist import (bit_bins, hist_edges,
+from repro.core.hist import (SKETCH_BINS, hist_edges,
                              hist_percentiles as _hist_percentiles,
-                             thinned_rows)
+                             sketch_edges, thinned_rows)
+from repro.kernels import superstep as _ss
 
-__all__ = ["DISC_CODE", "DISC_NAME", "GenGrid", "GenResult", "gen_sweep"]
+__all__ = ["DISC_CODE", "DISC_NAME", "GenGrid", "GenResult", "gen_sweep",
+           "gen_caps"]
 
 _OV_REJECT = OVERFLOW_CODE["reject"]
 
@@ -103,7 +105,8 @@ _STEP_BUCKET = 2048         # n_steps rounds up to this (bounds recompiles)
 @engine.kernel_cache(maxsize=16)
 def _build_gen_kernel(n_steps: int, warmup: int, s_cap: int, q_cap: int,
                       a_cap: int, n_bins: int, has_loss: bool,
-                      r_cap: int, hist_every: int, n_dev: int):
+                      r_cap: int, hist_every: int, ss_backend: str,
+                      use_sketch: bool, tap, n_dev: int):
     """Compile-time specialization of the per-point token-level kernel.
 
     ``s_cap`` (grid max of ``max_active``) sizes the decode pool;
@@ -393,7 +396,7 @@ def _build_gen_kernel(n_steps: int, warmup: int, s_cap: int, q_cap: int,
 
         def superstep(state, x):
             i_base, k_sup = x
-            hist = state[-1]
+            hists = state[-1]
             # one block draw per superstep, consumed row-wise by the
             # inner scan — per-step threefry calls would dominate the
             # per-point cost of a wide vmap on CPU.  The retry block
@@ -409,18 +412,26 @@ def _build_gen_kernel(n_steps: int, warmup: int, s_cap: int, q_cap: int,
             else:
                 xs = (i_base + jnp.arange(REBASE_EVERY), arr_gaps)
             state, (lats, inc) = lax.scan(step, state[:-1], xs)
-            if hist_every > 1:
-                lats, inc = lats[hist_rows], inc[hist_rows]
-            hist = engine.scatter_hist(hist, bit_bins(lats, n_bins), inc)
+            hists = _ss.hist_update(hists, lats, inc, n_bins=n_bins,
+                                    backend=ss_backend,
+                                    sketch=use_sketch,
+                                    hist_rows=hist_rows)
             # rebase the clock to the superstep end and re-compact the
             # tail buffer to head = 0: the only whole-buffer passes in
-            # the kernel, paid once per REBASE_EVERY steps
+            # the kernel, paid once per REBASE_EVERY steps — fused with
+            # the clock rebase in repro.kernels.superstep
             (head, tail, buf, rem, arr_s, now, next_arr, *accs) = state
-            buf = engine.fifo_pop_shift(buf, head, buf_len) - now
+            buf = _ss.fifo_compact(buf, head, now, backend=ss_backend)
             arr_s = jnp.where(rem > 0, arr_s - now, 0.0)
+            metrics.tap_superstep(
+                tap, i_base // REBASE_EVERY, queue=tail - head,
+                jobs=accs[1], busy=accs[5], span=accs[6],
+                dropped=accs[8],
+                overflow=accs[10] if has_loss else 0,
+                abandoned=accs[11] if has_loss else 0)
             return (jnp.zeros((), i32), tail - head, buf, rem, arr_s,
                     jnp.zeros((), f32), next_arr - now,
-                    *accs, hist), None
+                    *accs, hists), None
 
         key, k0 = random.split(key)
         init = (jnp.zeros((), i32),                    # head
@@ -438,7 +449,10 @@ def _build_gen_kernel(n_steps: int, warmup: int, s_cap: int, q_cap: int,
         if has_loss:
             # orbit, ov_n, ab_n, slo_n, fresh_n, retry_n
             init = init + tuple(jnp.zeros((), i32) for _ in range(6))
-        init = init + (jnp.zeros((n_bins,), i32),)       # hist
+        hists0 = (jnp.zeros((n_bins,), i32),)            # hist
+        if use_sketch:
+            hists0 = hists0 + (jnp.zeros((n_bins,), f32),)
+        init = init + (hists0,)
         n_super = n_steps // REBASE_EVERY
         state, _ = lax.scan(
             superstep, init,
@@ -446,7 +460,7 @@ def _build_gen_kernel(n_steps: int, warmup: int, s_cap: int, q_cap: int,
              random.split(key, n_super)))
         (lat_sum, lat_n, sum_b, sum_b2, n_meas, busy, span, q_max,
          dropped) = state[7:16]
-        hist = state[-1]
+        hists = state[-1]
 
         jobs = jnp.maximum(lat_n, 1).astype(f32)
         nst = jnp.maximum(n_meas, 1).astype(f32)
@@ -459,8 +473,10 @@ def _build_gen_kernel(n_steps: int, warmup: int, s_cap: int, q_cap: int,
             "n_steps": n_meas,
             "max_queue": q_max,
             "dropped": dropped,
-            "hist": hist,
+            "hist": hists[0],
         }
+        if use_sketch:
+            out["hist_sums"] = hists[1]
         if has_loss:
             (_orbit, ov_n, ab_n, slo_n, fresh_n, retry_n) = state[16:22]
             out.update(overflow_dropped=ov_n, abandoned=ab_n,
@@ -470,12 +486,40 @@ def _build_gen_kernel(n_steps: int, warmup: int, s_cap: int, q_cap: int,
     return engine.shard_kernel(jax.vmap(run_point), n_dev)
 
 
+def gen_caps(grid: GenGrid, *, q_cap: Optional[int] = None) -> dict:
+    """The compile-time capacities ``gen_sweep`` would derive from
+    ``grid`` — compute once on the FULL campaign grid and splat into
+    every chunk of a split dispatch (``gen_sweep(chunk,
+    key_offset=..., **gen_caps(full_grid))``), so all chunks compile
+    the same shapes as the whole-grid run."""
+    has_loss = grid.has_loss
+    if q_cap is None:
+        q_cap = engine.queue_capacity(
+            grid.lam, grid.equivalent_alpha, grid.equivalent_tau0,
+            grid.max_active,
+            q_max=grid.q_max if has_loss else None)
+    # the densest indivisible window: the batched prefill of a full
+    # batch plus the decode step it precedes
+    window = (grid.alpha_prefill * grid.prompt_len * grid.max_active
+              + grid.tau0_prefill
+              + grid.alpha_decode * grid.max_active
+              + grid.tau0_decode)
+    caps = dict(q_cap=int(q_cap),
+                a_cap=int(engine.window_capacity(grid.lam, window)))
+    if has_loss:
+        caps["r_cap"] = int(engine.orbit_capacity(grid.lam,
+                                                  grid.retry_rate))
+    return caps
+
+
 def gen_sweep(grid: GenGrid, *, n_steps: int = 4096,
               warmup: Optional[int] = None, q_cap: Optional[int] = None,
               a_cap: Optional[int] = None, r_cap: Optional[int] = None,
               n_bins: int = 512,
               seed: int = 0, key_offset: int = 0, hist_every: int = 1,
-              shard: ShardSpec = None) -> GenResult:
+              shard: ShardSpec = None, sketch: bool = False,
+              superstep_backend: Optional[str] = None,
+              metrics_tap=None) -> GenResult:
     """Simulate every grid point for ``n_steps`` scheduler decisions in
     one jit+vmap device dispatch.
 
@@ -498,13 +542,16 @@ def gen_sweep(grid: GenGrid, *, n_steps: int = 4096,
     ``fold_in(PRNGKey(seed), key_offset + i)``, so a grid sharded into
     several dispatches (``GenGrid.take`` + ``key_offset``) is
     bitwise-identical to the one-dispatch run — provided the dispatches
-    share compiled shapes, i.e. pin ``q_cap``/``a_cap`` explicitly when
-    splitting (the adaptive defaults are sized per dispatched grid).
+    share compiled shapes: split chunks (``key_offset != 0``) must pin
+    ``q_cap``/``a_cap`` (and ``r_cap`` on loss grids) or this raises —
+    pass ``**gen_caps(full_grid)`` (the adaptive defaults are sized per
+    dispatched grid).
     ``shard`` picks the
     device-mesh width for the shard_map dispatch (same contract as
     ``fleet_sweep``: ``None`` → all visible devices, ``False``/1 →
     single device, an int → that many shards); per-point results are
-    shard-count invariant.
+    shard-count invariant.  ``sketch``/``superstep_backend``/
+    ``metrics_tap`` behave as in ``repro.core.sweep.sweep``.
     """
     if not isinstance(grid, GenGrid):
         raise TypeError("gen_sweep needs a GenGrid "
@@ -518,37 +565,42 @@ def gen_sweep(grid: GenGrid, *, n_steps: int = 4096,
         raise ValueError(f"warmup {warmup} must lie in [0, {n_steps})")
     s_cap = int(grid.max_active.max())
     has_loss = grid.has_loss
-    if q_cap is None:
-        q_cap = engine.queue_capacity(
-            grid.lam, grid.equivalent_alpha, grid.equivalent_tau0,
-            grid.max_active,
-            q_max=grid.q_max if has_loss else None)
-    if a_cap is None:
-        # the densest indivisible window: the batched prefill of a full
-        # batch plus the decode step it precedes
-        window = (grid.alpha_prefill * grid.prompt_len * grid.max_active
-                  + grid.tau0_prefill
-                  + grid.alpha_decode * grid.max_active
-                  + grid.tau0_decode)
-        a_cap = engine.window_capacity(grid.lam, window)
+    if key_offset:
+        from repro.core.sweep import _require_pinned_caps
+        _require_pinned_caps(
+            "gen", key_offset,
+            q_cap=q_cap is not None, a_cap=a_cap is not None,
+            r_cap=not has_loss or r_cap is not None)
+    if q_cap is None or a_cap is None or (has_loss and r_cap is None):
+        caps = gen_caps(grid, q_cap=q_cap)
+        q_cap = caps["q_cap"] if q_cap is None else q_cap
+        a_cap = caps["a_cap"] if a_cap is None else a_cap
+        if has_loss and r_cap is None:
+            r_cap = caps["r_cap"]
+    if not has_loss:
+        r_cap = 0
     if s_cap > q_cap:
         raise ValueError("max_active exceeds q_cap; raise q_cap")
     if not set(np.unique(grid.discipline)) <= set(DISC_CODE.values()):
         raise ValueError(f"unknown discipline code in grid "
                          f"(valid: {DISC_CODE})")
-    if has_loss:
-        if np.any(grid.q_max > q_cap):
-            raise ValueError("q_max exceeds q_cap; raise q_cap")
-        if r_cap is None:
-            r_cap = engine.orbit_capacity(grid.lam, grid.retry_rate)
-    else:
-        r_cap = 0
+    if has_loss and np.any(grid.q_max > q_cap):
+        raise ValueError("q_max exceeds q_cap; raise q_cap")
+    if sketch:
+        n_bins = SKETCH_BINS
+    ss_backend = _ss.resolve_backend(superstep_backend,
+                                     n_bins=int(n_bins))
     n = len(grid)
     n_dev = engine.resolve_shards(shard, n)
+    if metrics_tap is not None:
+        # io_callback under shard_map is outside the pinned-jax
+        # contract; bitwise shard invariance makes this timing-only
+        n_dev = 1
     kernel = _build_gen_kernel(int(n_steps), int(warmup), s_cap,
                                int(q_cap), int(a_cap), int(n_bins),
-                               has_loss, int(r_cap),
-                               int(hist_every), n_dev)
+                               has_loss, int(r_cap), int(hist_every),
+                               ss_backend, bool(sketch), metrics_tap,
+                               n_dev)
 
     params = {
         "lam": jnp.asarray(grid.lam),
@@ -586,7 +638,15 @@ def gen_sweep(grid: GenGrid, *, n_steps: int = 4096,
             n_fresh=n_jobs.copy(),
             n_retry=np.zeros_like(n_jobs))
 
-    p50, p95, p99 = _hist_percentiles(out["hist"], (50, 95, 99))
+    p50, p95, p99 = _hist_percentiles(
+        out["hist"], (50, 95, 99),
+        edges=sketch_edges() if sketch else None)
+    if metrics_tap is not None:
+        metrics_tap.observe_summary(
+            kind="gen", points=n, jobs_total=int(n_jobs.sum()),
+            p50_median=float(np.nanmedian(p50)),
+            p95_median=float(np.nanmedian(p95)),
+            p99_median=float(np.nanmedian(p99)))
     return GenResult(
         grid=grid,
         mean_latency=np.asarray(out["mean_latency"], dtype=np.float64),
@@ -600,5 +660,7 @@ def gen_sweep(grid: GenGrid, *, n_steps: int = 4096,
         max_queue=np.asarray(out["max_queue"]),
         buffer_dropped=np.asarray(out["dropped"]),
         hist=np.asarray(out["hist"]),
+        hist_sums=(np.asarray(out["hist_sums"], dtype=np.float64)
+                   if sketch else None),
         **loss_kw,
     )

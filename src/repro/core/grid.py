@@ -45,7 +45,7 @@ DISC_NAME = {v: k for k, v in DISC_CODE.items()}
 # Histogram binning lives in ``repro.core.hist`` (shared by every
 # kernel); re-exported here for back-compat with older import sites.
 from repro.core.hist import (  # noqa: F401  (re-exports)
-    _EXP_MIN, _MANT, hist_edges, hist_percentiles)
+    _EXP_MIN, _MANT, hist_edges, hist_percentiles, sketch_edges)
 
 _hist_percentiles = hist_percentiles          # back-compat alias
 
@@ -603,7 +603,15 @@ class _LossAccounting:
     ``n_retry``): ``offered = n_jobs + overflow_dropped + abandoned``,
     and ``goodput_frac + late_frac + reject_frac + abandon_frac = 1``
     exactly.  Without loss regimes every fraction degenerates correctly
-    (goodput_frac = 1, losses = 0, retry_inflation = 1)."""
+    (goodput_frac = 1, losses = 0, retry_inflation = 1).
+
+    Degenerate denominators keep the same convention: a point with
+    ``offered == 0`` (nothing measured — e.g. a warmup-dominated or
+    zero-rate lane) reports goodput_frac = 1 and losses = 0, so the
+    partition identity still holds; ``retry_inflation`` is pinned to 1
+    when ``n_fresh == 0`` (a retry stream with no measured fresh
+    arrivals carries no inflation evidence — the old ratio exploded to
+    ``n_retry``)."""
 
     @property
     def offered(self) -> np.ndarray:
@@ -617,8 +625,10 @@ class _LossAccounting:
 
     @property
     def goodput_frac(self) -> np.ndarray:
-        """Fraction of offered jobs completed within their deadline."""
-        return self.n_in_slo / self._offered_safe
+        """Fraction of offered jobs completed within their deadline
+        (1 where nothing was offered — see the class docstring)."""
+        return np.where(self.offered > 0,
+                        self.n_in_slo / self._offered_safe, 1.0)
 
     @property
     def reject_frac(self) -> np.ndarray:
@@ -647,9 +657,11 @@ class _LossAccounting:
 
     @property
     def retry_inflation(self) -> np.ndarray:
-        """Arrival-stream inflation (fresh+retry)/fresh ≥ 1."""
-        return ((self.n_fresh + self.n_retry)
-                / np.maximum(self.n_fresh, 1.0))
+        """Arrival-stream inflation (fresh+retry)/fresh ≥ 1 (pinned to
+        1 where no fresh arrival was measured)."""
+        return np.where(self.n_fresh > 0,
+                        (self.n_fresh + self.n_retry)
+                        / np.maximum(self.n_fresh, 1.0), 1.0)
 
 
 @dataclass
@@ -682,10 +694,17 @@ class SweepResult(_LossAccounting):
     n_fresh: np.ndarray               # measured first-time arrivals
     n_retry: np.ndarray               # measured orbit re-arrivals
     hist: np.ndarray = field(repr=False)           # (N, n_bins) counts
+    # streaming-sketch runs (sketch=True) also carry the per-bin latency
+    # sums their fused kernel accumulates; None on full-histogram runs
+    hist_sums: np.ndarray = field(default=None, repr=False)
 
     @property
     def hist_bin_edges(self) -> np.ndarray:
-        """Latency values bounding the (shared) histogram bins."""
+        """Latency values bounding the (shared) histogram bins — the
+        sketch's log-spaced edges on a sketch run (identified by the
+        per-bin sums only that mode accumulates)."""
+        if self.hist_sums is not None:
+            return sketch_edges()
         return hist_edges(self.hist.shape[1])
 
     def __len__(self) -> int:
@@ -731,7 +750,10 @@ class FleetResult(SweepResult):
     busy fraction of k servers) plus per-replica job counts."""
 
     grid: FleetGrid
-    jobs_by_replica: np.ndarray = field(repr=False)    # (N, k_max)
+    # default only because it follows SweepResult's defaulted
+    # ``hist_sums`` in the dataclass field order; fleet_sweep always
+    # fills it
+    jobs_by_replica: np.ndarray = field(default=None, repr=False)
 
     def point(self, i: int) -> SimResult:
         res = super().point(i)
@@ -780,9 +802,12 @@ class GenResult(_LossAccounting):
     n_fresh: np.ndarray               # measured first-time arrivals
     n_retry: np.ndarray               # measured orbit re-arrivals
     hist: np.ndarray = field(repr=False)           # (N, n_bins) counts
+    hist_sums: np.ndarray = field(default=None, repr=False)
 
     @property
     def hist_bin_edges(self) -> np.ndarray:
+        if self.hist_sums is not None:
+            return sketch_edges()
         return hist_edges(self.hist.shape[1])
 
     def __len__(self) -> int:

@@ -11,6 +11,22 @@ the scan).  ``_EXP_MIN`` sets the smallest resolved latency,
 2**-32 … 2**32 at ~9% per-bin resolution (refined by in-bin
 interpolation at percentile time).
 
+Two resolutions share the same bit-pattern binning:
+
+- the **full histogram** (default): ``_MANT = 3``, 512 bins — per-point
+  memory scales as ``n_points × 512``;
+- the **streaming quantile sketch** (``sketch=True`` on the kernels):
+  ``SKETCH_MANT = 1`` over a narrower exponent span, ``SKETCH_BINS``
+  (= 64) log-spaced bins with a pinned worst-case relative error
+  ``SKETCH_REL_ERR`` per percentile (one bin width, before in-bin
+  interpolation).  This is the DDSketch-style bounded-memory regime for
+  campaign-scale grids: memory stops scaling with full bin count ×
+  points, and the small bin count is exactly what makes the fused
+  one-hot pallas superstep kernel (``repro.kernels.superstep``) pay
+  off.  The kernels optionally accumulate a per-bin latency *sum*
+  alongside the counts, so streaming consumers (the metrics tap) can
+  report in-bin means without keeping samples.
+
 The binning constants, the device-side bin computation, the host-side
 edge/percentile reconstruction, and the fixed histogram-thinning
 pattern used by the superstep kernels live here — one definition for
@@ -20,11 +36,14 @@ only ever runs inside a kernel trace.
 """
 from __future__ import annotations
 
-from typing import Iterable, List
+from typing import Iterable, List, Optional, Tuple
 
 import numpy as np
 
-__all__ = ["hist_edges", "hist_percentiles", "bit_bins", "thinned_rows"]
+__all__ = ["hist_edges", "hist_percentiles", "bit_bins", "thinned_rows",
+           "bin_params", "sketch_edges", "sketch_percentiles",
+           "SKETCH_BINS", "SKETCH_MANT", "SKETCH_EXP_MIN",
+           "SKETCH_REL_ERR"]
 
 _MANT = 3
 _EXP_MIN = -32
@@ -33,23 +52,59 @@ _EXP_MIN = -32
 _BIN_BASE = (127 + _EXP_MIN) << _MANT
 _BIN_SHIFT = 23 - _MANT
 
+# streaming-sketch constants: 2**SKETCH_MANT bins per octave over
+# exponents [SKETCH_EXP_MIN, SKETCH_EXP_MAX) — 2**-16 ≈ 15 µs up to
+# 2**16 ≈ 65 ks covers every latency the kernels model, in 64 bins
+SKETCH_MANT = 1
+SKETCH_EXP_MIN = -16
+SKETCH_EXP_MAX = 16
+SKETCH_BINS = (SKETCH_EXP_MAX - SKETCH_EXP_MIN) << SKETCH_MANT
+_SK_BASE = (127 + SKETCH_EXP_MIN) << SKETCH_MANT
+_SK_SHIFT = 23 - SKETCH_MANT
 
-def hist_edges(n_bins: int) -> np.ndarray:
-    """The n_bins+1 latency values bounding the histogram bins."""
+# worst-case relative error of a sketch percentile: the estimate lies
+# inside the bin holding the true quantile.  Bit-pattern bins are
+# *linear* within an octave (not geometric like DDSketch), so the
+# widest bin — the first of each octave — spans 2**-SKETCH_MANT of its
+# lower edge; in-bin interpolation only tightens this
+SKETCH_REL_ERR = float(2.0 ** -SKETCH_MANT)
+
+
+def bin_params(sketch: bool = False) -> Tuple[int, int, int]:
+    """``(shift, base, n_bins)`` of a binning mode — the compile-time
+    constants the fused superstep kernels bake in (``n_bins`` is the
+    sketch's fixed width; full-histogram callers pass their own)."""
+    if sketch:
+        return _SK_SHIFT, _SK_BASE, SKETCH_BINS
+    return _BIN_SHIFT, _BIN_BASE, 0
+
+
+def _edges(n_bins: int, mant: int, exp_min: int) -> np.ndarray:
     j = np.arange(n_bins + 1, dtype=np.int64)
-    bits = (j + ((127 + _EXP_MIN) << _MANT)) << (23 - _MANT)
+    bits = (j + ((127 + exp_min) << mant)) << (23 - mant)
     return bits.astype(np.int32).view(np.float32).astype(np.float64)
 
 
-def bit_bins(lats, n_bins: int):
+def hist_edges(n_bins: int) -> np.ndarray:
+    """The n_bins+1 latency values bounding the histogram bins."""
+    return _edges(n_bins, _MANT, _EXP_MIN)
+
+
+def sketch_edges() -> np.ndarray:
+    """The SKETCH_BINS+1 latency values bounding the sketch bins."""
+    return _edges(SKETCH_BINS, SKETCH_MANT, SKETCH_EXP_MIN)
+
+
+def bit_bins(lats, n_bins: int, sketch: bool = False):
     """Device-side bin indices for a float latency array (trace-time
     helper: call inside a jit kernel; clips to [0, n_bins))."""
     import jax.numpy as jnp
     from jax import lax
 
+    shift, base, _ = bin_params(sketch)
     lat_bits = lax.bitcast_convert_type(lats.astype(jnp.float32),
                                         jnp.int32)
-    return jnp.clip((lat_bits >> _BIN_SHIFT) - _BIN_BASE, 0, n_bins - 1)
+    return jnp.clip((lat_bits >> shift) - base, 0, n_bins - 1)
 
 
 def thinned_rows(rebase_every: int, hist_every: int) -> np.ndarray:
@@ -62,12 +117,16 @@ def thinned_rows(rebase_every: int, hist_every: int) -> np.ndarray:
         rebase_every)[:max(1, rebase_every // hist_every)])
 
 
-def hist_percentiles(hist: np.ndarray,
-                     qs: Iterable[float]) -> List[np.ndarray]:
+def hist_percentiles(hist: np.ndarray, qs: Iterable[float],
+                     edges: Optional[np.ndarray] = None
+                     ) -> List[np.ndarray]:
     """Percentiles from per-point bit-binned histograms, with linear
     in-bin interpolation (float32 bits are linear-in-value within a
-    bin, so value-space interpolation is the natural choice)."""
-    edges = hist_edges(hist.shape[1])
+    bin, so value-space interpolation is the natural choice).  Pass
+    ``edges`` to reconstruct a non-default binning (e.g. the sketch's
+    — or use ``sketch_percentiles``)."""
+    if edges is None:
+        edges = hist_edges(hist.shape[1])
     cum = np.cumsum(hist, axis=1)
     total = cum[:, -1]
     rows = np.arange(hist.shape[0])
@@ -81,3 +140,15 @@ def hist_percentiles(hist: np.ndarray,
         lat = edges[j] + frac * (edges[j + 1] - edges[j])
         out.append(np.where(total > 0, lat, np.nan))
     return out
+
+
+def sketch_percentiles(counts: np.ndarray,
+                       qs: Iterable[float]) -> List[np.ndarray]:
+    """``hist_percentiles`` over sketch-binned counts: each estimate is
+    within ``SKETCH_REL_ERR`` (one bin width) of the exact in-range
+    sample percentile — the sketch's pinned error contract (asserted
+    by tests/test_hist_edges.py)."""
+    if counts.shape[1] != SKETCH_BINS:
+        raise ValueError(f"sketch counts must have {SKETCH_BINS} bins "
+                         f"(got {counts.shape[1]})")
+    return hist_percentiles(counts, qs, edges=sketch_edges())

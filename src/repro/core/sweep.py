@@ -53,19 +53,20 @@ import jax
 import jax.numpy as jnp
 from jax import lax, random
 
-from repro.core import engine
+from repro.core import engine, metrics
 from repro.core.engine import ShardSpec
 from repro.core.grid import (  # noqa: F401  (re-exported for back-compat)
     DIST_CODE, DIST_NAME, OVERFLOW_CODE, OVERFLOW_NAME, ROUTE_CODE,
     ROUTE_NAME, FleetGrid, FleetResult, SweepGrid, SweepResult)
-from repro.core.hist import (bit_bins, hist_edges,
+from repro.core.hist import (SKETCH_BINS, hist_edges,
                              hist_percentiles as _hist_percentiles,
-                             thinned_rows)
+                             sketch_edges, thinned_rows)
+from repro.kernels import superstep as _ss
 
 __all__ = ["DIST_CODE", "DIST_NAME", "OVERFLOW_CODE", "OVERFLOW_NAME",
            "ROUTE_CODE", "ROUTE_NAME", "SweepGrid", "SweepResult",
            "FleetGrid", "FleetResult", "sweep", "fleet_sweep",
-           "hist_edges"]
+           "sweep_caps", "fleet_caps", "hist_edges"]
 
 # per-point fold_in keys live in the shared engine layer now; the alias
 # keeps older import sites working
@@ -87,7 +88,8 @@ _OV_REJECT = OVERFLOW_CODE["reject"]
 @engine.kernel_cache(maxsize=32)
 def _build_kernel(n_batches: int, warmup: int, q_cap: int, a_cap: int,
                   n_bins: int, has_timeout: bool, all_det: bool,
-                  has_loss: bool, r_cap: int, n_dev: int):
+                  has_loss: bool, r_cap: int, ss_backend: str,
+                  use_sketch: bool, tap, n_dev: int):
     """Compile-time specialization of the per-point scan kernel.
 
     The waiting room is a *linear compacted* buffer: waiting jobs always
@@ -301,9 +303,11 @@ def _build_kernel(n_batches: int, warmup: int, q_cap: int, a_cap: int,
             span = span + mf * depart     # wall-clock advanced this step
             q_max = jnp.maximum(q_max, q)
 
-            # the histogram scatter — whose per-call cost under vmap
+            # the histogram update — whose per-call cost under vmap
             # dwarfs its per-element cost on CPU — is amortized to the
-            # superstep wrapper; bins ride out as scan outputs
+            # superstep wrapper (the fused pallas/lax boundary in
+            # repro.kernels.superstep); raw latencies ride out as scan
+            # outputs and are binned there
             if has_loss:
                 out_state = (q, buf, key, lat_sum, lat_n, sum_b, sum_b2,
                              sum_bs, n_meas, busy, span, q_max, dropped,
@@ -311,13 +315,21 @@ def _build_kernel(n_batches: int, warmup: int, q_cap: int, a_cap: int,
             else:
                 out_state = (q, buf, key, lat_sum, lat_n, sum_b, sum_b2,
                              sum_bs, n_meas, busy, span, q_max, dropped)
-            return out_state, (bit_bins(lats, n_bins), popmask & meas)
+            return out_state, (lats, popmask & meas)
 
         def superstep(carry, i_base):
-            state, hist = carry
-            state, (bins, inc) = lax.scan(
+            state, hists = carry
+            state, (lats, inc) = lax.scan(
                 step, state, i_base + jnp.arange(_REBASE_EVERY))
-            return (state, engine.scatter_hist(hist, bins, inc)), None
+            hists = _ss.hist_update(hists, lats, inc, n_bins=n_bins,
+                                    backend=ss_backend, sketch=use_sketch)
+            metrics.tap_superstep(
+                tap, i_base // _REBASE_EVERY, queue=state[0],
+                jobs=state[4], busy=state[9], span=state[10],
+                dropped=state[12],
+                overflow=state[14] if has_loss else 0,
+                abandoned=state[15] if has_loss else 0)
+            return (state, hists), None
 
         init = (jnp.zeros((), i32),
                 jnp.zeros((buf_len,), f32), key,
@@ -329,8 +341,11 @@ def _build_kernel(n_batches: int, warmup: int, q_cap: int, a_cap: int,
                 jnp.zeros((), i32))
         if has_loss:
             init = init + tuple(jnp.zeros((), i32) for _ in range(6))
-        (state, hist), _ = lax.scan(
-            superstep, (init, jnp.zeros((n_bins,), i32)),
+        hists0 = (jnp.zeros((n_bins,), i32),)
+        if use_sketch:
+            hists0 = hists0 + (jnp.zeros((n_bins,), f32),)
+        (state, hists), _ = lax.scan(
+            superstep, (init, hists0),
             jnp.arange(n_batches // _REBASE_EVERY) * _REBASE_EVERY)
         (_, _, _, lat_sum, lat_n, sum_b, sum_b2, sum_bs, n_meas,
          busy, span, _q_max, dropped) = state[:13]
@@ -347,8 +362,10 @@ def _build_kernel(n_batches: int, warmup: int, q_cap: int, a_cap: int,
             "n_batches": n_meas,
             "max_queue": _q_max,
             "dropped": dropped,
-            "hist": hist,
+            "hist": hists[0],
         }
+        if use_sketch:
+            out["hist_sums"] = hists[1]
         if has_loss:
             (_orbit, ov_n, ab_n, slo_n, fresh_n, retry_n) = state[13:]
             out.update(overflow_dropped=ov_n, abandoned=ab_n,
@@ -358,11 +375,66 @@ def _build_kernel(n_batches: int, warmup: int, q_cap: int, a_cap: int,
     return engine.shard_kernel(jax.vmap(run_point), n_dev)
 
 
+def _require_pinned_caps(kind: str, key_offset: int, **pinned) -> None:
+    """The split-dispatch contract: ``key_offset != 0`` marks a chunk
+    of a larger campaign, but the adaptive capacity defaults derive
+    from *this chunk's* grid — different chunks would compile different
+    shapes and the split would no longer reduce to the whole-grid
+    dispatch.  Raise unless every grid-derived cap was pinned by the
+    caller (PR 6 documented this caveat; this enforces it)."""
+    missing = [k for k, ok in pinned.items() if not ok]
+    if missing:
+        raise ValueError(
+            f"{kind}(key_offset={key_offset}) dispatches a chunk of a "
+            f"split campaign, but {', '.join(missing)} would be sized "
+            f"adaptively from this chunk's own grid — chunks would "
+            f"compile different shapes than the whole-grid dispatch. "
+            f"Pin them from the FULL grid, e.g. "
+            f"**{kind}_caps(full_grid).")
+
+
+def sweep_caps(grid: SweepGrid, *, q_cap: Optional[int] = None) -> dict:
+    """The compile-time capacities ``sweep`` would derive from ``grid``
+    — compute them once on the FULL campaign grid and splat into every
+    chunk of a split dispatch (``sweep(chunk, key_offset=...,
+    **sweep_caps(full_grid))``), so all chunks compile the same shapes
+    as the whole-grid run.  Pass ``q_cap`` to mirror a pinned queue
+    capacity.  Returns ``q_cap``/``a_cap`` (+ ``r_cap`` on loss
+    grids)."""
+    has_timeout = bool(np.any(grid.wait_max > 0.0))
+    all_det = bool(np.all(grid.dist == DIST_CODE["det"]))
+    has_loss = grid.has_loss
+    if q_cap is None:
+        q_cap = engine.queue_capacity(grid.lam, grid.alpha, grid.tau0,
+                                      grid.b_max, grid.wait_max,
+                                      q_max=grid.q_max if has_loss
+                                      else None)
+    if all_det and not has_timeout and not np.any(grid.b_max == 0):
+        # deterministic service with a finite cap hard-bounds the
+        # service window at α·b_max + τ0, so the per-window arrival
+        # draw can be provably window-sized; random service or an
+        # unbounded batch has no such bound (a queue excursion can
+        # stretch the window toward τ(q_cap)), so those keep the
+        # conservative a_cap = q_cap coupling
+        window = grid.alpha * grid.b_max + grid.tau0
+        a_cap = min(int(q_cap),
+                    engine.window_capacity(grid.lam, window))
+    else:
+        a_cap = int(q_cap)
+    caps = dict(q_cap=int(q_cap), a_cap=int(a_cap))
+    if has_loss:
+        caps["r_cap"] = int(engine.orbit_capacity(grid.lam,
+                                                  grid.retry_rate))
+    return caps
+
+
 def sweep(grid: SweepGrid, *, n_batches: int = 3000,
           warmup: Optional[int] = None, q_cap: Optional[int] = None,
           a_cap: Optional[int] = None, r_cap: Optional[int] = None,
           n_bins: int = 512, seed: int = 0, key_offset: int = 0,
-          shard: ShardSpec = None) -> SweepResult:
+          shard: ShardSpec = None, sketch: bool = False,
+          superstep_backend: Optional[str] = None,
+          metrics_tap=None) -> SweepResult:
     """Simulate every grid point for ``n_batches`` service completions in
     one jit-compiled device dispatch, sharded over the visible devices
     by default.  ``n_batches`` rounds up to a multiple of the superstep
@@ -389,6 +461,24 @@ def sweep(grid: SweepGrid, *, n_batches: int = 3000,
     retry orbit (defaults adaptively via ``engine.orbit_capacity``).
     Loss-free grids trace the identical pre-admission-control kernel, so
     their results stay bitwise-pinned.
+
+    Split dispatches (``key_offset != 0``) must pin every cap the
+    defaults would derive from the grid — pass ``**sweep_caps(
+    full_grid)`` — or this raises (chunks would otherwise compile
+    different shapes than the whole-grid run).
+
+    ``sketch=True`` swaps the 512-bin full histogram for the 64-bin
+    bounded-memory streaming quantile sketch (``repro.core.hist``):
+    per-point memory stops scaling with campaign-grade ``n_bins``,
+    percentiles carry the pinned ``hist.SKETCH_REL_ERR`` bound, and the
+    result additionally holds the per-bin latency sums (``hist_sums``).
+    ``superstep_backend`` picks the fused superstep implementation
+    (``"lax"``/``"pallas"``/``"auto"`` — see
+    ``repro.kernels.superstep``); counts are bitwise identical across
+    backends.  ``metrics_tap`` attaches a ``repro.core.metrics
+    .MetricsTap`` that streams per-superstep telemetry to the host via
+    ``io_callback`` — numerics are untouched, but the dispatch runs
+    single-shard.
     """
     if len(grid) == 0:
         raise ValueError("empty grid")
@@ -401,40 +491,44 @@ def sweep(grid: SweepGrid, *, n_batches: int = 3000,
     has_timeout = bool(np.any(grid.wait_max > 0.0))
     all_det = bool(np.all(grid.dist == DIST_CODE["det"]))
     has_loss = grid.has_loss
-    if q_cap is None:
-        q_cap = engine.queue_capacity(grid.lam, grid.alpha, grid.tau0,
-                                      grid.b_max, grid.wait_max,
-                                      q_max=grid.q_max if has_loss
-                                      else None)
-    if a_cap is None:
-        if all_det and not has_timeout and not np.any(grid.b_max == 0):
-            # deterministic service with a finite cap hard-bounds the
-            # service window at α·b_max + τ0, so the per-window arrival
-            # draw can be provably window-sized; random service or an
-            # unbounded batch has no such bound (a queue excursion can
-            # stretch the window toward τ(q_cap)), so those keep the
-            # conservative a_cap = q_cap coupling
-            window = grid.alpha * grid.b_max + grid.tau0
-            a_cap = min(int(q_cap),
-                        engine.window_capacity(grid.lam, window))
-        else:
-            a_cap = q_cap
+    if key_offset:
+        # a_cap is only grid-derived on the window-capacity path; the
+        # a_cap = q_cap fallback follows from a pinned q_cap
+        _require_pinned_caps(
+            "sweep", key_offset,
+            q_cap=q_cap is not None,
+            a_cap=(a_cap is not None
+                   or not (all_det and not has_timeout
+                           and not np.any(grid.b_max == 0))),
+            r_cap=not has_loss or r_cap is not None)
+    if q_cap is None or a_cap is None or (has_loss and r_cap is None):
+        caps = sweep_caps(grid, q_cap=q_cap)
+        q_cap = caps["q_cap"] if q_cap is None else q_cap
+        a_cap = caps["a_cap"] if a_cap is None else a_cap
+        if has_loss and r_cap is None:
+            r_cap = caps["r_cap"]
+    if not has_loss:
+        r_cap = 0
     if a_cap > q_cap:
         raise ValueError("a_cap must be <= q_cap (ring-buffer invariant)")
     if np.any(grid.b_max > q_cap):
         raise ValueError("b_max exceeds q_cap; raise q_cap")
-    if has_loss:
-        if np.any(grid.q_max > q_cap):
-            raise ValueError("q_max exceeds q_cap; raise q_cap")
-        if r_cap is None:
-            r_cap = engine.orbit_capacity(grid.lam, grid.retry_rate)
-    else:
-        r_cap = 0
+    if has_loss and np.any(grid.q_max > q_cap):
+        raise ValueError("q_max exceeds q_cap; raise q_cap")
+    if sketch:
+        n_bins = SKETCH_BINS
+    ss_backend = _ss.resolve_backend(superstep_backend,
+                                     n_bins=int(n_bins))
     n = len(grid)
     n_dev = engine.resolve_shards(shard, n)
+    if metrics_tap is not None:
+        # io_callback under shard_map is outside the pinned-jax
+        # contract; bitwise shard invariance makes this timing-only
+        n_dev = 1
     kernel = _build_kernel(int(n_batches), int(warmup), int(q_cap),
                            int(a_cap), int(n_bins), has_timeout, all_det,
-                           has_loss, int(r_cap), n_dev)
+                           has_loss, int(r_cap), ss_backend,
+                           bool(sketch), metrics_tap, n_dev)
 
     params = {
         "lam": jnp.asarray(grid.lam), "alpha": jnp.asarray(grid.alpha),
@@ -469,7 +563,15 @@ def sweep(grid: SweepGrid, *, n_batches: int = 3000,
             n_fresh=n_jobs.copy(),
             n_retry=np.zeros_like(n_jobs))
 
-    p50, p95, p99 = _hist_percentiles(out["hist"], (50, 95, 99))
+    p50, p95, p99 = _hist_percentiles(
+        out["hist"], (50, 95, 99),
+        edges=sketch_edges() if sketch else None)
+    if metrics_tap is not None:
+        metrics_tap.observe_summary(
+            kind="sweep", points=n, jobs_total=int(n_jobs.sum()),
+            p50_median=float(np.nanmedian(p50)),
+            p95_median=float(np.nanmedian(p95)),
+            p99_median=float(np.nanmedian(p99)))
     return SweepResult(
         grid=grid,
         mean_latency=np.asarray(out["mean_latency"], dtype=np.float64),
@@ -484,6 +586,8 @@ def sweep(grid: SweepGrid, *, n_batches: int = 3000,
         max_queue=np.asarray(out["max_queue"]),
         buffer_dropped=np.asarray(out["dropped"]),
         hist=np.asarray(out["hist"]),
+        hist_sums=(np.asarray(out["hist_sums"], dtype=np.float64)
+                   if sketch else None),
         **loss_kw,
     )
 
@@ -496,8 +600,9 @@ def sweep(grid: SweepGrid, *, n_batches: int = 3000,
 def _build_fleet_kernel(n_steps: int, warmup: int, k_max: int, q_cap: int,
                         a_cap: int, pop_cap: int, n_bins: int,
                         has_timeout: bool, all_det: bool, has_jsq: bool,
-                        has_loss: bool, r_cap: int,
-                        hist_every: int, n_dev: int):
+                        has_loss: bool, r_cap: int, hist_every: int,
+                        ss_backend: str, use_sketch: bool, tap,
+                        n_dev: int):
     """Compile-time specialization of the per-point fleet scan kernel.
 
     Unlike the single-server kernel — one scan step per *service period*
@@ -887,12 +992,11 @@ def _build_fleet_kernel(n_steps: int, warmup: int, k_max: int, q_cap: int,
                 fresh_n = fresh_n + mi * jnp.sum(proc.astype(i32))
                 retry_n = retry_n + mi * n_r
 
-            bins = bit_bins(lats, n_bins)
-
             # the clock tracks the last processed event; the full-buffer
-            # rebase — and the histogram scatter, whose per-call cost
+            # rebase — and the histogram update, whose per-call cost
             # under vmap dwarfs its per-element cost — are amortized to
-            # the superstep wrapper (bins ride out as scan outputs)
+            # the superstep wrapper (raw latencies ride out as scan
+            # outputs and are binned there)
             clock = jnp.where(do_event, t_ev, clock)
 
             out_state = (q, head, buf, in_service, committed, t_free,
@@ -902,7 +1006,7 @@ def _build_fleet_kernel(n_steps: int, warmup: int, k_max: int, q_cap: int,
             if has_loss:
                 out_state = out_state + (orbit, ov_n, ab_n, slo_n,
                                          fresh_n, retry_n)
-            return out_state, (bins, popmask & mstart)
+            return out_state, (lats, popmask & mstart)
 
         # histogram thinning: scatter-adds cost per *element* under
         # vmap, so hist_every > 1 records only an unbiased 1-in-N batch
@@ -912,19 +1016,28 @@ def _build_fleet_kernel(n_steps: int, warmup: int, k_max: int, q_cap: int,
 
         def superstep(state, x):
             i_base, k_sup = x
-            hist = state[-1]
-            state, (bins, inc) = lax.scan(
+            hists = state[-1]
+            state, (lats, inc) = lax.scan(
                 step, state[:-1],
                 (i_base + jnp.arange(REBASE_EVERY),
                  random.split(k_sup, REBASE_EVERY)))
-            hist = engine.scatter_hist(hist, bins, inc, hist_rows)
+            hists = _ss.hist_update(hists, lats, inc, n_bins=n_bins,
+                                    backend=ss_backend,
+                                    sketch=use_sketch,
+                                    hist_rows=hist_rows)
             # rebase time to the last processed event (one buffer pass
             # per REBASE_EVERY events)
             (q, head, buf, in_service, committed, t_free, next_arr, rr,
              clock, *accs) = state
+            metrics.tap_superstep(
+                tap, i_base // REBASE_EVERY, queue=jnp.sum(q),
+                jobs=accs[1], busy=accs[6], span=accs[7],
+                dropped=accs[9],
+                overflow=accs[12] if has_loss else 0,
+                abandoned=accs[13] if has_loss else 0)
             return (q, head, buf - clock, in_service, committed,
                     t_free - clock, next_arr - clock, rr,
-                    jnp.zeros((), f32), *accs, hist), None
+                    jnp.zeros((), f32), *accs, hists), None
 
         n_super = n_steps // REBASE_EVERY
         key, k0 = random.split(key)
@@ -947,14 +1060,17 @@ def _build_fleet_kernel(n_steps: int, warmup: int, k_max: int, q_cap: int,
         if has_loss:
             # orbit, ov_n, ab_n, slo_n, fresh_n, retry_n
             init = init + tuple(jnp.zeros((), i32) for _ in range(6))
-        init = init + (jnp.zeros((n_bins,), i32),)       # hist (superstep)
+        hists0 = (jnp.zeros((n_bins,), i32),)            # hist (superstep)
+        if use_sketch:
+            hists0 = hists0 + (jnp.zeros((n_bins,), f32),)
+        init = init + (hists0,)
         state, _ = lax.scan(
             superstep, init,
             (jnp.arange(n_super) * REBASE_EVERY,
              random.split(key, n_super)))
         (lat_sum, lat_n, sum_b, sum_b2, sum_bs, n_meas, busy, span,
          q_max, dropped, jobs_rep) = state[9:20]
-        hist = state[-1]
+        hists = state[-1]
 
         jobs = jnp.maximum(lat_n, 1).astype(f32)
         nb = jnp.maximum(n_meas, 1).astype(f32)
@@ -969,9 +1085,11 @@ def _build_fleet_kernel(n_steps: int, warmup: int, k_max: int, q_cap: int,
             "n_batches": n_meas,
             "max_queue": q_max,
             "dropped": dropped,
-            "hist": hist,
+            "hist": hists[0],
             "jobs_by_replica": jobs_rep,
         }
+        if use_sketch:
+            out["hist_sums"] = hists[1]
         if has_loss:
             (_orbit, ov_n, ab_n, slo_n, fresh_n, retry_n) = state[20:26]
             out.update(overflow_dropped=ov_n, abandoned=ab_n,
@@ -981,12 +1099,35 @@ def _build_fleet_kernel(n_steps: int, warmup: int, k_max: int, q_cap: int,
     return engine.shard_kernel(jax.vmap(run_point), n_dev)
 
 
+def fleet_caps(grid: FleetGrid, *, q_cap: Optional[int] = None) -> dict:
+    """The compile-time capacities ``fleet_sweep`` would derive from
+    ``grid`` — compute once on the FULL campaign grid and splat into
+    every chunk of a split dispatch (``fleet_sweep(chunk,
+    key_offset=..., **fleet_caps(full_grid))``).  ``a_cap`` is a static
+    default (never grid-derived), so only ``q_cap`` (+ ``r_cap`` on
+    loss grids) appear here."""
+    has_loss = grid.has_loss
+    if q_cap is None:
+        q_cap = engine.queue_capacity(grid.lam / np.maximum(grid.k, 1),
+                                      grid.alpha, grid.tau0, grid.b_max,
+                                      grid.wait_max,
+                                      q_max=grid.q_max if has_loss
+                                      else None)
+    caps = dict(q_cap=int(q_cap))
+    if has_loss:
+        caps["r_cap"] = int(engine.orbit_capacity(grid.lam,
+                                                  grid.retry_rate))
+    return caps
+
+
 def fleet_sweep(grid: FleetGrid, *, n_steps: int = 6000,
                 warmup: Optional[int] = None, q_cap: Optional[int] = None,
                 a_cap: int = 32, r_cap: Optional[int] = None,
                 n_bins: int = 512, seed: int = 0,
                 key_offset: int = 0, hist_every: int = 1,
-                shard: ShardSpec = None) -> FleetResult:
+                shard: ShardSpec = None, sketch: bool = False,
+                superstep_backend: Optional[str] = None,
+                metrics_tap=None) -> FleetResult:
     """Simulate every fleet point for ``n_steps`` replica decisions in one
     jit+vmap device dispatch.
 
@@ -1020,6 +1161,11 @@ def fleet_sweep(grid: FleetGrid, *, n_steps: int = 6000,
     (defaults via ``engine.orbit_capacity``).  A deadline forces
     ``pop_cap = q_cap`` (the renege scan must see the whole queue).
     Loss-free grids trace the identical pre-admission-control kernel.
+
+    Split dispatches (``key_offset != 0``) must pin the grid-derived
+    caps — pass ``**fleet_caps(full_grid)`` — or this raises.
+    ``sketch``/``superstep_backend``/``metrics_tap`` behave as in
+    ``sweep``.
     """
     if not isinstance(grid, FleetGrid):
         raise TypeError("fleet_sweep needs a FleetGrid "
@@ -1035,27 +1181,27 @@ def fleet_sweep(grid: FleetGrid, *, n_steps: int = 6000,
     if np.any(grid.k < 1):
         raise ValueError("k must be >= 1")
     has_loss = grid.has_loss
-    if q_cap is None:
-        # each replica sees ~λ/k of the stream under every modelled
-        # routing (JSQ only evens out transients), so size the
-        # per-replica ring from the per-replica load
-        q_cap = engine.queue_capacity(grid.lam / np.maximum(grid.k, 1),
-                                      grid.alpha, grid.tau0, grid.b_max,
-                                      grid.wait_max,
-                                      q_max=grid.q_max if has_loss
-                                      else None)
+    if key_offset:
+        _require_pinned_caps(
+            "fleet", key_offset,
+            q_cap=q_cap is not None,
+            r_cap=not has_loss or r_cap is not None)
+    # the per-replica ring is sized from the per-replica load λ/k
+    # (fleet_caps); a_cap is a static default, never grid-derived
+    if q_cap is None or (has_loss and r_cap is None):
+        caps = fleet_caps(grid, q_cap=q_cap)
+        q_cap = caps["q_cap"] if q_cap is None else q_cap
+        if has_loss and r_cap is None:
+            r_cap = caps["r_cap"]
+    if not has_loss:
+        r_cap = 0
     if np.any(grid.b_max > q_cap):
         raise ValueError("b_max exceeds q_cap; raise q_cap")
     if not set(np.unique(grid.routing)) <= set(ROUTE_CODE.values()):
         raise ValueError(f"unknown routing code in grid "
                          f"(valid: {ROUTE_CODE})")
-    if has_loss:
-        if np.any(grid.q_max > q_cap):
-            raise ValueError("q_max exceeds q_cap; raise q_cap")
-        if r_cap is None:
-            r_cap = engine.orbit_capacity(grid.lam, grid.retry_rate)
-    else:
-        r_cap = 0
+    if has_loss and np.any(grid.q_max > q_cap):
+        raise ValueError("q_max exceeds q_cap; raise q_cap")
 
     k_max = int(grid.k.max())
     has_timeout = bool(np.any(grid.wait_max > 0.0))
@@ -1067,13 +1213,22 @@ def fleet_sweep(grid: FleetGrid, *, n_steps: int = 6000,
                or (has_loss and np.any(grid.deadline > 0.0))
                else int(grid.b_max.max()))
     has_jsq = bool(np.any(grid.routing == ROUTE_CODE["jsq"]))
+    if sketch:
+        n_bins = SKETCH_BINS
+    ss_backend = _ss.resolve_backend(superstep_backend,
+                                     n_bins=int(n_bins))
     n = len(grid)
     n_dev = engine.resolve_shards(shard, n)
+    if metrics_tap is not None:
+        # io_callback under shard_map is outside the pinned-jax
+        # contract; bitwise shard invariance makes this timing-only
+        n_dev = 1
     kernel = _build_fleet_kernel(int(n_steps), int(warmup), k_max,
                                  int(q_cap), int(a_cap), pop_cap,
                                  int(n_bins), has_timeout, all_det,
                                  has_jsq, has_loss, int(r_cap),
-                                 int(hist_every), n_dev)
+                                 int(hist_every), ss_backend,
+                                 bool(sketch), metrics_tap, n_dev)
 
     params = {
         "lam": jnp.asarray(grid.lam), "alpha": jnp.asarray(grid.alpha),
@@ -1108,7 +1263,15 @@ def fleet_sweep(grid: FleetGrid, *, n_steps: int = 6000,
             n_fresh=n_jobs.copy(),
             n_retry=np.zeros_like(n_jobs))
 
-    p50, p95, p99 = _hist_percentiles(out["hist"], (50, 95, 99))
+    p50, p95, p99 = _hist_percentiles(
+        out["hist"], (50, 95, 99),
+        edges=sketch_edges() if sketch else None)
+    if metrics_tap is not None:
+        metrics_tap.observe_summary(
+            kind="fleet", points=n, jobs_total=int(n_jobs.sum()),
+            p50_median=float(np.nanmedian(p50)),
+            p95_median=float(np.nanmedian(p95)),
+            p99_median=float(np.nanmedian(p99)))
     return FleetResult(
         grid=grid,
         mean_latency=np.asarray(out["mean_latency"], dtype=np.float64),
@@ -1123,6 +1286,8 @@ def fleet_sweep(grid: FleetGrid, *, n_steps: int = 6000,
         max_queue=np.asarray(out["max_queue"]),
         buffer_dropped=np.asarray(out["dropped"]),
         hist=np.asarray(out["hist"]),
+        hist_sums=(np.asarray(out["hist_sums"], dtype=np.float64)
+                   if sketch else None),
         jobs_by_replica=np.asarray(out["jobs_by_replica"]),
         **loss_kw,
     )

@@ -1,10 +1,17 @@
-# Pallas TPU kernels for the serving hot spots (the terms that dominate
-# tau^[b]): flash attention (prefill), flash-decode GQA (long-cache decode),
-# and the Mamba2 SSD chunked scan. Each kernel has a pure-jnp oracle in
-# ref.py and is validated against it in interpret mode (tests/test_kernels).
+# Pallas kernels for two hot spots: the serving terms that dominate
+# tau^[b] — flash attention (prefill), flash-decode GQA (long-cache
+# decode), the Mamba2 SSD chunked scan — and the MC engine's superstep
+# boundary (fused histogram/FIFO update, repro.kernels.superstep).
+# Each kernel has a pure-jnp/lax oracle and is validated against it in
+# interpret mode (tests/test_kernels, tests/test_superstep_kernel).
 from repro.kernels.ops import (  # noqa: F401
     decode_attention_op,
     flash_attention_op,
     on_tpu,
     ssd_scan_op,
+)
+from repro.kernels.superstep import (  # noqa: F401
+    fifo_compact,
+    hist_update,
+    resolve_backend,
 )

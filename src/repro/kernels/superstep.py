@@ -1,0 +1,199 @@
+"""Fused pallas superstep update: histogram scatter + FIFO compaction.
+
+The MC sweep kernels (``repro.core.sweep``, ``fleet_sweep``,
+``gen_sweep``) amortize their latency-histogram scatter and
+buffer/clock rebase to one call per superstep block.  Profiling shows
+the scatter IS the hot loop on CPU — stubbing it out of a request-level
+sweep dispatch raises jobs/sec ~5× — so this module gives that
+superstep boundary two interchangeable implementations:
+
+- ``backend="lax"``: exactly the pre-pallas op sequence
+  (``hist.bit_bins`` → ``engine.scatter_hist``/``scatter_hist_sums``,
+  ``engine.fifo_pop_shift`` → subtract), kept as the bitwise reference;
+- ``backend="pallas"``: one fused ``pl.pallas_call`` per superstep that
+  bins the block's latencies, accumulates the histogram by one-hot
+  reduction (and the sketch's per-bin latency sums in the same pass),
+  and — for the generate kernel — compacts the FIFO tail buffer with
+  the clock rebase folded in.  Off-TPU the kernel runs in interpret
+  mode, where it lowers to XLA ops at trace time: the one-hot
+  reduction replaces the element-wise scatter XLA emits for
+  ``.at[].add`` under vmap, which is what makes the pallas path
+  *faster* on CPU at sketch-scale bin counts (``n_bins × block``
+  one-hot work loses to the scatter again at the full histogram's 512
+  bins, hence the bin-count-aware ``"auto"`` default).
+
+Histogram counts are integer accumulations in both backends, so the
+two paths are bitwise identical (asserted by the backend-parity
+tests); the sketch's float per-bin sums may differ in the last ulp
+(reduction order), which is why percentiles are reconstructed from
+counts only.
+
+Backend selection: explicit ``superstep_backend=`` on the sweep entry
+points > the ``REPRO_SUPERSTEP_BACKEND`` env var > ``"auto"`` (pallas
+on TPU/GPU and at sketch-scale bin counts on CPU, lax otherwise).  The
+resolved backend is a compile-time kernel-builder argument, so it is
+part of the ``engine.kernel_cache`` key — a pallas-path kernel can
+never be served for a lax-path request.
+"""
+from __future__ import annotations
+
+import functools
+import os
+from typing import Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import engine
+from repro.core import hist as hist_mod
+
+__all__ = ["BACKENDS", "ENV_VAR", "PALLAS_CPU_MAX_BINS",
+           "resolve_backend", "hist_update", "fifo_compact"]
+
+BACKENDS = ("auto", "lax", "pallas")
+ENV_VAR = "REPRO_SUPERSTEP_BACKEND"
+
+# on CPU the one-hot reduction does n_bins× the scatter's element work,
+# so "auto" only picks pallas up to sketch-scale bin counts (measured
+# crossover sits well above SKETCH_BINS = 64, below the full 512)
+PALLAS_CPU_MAX_BINS = 128
+
+
+def resolve_backend(backend: Optional[str], *, n_bins: int) -> str:
+    """Resolve a backend request to ``"lax"`` or ``"pallas"``.
+
+    ``None``/``"auto"`` consults ``REPRO_SUPERSTEP_BACKEND``, then
+    picks by platform and bin count (see module docstring).  The
+    result is what the kernel builders bake in — and key their cache
+    entries on."""
+    b = "auto" if backend is None else str(backend)
+    if b == "auto":
+        b = os.environ.get(ENV_VAR, "auto")
+    if b == "auto":
+        import jax
+        plat = jax.default_backend()
+        if plat in ("tpu", "gpu"):
+            b = "pallas"
+        else:
+            b = "pallas" if n_bins <= PALLAS_CPU_MAX_BINS else "lax"
+    if b not in ("lax", "pallas"):
+        raise ValueError(f"unknown superstep backend {b!r}; pick from "
+                         f"{BACKENDS} (or set {ENV_VAR})")
+    return b
+
+
+def _interpret() -> bool:
+    import jax
+    return jax.default_backend() != "tpu"
+
+
+# ---------------------------------------------------------------------------
+# fused histogram update
+# ---------------------------------------------------------------------------
+
+def _hist_body(lats_ref, inc_ref, *refs, shift: int, base: int,
+               n_bins: int, with_sums: bool):
+    """One-hot histogram accumulation over a flattened superstep block.
+
+    ``bin = clip((bits(lat) >> shift) - base)`` is the same bit-pattern
+    binning as ``hist.bit_bins``; the count reduction is integer, so it
+    matches the lax scatter bitwise.  The sketch's per-bin latency sums
+    ride the same one-hot pass — the "fused" part."""
+    import jax.numpy as jnp
+    from jax import lax
+
+    if with_sums:
+        hist_ref, sums_ref, hist_out, sums_out = refs
+    else:
+        (hist_ref, hist_out) = refs
+    lats = lats_ref[...].reshape(-1)
+    inc = inc_ref[...].reshape(-1)
+    bits = lax.bitcast_convert_type(lats.astype(jnp.float32), jnp.int32)
+    bins = jnp.clip((bits >> shift) - base, 0, n_bins - 1)
+    onehot = bins[:, None] == lax.broadcasted_iota(
+        jnp.int32, (lats.shape[0], n_bins), 1)
+    counted = onehot & inc[:, None]
+    hist_out[...] = hist_ref[...] + jnp.sum(counted, axis=0,
+                                            dtype=jnp.int32)
+    if with_sums:
+        sums_out[...] = sums_ref[...] + jnp.sum(
+            jnp.where(counted, lats[:, None], 0.0), axis=0)
+
+
+def _pallas_hist(hists: Sequence, lats, inc, *, shift: int, base: int,
+                 n_bins: int) -> Tuple:
+    import jax
+    import jax.numpy as jnp
+    from jax.experimental import pallas as pl
+
+    with_sums = len(hists) == 2
+    out_shape = [jax.ShapeDtypeStruct((n_bins,), jnp.int32)]
+    if with_sums:
+        out_shape.append(jax.ShapeDtypeStruct((n_bins,), jnp.float32))
+    body = functools.partial(_hist_body, shift=shift, base=base,
+                             n_bins=n_bins, with_sums=with_sums)
+    out = pl.pallas_call(body, out_shape=tuple(out_shape),
+                         interpret=_interpret())(lats, inc, *hists)
+    return tuple(out)
+
+
+def hist_update(hists: Sequence, lats, inc, *, n_bins: int,
+                backend: str, sketch: bool = False,
+                hist_rows: Optional[np.ndarray] = None) -> Tuple:
+    """Per-superstep histogram update (trace-time: call inside a jit
+    kernel).  ``hists`` is ``(counts,)`` or ``(counts, sums)`` — the
+    sketch mode's two accumulators; ``lats``/``inc`` are the stacked
+    ``(block, width)`` scan outputs; ``hist_rows`` thins the block to
+    the fixed subsample first (same contract as
+    ``engine.scatter_hist``).  Returns the updated tuple."""
+    if hist_rows is not None and len(hist_rows) < lats.shape[0]:
+        lats, inc = lats[hist_rows], inc[hist_rows]
+    shift, base, _ = hist_mod.bin_params(sketch)
+    if backend == "pallas":
+        return _pallas_hist(tuple(hists), lats, inc, shift=shift,
+                            base=base, n_bins=n_bins)
+    if backend != "lax":
+        raise ValueError(f"unresolved superstep backend {backend!r}")
+    bins = hist_mod.bit_bins(lats, n_bins, sketch)
+    out = (engine.scatter_hist(hists[0], bins, inc),)
+    if len(hists) == 2:
+        out = out + (engine.scatter_hist_sums(hists[1], bins, inc,
+                                              lats),)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# fused FIFO compaction + clock rebase
+# ---------------------------------------------------------------------------
+
+def _compact_body(buf_ref, k_ref, now_ref, out_ref):
+    """Drop the k oldest entries of a linear FIFO buffer and rebase the
+    survivors by -now in one pass: out[i] = buf[k+i] - now (0 - now
+    past the end, matching the lax zeros-pad + slice sequence)."""
+    import jax.numpy as jnp
+    from jax import lax
+
+    buf = buf_ref[...]
+    n = buf.shape[0]
+    idx = lax.broadcasted_iota(jnp.int32, (n,), 0) + k_ref[0]
+    vals = jnp.where(idx < n, jnp.take(buf, jnp.clip(idx, 0, n - 1)),
+                     jnp.float32(0.0))
+    out_ref[...] = vals - now_ref[0]
+
+
+def fifo_compact(buf, k, now, *, backend: str):
+    """Per-superstep FIFO re-compaction with the clock rebase folded in
+    (trace-time): equivalent to ``engine.fifo_pop_shift(buf, k,
+    len(buf)) - now``, which is exactly what the lax fallback runs."""
+    if backend == "pallas":
+        import jax
+        import jax.numpy as jnp
+        from jax.experimental import pallas as pl
+
+        return pl.pallas_call(
+            _compact_body,
+            out_shape=jax.ShapeDtypeStruct(buf.shape, buf.dtype),
+            interpret=_interpret(),
+        )(buf, k.astype(jnp.int32)[None], now.astype(jnp.float32)[None])
+    if backend != "lax":
+        raise ValueError(f"unresolved superstep backend {backend!r}")
+    return engine.fifo_pop_shift(buf, k, buf.shape[0]) - now

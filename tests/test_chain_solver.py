@@ -241,3 +241,50 @@ class TestBandConstruction:
             w = ch.width[l]
             dense_from_band[l, ch.c[l]:ch.c[l] + w + 1] = ch.B[l, :w + 1]
         assert np.max(np.abs(dense_from_band - P)) < 1e-15
+
+
+class TestX64Discipline:
+    """S1: the grid kernel's build-time constants are baked into the
+    trace, so the builder must run inside an enable_x64 scope — the
+    PR 4 footgun (silent float32 truncation) is now a build error."""
+
+    def test_build_outside_x64_raises(self):
+        cs._build_grid_kernel.cache_clear()
+        with pytest.raises(RuntimeError, match="enable_x64"):
+            cs._build_grid_kernel(64, 16, 8)
+        assert cs._build_grid_kernel.cache_len() == 0
+
+    def test_every_band_path_output_is_float64(self):
+        import jax
+        import jax.numpy as jnp
+        from jax.experimental import enable_x64
+
+        with enable_x64():
+            kernel = cs._build_grid_kernel(64, 16, 8)
+            out = jax.eval_shape(
+                kernel,
+                jnp.zeros((2,), jnp.float64),
+                jnp.zeros((2,), jnp.float64),
+                jnp.zeros((2,), jnp.float64),
+                jnp.zeros((2,), jnp.int32))
+            bad = {k: v.dtype for k, v in out.items()
+                   if v.dtype != jnp.float64}
+            assert not bad, f"float64 dropped in: {bad}"
+
+    def test_grid_solve_builds_inside_x64_and_stays_exact(self):
+        """grid_solve (which owns the enable_x64 scope) must agree
+        with the pure-NumPy float64 solver to near machine precision —
+        any float32 intermediate on the band path would blow this
+        tolerance by ~8 orders of magnitude."""
+        cs._build_grid_kernel.cache_clear()
+        lam = _lam(V100, 8, 0.9)
+        out_j = cs.grid_solve([lam], [V100.alpha], [V100.tau0], [8],
+                              256, method="jax")
+        out_n = cs.grid_solve([lam], [V100.alpha], [V100.tau0], [8],
+                              256, method="numpy")
+        for k in out_j:
+            # tail_mass is O(1e-23): summation-order noise alone moves
+            # it at the ~1e-10 level, so it gets a slightly looser rel
+            rel = 1e-6 if k == "tail_mass" else 1e-10
+            assert out_j[k][0] == pytest.approx(out_n[k][0],
+                                                rel=rel, abs=1e-300)

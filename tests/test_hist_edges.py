@@ -1,0 +1,118 @@
+"""Percentile-reconstruction edge cases (repro.core.hist): saturated
+top bin, empty histograms, single-sample grids, and the streaming
+sketch's pinned relative-error contract against exact sample
+percentiles.
+"""
+import numpy as np
+import pytest
+
+from repro.core import hist as h
+
+
+def _host_bins(samples: np.ndarray, sketch: bool,
+               n_bins: int) -> np.ndarray:
+    """NumPy mirror of the device-side bit binning."""
+    shift, base, _ = h.bin_params(sketch)
+    bits = samples.astype(np.float32).view(np.int32)
+    return np.clip((bits >> shift) - base, 0, n_bins - 1)
+
+
+class TestEdgeCases:
+    def test_empty_histogram_is_nan(self):
+        hist = np.zeros((3, 512), dtype=np.int64)
+        hist[1, 40] = 10                      # middle row has mass
+        p50, p99 = h.hist_percentiles(hist, (50, 99))
+        assert np.isnan(p50[0]) and np.isnan(p99[2])
+        assert np.isfinite(p50[1]) and np.isfinite(p99[1])
+
+    def test_single_sample_grid(self):
+        """One job in one bin: every percentile lands inside that
+        bin — never NaN, never outside the bin's edges."""
+        hist = np.zeros((1, 512), dtype=np.int64)
+        j = 123
+        hist[0, j] = 1
+        edges = h.hist_edges(512)
+        for p in (h.hist_percentiles(hist, (1, 50, 99.9))):
+            assert edges[j] <= p[0] <= edges[j + 1]
+
+    def test_saturated_top_bin(self):
+        """Out-of-range latencies clip into the last bin; percentiles
+        stay finite and bounded by the top edge."""
+        edges = h.hist_edges(512)
+        huge = np.array([edges[-1] * 10, np.float32(np.inf)],
+                        dtype=np.float32)
+        bins = _host_bins(huge, sketch=False, n_bins=512)
+        assert np.all(bins == 511)
+        hist = np.zeros((1, 512), dtype=np.int64)
+        hist[0, 511] = 1000
+        (p99,) = h.hist_percentiles(hist, (99,))
+        assert edges[511] <= p99[0] <= edges[512]
+        assert np.isfinite(p99[0])
+
+    def test_bottom_clip(self):
+        tiny = np.array([0.0, 2.0 ** -60], dtype=np.float32)
+        assert np.all(_host_bins(tiny, False, 512) == 0)
+        assert np.all(_host_bins(tiny, True, h.SKETCH_BINS) == 0)
+
+    def test_device_bins_match_host(self):
+        import jax
+
+        rng = np.random.default_rng(2)
+        lats = rng.lognormal(0.0, 3.0, 4096).astype(np.float32)
+        for sketch, n_bins in ((False, 512), (True, h.SKETCH_BINS)):
+            dev = jax.jit(lambda x, s=sketch, n=n_bins:
+                          h.bit_bins(x, n, s))(lats)
+            assert np.array_equal(np.asarray(dev),
+                                  _host_bins(lats, sketch, n_bins))
+
+    def test_edges_are_monotone_and_bins_nest(self):
+        for edges in (h.hist_edges(512), h.sketch_edges()):
+            assert np.all(np.diff(edges) > 0)
+        # samples binned at bin j really lie within [edge[j], edge[j+1])
+        rng = np.random.default_rng(3)
+        lats = rng.lognormal(1.0, 1.0, 2048).astype(np.float32)
+        edges = h.sketch_edges()
+        bins = _host_bins(lats, True, h.SKETCH_BINS)
+        lo, hi = edges[bins], edges[bins + 1]
+        assert np.all((lats.astype(np.float64) >= lo)
+                      & (lats.astype(np.float64) < hi))
+
+
+class TestSketchErrorContract:
+    """S5: sketch percentiles within SKETCH_REL_ERR of the exact
+    sample percentile — the DDSketch-style pinned bound."""
+
+    def test_relative_error_bound(self):
+        rng = np.random.default_rng(7)
+        qs = (50, 95, 99)
+        for scale in (0.5, 2.0):
+            lats = rng.lognormal(scale, 1.2, 20_000).astype(np.float32)
+            counts = np.zeros((1, h.SKETCH_BINS), dtype=np.int64)
+            np.add.at(counts[0], _host_bins(lats, True, h.SKETCH_BINS),
+                      1)
+            est = h.sketch_percentiles(counts, qs)
+            exact = np.percentile(lats.astype(np.float64), qs)
+            for e, x in zip(est, exact):
+                assert abs(e[0] - x) / x <= h.SKETCH_REL_ERR, (e, x)
+
+    def test_rel_err_constant_is_widest_bin(self):
+        """Bins are linear within an octave, so widths alternate; the
+        pinned constant is exactly the widest (first-of-octave) bin."""
+        edges = h.sketch_edges()
+        widths = edges[1:] / edges[:-1] - 1.0
+        assert np.max(widths) == pytest.approx(h.SKETCH_REL_ERR,
+                                               rel=1e-9)
+        assert np.all(widths <= h.SKETCH_REL_ERR * (1 + 1e-9))
+
+    def test_sketch_percentiles_rejects_wrong_width(self):
+        with pytest.raises(ValueError, match="bins"):
+            h.sketch_percentiles(np.zeros((1, 512), dtype=np.int64),
+                                 (50,))
+
+    def test_full_hist_beats_sketch_resolution(self):
+        """The 512-bin full histogram's per-bin relative width is
+        finer than the sketch's (the memory/accuracy trade the sketch
+        makes explicit)."""
+        full = h.hist_edges(512)
+        full_w = full[100:-1] / full[99:-2] - 1.0   # away from clip
+        assert np.max(full_w) < h.SKETCH_REL_ERR

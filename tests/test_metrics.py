@@ -1,0 +1,157 @@
+"""Streaming metrics tap (repro.core.metrics): host-side aggregation
+unit tests, the JSONL/Prometheus output contract, and the end-to-end
+io_callback integration — a tapped dispatch must be bitwise identical
+to the untapped one (the tap is observability, never physics).
+"""
+import json
+
+import numpy as np
+import pytest
+
+from repro.core.analytic import LinearServiceModel
+from repro.core.grid import SweepGrid
+from repro.core.metrics import FIELDS, MetricsTap, tap_superstep
+from repro.core.sweep import sweep
+
+V100 = LinearServiceModel(alpha=0.1438, tau0=1.8874)
+
+# every per-superstep JSONL record carries exactly these keys
+SUPERSTEP_KEYS = {
+    "type", "step", "lanes", "queue_depth_mean", "jobs_total",
+    "occupancy", "dropped_total", "overflow_total", "abandoned_total",
+    "wall_s", "jobs_per_sec", "label",
+}
+
+
+def _grid():
+    return SweepGrid.from_product([1.0, 2.5], [V100.alpha],
+                                  [V100.tau0], b_maxes=(8,))
+
+
+class TestTapUnit:
+    def test_aggregates_and_flushes_per_superstep(self, tmp_path):
+        jsonl = tmp_path / "m.jsonl"
+        with MetricsTap(jsonl, label="unit",
+                        expected_points=2) as tap:
+            for lane_jobs in (10, 30):
+                tap._record(0, 4.0, lane_jobs, 1.0, 2.0, 0, 0, 0)
+            for lane_jobs in (20, 60):
+                tap._record(1, 6.0, lane_jobs, 3.0, 4.0, 1, 2, 3)
+        recs = [json.loads(l) for l in jsonl.read_text().splitlines()]
+        assert [r["step"] for r in recs] == [0, 1]
+        r0, r1 = recs
+        assert set(r0) == SUPERSTEP_KEYS
+        assert r0["lanes"] == 2 and r0["jobs_total"] == 40
+        assert r0["queue_depth_mean"] == pytest.approx(4.0)
+        assert r0["occupancy"] == pytest.approx(0.5)
+        assert r0["jobs_per_sec"] is None          # no prior flush
+        assert r1["jobs_total"] == 80
+        assert (r1["dropped_total"], r1["overflow_total"],
+                r1["abandoned_total"]) == (2, 4, 6)
+        assert r1["jobs_per_sec"] is None or r1["jobs_per_sec"] >= 0
+
+    def test_close_flushes_stragglers_in_order(self, tmp_path):
+        jsonl = tmp_path / "m.jsonl"
+        tap = MetricsTap(jsonl, label="unit")    # no expected_points
+        tap._record(2, 1.0, 5, 1.0, 1.0, 0, 0, 0)
+        tap._record(0, 1.0, 1, 1.0, 1.0, 0, 0, 0)
+        tap._record(1, 1.0, 3, 1.0, 1.0, 0, 0, 0)
+        assert jsonl.read_text() == ""           # nothing until close
+        tap.close()
+        tap.close()                              # idempotent
+        steps = [json.loads(l)["step"]
+                 for l in jsonl.read_text().splitlines()]
+        assert steps == [0, 1, 2]
+
+    def test_prometheus_text_rewritten_atomically(self, tmp_path):
+        prom = tmp_path / "m.prom"
+        with MetricsTap(prom_path=prom, label="p",
+                        expected_points=1) as tap:
+            tap._record(0, 2.0, 7, 1.0, 2.0, 1, 0, 0)
+            text = prom.read_text()
+        assert 'repro_supersteps_total{label="p"} 1' in text
+        assert 'repro_jobs_total{label="p"} 7' in text
+        assert 'repro_dropped_total{label="p"} 1' in text
+        for name in ("repro_queue_depth_mean", "repro_occupancy",
+                     "repro_jobs_per_sec"):
+            assert f'{name}{{label="p"}}' in text
+        assert not list(tmp_path.glob("*.tmp"))  # no litter
+
+    def test_observe_summary_nulls_nans(self, tmp_path):
+        jsonl = tmp_path / "m.jsonl"
+        with MetricsTap(jsonl, label="s") as tap:
+            tap.observe_summary(kind="sweep", p50_median=float("nan"),
+                                jobs_total=12)
+        rec = json.loads(jsonl.read_text().splitlines()[0])
+        assert rec["type"] == "summary" and rec["label"] == "s"
+        assert rec["p50_median"] is None
+        assert rec["jobs_total"] == 12
+
+    def test_summary_snapshot(self):
+        tap = MetricsTap(expected_points=1)
+        tap._record(0, 1.0, 9, 1.0, 2.0, 0, 0, 0)
+        s = tap.summary()
+        assert s["supersteps"] == 1 and s["records"] == 1
+        assert s["pending"] == 0 and s["jobs_total"] == 9
+
+    def test_tap_superstep_none_is_noop(self):
+        tap_superstep(None, 0, queue=1)          # must not import jax
+
+    def test_fields_order_matches_record(self):
+        assert FIELDS == ("queue", "jobs", "busy", "span", "dropped",
+                          "overflow", "abandoned")
+
+
+class TestTappedDispatch:
+    """End to end through io_callback inside the jit sweep kernel."""
+
+    @pytest.fixture(scope="class")
+    def tapped(self, tmp_path_factory):
+        d = tmp_path_factory.mktemp("metrics")
+        g = _grid()
+        kw = dict(n_batches=128, q_cap=64, seed=3, sketch=True)
+        plain = sweep(g, **kw)
+        with MetricsTap(d / "m.jsonl", d / "m.prom", label="e2e",
+                        expected_points=len(g)) as tap:
+            r = sweep(g, metrics_tap=tap, **kw)
+        return g, plain, r, tap, d
+
+    def test_tap_changes_nothing_bitwise(self, tapped):
+        _, plain, r, _, _ = tapped
+        for f in ("mean_latency", "n_jobs", "hist", "hist_sums",
+                  "latency_p99"):
+            assert np.array_equal(getattr(plain, f), getattr(r, f)), f
+
+    def test_every_superstep_streamed(self, tapped):
+        g, _, r, tap, d = tapped
+        lines = (d / "m.jsonl").read_text().splitlines()
+        recs = [json.loads(l) for l in lines]
+        steps = [x for x in recs if x["type"] == "superstep"]
+        # 128 batches / 32-step supersteps = 4 supersteps, all lanes
+        assert [x["step"] for x in steps] == list(range(4))
+        assert all(x["lanes"] == len(g) for x in steps)
+        assert all(set(x) == set(steps[0]) for x in steps)
+        assert tap.records == 4 * len(g)
+        # cumulative job counter ends at the dispatch total (the
+        # engine's measured jobs, post-warmup)
+        assert steps[-1]["jobs_total"] == int(r.n_jobs.sum())
+        assert all(b["jobs_total"] >= a["jobs_total"] for a, b
+                   in zip(steps, steps[1:]))
+
+    def test_summary_record_has_percentile_medians(self, tapped):
+        _, _, _, _, d = tapped
+        recs = [json.loads(l)
+                for l in (d / "m.jsonl").read_text().splitlines()]
+        summaries = [x for x in recs if x["type"] == "summary"]
+        assert len(summaries) == 1
+        s = summaries[0]
+        assert s["kind"] == "sweep" and s["points"] == 2
+        for k in ("p50_median", "p95_median", "p99_median"):
+            assert k in s
+
+    def test_prom_file_reflects_final_state(self, tapped):
+        _, _, r, _, d = tapped
+        text = (d / "m.prom").read_text()
+        assert 'repro_supersteps_total{label="e2e"} 4' in text
+        assert (f'repro_jobs_total{{label="e2e"}} '
+                f'{int(r.n_jobs.sum())}') in text
