@@ -1,0 +1,200 @@
+"""Tentpole benchmark: the million-point campaign driver.
+
+Rows (full mode; ``--quick`` shrinks every grid, same structure):
+
+- ``campaign/million_point``: a ≥2²⁰-point structured product grid
+  (λ-fraction × service model × b_max × dist × q_max × overflow)
+  streamed through ``repro.core.campaign.campaign`` in pipelined mode
+  with JSONL/manifest persistence — the headline points/sec row, plus
+  the bounded-host-memory witness (``peak_host_result_bytes``) and the
+  pad-waste accounting from ``plan_chunks``.
+- ``campaign/serial_dispatch`` / ``campaign/pipelined_dispatch``: the
+  SAME equal-point-count grid through both drivers.  The serial leg is
+  the pre-campaign workflow — a blocking per-chunk loop with per-chunk
+  adaptive caps (the grid is ordered so the load surface crosses cap
+  buckets chunk to chunk, so it recompiles; the payload reports
+  ``serial_compile_shapes``) and full per-point host materialization.
+- ``campaign/pipelined_speedup``: the warm ratio of those two rows
+  (target ≥1.5× — on a single-core host the win is the pinned-caps
+  single compile plus O(bins+K) host traffic, not core overlap), with
+  both peak-host-memory numbers for the O(points×bins) vs O(bins+K)
+  contrast.
+- ``campaign/chunk_witness``: bitwise fingerprint equality of a
+  chunked campaign vs the same grid as ONE dispatch-sized chunk — the
+  determinism contract of the sequential on-device fold.
+- ``campaign/resume_parity``: kill-after-2-chunks + resume vs an
+  uninterrupted run, fingerprint-equal.
+"""
+from __future__ import annotations
+
+import shutil
+import tempfile
+from typing import List
+
+import numpy as np
+
+from benchmarks.common import P4, Row, V100, enable_host_devices, timed
+
+enable_host_devices()          # before any JAX backend initialization
+
+FRACS_FULL = 1024              # λ-fraction axis size (full mode)
+N_BATCHES = 32                 # service completions measured per point
+
+
+def _speedup_grid(n_points: int):
+    """Equal-point-count grid for the serial-vs-pipelined rows,
+    ordered with the compile-shape-driving axes (``b_max``, then
+    ``q_max``) varying SLOWEST — the natural layout of a structured
+    product grid, under which the serial workflow's per-chunk adaptive
+    ``q_cap``/``a_cap`` pow2 buckets change from chunk to chunk and
+    force recompiles the pinned-caps campaign never pays."""
+    from repro.core.grid import SweepGrid
+
+    b_maxes = np.array([2, 8, 32, 128], np.int32)
+    q_maxes = np.array([0, 16, 256], np.int32)
+    per_cell = n_points // (len(b_maxes) * len(q_maxes) * 2)
+    fracs = np.linspace(0.2, 0.9, per_cell, dtype=np.float32)
+    b, q, m, f = np.meshgrid(b_maxes, q_maxes, np.arange(2), fracs,
+                             indexing="ij")
+    b, q, m, f = (a.reshape(-1) for a in (b, q, m, f))
+    alpha = np.where(m == 0, V100.alpha, P4.alpha).astype(np.float32)
+    tau0 = np.where(m == 0, V100.tau0, P4.tau0).astype(np.float32)
+    lam = f * b / (alpha * b + tau0)
+    return SweepGrid.from_points(lam, alpha, tau0, b_max=b, q_max=q)
+
+
+def _million_grid(n_fracs: int):
+    """The headline campaign grid: λ-fraction × {V100, P4} × 8 b_max ×
+    {det, exp} × 16 q_max × 2 overflow modes, every λ a fixed fraction
+    of its own (α, τ0, b_max) stability limit so the whole surface
+    stays in the stable-to-heavy band."""
+    from repro.core.grid import SweepGrid
+
+    fracs = np.linspace(0.2, 0.9, n_fracs, dtype=np.float32)
+    b_maxes = np.array([1, 2, 4, 8, 16, 24, 32, 48], np.int32)
+    q_maxes = np.array([0, 8, 12, 16, 20, 24, 28, 32, 40, 48, 56, 64,
+                        80, 96, 112, 128], np.int32)
+    f, m, b, d, q, o = np.meshgrid(fracs, np.arange(2), b_maxes,
+                                   np.arange(2), q_maxes, np.arange(2),
+                                   indexing="ij")
+    f, m, b, d, q, o = (a.reshape(-1) for a in (f, m, b, d, q, o))
+    alpha = np.where(m == 0, V100.alpha, P4.alpha).astype(np.float32)
+    tau0 = np.where(m == 0, V100.tau0, P4.tau0).astype(np.float32)
+    lam = f * b / (alpha * b + tau0)
+    return SweepGrid.from_points(lam, alpha, tau0, b_max=b, dist=d,
+                                 q_max=q, overflow=o)
+
+
+def run(quick: bool = False) -> List[Row]:
+    from repro.core.campaign import campaign
+
+    rows: List[Row] = []
+    work = tempfile.mkdtemp(prefix="bench_campaign_")
+
+    # -- headline: the big streamed campaign with persistence --------
+    big = _million_grid(4 if quick else FRACS_FULL)
+    chunk = 512 if quick else 8192
+
+    def million_point():
+        r = campaign(big, chunk_size=chunk, n_batches=N_BATCHES,
+                     seed=11, out_dir=f"{work}/big",
+                     checkpoint_every=64, pipeline_depth=2)
+        p50, p95, p99 = r.percentiles((50, 95, 99))
+        return {"points": r.n_points, "chunks": r.n_chunks,
+                "chunk_size": r.chunk_size,
+                "padded_points": r.padded_points,
+                "total_jobs": r.totals["jobs"],
+                "buffer_dropped": r.totals["buffer_dropped"],
+                "overflow_dropped": r.totals["overflow_dropped"],
+                "peak_host_result_bytes": r.peak_host_result_bytes,
+                "p50": p50, "p95": p95, "p99": p99,
+                "mean_latency": r.mean_latency,
+                "worst_cell": r.top_latency[0][0],
+                "worst_latency": r.top_latency[0][1],
+                "fingerprint": r.fingerprint()[:16]}
+    rows.append(timed(million_point, "campaign/million_point"))
+
+    # -- serial baseline vs pipelined at equal point counts ----------
+    # Both legs are timed as a user would run them: one shot, compile
+    # included — the serial workflow's recompiles across adaptive-cap
+    # buckets ARE its cost.  The pipelined leg runs FIRST: any chunk
+    # whose adaptive caps happen to equal the pinned full-grid caps
+    # then reuses the pipelined leg's compile, biasing the reported
+    # speedup DOWN (conservative), never up.
+    # chunk 128 aligns chunk boundaries with the grid's q_max cells, so
+    # the serial leg's adaptive caps actually walk the bucket ladder
+    # (≈6 shapes quick, ≈13 full) instead of hiding under one worst-case
+    # chunk shape
+    sp_grid = _speedup_grid(1024 if quick else 2048)
+    sp_chunk = 128
+    out = {}
+
+    def pipelined_dispatch():
+        r = campaign(sp_grid, chunk_size=sp_chunk, n_batches=N_BATCHES,
+                     seed=11)
+        out["pipelined"] = r
+        return {"points": r.n_points, "chunks": r.n_chunks,
+                "total_jobs": r.totals["jobs"],
+                "peak_host_result_bytes": r.peak_host_result_bytes}
+
+    def serial_dispatch():
+        r = campaign(sp_grid, chunk_size=sp_chunk, mode="serial",
+                     n_batches=N_BATCHES, seed=11)
+        out["serial"] = r
+        return {"points": r.n_points, "chunks": r.n_chunks,
+                "total_jobs": r.totals["jobs"],
+                "serial_compile_shapes": r.serial_compile_shapes,
+                "peak_host_result_bytes": r.peak_host_result_bytes}
+
+    rows.append(timed(pipelined_dispatch,
+                      "campaign/pipelined_dispatch"))
+    rows.append(timed(serial_dispatch, "campaign/serial_dispatch"))
+    t_pipe = rows[-2].us_per_call
+    t_serial = rows[-1].us_per_call
+
+    def pipelined_speedup():
+        s, p = out["serial"], out["pipelined"]
+        return {"points": s.n_points, "serial_s": t_serial / 1e6,
+                "pipelined_s": t_pipe / 1e6,
+                "speedup": t_serial / t_pipe,
+                "serial_compile_shapes": s.serial_compile_shapes,
+                "serial_peak_host_bytes": s.peak_host_result_bytes,
+                "pipelined_peak_host_bytes": p.peak_host_result_bytes,
+                # serial's per-chunk caps are different compiled
+                # programs, so its totals agree statistically, not
+                # bitwise — report both rather than a pass/fail bit
+                "serial_jobs": s.totals["jobs"],
+                "pipelined_jobs": p.totals["jobs"]}
+    rows.append(timed(pipelined_speedup, "campaign/pipelined_speedup"))
+
+    # -- determinism witnesses ---------------------------------------
+    wg = sp_grid.take(np.arange(0, len(sp_grid),
+                                max(1, len(sp_grid) // 192)))
+
+    def chunk_witness():
+        a = campaign(wg, chunk_size=64, n_batches=2 * N_BATCHES,
+                     seed=5)
+        b = campaign(wg, chunk_size=len(wg), n_batches=2 * N_BATCHES,
+                     seed=5)
+        return {"points": len(wg), "chunks_a": a.n_chunks,
+                "fingerprint_chunked": a.fingerprint()[:16],
+                "fingerprint_whole": b.fingerprint()[:16],
+                "bitwise_equal": a.fingerprint() == b.fingerprint()}
+    rows.append(timed(chunk_witness, "campaign/chunk_witness"))
+
+    def resume_parity():
+        full = campaign(wg, chunk_size=48, n_batches=2 * N_BATCHES,
+                        seed=5)
+        part = campaign(wg, chunk_size=48, n_batches=2 * N_BATCHES,
+                        seed=5, out_dir=f"{work}/resume",
+                        checkpoint_every=1, stop_after_chunks=2)
+        res = campaign(wg, chunk_size=48, n_batches=2 * N_BATCHES,
+                       seed=5, out_dir=f"{work}/resume", resume=True,
+                       checkpoint_every=1)
+        return {"points": len(wg), "stopped_after": 2,
+                "interrupted": not part.completed,
+                "resume_equal": res.fingerprint() == full.fingerprint()}
+    rows.append(timed(resume_parity, "campaign/resume_parity"))
+
+    shutil.rmtree(work, ignore_errors=True)
+    return rows

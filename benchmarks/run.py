@@ -57,10 +57,17 @@ def _row_rates(doc: dict) -> dict:
         # (non-dict, or missing its name) is just not comparable
         if not isinstance(row, dict) or not row.get("name"):
             continue
-        rates = {k: row[k] for k in _RATE_KEYS if k in row}
-        sp = (row.get("payload") or {}).get("speedup")
-        if sp is not None:
-            rates["speedup"] = sp
+        rates = {}
+        candidates = {k: row.get(k) for k in _RATE_KEYS}
+        candidates["speedup"] = (row.get("payload") or {}).get("speedup")
+        for k, v in candidates.items():
+            # campaign rows carry structural payloads (fingerprints,
+            # sketch-only summaries) where a rate key may be absent or
+            # non-numeric — such a row is just not rate-comparable
+            try:
+                rates[k] = float(v)
+            except (TypeError, ValueError):
+                continue
         if rates:
             out[row["name"]] = rates
     return out
@@ -166,8 +173,9 @@ def main() -> None:
         sys.exit("--compare needs the fresh BENCH JSONs; "
                  "drop --no-json")
 
-    from benchmarks import (backpressure, continuous, fig4_latency_bound,
-                            fig5_utilization, fig6_energy, fig7_tradeoff,
+    from benchmarks import (backpressure, campaign, continuous,
+                            fig4_latency_bound, fig5_utilization,
+                            fig6_energy, fig7_tradeoff,
                             fig8_finite_bmax, fig9_batch_times,
                             fig11_served_latency, policies, replicas,
                             roofline, superstep, table1_throughput,
@@ -205,6 +213,7 @@ def main() -> None:
         "superstep": lambda: superstep.run(
             n_batches=1_024 if args.quick else 3_000,
             metrics_dir=args.metrics_dir or args.json_dir),
+        "campaign": lambda: campaign.run(quick=args.quick),
     }
     if args.only:
         modules = {k: v for k, v in modules.items() if k == args.only}

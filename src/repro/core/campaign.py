@@ -1,0 +1,807 @@
+"""Chunked campaign driver: million-point design-space sweeps as a
+stream of fixed-shape kernel dispatches with on-device reduction.
+
+``evaluate()`` materializes per-point results for one dispatch and
+blocks on it; at 10⁶+ points the host-side transfer and per-point
+buffers dominate, not the kernels.  ``campaign(grid, ...)`` instead
+cuts the grid into fixed-size chunks and runs every chunk through ONE
+compiled XLA program:
+
+- **Pinned caps, one compile.**  The compile-time capacities are
+  derived once from the FULL grid (``sweep_caps``/``fleet_caps``/
+  ``gen_caps``) and splatted into every chunk, so the ``engine.kernel_
+  cache`` serves all chunks from a single entry.  The naive per-chunk
+  loop (``mode="serial"`` here, the pre-campaign workflow) re-derives
+  adaptive caps per chunk and recompiles on every new pow2 bucket the
+  load surface crosses.
+- **Pipelined dispatch.**  JAX dispatch is async: chunk i+1's simulate
+  + reduce are enqueued before chunk i's (tiny) summary is fetched, so
+  host-side work — slicing the next chunk, appending JSONL rows,
+  checkpoints — overlaps device compute.  ``pipeline_depth`` bounds
+  the in-flight window.
+- **Streaming on-device reduction.**  Per-point outputs never reach
+  the host: a jitted fold merges each chunk's outputs into a
+  campaign-level accumulator ON DEVICE (histogram counts, loss
+  totals, f64 running sums, and top-K worst-latency / best-goodput
+  cells with their global indices).  Host traffic per chunk is
+  O(bins + K) — a ~dozen scalars per chunk plus the accumulator at
+  checkpoints — instead of O(points × bins).
+- **Donation, revisited.**  PR 5 declined donation because the sweep
+  kernels' big buffers are scan carries (already aliased in place) and
+  dispatch inputs alias no output.  The campaign accumulator is the
+  first genuine aliasable input/output pair: the fold consumes one
+  accumulator and returns its successor of identical shape.  On
+  accelerator backends the fold donates it (``donate_argnums=(0,)``);
+  on CPU donation is a no-op warning, so it stays off.
+
+Determinism contract (the chunk-invariance witness): per-point results
+are bitwise chunk-invariant already (fold_in keys + pinned caps), and
+the campaign fold is a *sequential left fold in global point order* —
+a ``lax.scan`` over the chunk's point axis.  Chunk boundaries change
+where the sequence is cut, never the sequence itself, and padded tail
+lanes fold masked identity updates (integer +0, f64 +0.0 onto
+non-negative sums, no top-K replacement).  So ``campaign(chunk_size=
+64)`` and ``campaign(chunk_size=n)`` produce bitwise-identical
+accumulators — including the f64 sums, whose addition order is
+identical, not merely associative.  Resume replays the same fold from
+a checkpointed prefix, so a killed-and-resumed campaign is also
+bitwise-identical to an uninterrupted one.
+
+Accumulator precision: the fold runs in float64/int64 (built and
+called inside ``jax.experimental.enable_x64`` scopes, the
+``chain_solver`` pattern — the global x64 flag stays off).  The sim
+kernels themselves are dispatched OUTSIDE those scopes and stay the
+same float32 programs ``sweep`` compiles.
+
+Histogram form: by default chunks carry the kernels' full-resolution
+``n_bins=512`` counts — merging counts across chunks is exact integer
+addition, so the merged histogram equals the one-dispatch histogram
+bin for bin and percentile error stays the one-bin-width bound of the
+binning in use.  ``sketch=True`` switches to the 64-bin streaming
+sketch (same merge argument, ``hist.SKETCH_REL_ERR`` contract); note
+the sketch kernel's second scatter (per-bin latency sums) makes it
+~2× slower per point on CPU lax, so it is the bounded-memory option,
+not the fast path.
+
+Checkpoint/resume: pass ``out_dir`` to persist per-chunk JSONL rows,
+an ``accumulator.npz``, and a ``manifest.json`` (grid/config
+fingerprints, chunks_done).  ``resume=True`` validates the
+fingerprints, reloads the accumulator, truncates the row log to the
+checkpointed prefix, and continues at chunk ``chunks_done``.
+
+Mid-flight inspection: ``metrics_tap=`` + ``tap_every=N`` dispatches
+every N-th chunk single-shard with the per-superstep ``MetricsTap``
+attached (io_callback under shard_map is outside the pinned-jax
+contract), leaving the other chunks sharded; bitwise shard invariance
+plus the tap's bitwise neutrality keep tapped and untapped campaigns
+identical.  Each completed chunk also streams a ``chunk`` record
+through the tap.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import time
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core import engine
+from repro.core.grid import FleetGrid, GenGrid, SweepGrid
+from repro.core.hist import (SKETCH_BINS, hist_edges, hist_percentiles,
+                             sketch_edges)
+
+__all__ = ["campaign", "plan_chunks", "CampaignResult",
+           "DEFAULT_TOP_K"]
+
+MANIFEST_VERSION = 1
+DEFAULT_TOP_K = 16
+
+# accumulator keys, in the canonical (fingerprint/checkpoint) order
+_ACC_INT = ("points", "jobs", "batches", "buffer_dropped",
+            "overflow_dropped", "abandoned", "n_in_slo", "n_fresh",
+            "n_retry")
+_ACC_F64 = ("sum_latency_jobs", "sum_latency", "sum_util", "sum_batch")
+_ACC_KEYS = (("hist", "hist_sums") + _ACC_INT + _ACC_F64
+             + ("top_lat_val", "top_lat_idx",
+                "top_good_val", "top_good_idx"))
+
+
+# ---------------------------------------------------------------------------
+# chunk planning (satellite: pad-waste accounting)
+# ---------------------------------------------------------------------------
+
+def plan_chunks(n_points: int, chunk_size: int) -> Tuple[int, int, int]:
+    """Pick the actual chunk size for an ``n_points`` campaign.
+
+    Repeated-last-point tail padding silently *recomputes* up to
+    ``chunk_size - 1`` points, so prefer a divisor of ``n_points``
+    near the requested size (searched down to 2/3 of it); otherwise
+    keep the request and report the padded-point count so dispatch
+    payloads can log the waste.  Returns ``(chunk_size, n_chunks,
+    padded_points)``."""
+    if n_points <= 0:
+        raise ValueError("empty campaign")
+    if chunk_size < 1:
+        raise ValueError(f"chunk_size must be >= 1 (got {chunk_size})")
+    chunk_size = min(int(chunk_size), n_points)
+    if n_points % chunk_size:
+        for d in range(chunk_size, max(1, (2 * chunk_size) // 3) - 1,
+                       -1):
+            if n_points % d == 0:
+                chunk_size = d
+                break
+    n_chunks = -(-n_points // chunk_size)
+    padded = n_chunks * chunk_size - n_points
+    return chunk_size, n_chunks, padded
+
+
+def _grid_sha(grid) -> str:
+    h = hashlib.sha256(type(grid).__name__.encode())
+    for a in grid._arrays():
+        a = np.ascontiguousarray(a)
+        h.update(str(a.dtype).encode())
+        h.update(str(a.shape).encode())
+        h.update(a.tobytes())
+    return h.hexdigest()
+
+
+def _kind_of(grid) -> str:
+    if isinstance(grid, GenGrid):
+        return "gen"
+    if isinstance(grid, FleetGrid):
+        return "fleet"
+    if isinstance(grid, SweepGrid):
+        return "sweep"
+    raise TypeError(f"campaign cannot stream a {type(grid).__name__}")
+
+
+def _kind_fns(kind: str):
+    """(plan_fn, caps_fn, steps_kw) for a kernel kind."""
+    if kind == "sweep":
+        from repro.core.sweep import sweep_caps, sweep_plan
+        return sweep_plan, sweep_caps, "n_batches"
+    if kind == "fleet":
+        from repro.core.sweep import fleet_caps, fleet_plan
+        return fleet_plan, fleet_caps, "n_steps"
+    from repro.core.gen_sweep import gen_caps, gen_plan
+    return gen_plan, gen_caps, "n_steps"
+
+
+# ---------------------------------------------------------------------------
+# the on-device fold
+# ---------------------------------------------------------------------------
+
+def _init_acc(n_bins: int, k_top: int) -> Dict[str, np.ndarray]:
+    acc: Dict[str, np.ndarray] = {
+        "hist": np.zeros(n_bins, np.int64),
+        "hist_sums": np.zeros(n_bins, np.float64),
+    }
+    for k in _ACC_INT:
+        acc[k] = np.zeros((), np.int64)
+    for k in _ACC_F64:
+        acc[k] = np.zeros((), np.float64)
+    # -inf sentinels: any real value beats an empty slot, and the
+    # strict-> replacement rule keeps the earliest index on ties
+    acc["top_lat_val"] = np.full(k_top, -np.inf, np.float64)
+    acc["top_lat_idx"] = np.full(k_top, -1, np.int64)
+    acc["top_good_val"] = np.full(k_top, -np.inf, np.float64)
+    acc["top_good_idx"] = np.full(k_top, -1, np.int64)
+    return acc
+
+
+@engine.kernel_cache(maxsize=8)
+def _build_fold(m: int, n_bins: int, k_top: int, has_loss: bool,
+                has_sums: bool, has_batches: bool, donate: bool):
+    """The jitted chunk fold: sequential left-fold of ``m`` per-point
+    rows (global index order) into the campaign accumulator, plus a
+    tiny per-chunk summary.  MUST be built and called inside an
+    ``enable_x64`` scope (the accumulator is f64/i64)."""
+    import jax
+    import jax.numpy as jnp
+    from jax import lax
+
+    if jnp.result_type(float) != jnp.float64:
+        raise RuntimeError(
+            "_build_fold called outside an enable_x64 scope; the "
+            "campaign accumulator needs true float64/int64 (see "
+            "repro.core.chain_solver for the pattern)")
+
+    f64, i64 = jnp.float64, jnp.int64
+
+    def fold(acc, chunk, start, n_valid):
+        idx = jnp.arange(m, dtype=i64)
+        xs = {
+            "valid": idx < n_valid,
+            "gidx": start + idx,
+            "hist": chunk["hist"].astype(i64),
+            "n_jobs": chunk["n_jobs"].astype(i64),
+            "batches": chunk["batches"].astype(i64),
+            "dropped": chunk["dropped"].astype(i64),
+            "lat": chunk["mean_latency"].astype(f64),
+            "util": chunk["utilization"].astype(f64),
+            "batch": chunk["mean_batch"].astype(f64),
+            "lam": chunk["lam"].astype(f64),
+        }
+        if has_sums:
+            xs["hist_sums"] = chunk["hist_sums"].astype(f64)
+        if has_loss:
+            for k in ("overflow_dropped", "abandoned", "n_in_slo",
+                      "n_fresh", "n_retry"):
+                xs[k] = chunk[k].astype(i64)
+
+        def body(a, x):
+            w = x["valid"].astype(i64)
+            wf = x["valid"].astype(f64)
+            a = dict(a)
+            a["hist"] = a["hist"] + x["hist"] * w
+            if has_sums:
+                a["hist_sums"] = a["hist_sums"] + x["hist_sums"] * wf
+            a["points"] = a["points"] + w
+            a["jobs"] = a["jobs"] + x["n_jobs"] * w
+            a["batches"] = a["batches"] + x["batches"] * w
+            a["buffer_dropped"] = (a["buffer_dropped"]
+                                   + x["dropped"] * w)
+            if has_loss:
+                for k in ("overflow_dropped", "abandoned", "n_in_slo",
+                          "n_fresh", "n_retry"):
+                    a[k] = a[k] + x[k] * w
+                offered = (x["n_jobs"] + x["overflow_dropped"]
+                           + x["abandoned"])
+                gfrac = jnp.where(offered > 0,
+                                  x["n_in_slo"].astype(f64)
+                                  / jnp.maximum(offered, 1).astype(f64),
+                                  1.0)
+            else:
+                # loss-free: every measured job completes in SLO
+                a["n_in_slo"] = a["n_in_slo"] + x["n_jobs"] * w
+                a["n_fresh"] = a["n_fresh"] + x["n_jobs"] * w
+                gfrac = jnp.asarray(1.0, f64)
+            jobs_f = x["n_jobs"].astype(f64)
+            a["sum_latency_jobs"] = (a["sum_latency_jobs"]
+                                     + x["lat"] * jobs_f * wf)
+            a["sum_latency"] = a["sum_latency"] + x["lat"] * wf
+            a["sum_util"] = a["sum_util"] + x["util"] * wf
+            a["sum_batch"] = a["sum_batch"] + x["batch"] * wf
+
+            # top-K retention: replace the current minimum on a strict
+            # improvement only, so earlier global indices win ties —
+            # the same outcome in every chunking (sequential fold)
+            def top(vals, idxs, v):
+                am = jnp.argmin(vals)
+                repl = x["valid"] & (v > vals[am])
+                return (jnp.where(repl, vals.at[am].set(v), vals),
+                        jnp.where(repl, idxs.at[am].set(x["gidx"]),
+                                  idxs))
+            a["top_lat_val"], a["top_lat_idx"] = top(
+                a["top_lat_val"], a["top_lat_idx"], x["lat"])
+            a["top_good_val"], a["top_good_idx"] = top(
+                a["top_good_val"], a["top_good_idx"],
+                x["lam"] * gfrac)
+            return a, None
+
+        acc, _ = lax.scan(body, acc, xs)
+        valid = (idx < n_valid)
+        w = valid.astype(i64)
+        summary = {
+            "points": jnp.sum(w),
+            "jobs": jnp.sum(chunk["n_jobs"].astype(i64) * w),
+            "buffer_dropped": jnp.sum(chunk["dropped"].astype(i64) * w),
+        }
+        if has_loss:
+            summary["overflow_dropped"] = jnp.sum(
+                chunk["overflow_dropped"].astype(i64) * w)
+            summary["abandoned"] = jnp.sum(
+                chunk["abandoned"].astype(i64) * w)
+        return acc, summary
+
+    del has_batches  # part of the cache key only (output schema)
+    return jax.jit(fold, donate_argnums=(0,) if donate else ())
+
+
+# ---------------------------------------------------------------------------
+# result
+# ---------------------------------------------------------------------------
+
+@dataclass
+class CampaignResult:
+    """Aggregates of one campaign run.
+
+    ``hist`` is the merged latency histogram (bin-for-bin equal to the
+    one-dispatch histogram), ``totals`` the campaign-wide job/loss
+    counters, ``top_latency``/``top_goodput`` the retained (global
+    point index, value) cells.  ``fingerprint()`` hashes the canonical
+    accumulator bytes — the chunk-invariance and resume witnesses
+    compare these."""
+
+    kind: str
+    mode: str
+    n_points: int
+    n_chunks: int
+    chunk_size: int
+    padded_points: int
+    completed: bool
+    sketch: bool
+    acc: Dict[str, np.ndarray] = field(repr=False)
+    rows: List[dict] = field(repr=False)
+    wall_s: float = 0.0
+    peak_host_result_bytes: int = 0
+    serial_compile_shapes: int = 0
+    tapped_chunks: int = 0
+    out_dir: Optional[str] = None
+
+    @property
+    def hist(self) -> np.ndarray:
+        return self.acc["hist"]
+
+    @property
+    def hist_bin_edges(self) -> np.ndarray:
+        if self.sketch:
+            return sketch_edges()
+        return hist_edges(self.hist.shape[0])
+
+    @property
+    def totals(self) -> Dict[str, int]:
+        return {k: int(self.acc[k]) for k in _ACC_INT}
+
+    @property
+    def mean_latency(self) -> float:
+        """Jobs-weighted campaign mean latency (exact f64 fold of
+        per-point means — no histogram binning error)."""
+        jobs = int(self.acc["jobs"])
+        if jobs == 0:
+            return float("nan")
+        return float(self.acc["sum_latency_jobs"]) / jobs
+
+    @property
+    def mean_utilization(self) -> float:
+        pts = int(self.acc["points"])
+        return float(self.acc["sum_util"]) / max(pts, 1)
+
+    @property
+    def mean_batch(self) -> float:
+        pts = int(self.acc["points"])
+        return float(self.acc["sum_batch"]) / max(pts, 1)
+
+    @property
+    def goodput_frac(self) -> float:
+        offered = (int(self.acc["jobs"])
+                   + int(self.acc["overflow_dropped"])
+                   + int(self.acc["abandoned"]))
+        if offered == 0:
+            return 1.0
+        return int(self.acc["n_in_slo"]) / offered
+
+    def percentiles(self, qs=(50, 95, 99)) -> List[float]:
+        """Campaign-wide latency percentiles from the merged counts
+        (within one bin width of the exact sample percentile — the
+        same contract as a single dispatch, see docs/theory.md)."""
+        out = hist_percentiles(self.hist[None, :], qs,
+                               edges=self.hist_bin_edges)
+        return [float(v[0]) for v in out]
+
+    def _ranked(self, vkey: str, ikey: str) -> List[Tuple[int, float]]:
+        vals, idxs = self.acc[vkey], self.acc[ikey]
+        keep = idxs >= 0
+        order = np.lexsort((idxs[keep], -vals[keep]))
+        return [(int(idxs[keep][o]), float(vals[keep][o]))
+                for o in order]
+
+    @property
+    def top_latency(self) -> List[Tuple[int, float]]:
+        """Worst mean-latency cells, (global point index, ms)."""
+        return self._ranked("top_lat_val", "top_lat_idx")
+
+    @property
+    def top_goodput(self) -> List[Tuple[int, float]]:
+        """Best goodput-rate cells, (global point index, jobs/ms)."""
+        return self._ranked("top_good_val", "top_good_idx")
+
+    def fingerprint(self) -> str:
+        h = hashlib.sha256()
+        for k in _ACC_KEYS:
+            a = np.ascontiguousarray(self.acc[k])
+            h.update(k.encode())
+            h.update(str(a.dtype).encode())
+            h.update(a.tobytes())
+        return h.hexdigest()
+
+
+# ---------------------------------------------------------------------------
+# persistence
+# ---------------------------------------------------------------------------
+
+def _atomic_write(path: Path, data: bytes) -> None:
+    tmp = path.with_suffix(path.suffix + ".tmp")
+    tmp.write_bytes(data)
+    os.replace(tmp, path)
+
+
+class _Store:
+    """manifest.json + accumulator.npz + chunks.jsonl under out_dir."""
+
+    def __init__(self, out_dir: Path):
+        self.dir = Path(out_dir)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.manifest_path = self.dir / "manifest.json"
+        self.acc_path = self.dir / "accumulator.npz"
+        self.rows_path = self.dir / "chunks.jsonl"
+        self._rows_fh = None
+
+    def load_manifest(self) -> Optional[dict]:
+        if not self.manifest_path.exists():
+            return None
+        return json.loads(self.manifest_path.read_text())
+
+    def load_acc(self) -> Dict[str, np.ndarray]:
+        with np.load(self.acc_path) as z:
+            return {k: np.asarray(z[k]) for k in z.files}
+
+    def truncate_rows(self, chunks_done: int) -> List[dict]:
+        """Keep only rows for chunks < chunks_done (rows appended
+        after the last checkpoint describe chunks the resume will
+        recompute)."""
+        rows: List[dict] = []
+        if self.rows_path.exists():
+            for line in self.rows_path.read_text().splitlines():
+                if not line.strip():
+                    continue
+                row = json.loads(line)
+                if row["chunk"] < chunks_done:
+                    rows.append(row)
+        _atomic_write(self.rows_path,
+                      ("".join(json.dumps(r) + "\n" for r in rows))
+                      .encode())
+        return rows
+
+    def append_row(self, row: dict) -> None:
+        if self._rows_fh is None:
+            self._rows_fh = open(self.rows_path, "a")
+        self._rows_fh.write(json.dumps(row) + "\n")
+        self._rows_fh.flush()
+
+    def checkpoint(self, manifest: dict,
+                   acc: Dict[str, np.ndarray]) -> None:
+        import io
+        buf = io.BytesIO()
+        np.savez(buf, **acc)
+        _atomic_write(self.acc_path, buf.getvalue())
+        _atomic_write(self.manifest_path,
+                      (json.dumps(manifest, indent=1) + "\n").encode())
+
+    def close(self) -> None:
+        if self._rows_fh is not None:
+            self._rows_fh.close()
+            self._rows_fh = None
+
+
+# ---------------------------------------------------------------------------
+# the driver
+# ---------------------------------------------------------------------------
+
+def _nbytes(tree) -> int:
+    total = 0
+    for v in tree.values() if isinstance(tree, dict) else tree:
+        total += np.asarray(v).nbytes
+    return total
+
+
+def campaign(grid, *, chunk_size: int = 4096, mode: str = "pipelined",
+             n_bins: int = 512, sketch: bool = False, seed: int = 0,
+             shard=None, superstep_backend: Optional[str] = None,
+             metrics_tap=None, tap_every: int = 0,
+             k_top: int = DEFAULT_TOP_K,
+             pipeline_depth: int = 2, checkpoint_every: int = 8,
+             out_dir: Optional[str] = None, resume: bool = False,
+             stop_after_chunks: Optional[int] = None,
+             caps: Optional[Dict[str, int]] = None,
+             **kernel_kw) -> CampaignResult:
+    """Stream ``grid`` through its kernel in fixed-shape chunks and
+    reduce on device (module docstring has the full execution model).
+
+    ``grid`` picks the kernel: ``SweepGrid`` → ``sweep``, ``FleetGrid``
+    → ``fleet_sweep``, ``GenGrid`` → ``gen_sweep``; ``**kernel_kw``
+    (``n_batches``/``n_steps``/``warmup``/``hist_every``/...) forwards
+    to it.  ``caps`` overrides the full-grid pinned capacities
+    (defaults to ``*_caps(grid)``).
+
+    ``mode="pipelined"`` is the streaming driver; ``mode="serial"`` is
+    the pre-campaign baseline it is benchmarked against — a blocking
+    per-chunk loop through the kernel's *result* path with per-chunk
+    adaptive caps (recompiles across cap buckets) and full per-point
+    host materialization.  Serial results agree statistically but are
+    NOT bitwise-comparable to streaming ones (different compiled
+    shapes ⇒ different arrival-draw shapes per point).
+
+    ``stop_after_chunks=s`` checkpoints and returns after ``s`` chunks
+    (``completed=False``) — graceful preemption; pass ``resume=True``
+    with the same ``out_dir``, grid, and config to continue.
+    """
+    kind = _kind_of(grid)
+    plan_fn, caps_fn, steps_kw = _kind_fns(kind)
+    n = len(grid)
+    c_size, n_chunks, padded = plan_chunks(n, chunk_size)
+    if mode not in ("pipelined", "serial"):
+        raise ValueError(f"unknown campaign mode {mode!r}")
+    if sketch:
+        n_bins = SKETCH_BINS
+    pinned = dict(caps) if caps is not None else caps_fn(grid)
+
+    config = {"kind": kind, "n_points": n, "chunk_size": c_size,
+              "n_bins": int(n_bins), "sketch": bool(sketch),
+              "seed": int(seed), "k_top": int(k_top),
+              "caps": {k: int(v) for k, v in sorted(pinned.items())},
+              "kernel_kw": {k: repr(v)
+                            for k, v in sorted(kernel_kw.items())}}
+    grid_sha = _grid_sha(grid)
+
+    store = _Store(Path(out_dir)) if out_dir is not None else None
+    start_chunk = 0
+    rows: List[dict] = []
+    acc_host: Optional[Dict[str, np.ndarray]] = None
+    if resume:
+        if store is None:
+            raise ValueError("resume=True needs out_dir")
+        man = store.load_manifest()
+        if man is None:
+            raise FileNotFoundError(
+                f"resume=True but no manifest under {out_dir}")
+        if man.get("grid_sha") != grid_sha or man.get("config") != config:
+            raise ValueError(
+                "resume manifest does not match this campaign (grid "
+                "or config changed); start fresh in a new out_dir")
+        start_chunk = int(man["chunks_done"])
+        acc_host = store.load_acc()
+        rows = store.truncate_rows(start_chunk)
+
+    t0 = time.perf_counter()
+    if mode == "serial":
+        result = _run_serial(grid, plan_fn, caps_fn, kind, n, c_size,
+                             n_chunks, padded, n_bins, sketch, seed,
+                             shard, superstep_backend, kernel_kw,
+                             steps_kw, k_top, store, config, grid_sha,
+                             start_chunk, rows, acc_host,
+                             stop_after_chunks, metrics_tap)
+    else:
+        result = _run_pipelined(grid, plan_fn, kind, n, c_size,
+                                n_chunks, padded, n_bins, sketch, seed,
+                                shard, superstep_backend, pinned,
+                                kernel_kw, k_top, pipeline_depth,
+                                checkpoint_every, store, config,
+                                grid_sha, start_chunk, rows, acc_host,
+                                stop_after_chunks, metrics_tap,
+                                tap_every)
+    result.wall_s = time.perf_counter() - t0
+    if store is not None:
+        store.close()
+        result.out_dir = str(store.dir)
+    return result
+
+
+def _chunk_grid(grid, start: int, c_size: int, n: int):
+    idx = np.minimum(np.arange(start, start + c_size), n - 1)
+    return grid.take(idx), min(c_size, n - start)
+
+
+def _fold_inputs(out: Dict[str, Any], lam_dev, has_loss: bool,
+                 has_sums: bool) -> Dict[str, Any]:
+    chunk = {
+        "hist": out["hist"], "n_jobs": out["n_jobs"],
+        "dropped": out["dropped"],
+        "batches": out.get("n_batches", out.get("n_steps")),
+        "mean_latency": out["mean_latency"],
+        "utilization": out["utilization"],
+        "mean_batch": out["mean_batch"], "lam": lam_dev,
+    }
+    if has_sums:
+        chunk["hist_sums"] = out["hist_sums"]
+    if has_loss:
+        for k in ("overflow_dropped", "abandoned", "n_in_slo",
+                  "n_fresh", "n_retry"):
+            chunk[k] = out[k]
+    return chunk
+
+
+def _run_pipelined(grid, plan_fn, kind, n, c_size, n_chunks, padded,
+                   n_bins, sketch, seed, shard, superstep_backend,
+                   pinned, kernel_kw, k_top, depth, checkpoint_every,
+                   store, config, grid_sha, start_chunk, rows,
+                   acc_host, stop_after, metrics_tap, tap_every):
+    import jax
+    from jax.experimental import enable_x64
+
+    # the revisited PR 5 decision: donate the accumulator on
+    # accelerator backends only (CPU donation is a warning no-op)
+    donate = jax.default_backend() != "cpu"
+    if acc_host is None:
+        acc_host = _init_acc(n_bins, k_top)
+    with enable_x64():
+        acc = jax.device_put(acc_host)
+
+    last_chunk = n_chunks if stop_after is None \
+        else min(n_chunks, start_chunk + stop_after)
+    pending = []            # (ci, summary_ref, ckpt_ref|None, meta)
+    peak_host = 0
+    tapped = 0
+
+    meta_t0 = {}
+
+    def drain_one():
+        nonlocal peak_host
+        ci, summary_ref, ckpt_ref, meta = pending.pop(0)
+        summary = jax.device_get(summary_ref)      # blocks: chunk done
+        host_bytes = _nbytes(summary) + meta.pop("_grid_bytes")
+        acc_np = None
+        if ckpt_ref is not None:
+            acc_np = jax.device_get(ckpt_ref)
+            host_bytes += _nbytes(acc_np)
+        row = {"chunk": ci, **meta,
+               **{k: int(v) for k, v in summary.items()},
+               "wall_s": round(time.perf_counter()
+                               - meta_t0.pop(ci), 4),
+               "host_bytes": host_bytes}
+        if store is not None:
+            store.append_row(row)
+            if acc_np is not None:
+                store.checkpoint(
+                    {"version": MANIFEST_VERSION, "grid_sha": grid_sha,
+                     "config": config, "chunks_done": ci + 1,
+                     "n_chunks": n_chunks, "mode": "pipelined"},
+                    acc_np)
+        rows.append(row)
+        peak_host = max(peak_host, host_bytes)
+        if metrics_tap is not None:
+            metrics_tap.observe_chunk(**{k: v for k, v in row.items()
+                                         if k != "host_bytes"})
+
+    for ci in range(start_chunk, last_chunk):
+        start = ci * c_size
+        cgrid, n_valid = _chunk_grid(grid, start, c_size, n)
+        tap_this = (metrics_tap is not None and tap_every > 0
+                    and ci % tap_every == 0)
+        tapped += bool(tap_this)
+        meta_t0[ci] = time.perf_counter()
+        plan = plan_fn(cgrid, seed=seed, key_offset=start,
+                       n_bins=n_bins, sketch=sketch, shard=shard,
+                       superstep_backend=superstep_backend,
+                       metrics_tap=metrics_tap if tap_this else None,
+                       **pinned, **kernel_kw)
+        out, pad2 = engine.dispatch_device(plan.kernel, plan.params,
+                                           plan.keys, plan.n,
+                                           plan.n_dev)
+        lam_dev = engine.pad_tail(plan.params["lam"], pad2)
+        with enable_x64():
+            fold = _build_fold(c_size + pad2, n_bins, k_top,
+                               plan.has_loss, plan.sketch, True,
+                               donate)
+            chunk = _fold_inputs(out, lam_dev, plan.has_loss,
+                                 plan.sketch)
+            acc, summary_ref = fold(acc, chunk, np.int64(start),
+                                    np.int64(n_valid))
+        is_ckpt = (store is not None
+                   and ((ci + 1) % max(checkpoint_every, 1) == 0
+                        or ci == last_chunk - 1))
+        if is_ckpt:
+            with enable_x64():
+                ckpt_ref = (jax.tree_util.tree_map(lambda a: a + 0, acc)
+                            if donate else acc)
+        else:
+            ckpt_ref = None
+        pending.append((ci, summary_ref, ckpt_ref,
+                        {"start": start, "points": n_valid,
+                         "padded": (c_size - n_valid) + pad2,
+                         "tapped": bool(tap_this),
+                         "_grid_bytes": _nbytes(cgrid._arrays())}))
+        while len(pending) > max(depth, 1):
+            drain_one()
+    while pending:
+        drain_one()
+
+    acc_np = jax.device_get(acc)
+    completed = last_chunk == n_chunks
+    return CampaignResult(
+        kind=kind, mode="pipelined", n_points=n, n_chunks=n_chunks,
+        chunk_size=c_size, padded_points=padded, completed=completed,
+        sketch=bool(sketch), acc=acc_np, rows=rows,
+        peak_host_result_bytes=peak_host, tapped_chunks=tapped)
+
+
+def _run_serial(grid, plan_fn, caps_fn, kind, n, c_size, n_chunks,
+                padded, n_bins, sketch, seed, shard, superstep_backend,
+                kernel_kw, steps_kw, k_top, store, config, grid_sha,
+                start_chunk, rows, acc_host, stop_after, metrics_tap):
+    """The pre-campaign workflow, as a measurable baseline: a blocking
+    per-chunk loop through the kernel's result path (full per-point
+    host materialization) with per-chunk ADAPTIVE caps — each new pow2
+    cap bucket the load surface crosses is a fresh XLA compile — and a
+    host-side numpy reduction."""
+    from repro.core.gen_sweep import gen_sweep
+    from repro.core.sweep import fleet_sweep, sweep
+
+    run = {"sweep": sweep, "fleet": fleet_sweep, "gen": gen_sweep}[kind]
+    acc = acc_host if acc_host is not None else _init_acc(n_bins, k_top)
+    peak_host = 0
+    shapes = set()
+    last_chunk = n_chunks if stop_after is None \
+        else min(n_chunks, start_chunk + stop_after)
+    for ci in range(start_chunk, last_chunk):
+        start = ci * c_size
+        cgrid, n_valid = _chunk_grid(grid, start, c_size, n)
+        t0 = time.perf_counter()
+        chunk_caps = caps_fn(cgrid)
+        shapes.add(tuple(sorted(chunk_caps.items())))
+        r = run(cgrid, seed=seed, key_offset=start, n_bins=n_bins,
+                sketch=sketch, shard=shard,
+                superstep_backend=superstep_backend,
+                **chunk_caps, **kernel_kw)
+        host_bytes = (_nbytes([r.hist]) + _nbytes(cgrid._arrays())
+                      + _nbytes([r.mean_latency, r.n_jobs,
+                                 r.utilization, r.mean_batch]))
+        _host_fold(acc, r, start, n_valid, k_top)
+        row = {"chunk": ci, "start": start, "points": n_valid,
+               "padded": c_size - n_valid, "tapped": False,
+               "jobs": int(r.n_jobs[:n_valid].sum()),
+               "buffer_dropped": int(r.buffer_dropped[:n_valid].sum()),
+               "wall_s": round(time.perf_counter() - t0, 4),
+               "host_bytes": host_bytes}
+        rows.append(row)
+        if store is not None:
+            store.append_row(dict(row))
+            store.checkpoint(
+                {"version": MANIFEST_VERSION, "grid_sha": grid_sha,
+                 "config": config, "chunks_done": ci + 1,
+                 "n_chunks": n_chunks, "mode": "serial"}, acc)
+        peak_host = max(peak_host, host_bytes)
+    return CampaignResult(
+        kind=kind, mode="serial", n_points=n, n_chunks=n_chunks,
+        chunk_size=c_size, padded_points=padded,
+        completed=last_chunk == n_chunks, sketch=bool(sketch),
+        acc=acc, rows=rows, peak_host_result_bytes=peak_host,
+        serial_compile_shapes=len(shapes))
+
+
+def _host_fold(acc: Dict[str, np.ndarray], r, start: int, n_valid: int,
+               k_top: int) -> None:
+    """Numpy mirror of the device fold (vectorized — serial results
+    are a statistical baseline, not part of the bitwise contract)."""
+    sl = slice(0, n_valid)
+    acc["hist"] = acc["hist"] + r.hist[sl].sum(0).astype(np.int64)
+    if r.hist_sums is not None:
+        acc["hist_sums"] = (acc["hist_sums"]
+                            + r.hist_sums[sl].sum(0).astype(np.float64))
+    jobs = r.n_jobs[sl].astype(np.int64)
+    acc["points"] = acc["points"] + np.int64(n_valid)
+    acc["jobs"] = acc["jobs"] + jobs.sum()
+    batches = getattr(r, "n_batches", None)
+    if batches is None:
+        batches = r.n_steps
+    acc["batches"] = acc["batches"] + batches[sl].astype(np.int64).sum()
+    acc["buffer_dropped"] = (acc["buffer_dropped"]
+                             + r.buffer_dropped[sl].astype(np.int64)
+                             .sum())
+    for k in ("overflow_dropped", "abandoned", "n_in_slo", "n_fresh",
+              "n_retry"):
+        acc[k] = acc[k] + getattr(r, k)[sl].astype(np.int64).sum()
+    lat = r.mean_latency[sl].astype(np.float64)
+    acc["sum_latency_jobs"] = (acc["sum_latency_jobs"]
+                               + (lat * jobs).sum())
+    acc["sum_latency"] = acc["sum_latency"] + lat.sum()
+    acc["sum_util"] = (acc["sum_util"]
+                       + r.utilization[sl].astype(np.float64).sum())
+    acc["sum_batch"] = (acc["sum_batch"]
+                        + r.mean_batch[sl].astype(np.float64).sum())
+    gidx = np.arange(start, start + n_valid, dtype=np.int64)
+    offered = (jobs + r.overflow_dropped[sl] + r.abandoned[sl])
+    gfrac = np.where(offered > 0,
+                     r.n_in_slo[sl] / np.maximum(offered, 1), 1.0)
+    for vkey, ikey, vals in (
+            ("top_lat_val", "top_lat_idx", lat),
+            ("top_good_val", "top_good_idx",
+             r.grid.lam[sl].astype(np.float64) * gfrac)):
+        allv = np.concatenate([acc[vkey], vals])
+        alli = np.concatenate([acc[ikey], gidx])
+        order = np.lexsort((alli, -allv))[:k_top]
+        acc[vkey], acc[ikey] = allv[order], alli[order]

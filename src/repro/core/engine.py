@@ -94,12 +94,14 @@ from __future__ import annotations
 
 import os
 from collections import OrderedDict
-from typing import Any, Callable, Dict, Optional, Sequence, Union
+from typing import (Any, Callable, Dict, NamedTuple, Optional, Sequence,
+                    Union)
 
 import numpy as np
 
 __all__ = ["enable_host_devices", "point_keys", "resolve_shards",
-           "shard_kernel", "pad_tail", "dispatch", "exp_gaps",
+           "shard_kernel", "pad_tail", "dispatch", "dispatch_device",
+           "KernelPlan", "exp_gaps",
            "exp_offsets", "fifo_append", "fifo_pop_shift",
            "accept_window", "push_poisson_window",
            "push_poisson_window_loss", "renege_prefix", "orbit_draws",
@@ -198,8 +200,12 @@ def shard_kernel(vm: Callable, n_dev: int, *,
 
     mesh = Mesh(np.array(jax.devices()[:n_dev]), ("points",))
     spec = PartitionSpec("points")
+    # check_rep=False: the kernels are purely per-point vmaps (no
+    # collectives), so shard_map's replication-rule check adds nothing —
+    # and pallas_call has no replication rule at all, which used to make
+    # every fused-pallas dispatch crash under a multi-device mesh
     return jax.jit(shard_map(vm, mesh=mesh, in_specs=(spec, spec),
-                             out_specs=spec),
+                             out_specs=spec, check_rep=False),
                    donate_argnums=tuple(donate))
 
 
@@ -217,6 +223,45 @@ def pad_tail(a, pad: int):
     return jnp.concatenate([a, jnp.repeat(a[-1:], pad, axis=0)])
 
 
+class KernelPlan(NamedTuple):
+    """A fully-resolved kernel dispatch, pre-transfer: the compiled
+    (cached) kernel plus its packed device inputs.
+
+    The three sweep entry points build one of these (``sweep_plan``/
+    ``fleet_plan``/``gen_plan``) and immediately ``dispatch`` it; the
+    campaign driver builds one per chunk and routes it through
+    ``dispatch_device`` instead, keeping the outputs on device for the
+    streaming reduction.  ``sketch``/``has_loss`` record the output
+    schema the kernel was compiled with (whether ``hist_sums`` and the
+    loss counters are present)."""
+
+    kernel: Callable
+    params: Dict[str, Any]
+    keys: Any
+    n: int
+    n_dev: int
+    sketch: bool
+    has_loss: bool
+
+
+def dispatch_device(kernel: Callable, params: Dict[str, Any], keys,
+                    n: int, n_dev: int):
+    """``dispatch`` minus the host transfer: pads every input's point
+    axis to an ``n_dev``-divisible count (``pad_tail``) and runs the
+    (possibly shard_map-wrapped) kernel, returning the *device* output
+    arrays still at the padded point count, plus the pad width.
+
+    This is the streaming-campaign entry: the caller feeds the device
+    outputs straight into an on-device reduction (masking the ``pad``
+    duplicate lanes) so only O(bins + K) aggregates ever cross to the
+    host, instead of O(points × bins) per-point buffers."""
+    pad = (-n) % n_dev
+    if pad:
+        params = {k: pad_tail(v, pad) for k, v in params.items()}
+        keys = pad_tail(keys, pad)
+    return kernel(params, keys), pad
+
+
 def dispatch(kernel: Callable, params: Dict[str, Any], keys, n: int,
              n_dev: int) -> Dict[str, np.ndarray]:
     """Run one sharded kernel dispatch over ``n`` points.
@@ -226,11 +271,8 @@ def dispatch(kernel: Callable, params: Dict[str, Any], keys, n: int,
     returns host numpy outputs sliced back to ``n`` points."""
     import jax
 
-    pad = (-n) % n_dev
-    if pad:
-        params = {k: pad_tail(v, pad) for k, v in params.items()}
-        keys = pad_tail(keys, pad)
-    out = jax.device_get(kernel(params, keys))
+    out, pad = dispatch_device(kernel, params, keys, n, n_dev)
+    out = jax.device_get(out)
     if pad:
         out = {k: v[:n] for k, v in out.items()}
     return out
@@ -456,7 +498,13 @@ def queue_capacity(lam, alpha, tau0, b_max, wait_max=0.0, *,
         w_mu = lam64 * (np.asarray(alpha) * b_eff + np.asarray(tau0)
                         + np.asarray(wait_max))
         room_need = qm + w_mu + 10.0 * np.sqrt(w_mu + 1.0) + 32.0
-        need = np.where(qm > 0, np.minimum(need, room_need), need)
+        # the room bound caps the load estimate, but the buffer must
+        # still physically hold a full waiting room (the plan layer
+        # rejects q_cap < q_max) — a lightly-loaded q_max = 256 chunk
+        # would otherwise size below its own room
+        need = np.where(qm > 0,
+                        np.minimum(np.maximum(need, qm + 1.0), room_need),
+                        need)
     need = float(np.max(need))
     b_top = float(np.max(np.where(np.asarray(b_max) > 0, b_max, 0)))
     return int(min(ceil, max(floor, _pow2ceil(max(need, 2.0 * b_top)))))

@@ -48,6 +48,14 @@ bounded-memory streaming quantile sketch, ``superstep_backend=`` picks
 the fused pallas vs lax histogram path (bitwise identical), and
 ``metrics_tap=`` attaches a ``repro.core.metrics.MetricsTap`` that
 streams per-superstep telemetry without changing any output.
+
+Scale note: ``evaluate`` materializes one ``SimResult`` per point and
+holds every per-point histogram on the host, so it is the right tool
+up to ~10⁴–10⁵ points.  Beyond that, use ``repro.core.campaign
+.campaign`` — it streams the same kernels chunk-by-chunk through one
+compiled program and reduces on device (O(bins + K) host traffic per
+chunk), with checkpoint/resume; its merged accumulator is bitwise
+independent of the chunking.
 """
 from __future__ import annotations
 

@@ -512,6 +512,88 @@ def gen_caps(grid: GenGrid, *, q_cap: Optional[int] = None) -> dict:
     return caps
 
 
+def gen_plan(grid: GenGrid, *, n_steps: int = 4096,
+             warmup: Optional[int] = None, q_cap: Optional[int] = None,
+             a_cap: Optional[int] = None, r_cap: Optional[int] = None,
+             n_bins: int = 512,
+             seed: int = 0, key_offset: int = 0, hist_every: int = 1,
+             shard: ShardSpec = None, sketch: bool = False,
+             superstep_backend: Optional[str] = None,
+             metrics_tap=None) -> engine.KernelPlan:
+    """``sweep_plan``'s token-level analogue: everything ``gen_sweep``
+    does before the device dispatch, as an ``engine.KernelPlan``."""
+    if not isinstance(grid, GenGrid):
+        raise TypeError("gen_sweep needs a GenGrid "
+                        "(see GenGrid.from_points/from_product)")
+    if len(grid) == 0:
+        raise ValueError("empty grid")
+    n_steps = -(-int(n_steps) // _STEP_BUCKET) * _STEP_BUCKET
+    if warmup is None:
+        warmup = max(1, n_steps // 10)
+    if not 0 <= warmup < n_steps:
+        raise ValueError(f"warmup {warmup} must lie in [0, {n_steps})")
+    s_cap = int(grid.max_active.max())
+    has_loss = grid.has_loss
+    if key_offset:
+        from repro.core.sweep import _require_pinned_caps
+        _require_pinned_caps(
+            "gen", key_offset,
+            q_cap=q_cap is not None, a_cap=a_cap is not None,
+            r_cap=not has_loss or r_cap is not None)
+    if q_cap is None or a_cap is None or (has_loss and r_cap is None):
+        caps = gen_caps(grid, q_cap=q_cap)
+        q_cap = caps["q_cap"] if q_cap is None else q_cap
+        a_cap = caps["a_cap"] if a_cap is None else a_cap
+        if has_loss and r_cap is None:
+            r_cap = caps["r_cap"]
+    if not has_loss:
+        r_cap = 0
+    if s_cap > q_cap:
+        raise ValueError("max_active exceeds q_cap; raise q_cap")
+    if not set(np.unique(grid.discipline)) <= set(DISC_CODE.values()):
+        raise ValueError(f"unknown discipline code in grid "
+                         f"(valid: {DISC_CODE})")
+    if has_loss and np.any(grid.q_max > q_cap):
+        raise ValueError("q_max exceeds q_cap; raise q_cap")
+    if sketch:
+        n_bins = SKETCH_BINS
+    n = len(grid)
+    ss_backend = _ss.resolve_backend(superstep_backend,
+                                     n_bins=int(n_bins), n_points=n)
+    n_dev = engine.resolve_shards(shard, n)
+    if metrics_tap is not None:
+        # io_callback under shard_map is outside the pinned-jax
+        # contract; bitwise shard invariance makes this timing-only
+        n_dev = 1
+    kernel = _build_gen_kernel(int(n_steps), int(warmup), s_cap,
+                               int(q_cap), int(a_cap), int(n_bins),
+                               has_loss, int(r_cap), int(hist_every),
+                               ss_backend, bool(sketch), metrics_tap,
+                               n_dev)
+
+    params = {
+        "lam": jnp.asarray(grid.lam),
+        "alpha_decode": jnp.asarray(grid.alpha_decode),
+        "tau0_decode": jnp.asarray(grid.tau0_decode),
+        "alpha_prefill": jnp.asarray(grid.alpha_prefill),
+        "tau0_prefill": jnp.asarray(grid.tau0_prefill),
+        "prompt_len": jnp.asarray(grid.prompt_len),
+        "gen_tokens": jnp.asarray(grid.gen_tokens),
+        "max_active": jnp.asarray(grid.max_active),
+        "discipline": jnp.asarray(grid.discipline),
+    }
+    if has_loss:
+        params.update(
+            q_max=jnp.asarray(grid.q_max),
+            deadline=jnp.asarray(grid.deadline),
+            overflow=jnp.asarray(grid.overflow),
+            retry_rate=jnp.asarray(grid.retry_rate))
+    keys = engine.point_keys(seed, key_offset, n)
+    return engine.KernelPlan(kernel=kernel, params=params, keys=keys,
+                             n=n, n_dev=n_dev, sketch=bool(sketch),
+                             has_loss=has_loss)
+
+
 def gen_sweep(grid: GenGrid, *, n_steps: int = 4096,
               warmup: Optional[int] = None, q_cap: Optional[int] = None,
               a_cap: Optional[int] = None, r_cap: Optional[int] = None,
@@ -553,74 +635,15 @@ def gen_sweep(grid: GenGrid, *, n_steps: int = 4096,
     shard-count invariant.  ``sketch``/``superstep_backend``/
     ``metrics_tap`` behave as in ``repro.core.sweep.sweep``.
     """
-    if not isinstance(grid, GenGrid):
-        raise TypeError("gen_sweep needs a GenGrid "
-                        "(see GenGrid.from_points/from_product)")
-    if len(grid) == 0:
-        raise ValueError("empty grid")
-    n_steps = -(-int(n_steps) // _STEP_BUCKET) * _STEP_BUCKET
-    if warmup is None:
-        warmup = max(1, n_steps // 10)
-    if not 0 <= warmup < n_steps:
-        raise ValueError(f"warmup {warmup} must lie in [0, {n_steps})")
-    s_cap = int(grid.max_active.max())
-    has_loss = grid.has_loss
-    if key_offset:
-        from repro.core.sweep import _require_pinned_caps
-        _require_pinned_caps(
-            "gen", key_offset,
-            q_cap=q_cap is not None, a_cap=a_cap is not None,
-            r_cap=not has_loss or r_cap is not None)
-    if q_cap is None or a_cap is None or (has_loss and r_cap is None):
-        caps = gen_caps(grid, q_cap=q_cap)
-        q_cap = caps["q_cap"] if q_cap is None else q_cap
-        a_cap = caps["a_cap"] if a_cap is None else a_cap
-        if has_loss and r_cap is None:
-            r_cap = caps["r_cap"]
-    if not has_loss:
-        r_cap = 0
-    if s_cap > q_cap:
-        raise ValueError("max_active exceeds q_cap; raise q_cap")
-    if not set(np.unique(grid.discipline)) <= set(DISC_CODE.values()):
-        raise ValueError(f"unknown discipline code in grid "
-                         f"(valid: {DISC_CODE})")
-    if has_loss and np.any(grid.q_max > q_cap):
-        raise ValueError("q_max exceeds q_cap; raise q_cap")
-    if sketch:
-        n_bins = SKETCH_BINS
-    ss_backend = _ss.resolve_backend(superstep_backend,
-                                     n_bins=int(n_bins))
-    n = len(grid)
-    n_dev = engine.resolve_shards(shard, n)
-    if metrics_tap is not None:
-        # io_callback under shard_map is outside the pinned-jax
-        # contract; bitwise shard invariance makes this timing-only
-        n_dev = 1
-    kernel = _build_gen_kernel(int(n_steps), int(warmup), s_cap,
-                               int(q_cap), int(a_cap), int(n_bins),
-                               has_loss, int(r_cap), int(hist_every),
-                               ss_backend, bool(sketch), metrics_tap,
-                               n_dev)
-
-    params = {
-        "lam": jnp.asarray(grid.lam),
-        "alpha_decode": jnp.asarray(grid.alpha_decode),
-        "tau0_decode": jnp.asarray(grid.tau0_decode),
-        "alpha_prefill": jnp.asarray(grid.alpha_prefill),
-        "tau0_prefill": jnp.asarray(grid.tau0_prefill),
-        "prompt_len": jnp.asarray(grid.prompt_len),
-        "gen_tokens": jnp.asarray(grid.gen_tokens),
-        "max_active": jnp.asarray(grid.max_active),
-        "discipline": jnp.asarray(grid.discipline),
-    }
-    if has_loss:
-        params.update(
-            q_max=jnp.asarray(grid.q_max),
-            deadline=jnp.asarray(grid.deadline),
-            overflow=jnp.asarray(grid.overflow),
-            retry_rate=jnp.asarray(grid.retry_rate))
-    keys = engine.point_keys(seed, key_offset, n)
-    out = engine.dispatch(kernel, params, keys, n, n_dev)
+    plan = gen_plan(grid, n_steps=n_steps, warmup=warmup, q_cap=q_cap,
+                    a_cap=a_cap, r_cap=r_cap, n_bins=n_bins, seed=seed,
+                    key_offset=key_offset, hist_every=hist_every,
+                    shard=shard, sketch=sketch,
+                    superstep_backend=superstep_backend,
+                    metrics_tap=metrics_tap)
+    n, has_loss, sketch = plan.n, plan.has_loss, plan.sketch
+    out = engine.dispatch(plan.kernel, plan.params, plan.keys, n,
+                          plan.n_dev)
 
     n_jobs = np.asarray(out["n_jobs"])
     if has_loss:

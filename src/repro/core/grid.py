@@ -705,6 +705,15 @@ class SweepResult(_LossAccounting):
         per-bin sums only that mode accumulates)."""
         if self.hist_sums is not None:
             return sketch_edges()
+        if self.hist is None:
+            # e.g. a result rehydrated from a campaign row whose
+            # payload kept only the merged sketch — per-point bins
+            # were never materialized, so there is no edge array to
+            # reconstruct (and no KeyError-shaped surprise either)
+            raise ValueError(
+                "result carries no per-point histogram (sketch-only "
+                "campaign payload?); use the campaign accumulator's "
+                "merged counts/edges instead")
         return hist_edges(self.hist.shape[1])
 
     def __len__(self) -> int:
@@ -808,6 +817,11 @@ class GenResult(_LossAccounting):
     def hist_bin_edges(self) -> np.ndarray:
         if self.hist_sums is not None:
             return sketch_edges()
+        if self.hist is None:
+            raise ValueError(
+                "result carries no per-point histogram (sketch-only "
+                "campaign payload?); use the campaign accumulator's "
+                "merged counts/edges instead")
         return hist_edges(self.hist.shape[1])
 
     def __len__(self) -> int:

@@ -124,7 +124,10 @@ def hist_percentiles(hist: np.ndarray, qs: Iterable[float],
     in-bin interpolation (float32 bits are linear-in-value within a
     bin, so value-space interpolation is the natural choice).  Pass
     ``edges`` to reconstruct a non-default binning (e.g. the sketch's
-    — or use ``sketch_percentiles``)."""
+    — or use ``sketch_percentiles``).  A 1-D input — a campaign's
+    merged counts — is treated as one point (each returned array has
+    one entry)."""
+    hist = np.atleast_2d(np.asarray(hist))
     if edges is None:
         edges = hist_edges(hist.shape[1])
     cum = np.cumsum(hist, axis=1)
@@ -148,6 +151,7 @@ def sketch_percentiles(counts: np.ndarray,
     within ``SKETCH_REL_ERR`` (one bin width) of the exact in-range
     sample percentile — the sketch's pinned error contract (asserted
     by tests/test_hist_edges.py)."""
+    counts = np.atleast_2d(np.asarray(counts))
     if counts.shape[1] != SKETCH_BINS:
         raise ValueError(f"sketch counts must have {SKETCH_BINS} bins "
                          f"(got {counts.shape[1]})")

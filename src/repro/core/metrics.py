@@ -208,6 +208,27 @@ class MetricsTap:
             self._emit({"type": "summary", "label": self.label,
                         **clean})
 
+    def observe_chunk(self, **scalars) -> None:
+        """Append a ``chunk`` record — the campaign driver streams one
+        per completed chunk (index, points, pad waste, loss totals,
+        wall time) for mid-flight progress watching.
+
+        Campaign tap contract: a tapped dispatch forces single-shard
+        execution (see the class docstring), so the campaign does NOT
+        attach the tap to every chunk — ``campaign(metrics_tap=...,
+        tap_every=N)`` taps every N-th chunk's *dispatch* (full
+        per-superstep telemetry for those chunks) and leaves the rest
+        sharded; all chunks still stream this record.  Because a tap
+        is bitwise-neutral and the engine is shard-invariant, tapped
+        and untapped campaigns produce identical accumulators
+        (asserted by tests/test_campaign.py)."""
+        clean = {k: (None if isinstance(v, float) and not
+                     math.isfinite(v) else v)
+                 for k, v in scalars.items()}
+        with self._lock:
+            self._emit({"type": "chunk", "label": self.label,
+                        **clean})
+
     def summary(self) -> dict:
         """Aggregate view so far (thread-safe snapshot)."""
         with self._lock:

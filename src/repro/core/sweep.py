@@ -428,6 +428,89 @@ def sweep_caps(grid: SweepGrid, *, q_cap: Optional[int] = None) -> dict:
     return caps
 
 
+def sweep_plan(grid: SweepGrid, *, n_batches: int = 3000,
+               warmup: Optional[int] = None, q_cap: Optional[int] = None,
+               a_cap: Optional[int] = None, r_cap: Optional[int] = None,
+               n_bins: int = 512, seed: int = 0, key_offset: int = 0,
+               shard: ShardSpec = None, sketch: bool = False,
+               superstep_backend: Optional[str] = None,
+               metrics_tap=None) -> engine.KernelPlan:
+    """Everything ``sweep`` does before the device dispatch: validate
+    the grid, derive (or check) the compile-time caps, fetch the cached
+    compiled kernel, and pack params/keys.  Same signature as ``sweep``;
+    returns an ``engine.KernelPlan``.  ``sweep`` dispatches the plan and
+    post-processes to a ``SweepResult``; the campaign driver
+    (``repro.core.campaign``) dispatches it through
+    ``engine.dispatch_device`` and reduces on device instead."""
+    if len(grid) == 0:
+        raise ValueError("empty grid")
+    if warmup is not None and not 0 <= warmup < int(n_batches):
+        raise ValueError(f"warmup {warmup} must lie in [0, {n_batches})")
+    # the kernel scatters its histogram once per _REBASE_EVERY steps
+    n_batches = -(-int(n_batches) // _REBASE_EVERY) * _REBASE_EVERY
+    if warmup is None:
+        warmup = max(1, n_batches // 10)
+    has_timeout = bool(np.any(grid.wait_max > 0.0))
+    all_det = bool(np.all(grid.dist == DIST_CODE["det"]))
+    has_loss = grid.has_loss
+    if key_offset:
+        # a_cap is only grid-derived on the window-capacity path; the
+        # a_cap = q_cap fallback follows from a pinned q_cap
+        _require_pinned_caps(
+            "sweep", key_offset,
+            q_cap=q_cap is not None,
+            a_cap=(a_cap is not None
+                   or not (all_det and not has_timeout
+                           and not np.any(grid.b_max == 0))),
+            r_cap=not has_loss or r_cap is not None)
+    if q_cap is None or a_cap is None or (has_loss and r_cap is None):
+        caps = sweep_caps(grid, q_cap=q_cap)
+        q_cap = caps["q_cap"] if q_cap is None else q_cap
+        a_cap = caps["a_cap"] if a_cap is None else a_cap
+        if has_loss and r_cap is None:
+            r_cap = caps["r_cap"]
+    if not has_loss:
+        r_cap = 0
+    if a_cap > q_cap:
+        raise ValueError("a_cap must be <= q_cap (ring-buffer invariant)")
+    if np.any(grid.b_max > q_cap):
+        raise ValueError("b_max exceeds q_cap; raise q_cap")
+    if has_loss and np.any(grid.q_max > q_cap):
+        raise ValueError("q_max exceeds q_cap; raise q_cap")
+    if sketch:
+        n_bins = SKETCH_BINS
+    n = len(grid)
+    ss_backend = _ss.resolve_backend(superstep_backend,
+                                     n_bins=int(n_bins), n_points=n)
+    n_dev = engine.resolve_shards(shard, n)
+    if metrics_tap is not None:
+        # io_callback under shard_map is outside the pinned-jax
+        # contract; bitwise shard invariance makes this timing-only
+        n_dev = 1
+    kernel = _build_kernel(int(n_batches), int(warmup), int(q_cap),
+                           int(a_cap), int(n_bins), has_timeout, all_det,
+                           has_loss, int(r_cap), ss_backend,
+                           bool(sketch), metrics_tap, n_dev)
+
+    params = {
+        "lam": jnp.asarray(grid.lam), "alpha": jnp.asarray(grid.alpha),
+        "tau0": jnp.asarray(grid.tau0), "b_max": jnp.asarray(grid.b_max),
+        "dist": jnp.asarray(grid.dist), "cv": jnp.asarray(grid.cv),
+        "wait_max": jnp.asarray(grid.wait_max),
+        "wait_target": jnp.asarray(grid.wait_target),
+    }
+    if has_loss:
+        params.update(
+            q_max=jnp.asarray(grid.q_max),
+            deadline=jnp.asarray(grid.deadline),
+            overflow=jnp.asarray(grid.overflow),
+            retry_rate=jnp.asarray(grid.retry_rate))
+    keys = engine.point_keys(seed, key_offset, n)
+    return engine.KernelPlan(kernel=kernel, params=params, keys=keys,
+                             n=n, n_dev=n_dev, sketch=bool(sketch),
+                             has_loss=has_loss)
+
+
 def sweep(grid: SweepGrid, *, n_batches: int = 3000,
           warmup: Optional[int] = None, q_cap: Optional[int] = None,
           a_cap: Optional[int] = None, r_cap: Optional[int] = None,
@@ -480,71 +563,15 @@ def sweep(grid: SweepGrid, *, n_batches: int = 3000,
     ``io_callback`` — numerics are untouched, but the dispatch runs
     single-shard.
     """
-    if len(grid) == 0:
-        raise ValueError("empty grid")
-    if warmup is not None and not 0 <= warmup < int(n_batches):
-        raise ValueError(f"warmup {warmup} must lie in [0, {n_batches})")
-    # the kernel scatters its histogram once per _REBASE_EVERY steps
-    n_batches = -(-int(n_batches) // _REBASE_EVERY) * _REBASE_EVERY
-    if warmup is None:
-        warmup = max(1, n_batches // 10)
-    has_timeout = bool(np.any(grid.wait_max > 0.0))
-    all_det = bool(np.all(grid.dist == DIST_CODE["det"]))
-    has_loss = grid.has_loss
-    if key_offset:
-        # a_cap is only grid-derived on the window-capacity path; the
-        # a_cap = q_cap fallback follows from a pinned q_cap
-        _require_pinned_caps(
-            "sweep", key_offset,
-            q_cap=q_cap is not None,
-            a_cap=(a_cap is not None
-                   or not (all_det and not has_timeout
-                           and not np.any(grid.b_max == 0))),
-            r_cap=not has_loss or r_cap is not None)
-    if q_cap is None or a_cap is None or (has_loss and r_cap is None):
-        caps = sweep_caps(grid, q_cap=q_cap)
-        q_cap = caps["q_cap"] if q_cap is None else q_cap
-        a_cap = caps["a_cap"] if a_cap is None else a_cap
-        if has_loss and r_cap is None:
-            r_cap = caps["r_cap"]
-    if not has_loss:
-        r_cap = 0
-    if a_cap > q_cap:
-        raise ValueError("a_cap must be <= q_cap (ring-buffer invariant)")
-    if np.any(grid.b_max > q_cap):
-        raise ValueError("b_max exceeds q_cap; raise q_cap")
-    if has_loss and np.any(grid.q_max > q_cap):
-        raise ValueError("q_max exceeds q_cap; raise q_cap")
-    if sketch:
-        n_bins = SKETCH_BINS
-    ss_backend = _ss.resolve_backend(superstep_backend,
-                                     n_bins=int(n_bins))
-    n = len(grid)
-    n_dev = engine.resolve_shards(shard, n)
-    if metrics_tap is not None:
-        # io_callback under shard_map is outside the pinned-jax
-        # contract; bitwise shard invariance makes this timing-only
-        n_dev = 1
-    kernel = _build_kernel(int(n_batches), int(warmup), int(q_cap),
-                           int(a_cap), int(n_bins), has_timeout, all_det,
-                           has_loss, int(r_cap), ss_backend,
-                           bool(sketch), metrics_tap, n_dev)
-
-    params = {
-        "lam": jnp.asarray(grid.lam), "alpha": jnp.asarray(grid.alpha),
-        "tau0": jnp.asarray(grid.tau0), "b_max": jnp.asarray(grid.b_max),
-        "dist": jnp.asarray(grid.dist), "cv": jnp.asarray(grid.cv),
-        "wait_max": jnp.asarray(grid.wait_max),
-        "wait_target": jnp.asarray(grid.wait_target),
-    }
-    if has_loss:
-        params.update(
-            q_max=jnp.asarray(grid.q_max),
-            deadline=jnp.asarray(grid.deadline),
-            overflow=jnp.asarray(grid.overflow),
-            retry_rate=jnp.asarray(grid.retry_rate))
-    keys = engine.point_keys(seed, key_offset, n)
-    out = engine.dispatch(kernel, params, keys, n, n_dev)
+    plan = sweep_plan(grid, n_batches=n_batches, warmup=warmup,
+                      q_cap=q_cap, a_cap=a_cap, r_cap=r_cap,
+                      n_bins=n_bins, seed=seed, key_offset=key_offset,
+                      shard=shard, sketch=sketch,
+                      superstep_backend=superstep_backend,
+                      metrics_tap=metrics_tap)
+    n, has_loss, sketch = plan.n, plan.has_loss, plan.sketch
+    out = engine.dispatch(plan.kernel, plan.params, plan.keys, n,
+                          plan.n_dev)
 
     n_jobs = np.asarray(out["n_jobs"])
     if has_loss:
@@ -1120,53 +1147,16 @@ def fleet_caps(grid: FleetGrid, *, q_cap: Optional[int] = None) -> dict:
     return caps
 
 
-def fleet_sweep(grid: FleetGrid, *, n_steps: int = 6000,
-                warmup: Optional[int] = None, q_cap: Optional[int] = None,
-                a_cap: int = 32, r_cap: Optional[int] = None,
-                n_bins: int = 512, seed: int = 0,
-                key_offset: int = 0, hist_every: int = 1,
-                shard: ShardSpec = None, sketch: bool = False,
-                superstep_backend: Optional[str] = None,
-                metrics_tap=None) -> FleetResult:
-    """Simulate every fleet point for ``n_steps`` replica decisions in one
-    jit+vmap device dispatch.
-
-    ``n_steps`` counts fleet-wide *events*: at moderate/high load nearly
-    every event is a service completion that immediately starts the next
-    batch, so the fleet processes roughly ``n_steps`` batches in total —
-    size it ``k×`` larger to give each replica the run length a
-    single-server ``sweep`` would get.  (Idle→busy transitions and
-    arrival windows denser than ``a_cap`` consume extra events, so
-    low-load and very-high-load points complete somewhat fewer batches.)
-    ``q_cap`` bounds each replica's waiting room; overflowing it is the
-    one true capacity loss, counted in ``buffer_dropped`` (a correct
-    run has ``buffer_dropped == 0``); the default (``None``) sizes it
-    adaptively from the grid's per-replica load
-    (``engine.queue_capacity`` at rate
-    λ/k).  ``a_cap`` only tiles the arrival routing — a denser window
-    defers its event a step, exact but slower, so size ``a_cap`` near
-    the expected batch size.  ``hist_every = N > 1`` records a 1-in-N
-    batch subsample in the latency histogram (the scatter-add is the
-    costliest op on CPU); means and counters always use every job, only
-    the percentile sample thins.  ``shard`` picks the device-mesh width
-    for the shard_map dispatch (``None`` → all visible devices — on
-    CPU, set ``XLA_FLAGS=--xla_force_host_platform_device_count=``
-    ``<cores>`` before the first JAX call; ``False``/1 → single device;
-    an int → that many shards); per-point keys are global, so sharding
-    never changes a point's result.
-
-    Grids with loss regimes (``q_max``/``deadline``/``retry_rate``)
-    compile the loss-capable kernel variant; ``q_max`` bounds each
-    replica's waiting room and ``r_cap`` the shared retry orbit
-    (defaults via ``engine.orbit_capacity``).  A deadline forces
-    ``pop_cap = q_cap`` (the renege scan must see the whole queue).
-    Loss-free grids trace the identical pre-admission-control kernel.
-
-    Split dispatches (``key_offset != 0``) must pin the grid-derived
-    caps — pass ``**fleet_caps(full_grid)`` — or this raises.
-    ``sketch``/``superstep_backend``/``metrics_tap`` behave as in
-    ``sweep``.
-    """
+def fleet_plan(grid: FleetGrid, *, n_steps: int = 6000,
+               warmup: Optional[int] = None, q_cap: Optional[int] = None,
+               a_cap: int = 32, r_cap: Optional[int] = None,
+               n_bins: int = 512, seed: int = 0,
+               key_offset: int = 0, hist_every: int = 1,
+               shard: ShardSpec = None, sketch: bool = False,
+               superstep_backend: Optional[str] = None,
+               metrics_tap=None) -> engine.KernelPlan:
+    """``sweep_plan``'s fleet analogue: everything ``fleet_sweep`` does
+    before the device dispatch, returned as an ``engine.KernelPlan``."""
     if not isinstance(grid, FleetGrid):
         raise TypeError("fleet_sweep needs a FleetGrid "
                         "(see FleetGrid.from_points/from_product)")
@@ -1215,9 +1205,9 @@ def fleet_sweep(grid: FleetGrid, *, n_steps: int = 6000,
     has_jsq = bool(np.any(grid.routing == ROUTE_CODE["jsq"]))
     if sketch:
         n_bins = SKETCH_BINS
-    ss_backend = _ss.resolve_backend(superstep_backend,
-                                     n_bins=int(n_bins))
     n = len(grid)
+    ss_backend = _ss.resolve_backend(superstep_backend,
+                                     n_bins=int(n_bins), n_points=n)
     n_dev = engine.resolve_shards(shard, n)
     if metrics_tap is not None:
         # io_callback under shard_map is outside the pinned-jax
@@ -1245,7 +1235,67 @@ def fleet_sweep(grid: FleetGrid, *, n_steps: int = 6000,
             overflow=jnp.asarray(grid.overflow),
             retry_rate=jnp.asarray(grid.retry_rate))
     keys = engine.point_keys(seed, key_offset, n)
-    out = engine.dispatch(kernel, params, keys, n, n_dev)
+    return engine.KernelPlan(kernel=kernel, params=params, keys=keys,
+                             n=n, n_dev=n_dev, sketch=bool(sketch),
+                             has_loss=has_loss)
+
+
+def fleet_sweep(grid: FleetGrid, *, n_steps: int = 6000,
+                warmup: Optional[int] = None, q_cap: Optional[int] = None,
+                a_cap: int = 32, r_cap: Optional[int] = None,
+                n_bins: int = 512, seed: int = 0,
+                key_offset: int = 0, hist_every: int = 1,
+                shard: ShardSpec = None, sketch: bool = False,
+                superstep_backend: Optional[str] = None,
+                metrics_tap=None) -> FleetResult:
+    """Simulate every fleet point for ``n_steps`` replica decisions in one
+    jit+vmap device dispatch.
+
+    ``n_steps`` counts fleet-wide *events*: at moderate/high load nearly
+    every event is a service completion that immediately starts the next
+    batch, so the fleet processes roughly ``n_steps`` batches in total —
+    size it ``k×`` larger to give each replica the run length a
+    single-server ``sweep`` would get.  (Idle→busy transitions and
+    arrival windows denser than ``a_cap`` consume extra events, so
+    low-load and very-high-load points complete somewhat fewer batches.)
+    ``q_cap`` bounds each replica's waiting room; overflowing it is the
+    one true capacity loss, counted in ``buffer_dropped`` (a correct
+    run has ``buffer_dropped == 0``); the default (``None``) sizes it
+    adaptively from the grid's per-replica load
+    (``engine.queue_capacity`` at rate
+    λ/k).  ``a_cap`` only tiles the arrival routing — a denser window
+    defers its event a step, exact but slower, so size ``a_cap`` near
+    the expected batch size.  ``hist_every = N > 1`` records a 1-in-N
+    batch subsample in the latency histogram (the scatter-add is the
+    costliest op on CPU); means and counters always use every job, only
+    the percentile sample thins.  ``shard`` picks the device-mesh width
+    for the shard_map dispatch (``None`` → all visible devices — on
+    CPU, set ``XLA_FLAGS=--xla_force_host_platform_device_count=``
+    ``<cores>`` before the first JAX call; ``False``/1 → single device;
+    an int → that many shards); per-point keys are global, so sharding
+    never changes a point's result.
+
+    Grids with loss regimes (``q_max``/``deadline``/``retry_rate``)
+    compile the loss-capable kernel variant; ``q_max`` bounds each
+    replica's waiting room and ``r_cap`` the shared retry orbit
+    (defaults via ``engine.orbit_capacity``).  A deadline forces
+    ``pop_cap = q_cap`` (the renege scan must see the whole queue).
+    Loss-free grids trace the identical pre-admission-control kernel.
+
+    Split dispatches (``key_offset != 0``) must pin the grid-derived
+    caps — pass ``**fleet_caps(full_grid)`` — or this raises.
+    ``sketch``/``superstep_backend``/``metrics_tap`` behave as in
+    ``sweep``.
+    """
+    plan = fleet_plan(grid, n_steps=n_steps, warmup=warmup, q_cap=q_cap,
+                      a_cap=a_cap, r_cap=r_cap, n_bins=n_bins, seed=seed,
+                      key_offset=key_offset, hist_every=hist_every,
+                      shard=shard, sketch=sketch,
+                      superstep_backend=superstep_backend,
+                      metrics_tap=metrics_tap)
+    n, has_loss, sketch = plan.n, plan.has_loss, plan.sketch
+    out = engine.dispatch(plan.kernel, plan.params, plan.keys, n,
+                          plan.n_dev)
 
     n_jobs = np.asarray(out["n_jobs"])
     if has_loss:

@@ -57,14 +57,24 @@ ENV_VAR = "REPRO_SUPERSTEP_BACKEND"
 # crossover sits well above SKETCH_BINS = 64, below the full 512)
 PALLAS_CPU_MAX_BINS = 128
 
+# on CPU the pallas path runs in interpret mode, whose per-lane
+# overhead under vmap grows with the point axis far faster than the
+# lax scatter's — a 4096-point sketch dispatch that takes ~10 s on lax
+# runs for minutes interpreted.  "auto" therefore only picks pallas
+# for narrow dispatches; campaign-width chunks fall back to lax
+# (bitwise-identical counts either way)
+PALLAS_CPU_MAX_POINTS = 1024
 
-def resolve_backend(backend: Optional[str], *, n_bins: int) -> str:
+
+def resolve_backend(backend: Optional[str], *, n_bins: int,
+                    n_points: Optional[int] = None) -> str:
     """Resolve a backend request to ``"lax"`` or ``"pallas"``.
 
     ``None``/``"auto"`` consults ``REPRO_SUPERSTEP_BACKEND``, then
-    picks by platform and bin count (see module docstring).  The
-    result is what the kernel builders bake in — and key their cache
-    entries on."""
+    picks by platform, bin count, and (when the caller passes its
+    dispatch width) point count — see module docstring.  The result is
+    what the kernel builders bake in — and key their cache entries
+    on."""
     b = "auto" if backend is None else str(backend)
     if b == "auto":
         b = os.environ.get(ENV_VAR, "auto")
@@ -73,6 +83,8 @@ def resolve_backend(backend: Optional[str], *, n_bins: int) -> str:
         plat = jax.default_backend()
         if plat in ("tpu", "gpu"):
             b = "pallas"
+        elif n_points is not None and n_points > PALLAS_CPU_MAX_POINTS:
+            b = "lax"
         else:
             b = "pallas" if n_bins <= PALLAS_CPU_MAX_BINS else "lax"
     if b not in ("lax", "pallas"):

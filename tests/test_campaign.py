@@ -1,0 +1,243 @@
+"""Campaign driver (repro.core.campaign): chunk-boundary bitwise
+determinism on all three kernels, kill-and-resume parity, metrics-tap
+neutrality, pad-waste accounting, bounded host memory, and the
+sketch-only-payload guards in grid/hist/benchmarks.run.
+
+The determinism tests are the contract the module docstring states:
+the campaign accumulator is a sequential left fold over points in
+global index order, so its bytes cannot depend on where the chunk
+boundaries fall — chunked and one-dispatch runs must produce EQUAL
+fingerprints, not merely close aggregates.
+"""
+import dataclasses
+import json
+
+import numpy as np
+import pytest
+
+from repro.core.analytic import LinearServiceModel
+from repro.core.campaign import campaign, plan_chunks
+from repro.core.engine import queue_capacity
+from repro.core.grid import FleetGrid, GenGrid, SweepGrid
+from repro.core.hist import hist_percentiles
+
+V100 = LinearServiceModel(alpha=0.1438, tau0=1.8874)
+
+N_BATCHES = 12
+
+
+def _loss_grid(n=48):
+    """A structured grid exercising every loss axis (finite waiting
+    rooms, deadlines, retry orbits) plus both service families, so the
+    fold's has_loss branch and goodput arithmetic are all under test."""
+    i = np.arange(n)
+    b = np.where(i % 2 == 0, 4, 16).astype(np.int32)
+    fr = np.linspace(0.3, 0.9, n, dtype=np.float32)
+    lam = fr * b / (V100.alpha * b + V100.tau0)
+    return SweepGrid.from_points(
+        lam, V100.alpha, V100.tau0, b_max=b,
+        dist=np.where(i % 2 == 0, 0, 1).astype(np.int32),
+        q_max=np.where(i % 3 == 0, 0, 16).astype(np.int32),
+        deadline=np.where(i % 4 == 0, 50.0, 0.0).astype(np.float32),
+        retry_rate=np.where(i % 5 == 0, 0.25, 0.0).astype(np.float32))
+
+
+@pytest.fixture(scope="module")
+def sweep_pair():
+    g = _loss_grid(48)
+    chunked = campaign(g, chunk_size=16, n_batches=N_BATCHES, seed=3)
+    whole = campaign(g, chunk_size=48, n_batches=N_BATCHES, seed=3)
+    return chunked, whole
+
+
+class TestChunkDeterminism:
+    def test_sweep_chunked_equals_whole(self, sweep_pair):
+        chunked, whole = sweep_pair
+        assert chunked.n_chunks == 3 and whole.n_chunks == 1
+        assert chunked.fingerprint() == whole.fingerprint()
+        assert chunked.totals == whole.totals
+        assert chunked.totals["jobs"] > 0
+        # the loss axes actually fired (otherwise the has_loss branch
+        # of the fold went untested)
+        assert chunked.totals["overflow_dropped"] > 0
+        assert chunked.totals["buffer_dropped"] == 0
+
+    def test_top_k_and_percentiles_chunk_invariant(self, sweep_pair):
+        chunked, whole = sweep_pair
+        assert chunked.top_latency == whole.top_latency
+        assert chunked.top_goodput == whole.top_goodput
+        p = chunked.percentiles((50, 95, 99))
+        assert p == whole.percentiles((50, 95, 99))
+        assert np.all(np.isfinite(p)) and p[0] <= p[1] <= p[2]
+
+    def test_fleet_chunked_equals_whole(self):
+        k = np.tile([1, 2, 4], 8).astype(np.int32)
+        lam = np.linspace(0.5, 2.0, 24, dtype=np.float32) * k
+        g = FleetGrid.from_points(lam, V100.alpha, V100.tau0, k=k,
+                                  routing="jsq", b_max=8,
+                                  q_max=np.where(np.arange(24) % 2 == 0,
+                                                 0, 12).astype(np.int32))
+        a = campaign(g, chunk_size=8, n_steps=48, seed=7)
+        b = campaign(g, chunk_size=24, n_steps=48, seed=7)
+        assert a.kind == "fleet" and a.n_chunks == 3
+        assert a.fingerprint() == b.fingerprint()
+
+    def test_gen_chunked_equals_whole(self):
+        lam = np.linspace(0.05, 0.4, 18, dtype=np.float32)
+        g = GenGrid.from_points(
+            lam, 0.02, 0.5, 0.01, 2.0, prompt_len=32, gen_tokens=8,
+            max_active=16,
+            q_max=np.where(np.arange(18) % 3 == 0, 0, 8).astype(np.int32))
+        a = campaign(g, chunk_size=6, n_steps=64, seed=9)
+        b = campaign(g, chunk_size=18, n_steps=64, seed=9)
+        assert a.kind == "gen" and a.n_chunks == 3
+        assert a.fingerprint() == b.fingerprint()
+
+    def test_sketch_chunked_equals_whole(self):
+        g = _loss_grid(32)
+        a = campaign(g, chunk_size=16, sketch=True,
+                     n_batches=N_BATCHES, seed=3)
+        b = campaign(g, chunk_size=32, sketch=True,
+                     n_batches=N_BATCHES, seed=3)
+        assert a.fingerprint() == b.fingerprint()
+        assert np.isfinite(a.percentiles((95,))[0])
+
+
+class TestResume:
+    def test_kill_and_resume_matches_uninterrupted(self, tmp_path):
+        g = _loss_grid(48)
+        full = campaign(g, chunk_size=16, n_batches=N_BATCHES, seed=3)
+        part = campaign(g, chunk_size=16, n_batches=N_BATCHES, seed=3,
+                        out_dir=tmp_path / "c", checkpoint_every=1,
+                        stop_after_chunks=2)
+        assert not part.completed
+        res = campaign(g, chunk_size=16, n_batches=N_BATCHES, seed=3,
+                       out_dir=tmp_path / "c", resume=True,
+                       checkpoint_every=1)
+        assert res.completed
+        assert res.fingerprint() == full.fingerprint()
+        lines = (tmp_path / "c" / "chunks.jsonl").read_text().splitlines()
+        rows = [json.loads(l) for l in lines]
+        assert [r["chunk"] for r in rows] == [0, 1, 2]
+        assert sum(r["points"] for r in rows) == 48
+
+    def test_resume_rejects_changed_config(self, tmp_path):
+        g = _loss_grid(32)
+        campaign(g, chunk_size=16, n_batches=N_BATCHES, seed=3,
+                 out_dir=tmp_path / "c", stop_after_chunks=1)
+        with pytest.raises(ValueError, match="does not match"):
+            campaign(g, chunk_size=16, n_batches=N_BATCHES + 1, seed=3,
+                     out_dir=tmp_path / "c", resume=True)
+
+    def test_resume_rejects_changed_grid(self, tmp_path):
+        campaign(_loss_grid(32), chunk_size=16, n_batches=N_BATCHES,
+                 seed=3, out_dir=tmp_path / "c", stop_after_chunks=1)
+        g2 = _loss_grid(32)
+        g2.lam[0] += 0.125
+        with pytest.raises(ValueError, match="does not match"):
+            campaign(g2, chunk_size=16, n_batches=N_BATCHES, seed=3,
+                     out_dir=tmp_path / "c", resume=True)
+
+
+class TestMetricsTap:
+    def test_tapped_bitwise_equals_untapped(self, tmp_path):
+        from repro.core.metrics import MetricsTap
+        g = _loss_grid(32)
+        plain = campaign(g, chunk_size=16, n_batches=N_BATCHES, seed=3)
+        jsonl = tmp_path / "m.jsonl"
+        with MetricsTap(jsonl, label="camp") as tap:
+            tapped = campaign(g, chunk_size=16, n_batches=N_BATCHES,
+                              seed=3, metrics_tap=tap, tap_every=2)
+        assert tapped.fingerprint() == plain.fingerprint()
+        assert tapped.tapped_chunks == 1          # chunk 0 of {0, 1}
+        recs = [json.loads(l) for l in jsonl.read_text().splitlines()]
+        kinds = [r["type"] for r in recs]
+        # every chunk streams one summary record; only the sampled
+        # chunk also streams per-superstep records
+        assert kinds.count("chunk") == tapped.n_chunks
+        assert kinds.count("superstep") > 0
+
+
+class TestPadAccounting:
+    def test_plan_chunks_prefers_divisors(self):
+        assert plan_chunks(96, 40) == (32, 3, 0)
+        assert plan_chunks(64, 48) == (32, 2, 0)
+        # prime n: no divisor in range — keep the request, report waste
+        assert plan_chunks(29, 8) == (8, 4, 3)
+
+    def test_padded_rows_sum_to_plan(self):
+        g = _loss_grid(29)
+        r = campaign(g, chunk_size=8, n_batches=N_BATCHES, seed=3)
+        assert r.padded_points == 3
+        assert sum(row["padded"] for row in r.rows) == 3
+        assert r.totals["points"] == 29
+
+
+class TestHostMemory:
+    def test_pipelined_peak_is_size_independent(self):
+        g_small, g_big = _loss_grid(32), _loss_grid(96)
+        a = campaign(g_small, chunk_size=16, n_batches=N_BATCHES, seed=3)
+        b = campaign(g_big, chunk_size=16, n_batches=N_BATCHES, seed=3)
+        assert b.peak_host_result_bytes <= a.peak_host_result_bytes * 1.5
+        s = campaign(g_big, chunk_size=16, n_batches=N_BATCHES, seed=3,
+                     mode="serial")
+        # serial materializes O(points × bins) per chunk on the host
+        assert s.peak_host_result_bytes > 10 * b.peak_host_result_bytes
+
+    def test_serial_runs_lightly_loaded_finite_room(self):
+        # regression: per-chunk adaptive caps once sized BELOW q_max on
+        # low-load chunks, which the plan layer rejects
+        lam = np.full(16, 0.3, dtype=np.float32)
+        g = SweepGrid.from_points(lam, V100.alpha, V100.tau0, b_max=4,
+                                  q_max=256)
+        r = campaign(g, chunk_size=8, n_batches=N_BATCHES, seed=3,
+                     mode="serial")
+        assert r.totals["points"] == 16
+
+
+class TestCapSizing:
+    def test_queue_capacity_holds_full_waiting_room(self):
+        # the room bound may cap the load estimate but never undercut
+        # the room itself (sweep_plan rejects q_cap < q_max)
+        assert queue_capacity(0.3, V100.alpha, V100.tau0, 4,
+                              q_max=256) >= 257
+
+    def test_queue_capacity_room_bound_still_caps(self):
+        # a super-critical point with a small waiting room must NOT be
+        # sized for its (unbounded) load estimate
+        assert queue_capacity(50.0, V100.alpha, V100.tau0, 2,
+                              q_max=8) <= 1024
+
+
+class TestSketchOnlyPayloadGuards:
+    def test_result_without_hist_raises_informative(self):
+        from repro.core.sweep import sweep
+        g = SweepGrid.from_points(np.float32([1.0, 2.0]), V100.alpha,
+                                  V100.tau0, b_max=8)
+        r = sweep(g, n_batches=4)
+        bare = dataclasses.replace(r, hist=None, hist_sums=None)
+        with pytest.raises(ValueError, match="sketch-only"):
+            bare.hist_bin_edges
+
+    def test_hist_percentiles_accepts_merged_1d(self, sweep_pair):
+        chunked, _ = sweep_pair
+        one_d = hist_percentiles(chunked.hist, (50.0,))
+        two_d = hist_percentiles(chunked.hist[None, :], (50.0,))
+        assert one_d[0].shape == (1,)
+        assert one_d[0][0] == two_d[0][0]
+
+    def test_row_rates_tolerates_structural_payloads(self):
+        from benchmarks.run import _row_rates
+        doc = {"rows": [
+            {"name": "campaign/chunk_witness",
+             "payload": {"fingerprint_chunked": "ab12",
+                         "bitwise_equal": True}},
+            {"name": "campaign/pipelined_speedup",
+             "payload": {"speedup": "n/a"}},
+            {"name": "campaign/million_point", "points_per_sec": 582.0,
+             "payload": {}},
+            "not-a-dict",
+        ]}
+        rates = _row_rates(doc)
+        assert rates == {"campaign/million_point":
+                         {"points_per_sec": 582.0}}
