@@ -1,0 +1,142 @@
+"""Adaptive-precision campaign benchmark: convergence-aware cycle
+allocation vs the fixed-length baseline.
+
+The fixed campaign must run EVERY point long enough for its
+worst-converging point (the binding cell of the max CI half-width);
+``mode="adaptive"`` runs a short pilot, reads each point's
+regenerative CI, and re-allocates — most of a production-shaped grid
+(deterministic service, moderate load) converges at the pilot length,
+while the handful of high-variance cells (the exp-service stress
+slice here) climb the pow2 tier ladder toward the fixed length.
+
+Rows (full mode; ``--quick`` halves the λ axis, same structure):
+
+- ``adaptive/fixed_baseline``: the fixed pipelined campaign at
+  ``N_FIXED`` cycles/point — its achieved ``max_ci_halfwidth`` is the
+  precision target the adaptive run must match.
+- ``adaptive/pilot_refine``: ``mode="adaptive"`` on the same grid,
+  ``target_ci`` = the baseline's achieved max half-width, with the
+  allocation-tier census from ``point_stats``.
+- ``adaptive/job_savings``: the headline gate — simulated-job ratio
+  fixed/adaptive at matched precision (achieved adaptive max CI
+  within ``MATCH_TOL`` of the target).  ``--compare`` asserts
+  ``job_savings >= 3`` and ``matched`` (see ``run.PAYLOAD_GATES``);
+  both runs must also report ``buffer_dropped == 0`` (capacity
+  witness — drops would mean the precision comparison ran partial
+  workloads).
+- ``adaptive/fixed_alloc_witness``: with an unreachable target every
+  point stays at the pilot allocation, the refine schedule degenerates
+  to contiguous global-order chunks, and the campaign accumulator must
+  be BITWISE equal to a plain pipelined campaign at the pilot length —
+  at two different chunk sizes (the chunked-vs-whole witness carried
+  over to adaptive mode).
+"""
+from __future__ import annotations
+
+import functools
+from typing import List
+
+import numpy as np
+
+from benchmarks.common import P4, Row, V100, enable_host_devices, timed
+
+enable_host_devices()          # before any JAX backend initialization
+
+N_FIXED = 2048                 # fixed-campaign cycles per point
+PILOT = 128                    # adaptive pilot cycles (4 blocks)
+SAFETY = 6.0                   # pads the pilot's variance-of-variance
+MATCH_TOL = 1.10               # achieved CI within 10% of the target
+SEED = 7
+
+
+def _stress_grid(n_fracs: int):
+    """Production-shaped surface: a det-service λ-fraction sweep over
+    {V100, P4} × b_max (the cheap, low-variance bulk) plus one
+    exp-service stress slice (V100, b_max=8) whose near-saturation
+    cells dominate the variance and set the campaign's max CI."""
+    from repro.core.grid import SweepGrid
+
+    fracs = np.linspace(0.05, 0.60, n_fracs)
+    parts = []
+    for model in (V100, P4):
+        for b in (2, 4, 8, 16):
+            lam = fracs * b / (model.alpha * b + model.tau0)
+            parts.append(SweepGrid.from_product(
+                lam, [model.alpha], [model.tau0], b_maxes=[b],
+                dists=["det"]))
+    lam = fracs * 8 / (V100.alpha * 8 + V100.tau0)
+    parts.append(SweepGrid.from_product(
+        lam, [V100.alpha], [V100.tau0], b_maxes=[8], dists=["exp"]))
+    return functools.reduce(lambda a, b: a.concat(b), parts)
+
+
+def run(quick: bool = False) -> List[Row]:
+    from repro.core.campaign import campaign
+
+    rows: List[Row] = []
+    grid = _stress_grid(8 if quick else 16)
+    chunk = 24 if quick else 48
+    out = {}
+
+    def fixed_baseline():
+        r = campaign(grid, chunk_size=chunk, n_batches=N_FIXED,
+                     seed=SEED)
+        out["fixed"] = r
+        return {"points": r.n_points, "n_batches": N_FIXED,
+                "total_jobs": r.simulated_jobs,
+                "buffer_dropped": r.totals["buffer_dropped"],
+                "max_ci_halfwidth": r.max_ci_halfwidth,
+                "mean_latency": r.mean_latency}
+    rows.append(timed(fixed_baseline, "adaptive/fixed_baseline"))
+
+    def pilot_refine():
+        r = campaign(grid, chunk_size=chunk, mode="adaptive",
+                     n_batches=N_FIXED, pilot=PILOT,
+                     target_ci=out["fixed"].max_ci_halfwidth,
+                     safety=SAFETY, seed=SEED, keep_point_stats=True)
+        out["adaptive"] = r
+        tiers, counts = np.unique(r.point_stats["alloc"],
+                                  return_counts=True)
+        return {"points": r.n_points, "pilot": PILOT,
+                "safety": SAFETY,
+                "total_jobs": r.simulated_jobs,
+                "pilot_jobs": r.pilot_jobs,
+                "buffer_dropped": r.totals["buffer_dropped"],
+                "max_ci_halfwidth": r.max_ci_halfwidth,
+                "tiers": {int(t): int(c)
+                          for t, c in zip(tiers, counts)}}
+    rows.append(timed(pilot_refine, "adaptive/pilot_refine"))
+
+    def job_savings():
+        f, a = out["fixed"], out["adaptive"]
+        target = f.max_ci_halfwidth
+        return {"points": f.n_points,
+                "fixed_jobs": f.simulated_jobs,
+                "adaptive_jobs": a.simulated_jobs,
+                "job_savings": f.simulated_jobs / a.simulated_jobs,
+                "target_ci": target,
+                "achieved_ci": a.max_ci_halfwidth,
+                "matched": bool(a.max_ci_halfwidth
+                                <= target * MATCH_TOL),
+                "buffer_dropped": (f.totals["buffer_dropped"]
+                                   + a.totals["buffer_dropped"])}
+    rows.append(timed(job_savings, "adaptive/job_savings"))
+
+    def fixed_alloc_witness():
+        # unreachable target ⇒ uniform pilot allocation ⇒ the refine
+        # fold replays the pipelined fold sequence bit for bit
+        wg = grid.take(np.arange(0, len(grid), 2))
+        a = campaign(wg, chunk_size=16, mode="adaptive",
+                     n_batches=N_FIXED, pilot=PILOT, target_ci=1e9,
+                     seed=SEED)
+        b = campaign(wg, chunk_size=16, n_batches=PILOT, seed=SEED)
+        c = campaign(wg, chunk_size=len(wg), n_batches=PILOT,
+                     seed=SEED)
+        return {"points": len(wg),
+                "fingerprint_adaptive": a.fingerprint()[:16],
+                "fingerprint_pipelined": b.fingerprint()[:16],
+                "bitwise_equal": (a.fingerprint() == b.fingerprint()
+                                  == c.fingerprint())}
+    rows.append(timed(fixed_alloc_witness,
+                      "adaptive/fixed_alloc_witness"))
+    return rows

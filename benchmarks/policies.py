@@ -5,14 +5,71 @@ timeout-delayed batching at equal load, in simulation (deterministic linear
 service). Shows (i) capping is harmless until the cap binds, and (ii)
 delaying for batch accumulation strictly hurts mean latency under this
 service model — i.e. the paper's no-wait policy is the right default for
-throughput-saturating accelerators."""
+throughput-saturating accelerators.
+
+``policies/crn_pairing`` is the common-random-numbers witness for A-B
+policy comparisons: the cap-8 and cap-64 sweep grids are dispatched
+with the SAME seed, so the ``fold_in(seed, gidx)`` key contract gives
+point i of both arms the same arrival stream and the paired difference
+cancels the shared arrival noise.  The row reports the empirical
+variance of the paired vs independent-seed difference across a seed
+ladder (the CRN variance-reduction factor) next to the conservative
+√(s_a²+s_b²) bound from ``variance.crn_pair_diff``."""
 from __future__ import annotations
 
 import math
 from typing import List
 
+import numpy as np
+
 from benchmarks.common import Row, V100, timed
 from repro.core.simulate import simulate
+
+
+def _crn_row(n_batches: int) -> Row:
+    from repro.core import variance
+    from repro.core.grid import SweepGrid
+    from repro.core.sweep import sweep
+
+    # λ as fractions of the TIGHTER arm's (cap-8) saturation rate, so
+    # both arms are stable and the paired diff is the cap-8 penalty
+    lams = [f * 8 / (V100.alpha * 8 + V100.tau0)
+            for f in (0.3, 0.6, 0.85)]
+    cap8 = SweepGrid.from_product(lams, [V100.alpha], [V100.tau0],
+                                  b_maxes=[8], dists=["exp"])
+    cap64 = SweepGrid.from_product(lams, [V100.alpha], [V100.tau0],
+                                   b_maxes=[64], dists=["exp"])
+    n_seeds = 6
+
+    def crn_pairing():
+        paired, unpaired = [], []
+        bound = None
+        for s in range(n_seeds):
+            a = sweep(cap8, n_batches=n_batches, seed=s)
+            b = sweep(cap64, n_batches=n_batches, seed=s)
+            c = sweep(cap64, n_batches=n_batches, seed=s + 1000)
+            paired.append(a.mean_latency - b.mean_latency)
+            unpaired.append(a.mean_latency - c.mean_latency)
+            bound = variance.crn_pair_diff(a, b)
+        paired = np.asarray(paired, np.float64)
+        unpaired = np.asarray(unpaired, np.float64)
+        var_p = paired.var(axis=0, ddof=1)
+        var_u = unpaired.var(axis=0, ddof=1)
+        return {
+            "points": len(cap8), "seeds": n_seeds,
+            "n_batches": n_batches,
+            "EW_cap8_minus_cap64": [round(float(v), 4)
+                                    for v in paired.mean(0)],
+            "paired_sd": [round(float(v), 4) for v in np.sqrt(var_p)],
+            "unpaired_sd": [round(float(v), 4)
+                            for v in np.sqrt(var_u)],
+            # pooled variance-reduction factor of pairing (>1 = CRN
+            # beats independent seeds)
+            "crn_var_reduction": float(var_u.sum() / var_p.sum()),
+            "conservative_halfwidth": [round(float(v), 4)
+                                       for v in bound["halfwidth"]],
+        }
+    return timed(crn_pairing, "policies/crn_pairing")
 
 
 def run(n_jobs: int = 100_000) -> List[Row]:
@@ -35,4 +92,5 @@ def run(n_jobs: int = 100_000) -> List[Row]:
                 - 1,
             }
         rows.append(timed(one, f"policies/rho={rho}"))
+    rows.append(_crn_row(n_batches=max(512, n_jobs // 50)))
     return rows

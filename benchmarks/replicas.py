@@ -132,4 +132,49 @@ def run(n_steps: int = 4000) -> List[Row]:
                 "fleet_s": t_fleet / 1e6, "numpy_s": t_numpy / 1e6,
                 "speedup": t_numpy / t_fleet}
     rows.append(timed(speedup, "replicas/speedup_vs_numpy"))
+
+    # -- 4) CRN-paired routing A-B: JSQ vs random at the same seed
+    #       shares each point's fold_in key, hence its arrival stream;
+    #       the paired difference isolates the routing effect from the
+    #       arrival noise an independent-seed comparison keeps --------
+    import numpy as np
+
+    from repro.core import variance
+
+    crn_lams = [rho / alpha for rho in (0.3, 0.5, 0.7)]
+    g_jsq = FleetGrid.from_product(crn_lams, [alpha], [tau0], ks=[4],
+                                   routings=("jsq",))
+    g_rnd = FleetGrid.from_product(crn_lams, [alpha], [tau0], ks=[4],
+                                   routings=("random",))
+    n_seeds = 4
+
+    def crn_routing():
+        paired, unpaired = [], []
+        bound = None
+        for s in range(n_seeds):
+            a = fleet_sweep(g_jsq, n_steps=n_steps, a_cap=32,
+                            hist_every=4, seed=s)
+            b = fleet_sweep(g_rnd, n_steps=n_steps, a_cap=32,
+                            hist_every=4, seed=s)
+            c = fleet_sweep(g_rnd, n_steps=n_steps, a_cap=32,
+                            hist_every=4, seed=s + 1000)
+            paired.append(a.mean_latency - b.mean_latency)
+            unpaired.append(a.mean_latency - c.mean_latency)
+            bound = variance.crn_pair_diff(a, b)
+        paired = np.asarray(paired, np.float64)
+        unpaired = np.asarray(unpaired, np.float64)
+        var_p = paired.var(axis=0, ddof=1)
+        var_u = unpaired.var(axis=0, ddof=1)
+        return {
+            "points": len(g_jsq), "seeds": n_seeds, "k": 4,
+            "EW_jsq_minus_random": [round(float(v), 4)
+                                    for v in paired.mean(0)],
+            "paired_sd": [round(float(v), 4) for v in np.sqrt(var_p)],
+            "unpaired_sd": [round(float(v), 4)
+                            for v in np.sqrt(var_u)],
+            "crn_var_reduction": float(var_u.sum() / var_p.sum()),
+            "conservative_halfwidth": [round(float(v), 4)
+                                       for v in bound["halfwidth"]],
+        }
+    rows.append(timed(crn_routing, "replicas/crn_routing"))
     return rows

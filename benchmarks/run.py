@@ -37,6 +37,48 @@ WALL_REGRESSION_TOL = 0.25
 # module wall clock
 _RATE_KEYS = ("points_per_sec", "jobs_per_sec")
 
+# hard payload gates asserted by --compare on the CURRENT run (not
+# deltas — absolute contracts a PR must not break).  Each entry:
+# (module, row name, payload key, predicate, failure message).
+PAYLOAD_GATES = (
+    ("adaptive", "adaptive/job_savings", "job_savings",
+     lambda v: float(v) >= 3.0,
+     "adaptive campaign must save >=3x simulated jobs"),
+    ("adaptive", "adaptive/job_savings", "matched",
+     lambda v: bool(v),
+     "adaptive campaign missed the baseline max-CI target"),
+    ("adaptive", "adaptive/job_savings", "buffer_dropped",
+     lambda v: int(v) == 0,
+     "buffer drops invalidate the matched-precision comparison"),
+)
+
+
+def _check_payload_gates(cur: dict) -> list:
+    """Evaluate PAYLOAD_GATES against the current run's BENCH docs.
+    A module absent from the run is not gated (e.g. ``--only fig4``);
+    a PRESENT module missing the gated row/key fails loudly."""
+    fails = []
+    for mod, row_name, key, pred, msg in PAYLOAD_GATES:
+        doc = cur.get(mod)
+        if doc is None:
+            continue
+        row = next((r for r in doc.get("rows") or []
+                    if isinstance(r, dict) and r.get("name") == row_name),
+                   None)
+        payload = (row or {}).get("payload") or {}
+        if key not in payload:
+            fails.append((mod, f"{row_name}: missing gated payload "
+                               f"key {key!r}"))
+            continue
+        try:
+            ok = pred(payload[key])
+        except (TypeError, ValueError):
+            ok = False
+        if not ok:
+            fails.append((mod, f"{row_name}: {key}={payload[key]!r} "
+                               f"— {msg}"))
+    return fails
+
 
 def _load_bench(dirpath: Path) -> dict:
     docs = {}
@@ -121,13 +163,18 @@ def compare_runs(baseline_dir: Path, current_dir: Path) -> tuple:
         lines.append(f"{mod:<12} MISSING from current run")
     for mod in sorted(set(cur) - set(base)):
         lines.append(f"{mod:<12} NEW (no baseline)")
+    gate_fails = _check_payload_gates(cur)
+    for mod, msg in gate_fails:
+        lines.append(f"GATE FAIL [{mod}] {msg}")
+        if mod not in regressed:
+            regressed.append(mod)
     if regressed:
         lines.append(f"FAIL: wall-clock regression >"
-                     f"{WALL_REGRESSION_TOL:.0%} in: "
-                     + ", ".join(regressed))
+                     f"{WALL_REGRESSION_TOL:.0%} or payload-gate "
+                     "failure in: " + ", ".join(regressed))
     else:
         lines.append("OK: no module regressed beyond "
-                     f"{WALL_REGRESSION_TOL:.0%}")
+                     f"{WALL_REGRESSION_TOL:.0%}; payload gates pass")
     return lines, regressed
 
 
@@ -173,13 +220,13 @@ def main() -> None:
         sys.exit("--compare needs the fresh BENCH JSONs; "
                  "drop --no-json")
 
-    from benchmarks import (backpressure, campaign, continuous,
-                            fig4_latency_bound, fig5_utilization,
-                            fig6_energy, fig7_tradeoff,
-                            fig8_finite_bmax, fig9_batch_times,
-                            fig11_served_latency, policies, replicas,
-                            roofline, superstep, table1_throughput,
-                            tails)
+    from benchmarks import (adaptive, backpressure, campaign,
+                            continuous, fig4_latency_bound,
+                            fig5_utilization, fig6_energy,
+                            fig7_tradeoff, fig8_finite_bmax,
+                            fig9_batch_times, fig11_served_latency,
+                            policies, replicas, roofline, superstep,
+                            table1_throughput, tails)
 
     modules = {
         "table1": lambda: table1_throughput.run(),
@@ -214,6 +261,7 @@ def main() -> None:
             n_batches=1_024 if args.quick else 3_000,
             metrics_dir=args.metrics_dir or args.json_dir),
         "campaign": lambda: campaign.run(quick=args.quick),
+        "adaptive": lambda: adaptive.run(quick=args.quick),
     }
     if args.only:
         modules = {k: v for k, v in modules.items() if k == args.only}

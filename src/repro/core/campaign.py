@@ -69,6 +69,17 @@ fingerprints, chunks_done).  ``resume=True`` validates the
 fingerprints, reloads the accumulator, truncates the row log to the
 checkpointed prefix, and continues at chunk ``chunks_done``.
 
+Adaptive precision: ``mode="adaptive"`` replaces the fixed per-point
+cycle count with a convergence-aware schedule — a short pilot pass
+triages every point's regenerative CI half-width (the batch-means
+accumulators the kernels now carry), allocation snaps to pow2
+multiples of the pilot length, and a compacted final pass re-runs
+each point at its allocated length through the same pinned-caps
+program family (one compile per tier).  See ``campaign()`` and
+``_run_adaptive`` for the determinism and resume contracts, and
+``operating_points`` for the SLO-frontier extraction the per-point
+stats enable.
+
 Mid-flight inspection: ``metrics_tap=`` + ``tap_every=N`` dispatches
 every N-th chunk single-shard with the per-superstep ``MetricsTap``
 attached (io_callback under shard_map is outside the pinned-jax
@@ -93,9 +104,10 @@ from repro.core import engine
 from repro.core.grid import FleetGrid, GenGrid, SweepGrid
 from repro.core.hist import (SKETCH_BINS, hist_edges, hist_percentiles,
                              sketch_edges)
+from repro.core.variance import Z95, allocate_cycles, batch_means_stats
 
-__all__ = ["campaign", "plan_chunks", "CampaignResult",
-           "DEFAULT_TOP_K"]
+__all__ = ["campaign", "plan_chunks", "operating_points",
+           "CampaignResult", "DEFAULT_TOP_K"]
 
 MANIFEST_VERSION = 1
 DEFAULT_TOP_K = 16
@@ -106,8 +118,16 @@ _ACC_INT = ("points", "jobs", "batches", "buffer_dropped",
             "n_retry")
 _ACC_F64 = ("sum_latency_jobs", "sum_latency", "sum_util", "sum_batch")
 _ACC_KEYS = (("hist", "hist_sums") + _ACC_INT + _ACC_F64
+             + ("max_ci",)
              + ("top_lat_val", "top_lat_idx",
                 "top_good_val", "top_good_idx"))
+
+# fallback per-point cycle caps for mode="adaptive" when the caller
+# does not pass n_batches/n_steps — the kernels' own defaults
+_DEFAULT_CYCLES = {"sweep": 3000, "fleet": 6000, "gen": 4096}
+# allocation quantum per kind: sweep/fleet supersteps are 32 steps,
+# gen_plan rounds n_steps up to its 2048-step bucket
+_CYCLE_QUANTUM = {"sweep": 32, "fleet": 32, "gen": 2048}
 
 
 # ---------------------------------------------------------------------------
@@ -137,6 +157,44 @@ def plan_chunks(n_points: int, chunk_size: int) -> Tuple[int, int, int]:
     n_chunks = -(-n_points // chunk_size)
     padded = n_chunks * chunk_size - n_points
     return chunk_size, n_chunks, padded
+
+
+def operating_points(grid, mean_latency, *, slo: float,
+                     ci_halfwidth=None,
+                     by=("alpha", "tau0", "b_max")) -> Dict:
+    """Max-λ operating point per hardware slice under a latency SLO.
+
+    Scans per-point mean latencies (``point_stats["mean_latency"]``
+    from an adaptive campaign, or any evaluated grid's means) and, for
+    each distinct combination of the ``by`` grid axes, returns the
+    highest-λ point whose mean latency meets ``slo``.  When
+    ``ci_halfwidth`` is given the comparison uses the conservative
+    upper confidence bound ``mean + halfwidth`` (NaN half-widths count
+    as 0 — exact backends).  NaN means never qualify.  Ties on λ keep
+    the lowest global index.  Returns ``{by-values tuple: {"gidx",
+    "lam", "mean_latency"} | None}`` with ``None`` for slices that
+    have no feasible point."""
+    lat = np.asarray(mean_latency, np.float64)
+    if lat.shape[0] != len(grid):
+        raise ValueError(f"mean_latency has {lat.shape[0]} entries "
+                         f"for a {len(grid)}-point grid")
+    bound = lat.copy()
+    if ci_halfwidth is not None:
+        bound = bound + np.nan_to_num(
+            np.asarray(ci_halfwidth, np.float64), nan=0.0)
+    lam = np.asarray(grid.lam, np.float64)
+    axes = [np.asarray(getattr(grid, k)) for k in by]
+    out: Dict = {}
+    for i in range(len(grid)):
+        key = tuple(a[i].item() for a in axes)
+        out.setdefault(key, None)
+        if not bound[i] <= slo:           # NaN-safe: NaN never passes
+            continue
+        cur = out[key]
+        if cur is None or lam[i] > cur["lam"]:
+            out[key] = {"gidx": i, "lam": float(lam[i]),
+                        "mean_latency": float(lat[i])}
+    return out
 
 
 def _grid_sha(grid) -> str:
@@ -184,6 +242,10 @@ def _init_acc(n_bins: int, k_top: int) -> Dict[str, np.ndarray]:
         acc[k] = np.zeros((), np.int64)
     for k in _ACC_F64:
         acc[k] = np.zeros((), np.float64)
+    # campaign-wide max of the per-point 95% CI half-widths (0.0 until
+    # a point with >= 2 regeneration blocks folds in); max-merged, so
+    # bitwise chunk-invariant like the sums
+    acc["max_ci"] = np.zeros((), np.float64)
     # -inf sentinels: any real value beats an empty slot, and the
     # strict-> replacement rule keeps the earliest index on ties
     acc["top_lat_val"] = np.full(k_top, -np.inf, np.float64)
@@ -212,11 +274,14 @@ def _build_fold(m: int, n_bins: int, k_top: int, has_loss: bool,
 
     f64, i64 = jnp.float64, jnp.int64
 
-    def fold(acc, chunk, start, n_valid):
+    def fold(acc, chunk, gidx, n_valid):
+        # gidx is the length-m array of GLOBAL point indices: the
+        # pipelined driver passes a contiguous arange, the adaptive
+        # refine pass a compacted (non-contiguous) index set
         idx = jnp.arange(m, dtype=i64)
         xs = {
             "valid": idx < n_valid,
-            "gidx": start + idx,
+            "gidx": gidx.astype(i64),
             "hist": chunk["hist"].astype(i64),
             "n_jobs": chunk["n_jobs"].astype(i64),
             "batches": chunk["batches"].astype(i64),
@@ -285,6 +350,16 @@ def _build_fold(m: int, n_bins: int, k_top: int, has_loss: bool,
 
         acc, _ = lax.scan(body, acc, xs)
         valid = (idx < n_valid)
+        # per-point regenerative 95% CI half-widths, max-merged into
+        # the accumulator (max is associative/commutative and exact in
+        # f64, so this stays bitwise chunk-invariant); points with < 2
+        # blocks contribute 0, matching batch_means_stats' NaN
+        nb = chunk["lat_bm_n"].astype(f64)
+        m2 = chunk["lat_bm_m2"].astype(f64)
+        ci_hw = Z95 * jnp.sqrt(m2 / jnp.maximum(nb - 1.0, 1.0)
+                               / jnp.maximum(nb, 1.0))
+        ci_hw = jnp.where(valid & (nb >= 2.0), ci_hw, 0.0)
+        acc["max_ci"] = jnp.maximum(acc["max_ci"], jnp.max(ci_hw))
         w = valid.astype(i64)
         summary = {
             "points": jnp.sum(w),
@@ -332,6 +407,10 @@ class CampaignResult:
     serial_compile_shapes: int = 0
     tapped_chunks: int = 0
     out_dir: Optional[str] = None
+    # -- adaptive mode only ------------------------------------------------
+    pilot_jobs: int = 0                   # measured jobs spent on triage
+    point_stats: Optional[Dict[str, np.ndarray]] = field(
+        default=None, repr=False)         # per-point host arrays (O(n))
 
     @property
     def hist(self) -> np.ndarray:
@@ -365,6 +444,21 @@ class CampaignResult:
     def mean_batch(self) -> float:
         pts = int(self.acc["points"])
         return float(self.acc["sum_batch"]) / max(pts, 1)
+
+    @property
+    def max_ci_halfwidth(self) -> float:
+        """Largest per-point 95% CI half-width (regenerative batch
+        means) folded into the campaign; 0.0 until a point with >= 2
+        blocks folds in.  Adaptive campaigns drive this under
+        ``target_ci``."""
+        return float(self.acc["max_ci"])
+
+    @property
+    def simulated_jobs(self) -> int:
+        """Total measured jobs simulated, INCLUDING the triage pilot
+        pass in adaptive mode — the cost metric adaptive campaigns are
+        benchmarked on."""
+        return int(self.acc["jobs"]) + int(self.pilot_jobs)
 
     @property
     def goodput_frac(self) -> float:
@@ -498,6 +592,11 @@ def campaign(grid, *, chunk_size: int = 4096, mode: str = "pipelined",
              out_dir: Optional[str] = None, resume: bool = False,
              stop_after_chunks: Optional[int] = None,
              caps: Optional[Dict[str, int]] = None,
+             pilot: Optional[int] = None,
+             target_ci: Optional[float] = None,
+             refine_budget: Optional[int] = None,
+             safety: float = 1.0,
+             keep_point_stats: bool = False,
              **kernel_kw) -> CampaignResult:
     """Stream ``grid`` through its kernel in fixed-shape chunks and
     reduce on device (module docstring has the full execution model).
@@ -519,23 +618,73 @@ def campaign(grid, *, chunk_size: int = 4096, mode: str = "pipelined",
     ``stop_after_chunks=s`` checkpoints and returns after ``s`` chunks
     (``completed=False``) — graceful preemption; pass ``resume=True``
     with the same ``out_dir``, grid, and config to continue.
+
+    ``mode="adaptive"`` is the convergence-aware scheduler: a short
+    pilot pass (``pilot`` cycles per point, default ~n_max/16) triages
+    every point's regenerative CI half-width, then the remaining cycle
+    budget is allocated where the variance is — ``target_ci=x`` sizes
+    each point to reach half-width ``x`` (pow2 multiples of the pilot,
+    capped at ``n_batches``/``n_steps``), ``refine_budget=B`` Neyman-
+    allocates ``B`` extra cycles ∝ CI.  Unconverged points are
+    compacted into dense fixed-shape chunks per allocation tier and
+    EVERY point is re-run at its allocated length (``safety>1``
+    over-allocates to absorb the pilot CI's own estimation noise —
+    a short pilot estimates its CI from only a handful of blocks, so
+    ``safety=1`` can under-provision; pilot-length for
+    converged points, so their refine run is bitwise identical to the
+    pilot run) — each point's result stays a pure function of its
+    params, its ``fold_in(seed, gidx)`` key, and its allocated cycle
+    count.  The pilot never folds; only the final pass does, tiers
+    ascending and global index ascending within a tier, so the merged
+    accumulator is independent of chunking.  ``stop_after_chunks``
+    counts final-pass chunks (the pilot always completes and is
+    checkpointed with the triage table before the final pass starts).
     """
     kind = _kind_of(grid)
     plan_fn, caps_fn, steps_kw = _kind_fns(kind)
     n = len(grid)
     c_size, n_chunks, padded = plan_chunks(n, chunk_size)
-    if mode not in ("pipelined", "serial"):
+    if mode not in ("pipelined", "serial", "adaptive"):
         raise ValueError(f"unknown campaign mode {mode!r}")
+    if mode != "adaptive" and (pilot is not None or target_ci is not None
+                               or refine_budget is not None):
+        raise ValueError("pilot/target_ci/refine_budget require "
+                         "mode='adaptive'")
     if sketch:
         n_bins = SKETCH_BINS
     pinned = dict(caps) if caps is not None else caps_fn(grid)
 
-    config = {"kind": kind, "n_points": n, "chunk_size": c_size,
+    n_max = int(kernel_kw.get(steps_kw, _DEFAULT_CYCLES[kind]))
+    if mode == "adaptive":
+        if metrics_tap is not None:
+            raise ValueError("mode='adaptive' does not support "
+                             "metrics_tap")
+        if (target_ci is None) == (refine_budget is None):
+            raise ValueError("mode='adaptive' needs exactly one of "
+                             "target_ci / refine_budget")
+        q = _CYCLE_QUANTUM[kind]
+        if pilot is None:
+            pilot = min(n_max, max(4 * q, n_max // 16))
+        pilot = -(-int(pilot) // q) * q      # round up to the quantum
+        if not 0 < pilot <= n_max:
+            raise ValueError(f"pilot={pilot} must be in (0, "
+                             f"{steps_kw}={n_max}]")
+
+    config = {"kind": kind, "mode": mode, "n_points": n,
+              "chunk_size": c_size,
               "n_bins": int(n_bins), "sketch": bool(sketch),
               "seed": int(seed), "k_top": int(k_top),
               "caps": {k: int(v) for k, v in sorted(pinned.items())},
               "kernel_kw": {k: repr(v)
                             for k, v in sorted(kernel_kw.items())}}
+    if mode == "adaptive":
+        config["adaptive"] = {
+            "pilot": int(pilot), "n_max": int(n_max),
+            "target_ci": (None if target_ci is None
+                          else float(target_ci)),
+            "refine_budget": (None if refine_budget is None
+                              else int(refine_budget)),
+            "safety": float(safety)}
     grid_sha = _grid_sha(grid)
 
     store = _Store(Path(out_dir)) if out_dir is not None else None
@@ -558,7 +707,17 @@ def campaign(grid, *, chunk_size: int = 4096, mode: str = "pipelined",
         rows = store.truncate_rows(start_chunk)
 
     t0 = time.perf_counter()
-    if mode == "serial":
+    if mode == "adaptive":
+        result = _run_adaptive(grid, plan_fn, kind, n, c_size,
+                               n_chunks, padded, n_bins, sketch, seed,
+                               shard, superstep_backend, pinned,
+                               kernel_kw, steps_kw, k_top,
+                               pipeline_depth, checkpoint_every,
+                               store, config, grid_sha, start_chunk,
+                               rows, acc_host, stop_after_chunks,
+                               pilot, target_ci, refine_budget, n_max,
+                               safety, keep_point_stats)
+    elif mode == "serial":
         result = _run_serial(grid, plan_fn, caps_fn, kind, n, c_size,
                              n_chunks, padded, n_bins, sketch, seed,
                              shard, superstep_backend, kernel_kw,
@@ -595,6 +754,7 @@ def _fold_inputs(out: Dict[str, Any], lam_dev, has_loss: bool,
         "mean_latency": out["mean_latency"],
         "utilization": out["utilization"],
         "mean_batch": out["mean_batch"], "lam": lam_dev,
+        "lat_bm_m2": out["lat_bm_m2"], "lat_bm_n": out["lat_bm_n"],
     }
     if has_sums:
         chunk["hist_sums"] = out["hist_sums"]
@@ -679,7 +839,10 @@ def _run_pipelined(grid, plan_fn, kind, n, c_size, n_chunks, padded,
                                donate)
             chunk = _fold_inputs(out, lam_dev, plan.has_loss,
                                  plan.sketch)
-            acc, summary_ref = fold(acc, chunk, np.int64(start),
+            acc, summary_ref = fold(acc, chunk,
+                                    np.arange(start,
+                                              start + c_size + pad2,
+                                              dtype=np.int64),
                                     np.int64(n_valid))
         is_ckpt = (store is not None
                    and ((ci + 1) % max(checkpoint_every, 1) == 0
@@ -707,6 +870,251 @@ def _run_pipelined(grid, plan_fn, kind, n, c_size, n_chunks, padded,
         chunk_size=c_size, padded_points=padded, completed=completed,
         sketch=bool(sketch), acc=acc_np, rows=rows,
         peak_host_result_bytes=peak_host, tapped_chunks=tapped)
+
+
+def _refine_schedule(alloc: np.ndarray, c_size: int):
+    """Deterministic final-pass schedule from a per-point cycle
+    allocation: tiers ascending, global point index ascending within a
+    tier, each tier cut into fixed-width chunks (tail padded by
+    repeating the last index, masked out of the fold).  Returns
+    ``[(tier_cycles, gidx[c_size], n_valid), ...]``.  With a uniform
+    allocation this degenerates to contiguous global-order chunks —
+    the same fold sequence as ``mode="pipelined"``."""
+    chunks = []
+    for tier in np.unique(alloc):
+        gsel = np.flatnonzero(alloc == tier).astype(np.int64)
+        for off in range(0, gsel.size, c_size):
+            part = gsel[off:off + c_size]
+            nv = int(part.size)
+            if nv < c_size:
+                part = np.concatenate(
+                    [part, np.repeat(part[-1:], c_size - nv)])
+            chunks.append((int(tier), part, nv))
+    return chunks
+
+
+def _run_adaptive(grid, plan_fn, kind, n, c_size, n_chunks, padded,
+                  n_bins, sketch, seed, shard, superstep_backend,
+                  pinned, kernel_kw, steps_kw, k_top, depth,
+                  checkpoint_every, store, config, grid_sha,
+                  start_chunk, rows, acc_host, stop_after,
+                  pilot, target_ci, refine_budget, n_max, safety,
+                  keep_point_stats):
+    """Convergence-aware scheduler: pilot triage (no fold, tiny host
+    fetches), Neyman/target allocation snapped to pow2-of-pilot tiers,
+    then a pipelined final pass over compacted fixed-shape chunks that
+    re-runs EVERY point at its allocated cycle count.  Global chunk
+    numbering: pilot chunks are ``0..n_chunks-1``, final-pass chunks
+    follow; checkpoints only exist from the pilot-complete boundary
+    (``chunks_done == n_chunks``) onward, so a resume always lands in
+    the final pass with the persisted ``triage.npz`` as its basis."""
+    import io
+    import jax
+    from jax.experimental import enable_x64
+
+    donate = jax.default_backend() != "cpu"
+    base_kw = {k: v for k, v in kernel_kw.items() if k != steps_kw}
+    peak_host = 0
+
+    # ---- phase 1: pilot triage --------------------------------------
+    triage = None
+    if store is not None and start_chunk >= n_chunks:
+        with np.load(store.dir / "triage.npz") as z:
+            triage = {k: np.asarray(z[k]) for k in z.files}
+    if triage is None:
+        m2 = np.zeros(n, np.float64)
+        nb = np.zeros(n, np.int64)
+        jobs = np.zeros(n, np.int64)
+        drop = np.zeros(n, np.int64)
+        mean = np.zeros(n, np.float64)
+        pending = []
+
+        def drain_pilot():
+            nonlocal peak_host
+            ci_, refs, meta = pending.pop(0)
+            small = jax.device_get(refs)       # blocks: chunk done
+            host_bytes = _nbytes(small) + meta["grid_bytes"]
+            nv, start = meta["points"], meta["start"]
+            sl, seg = slice(0, nv), slice(start, start + nv)
+            m2[seg] = small["m2"][sl]
+            nb[seg] = small["nb"][sl]
+            jobs[seg] = small["jobs"][sl]
+            drop[seg] = small["drop"][sl]
+            mean[seg] = small["mean"][sl]
+            row = {"chunk": ci_, "phase": "pilot", "start": start,
+                   "points": nv, "padded": meta["padded"],
+                   "tapped": False,
+                   "jobs": int(small["jobs"][sl].sum()),
+                   "buffer_dropped": int(small["drop"][sl].sum()),
+                   "wall_s": round(time.perf_counter() - meta["t0"],
+                                   4),
+                   "host_bytes": host_bytes}
+            rows.append(row)
+            if store is not None:
+                store.append_row(row)
+            peak_host = max(peak_host, host_bytes)
+
+        for ci_ in range(n_chunks):
+            start = ci_ * c_size
+            cgrid, n_valid = _chunk_grid(grid, start, c_size, n)
+            t0 = time.perf_counter()
+            plan = plan_fn(cgrid, seed=seed, key_offset=start,
+                           n_bins=n_bins, sketch=sketch, shard=shard,
+                           superstep_backend=superstep_backend,
+                           **pinned, **base_kw, **{steps_kw: pilot})
+            out, pad2 = engine.dispatch_device(
+                plan.kernel, plan.params, plan.keys, plan.n,
+                plan.n_dev)
+            refs = {"m2": out["lat_bm_m2"], "nb": out["lat_bm_n"],
+                    "jobs": out["n_jobs"], "drop": out["dropped"],
+                    "mean": out["mean_latency"]}
+            pending.append((ci_, refs,
+                            {"start": start, "points": n_valid,
+                             "padded": (c_size - n_valid) + pad2,
+                             "t0": t0,
+                             "grid_bytes": _nbytes(cgrid._arrays())}))
+            while len(pending) > max(depth, 1):
+                drain_pilot()
+        while pending:
+            drain_pilot()
+
+        _, ci_hw = batch_means_stats(m2, nb)
+        alloc = allocate_cycles(ci_hw, pilot, n_max=n_max,
+                                target_ci=target_ci,
+                                refine_budget=refine_budget,
+                                safety=safety)
+        # allocate_cycles returns pow2-of-pilot tiers capped at n_max,
+        # so the tier count (⇒ compile count) is <= log2(n_max/pilot)+2
+        triage = {"alloc": alloc.astype(np.int64),
+                  "pilot_ci": ci_hw, "pilot_mean": mean,
+                  "pilot_jobs": jobs, "pilot_dropped": drop}
+        if store is not None:
+            buf = io.BytesIO()
+            np.savez(buf, **triage)
+            _atomic_write(store.dir / "triage.npz", buf.getvalue())
+
+    fchunks = _refine_schedule(triage["alloc"], c_size)
+    n_total = n_chunks + len(fchunks)
+    pilot_jobs = int(triage["pilot_jobs"].sum())
+
+    def manifest(done):
+        return {"version": MANIFEST_VERSION, "grid_sha": grid_sha,
+                "config": config, "chunks_done": done,
+                "n_chunks": n_total, "mode": "adaptive",
+                "pilot_chunks": n_chunks}
+
+    if acc_host is None:
+        acc_host = _init_acc(n_bins, k_top)
+    if store is not None and start_chunk < n_chunks:
+        # pilot-complete boundary: persist the (still empty)
+        # accumulator + triage so a resume skips the pilot entirely
+        store.checkpoint(manifest(n_chunks), acc_host)
+        start_chunk = n_chunks
+
+    stats = {"alloc": triage["alloc"], "pilot_ci": triage["pilot_ci"],
+             "pilot_mean": triage["pilot_mean"]}
+    if keep_point_stats:
+        stats["mean_latency"] = np.full(n, np.nan)
+        stats["ci_halfwidth"] = np.full(n, np.nan)
+        stats["n_jobs"] = np.zeros(n, np.int64)
+
+    # ---- phase 2: compacted, tiered final pass (the only fold) ------
+    with enable_x64():
+        acc = jax.device_put(acc_host)
+    f_start = max(start_chunk - n_chunks, 0)
+    last_f = len(fchunks) if stop_after is None \
+        else min(len(fchunks), f_start + stop_after)
+    pending = []
+
+    def drain_final():
+        nonlocal peak_host
+        gci, summary_ref, ckpt_ref, refs, gsel, meta, t0c, gbytes = \
+            pending.pop(0)
+        summary = jax.device_get(summary_ref)   # blocks: chunk done
+        host_bytes = _nbytes(summary) + gbytes
+        if refs is not None:
+            small = jax.device_get(refs)
+            host_bytes += _nbytes(small)
+            nv = meta["points"]
+            sl = slice(0, nv)
+            _, cihw = batch_means_stats(
+                np.asarray(small["m2"][sl], np.float64),
+                np.asarray(small["nb"][sl]))
+            stats["mean_latency"][gsel[:nv]] = small["mean"][sl]
+            stats["ci_halfwidth"][gsel[:nv]] = cihw
+            stats["n_jobs"][gsel[:nv]] = small["jobs"][sl]
+        acc_np = None
+        if ckpt_ref is not None:
+            acc_np = jax.device_get(ckpt_ref)
+            host_bytes += _nbytes(acc_np)
+        row = {"chunk": gci, "phase": "refine", **meta,
+               **{k: int(v) for k, v in summary.items()},
+               "wall_s": round(time.perf_counter() - t0c, 4),
+               "host_bytes": host_bytes}
+        rows.append(row)
+        if store is not None:
+            store.append_row(row)
+            if acc_np is not None:
+                store.checkpoint(manifest(gci + 1), acc_np)
+        peak_host = max(peak_host, host_bytes)
+
+    for fi in range(f_start, last_f):
+        tier, gsel, n_valid = fchunks[fi]
+        gci = n_chunks + fi
+        cgrid = grid.take(gsel)
+        t0c = time.perf_counter()
+        plan = plan_fn(cgrid, seed=seed, key_offset=0,
+                       n_bins=n_bins, sketch=sketch, shard=shard,
+                       superstep_backend=superstep_backend,
+                       **pinned, **base_kw, **{steps_kw: int(tier)})
+        # the determinism contract: replace the plan's contiguous keys
+        # with the SAME fold_in(seed, gidx) keys every schedule uses
+        plan = plan._replace(keys=engine.point_keys_at(seed, gsel))
+        out, pad2 = engine.dispatch_device(
+            plan.kernel, plan.params, plan.keys, plan.n, plan.n_dev)
+        lam_dev = engine.pad_tail(plan.params["lam"], pad2)
+        gidx = (np.concatenate([gsel, np.repeat(gsel[-1:], pad2)])
+                if pad2 else gsel)
+        with enable_x64():
+            fold = _build_fold(c_size + pad2, n_bins, k_top,
+                               plan.has_loss, plan.sketch, True,
+                               donate)
+            chunk = _fold_inputs(out, lam_dev, plan.has_loss,
+                                 plan.sketch)
+            acc, summary_ref = fold(acc, chunk, gidx,
+                                    np.int64(n_valid))
+        refs = None
+        if keep_point_stats:
+            refs = {"m2": out["lat_bm_m2"], "nb": out["lat_bm_n"],
+                    "jobs": out["n_jobs"], "mean": out["mean_latency"]}
+        is_ckpt = (store is not None
+                   and ((fi + 1) % max(checkpoint_every, 1) == 0
+                        or fi == last_f - 1))
+        if is_ckpt:
+            with enable_x64():
+                ckpt_ref = (jax.tree_util.tree_map(lambda a: a + 0,
+                                                   acc)
+                            if donate else acc)
+        else:
+            ckpt_ref = None
+        pending.append((gci, summary_ref, ckpt_ref, refs, gsel,
+                        {"start": int(gsel[0]), "tier": tier,
+                         "points": n_valid,
+                         "padded": (c_size - n_valid) + pad2,
+                         "tapped": False},
+                        t0c, _nbytes(cgrid._arrays())))
+        while len(pending) > max(depth, 1):
+            drain_final()
+    while pending:
+        drain_final()
+
+    acc_np = jax.device_get(acc)
+    return CampaignResult(
+        kind=kind, mode="adaptive", n_points=n, n_chunks=n_total,
+        chunk_size=c_size, padded_points=padded,
+        completed=last_f == len(fchunks), sketch=bool(sketch),
+        acc=acc_np, rows=rows, peak_host_result_bytes=peak_host,
+        pilot_jobs=pilot_jobs, point_stats=stats)
 
 
 def _run_serial(grid, plan_fn, caps_fn, kind, n, c_size, n_chunks,
@@ -793,6 +1201,12 @@ def _host_fold(acc: Dict[str, np.ndarray], r, start: int, n_valid: int,
                        + r.utilization[sl].astype(np.float64).sum())
     acc["sum_batch"] = (acc["sum_batch"]
                         + r.mean_batch[sl].astype(np.float64).sum())
+    ci = getattr(r, "ci_halfwidth", None)
+    if ci is not None:
+        ci = np.nan_to_num(ci[sl].astype(np.float64), nan=0.0,
+                           posinf=0.0)
+        if ci.size:
+            acc["max_ci"] = np.maximum(acc["max_ci"], ci.max())
     gidx = np.arange(start, start + n_valid, dtype=np.int64)
     offered = (jobs + r.overflow_dropped[sl] + r.abandoned[sl])
     gfrac = np.where(offered > 0,

@@ -99,7 +99,8 @@ from typing import (Any, Callable, Dict, NamedTuple, Optional, Sequence,
 
 import numpy as np
 
-__all__ = ["enable_host_devices", "point_keys", "resolve_shards",
+__all__ = ["enable_host_devices", "point_keys", "point_keys_at",
+           "welford_block", "resolve_shards",
            "shard_kernel", "pad_tail", "dispatch", "dispatch_device",
            "KernelPlan", "exp_gaps",
            "exp_offsets", "fifo_append", "fifo_pop_shift",
@@ -146,6 +147,49 @@ def point_keys(seed: int, offset: int, n: int):
     base = random.PRNGKey(seed)
     return jax.vmap(lambda i: random.fold_in(base, i))(
         jnp.arange(offset, offset + n))
+
+
+def point_keys_at(seed: int, indices):
+    """``point_keys`` for an arbitrary array of global point indices.
+
+    The adaptive campaign's refine pass compacts unconverged points
+    into dense chunks, so the indices it dispatches are no longer a
+    contiguous ``offset + arange`` run.  Each lane still gets
+    ``fold_in(PRNGKey(seed), global_index)`` — the same key the point
+    would have received in a contiguous dispatch — which is exactly the
+    contract that makes compaction invisible to per-point results."""
+    import jax
+    import jax.numpy as jnp
+    from jax import random
+
+    base = random.PRNGKey(seed)
+    return jax.vmap(lambda i: random.fold_in(base, i))(
+        jnp.asarray(indices, dtype=jnp.int32))
+
+
+def welford_block(bm, d_sum, d_n):
+    """One Welford update of the batch-means accumulator ``bm =
+    (mean, m2, n_blocks)`` with a block of ``d_n`` jobs whose latencies
+    sum to ``d_sum`` (trace-time; call once per superstep).
+
+    The block mean ``d_sum / d_n`` is one sample of the batch-means
+    sequence; Welford's recurrence keeps the running mean and centered
+    second moment M2 = Σ (x_j − x̄)² without the catastrophic
+    cancellation a raw sum-of-squares would suffer in f32.  Blocks that
+    completed no measured jobs are skipped (the update is gated, the
+    count does not advance), so idle warmup supersteps never dilute the
+    variance estimate.  Host-side post-processing turns (m2, n) into a
+    standard error: ``sqrt(m2 / (n·(n−1)))``."""
+    import jax.numpy as jnp
+
+    mean, m2, n = bm
+    has = d_n > 0
+    x = d_sum / jnp.maximum(d_n, 1).astype(d_sum.dtype)
+    n1 = n + has.astype(n.dtype)
+    delta = x - mean
+    mean1 = mean + delta / jnp.maximum(n1, 1).astype(d_sum.dtype)
+    m21 = m2 + delta * (x - mean1)
+    return (jnp.where(has, mean1, mean), jnp.where(has, m21, m2), n1)
 
 
 # ---------------------------------------------------------------------------

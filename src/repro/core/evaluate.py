@@ -172,7 +172,14 @@ def _sim(grid: SweepGrid, **kw) -> List[SimResult]:
 def evaluate(grid: SweepGrid, backend: str = "sweep",
              **kw) -> List[SimResult]:
     """Evaluate every grid point with the chosen backend (see module
-    docstring); returns one unified ``SimResult`` per point."""
+    docstring); returns one unified ``SimResult`` per point.
+
+    Monte Carlo backends (``sweep``/``fleet``/``gen``) also fill each
+    result's ``stderr``/``ci_halfwidth`` — the regenerative
+    batch-means error bar on ``mean_latency`` (nominal 95%,
+    ``variance.Z95``; NaN where the run produced fewer than two
+    completing blocks).  Exact backends (``analytic``/``markov``)
+    leave them NaN: a closed form has no sampling error."""
     if isinstance(grid, MarkovGrid):
         if backend != "markov":
             # the exact grid has no service-distribution/policy/replica

@@ -81,7 +81,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax, random
 
-from repro.core import engine, metrics
+from repro.core import engine, metrics, variance
 from repro.core.engine import ShardSpec
 from repro.core.grid import (  # noqa: F401  (re-exported for callers)
     DISC_CODE, DISC_NAME, OVERFLOW_CODE, GenGrid, GenResult)
@@ -396,7 +396,9 @@ def _build_gen_kernel(n_steps: int, warmup: int, s_cap: int, q_cap: int,
 
         def superstep(state, x):
             i_base, k_sup = x
-            hists = state[-1]
+            *state, bm_mean, bm_m2, bm_nb, hists = state
+            state = tuple(state)
+            s0, n0 = state[7], state[8]
             # one block draw per superstep, consumed row-wise by the
             # inner scan — per-step threefry calls would dominate the
             # per-point cost of a wide vmap on CPU.  The retry block
@@ -411,11 +413,13 @@ def _build_gen_kernel(n_steps: int, warmup: int, s_cap: int, q_cap: int,
                       retry_u)
             else:
                 xs = (i_base + jnp.arange(REBASE_EVERY), arr_gaps)
-            state, (lats, inc) = lax.scan(step, state[:-1], xs)
+            state, (lats, inc) = lax.scan(step, state, xs)
             hists = _ss.hist_update(hists, lats, inc, n_bins=n_bins,
                                     backend=ss_backend,
                                     sketch=use_sketch,
                                     hist_rows=hist_rows)
+            bm_mean, bm_m2, bm_nb = engine.welford_block(
+                (bm_mean, bm_m2, bm_nb), state[7] - s0, state[8] - n0)
             # rebase the clock to the superstep end and re-compact the
             # tail buffer to head = 0: the only whole-buffer passes in
             # the kernel, paid once per REBASE_EVERY steps — fused with
@@ -431,7 +435,7 @@ def _build_gen_kernel(n_steps: int, warmup: int, s_cap: int, q_cap: int,
                 abandoned=accs[11] if has_loss else 0)
             return (jnp.zeros((), i32), tail - head, buf, rem, arr_s,
                     jnp.zeros((), f32), next_arr - now,
-                    *accs, hists), None
+                    *accs, bm_mean, bm_m2, bm_nb, hists), None
 
         key, k0 = random.split(key)
         init = (jnp.zeros((), i32),                    # head
@@ -449,6 +453,8 @@ def _build_gen_kernel(n_steps: int, warmup: int, s_cap: int, q_cap: int,
         if has_loss:
             # orbit, ov_n, ab_n, slo_n, fresh_n, retry_n
             init = init + tuple(jnp.zeros((), i32) for _ in range(6))
+        init = init + (jnp.zeros((), f32), jnp.zeros((), f32),
+                       jnp.zeros((), i32))              # batch-means bm
         hists0 = (jnp.zeros((n_bins,), i32),)            # hist
         if use_sketch:
             hists0 = hists0 + (jnp.zeros((n_bins,), f32),)
@@ -460,6 +466,7 @@ def _build_gen_kernel(n_steps: int, warmup: int, s_cap: int, q_cap: int,
              random.split(key, n_super)))
         (lat_sum, lat_n, sum_b, sum_b2, n_meas, busy, span, q_max,
          dropped) = state[7:16]
+        bm_m2, bm_nb = state[-3], state[-2]
         hists = state[-1]
 
         jobs = jnp.maximum(lat_n, 1).astype(f32)
@@ -473,6 +480,8 @@ def _build_gen_kernel(n_steps: int, warmup: int, s_cap: int, q_cap: int,
             "n_steps": n_meas,
             "max_queue": q_max,
             "dropped": dropped,
+            "lat_bm_m2": bm_m2,
+            "lat_bm_n": bm_nb,
             "hist": hists[0],
         }
         if use_sketch:
@@ -670,6 +679,8 @@ def gen_sweep(grid: GenGrid, *, n_steps: int = 4096,
             p50_median=float(np.nanmedian(p50)),
             p95_median=float(np.nanmedian(p95)),
             p99_median=float(np.nanmedian(p99)))
+    stderr, ci = variance.batch_means_stats(out["lat_bm_m2"],
+                                            out["lat_bm_n"])
     return GenResult(
         grid=grid,
         mean_latency=np.asarray(out["mean_latency"], dtype=np.float64),
@@ -685,5 +696,7 @@ def gen_sweep(grid: GenGrid, *, n_steps: int = 4096,
         hist=np.asarray(out["hist"]),
         hist_sums=(np.asarray(out["hist_sums"], dtype=np.float64)
                    if sketch else None),
+        stderr=stderr, ci_halfwidth=ci,
+        n_blocks=np.asarray(out["lat_bm_n"]),
         **loss_kw,
     )

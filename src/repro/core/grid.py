@@ -697,6 +697,14 @@ class SweepResult(_LossAccounting):
     # streaming-sketch runs (sketch=True) also carry the per-bin latency
     # sums their fused kernel accumulates; None on full-histogram runs
     hist_sums: np.ndarray = field(default=None, repr=False)
+    # regenerative batch-means error bars (one sample per superstep
+    # block, Welford-accumulated in the scan carry): the mean-latency
+    # standard error, its 95% CI half-width, and the block count the
+    # estimate rests on.  NaN where fewer than two blocks completed
+    # jobs (zero-rate points, runs shorter than two supersteps).
+    stderr: np.ndarray = field(default=None, repr=False)
+    ci_halfwidth: np.ndarray = field(default=None, repr=False)
+    n_blocks: np.ndarray = field(default=None, repr=False)
 
     @property
     def hist_bin_edges(self) -> np.ndarray:
@@ -742,6 +750,11 @@ class SweepResult(_LossAccounting):
             latency_p99=float(self.latency_p99[i]),
             n_batches=int(self.n_batches[i]),
             backend="sweep",
+            stderr=(float(self.stderr[i]) if self.stderr is not None
+                    else float("nan")),
+            ci_halfwidth=(float(self.ci_halfwidth[i])
+                          if self.ci_halfwidth is not None
+                          else float("nan")),
             goodput_frac=float(self.goodput_frac[i]),
             reject_frac=float(self.reject_frac[i]),
             abandon_frac=float(self.abandon_frac[i]),
@@ -812,6 +825,10 @@ class GenResult(_LossAccounting):
     n_retry: np.ndarray               # measured orbit re-arrivals
     hist: np.ndarray = field(repr=False)           # (N, n_bins) counts
     hist_sums: np.ndarray = field(default=None, repr=False)
+    # regenerative batch-means error bars — see SweepResult
+    stderr: np.ndarray = field(default=None, repr=False)
+    ci_halfwidth: np.ndarray = field(default=None, repr=False)
+    n_blocks: np.ndarray = field(default=None, repr=False)
 
     @property
     def hist_bin_edges(self) -> np.ndarray:
@@ -845,6 +862,11 @@ class GenResult(_LossAccounting):
             latency_p99=float(self.latency_p99[i]),
             n_batches=int(self.n_steps[i]),
             backend="gen",
+            stderr=(float(self.stderr[i]) if self.stderr is not None
+                    else float("nan")),
+            ci_halfwidth=(float(self.ci_halfwidth[i])
+                          if self.ci_halfwidth is not None
+                          else float("nan")),
             discipline=DISC_NAME[int(self.grid.discipline[i])],
             goodput_frac=float(self.goodput_frac[i]),
             reject_frac=float(self.reject_frac[i]),

@@ -48,6 +48,10 @@ class SimResult:
     latency_p99: float = _NAN
     n_batches: int = 0                    # batches in the measured window
     backend: str = ""                     # "sim" | "sweep" | "markov" | ...
+    # -- regenerative batch-means error bars (MC backends only; NaN on
+    #    exact backends, whose mean is not an estimate) -------------------
+    stderr: float = _NAN                  # std error of mean_latency
+    ci_halfwidth: float = _NAN            # 95% CI half-width (z·stderr)
     k: int = 1                            # replica count (1 = single server)
     routing: str = ""                     # fleet routing ("" outside fleets)
     discipline: str = ""                  # generate scheduling discipline
@@ -109,4 +113,7 @@ class SimResult:
                 assert -1e-9 <= frac <= 1.0 + 1e-9
         if not math.isnan(self.retry_inflation):
             assert self.retry_inflation >= 1.0 - 1e-9
+        if not math.isnan(self.stderr):
+            assert self.stderr >= 0.0
+            assert self.ci_halfwidth >= self.stderr
         return self

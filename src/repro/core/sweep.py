@@ -53,7 +53,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax, random
 
-from repro.core import engine, metrics
+from repro.core import engine, metrics, variance
 from repro.core.engine import ShardSpec
 from repro.core.grid import (  # noqa: F401  (re-exported for back-compat)
     DIST_CODE, DIST_NAME, OVERFLOW_CODE, OVERFLOW_NAME, ROUTE_CODE,
@@ -318,18 +318,22 @@ def _build_kernel(n_batches: int, warmup: int, q_cap: int, a_cap: int,
             return out_state, (lats, popmask & meas)
 
         def superstep(carry, i_base):
-            state, hists = carry
+            state, bm, hists = carry
+            s0, n0 = state[3], state[4]
             state, (lats, inc) = lax.scan(
                 step, state, i_base + jnp.arange(_REBASE_EVERY))
             hists = _ss.hist_update(hists, lats, inc, n_bins=n_bins,
                                     backend=ss_backend, sketch=use_sketch)
+            # one batch-means sample per superstep: the mean latency of
+            # the jobs that completed inside this 32-step block
+            bm = engine.welford_block(bm, state[3] - s0, state[4] - n0)
             metrics.tap_superstep(
                 tap, i_base // _REBASE_EVERY, queue=state[0],
                 jobs=state[4], busy=state[9], span=state[10],
                 dropped=state[12],
                 overflow=state[14] if has_loss else 0,
                 abandoned=state[15] if has_loss else 0)
-            return (state, hists), None
+            return (state, bm, hists), None
 
         init = (jnp.zeros((), i32),
                 jnp.zeros((buf_len,), f32), key,
@@ -341,11 +345,12 @@ def _build_kernel(n_batches: int, warmup: int, q_cap: int, a_cap: int,
                 jnp.zeros((), i32))
         if has_loss:
             init = init + tuple(jnp.zeros((), i32) for _ in range(6))
+        bm0 = (jnp.zeros((), f32), jnp.zeros((), f32), jnp.zeros((), i32))
         hists0 = (jnp.zeros((n_bins,), i32),)
         if use_sketch:
             hists0 = hists0 + (jnp.zeros((n_bins,), f32),)
-        (state, hists), _ = lax.scan(
-            superstep, (init, hists0),
+        (state, bm, hists), _ = lax.scan(
+            superstep, (init, bm0, hists0),
             jnp.arange(n_batches // _REBASE_EVERY) * _REBASE_EVERY)
         (_, _, _, lat_sum, lat_n, sum_b, sum_b2, sum_bs, n_meas,
          busy, span, _q_max, dropped) = state[:13]
@@ -362,6 +367,8 @@ def _build_kernel(n_batches: int, warmup: int, q_cap: int, a_cap: int,
             "n_batches": n_meas,
             "max_queue": _q_max,
             "dropped": dropped,
+            "lat_bm_m2": bm[1],
+            "lat_bm_n": bm[2],
             "hist": hists[0],
         }
         if use_sketch:
@@ -599,6 +606,8 @@ def sweep(grid: SweepGrid, *, n_batches: int = 3000,
             p50_median=float(np.nanmedian(p50)),
             p95_median=float(np.nanmedian(p95)),
             p99_median=float(np.nanmedian(p99)))
+    stderr, ci = variance.batch_means_stats(out["lat_bm_m2"],
+                                            out["lat_bm_n"])
     return SweepResult(
         grid=grid,
         mean_latency=np.asarray(out["mean_latency"], dtype=np.float64),
@@ -615,6 +624,8 @@ def sweep(grid: SweepGrid, *, n_batches: int = 3000,
         hist=np.asarray(out["hist"]),
         hist_sums=(np.asarray(out["hist_sums"], dtype=np.float64)
                    if sketch else None),
+        stderr=stderr, ci_halfwidth=ci,
+        n_blocks=np.asarray(out["lat_bm_n"]),
         **loss_kw,
     )
 
@@ -1043,19 +1054,22 @@ def _build_fleet_kernel(n_steps: int, warmup: int, k_max: int, q_cap: int,
 
         def superstep(state, x):
             i_base, k_sup = x
-            hists = state[-1]
-            state, (lats, inc) = lax.scan(
-                step, state[:-1],
+            *inner, bm_mean, bm_m2, bm_nb, hists = state
+            s0, n0 = inner[9], inner[10]
+            inner, (lats, inc) = lax.scan(
+                step, tuple(inner),
                 (i_base + jnp.arange(REBASE_EVERY),
                  random.split(k_sup, REBASE_EVERY)))
             hists = _ss.hist_update(hists, lats, inc, n_bins=n_bins,
                                     backend=ss_backend,
                                     sketch=use_sketch,
                                     hist_rows=hist_rows)
+            bm_mean, bm_m2, bm_nb = engine.welford_block(
+                (bm_mean, bm_m2, bm_nb), inner[9] - s0, inner[10] - n0)
             # rebase time to the last processed event (one buffer pass
             # per REBASE_EVERY events)
             (q, head, buf, in_service, committed, t_free, next_arr, rr,
-             clock, *accs) = state
+             clock, *accs) = inner
             metrics.tap_superstep(
                 tap, i_base // REBASE_EVERY, queue=jnp.sum(q),
                 jobs=accs[1], busy=accs[6], span=accs[7],
@@ -1064,7 +1078,8 @@ def _build_fleet_kernel(n_steps: int, warmup: int, k_max: int, q_cap: int,
                 abandoned=accs[13] if has_loss else 0)
             return (q, head, buf - clock, in_service, committed,
                     t_free - clock, next_arr - clock, rr,
-                    jnp.zeros((), f32), *accs, hists), None
+                    jnp.zeros((), f32), *accs, bm_mean, bm_m2, bm_nb,
+                    hists), None
 
         n_super = n_steps // REBASE_EVERY
         key, k0 = random.split(key)
@@ -1087,6 +1102,8 @@ def _build_fleet_kernel(n_steps: int, warmup: int, k_max: int, q_cap: int,
         if has_loss:
             # orbit, ov_n, ab_n, slo_n, fresh_n, retry_n
             init = init + tuple(jnp.zeros((), i32) for _ in range(6))
+        init = init + (jnp.zeros((), f32), jnp.zeros((), f32),
+                       jnp.zeros((), i32))              # batch-means bm
         hists0 = (jnp.zeros((n_bins,), i32),)            # hist (superstep)
         if use_sketch:
             hists0 = hists0 + (jnp.zeros((n_bins,), f32),)
@@ -1097,6 +1114,7 @@ def _build_fleet_kernel(n_steps: int, warmup: int, k_max: int, q_cap: int,
              random.split(key, n_super)))
         (lat_sum, lat_n, sum_b, sum_b2, sum_bs, n_meas, busy, span,
          q_max, dropped, jobs_rep) = state[9:20]
+        bm_m2, bm_nb = state[-3], state[-2]
         hists = state[-1]
 
         jobs = jnp.maximum(lat_n, 1).astype(f32)
@@ -1112,6 +1130,8 @@ def _build_fleet_kernel(n_steps: int, warmup: int, k_max: int, q_cap: int,
             "n_batches": n_meas,
             "max_queue": q_max,
             "dropped": dropped,
+            "lat_bm_m2": bm_m2,
+            "lat_bm_n": bm_nb,
             "hist": hists[0],
             "jobs_by_replica": jobs_rep,
         }
@@ -1322,6 +1342,8 @@ def fleet_sweep(grid: FleetGrid, *, n_steps: int = 6000,
             p50_median=float(np.nanmedian(p50)),
             p95_median=float(np.nanmedian(p95)),
             p99_median=float(np.nanmedian(p99)))
+    stderr, ci = variance.batch_means_stats(out["lat_bm_m2"],
+                                            out["lat_bm_n"])
     return FleetResult(
         grid=grid,
         mean_latency=np.asarray(out["mean_latency"], dtype=np.float64),
@@ -1338,6 +1360,8 @@ def fleet_sweep(grid: FleetGrid, *, n_steps: int = 6000,
         hist=np.asarray(out["hist"]),
         hist_sums=(np.asarray(out["hist_sums"], dtype=np.float64)
                    if sketch else None),
+        stderr=stderr, ci_halfwidth=ci,
+        n_blocks=np.asarray(out["lat_bm_n"]),
         jobs_by_replica=np.asarray(out["jobs_by_replica"]),
         **loss_kw,
     )

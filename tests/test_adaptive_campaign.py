@@ -1,0 +1,173 @@
+"""Adaptive campaign mode (campaign(mode="adaptive")): the pilot→
+allocate→refine scheduler's determinism, resume, accounting, and
+precision contracts, plus the operating-point extraction helper.
+
+The load-bearing witness is degeneracy: with an unreachable target
+every point keeps the pilot allocation, the refine schedule compacts
+to contiguous global-order chunks, and the whole adaptive run must be
+BITWISE equal to a plain pipelined campaign at the pilot length — the
+chunk-invariance contract carried into the two-phase scheduler.
+"""
+import numpy as np
+import pytest
+
+from repro.core.analytic import LinearServiceModel
+from repro.core.campaign import campaign, operating_points
+from repro.core.grid import SweepGrid
+from repro.core.sweep import sweep
+
+V100 = LinearServiceModel(alpha=0.1438, tau0=1.8874)
+
+PILOT = 64
+N_MAX = 512
+
+
+def _grid(n=24):
+    """det bulk + exp tail: the exp cells carry the variance, so a
+    reachable target splits the allocation tiers."""
+    fr = np.linspace(0.2, 0.7, n)
+    b = np.where(np.arange(n) % 2 == 0, 4, 8).astype(np.int32)
+    lam = fr * b / (V100.alpha * b + V100.tau0)
+    dist = np.where(np.arange(n) < n - 6, 0, 1).astype(np.int32)
+    return SweepGrid.from_points(lam, V100.alpha, V100.tau0, b_max=b,
+                                 dist=dist)
+
+
+@pytest.fixture(scope="module")
+def adaptive_run():
+    return campaign(_grid(), chunk_size=8, mode="adaptive",
+                    n_batches=N_MAX, pilot=PILOT, target_ci=0.5,
+                    safety=4.0, seed=11, keep_point_stats=True)
+
+
+class TestFixedAllocationDegeneracy:
+    def test_uniform_adaptive_equals_pipelined_at_pilot(self):
+        g = _grid()
+        a = campaign(g, chunk_size=8, mode="adaptive", n_batches=N_MAX,
+                     pilot=PILOT, target_ci=1e9, seed=11)
+        b = campaign(g, chunk_size=8, n_batches=PILOT, seed=11)
+        c = campaign(g, chunk_size=len(g), n_batches=PILOT, seed=11)
+        assert a.fingerprint() == b.fingerprint() == c.fingerprint()
+        # refine re-ran every point once at the pilot tier, so the
+        # two phases each simulated the pipelined run's job count
+        assert a.pilot_jobs == int(b.totals["jobs"])
+        assert a.simulated_jobs == 2 * b.totals["jobs"]
+
+
+class TestDeterminismAndResume:
+    def test_repeat_run_is_bitwise_identical(self, adaptive_run):
+        again = campaign(_grid(), chunk_size=8, mode="adaptive",
+                         n_batches=N_MAX, pilot=PILOT, target_ci=0.5,
+                         safety=4.0, seed=11, keep_point_stats=True)
+        assert again.fingerprint() == adaptive_run.fingerprint()
+        assert np.array_equal(again.point_stats["alloc"],
+                              adaptive_run.point_stats["alloc"])
+
+    def test_stop_and_resume_matches_uninterrupted(self, adaptive_run,
+                                                   tmp_path):
+        kw = dict(chunk_size=8, mode="adaptive", n_batches=N_MAX,
+                  pilot=PILOT, target_ci=0.5, safety=4.0, seed=11,
+                  out_dir=str(tmp_path), checkpoint_every=1)
+        part = campaign(_grid(), stop_after_chunks=1, **kw)
+        assert not part.completed
+        full = campaign(_grid(), resume=True, **kw)
+        assert full.completed
+        assert full.fingerprint() == adaptive_run.fingerprint()
+
+
+class TestPrecisionAndAccounting:
+    def test_refinement_tightens_the_pilot_max_ci(self, adaptive_run):
+        # the run is deterministic given the seed, so the achieved
+        # ratio is a fixed number (~0.25 here): the capped 8× tier
+        # ladder buys about the CLT √8 ≈ 2.8× tightening
+        pilot_max = float(np.nanmax(adaptive_run.point_stats["pilot_ci"]))
+        assert adaptive_run.max_ci_halfwidth <= 0.5 * pilot_max
+
+    def test_allocation_tiers_are_pow2_pilot_multiples(self, adaptive_run):
+        alloc = adaptive_run.point_stats["alloc"]
+        assert alloc.min() >= PILOT and alloc.max() <= N_MAX
+        k = alloc // PILOT
+        assert np.all((k & (k - 1)) == 0)        # power of two
+        assert alloc.max() > PILOT               # exp tail did refine
+
+    def test_simulated_jobs_counts_both_phases(self, adaptive_run):
+        assert (adaptive_run.simulated_jobs
+                == adaptive_run.pilot_jobs
+                + int(adaptive_run.acc["jobs"]))
+        assert adaptive_run.pilot_jobs > 0
+
+    def test_pipelined_max_ci_matches_kernel_halfwidths(self):
+        g = _grid()
+        r = campaign(g, chunk_size=8, n_batches=PILOT, seed=11)
+        direct = sweep(g, n_batches=PILOT, seed=11)
+        want = float(np.nanmax(np.nan_to_num(direct.ci_halfwidth)))
+        assert r.max_ci_halfwidth == want
+
+
+class TestValidation:
+    def test_adaptive_params_require_adaptive_mode(self):
+        with pytest.raises(ValueError, match="adaptive"):
+            campaign(_grid(), chunk_size=8, n_batches=64, target_ci=0.5)
+
+    def test_exactly_one_allocation_policy(self):
+        for extra in (dict(), dict(target_ci=0.5, refine_budget=100)):
+            with pytest.raises(ValueError, match="exactly one"):
+                campaign(_grid(), chunk_size=8, mode="adaptive",
+                         n_batches=64, pilot=32, **extra)
+
+    def test_metrics_tap_rejected(self):
+        with pytest.raises(ValueError, match="metrics_tap"):
+            campaign(_grid(), chunk_size=8, mode="adaptive",
+                     n_batches=64, pilot=32, target_ci=0.5,
+                     metrics_tap=lambda *a: None)
+
+    def test_pilot_must_fit_budget(self):
+        with pytest.raises(ValueError, match="pilot"):
+            campaign(_grid(), chunk_size=8, mode="adaptive",
+                     n_batches=64, pilot=128, target_ci=0.5)
+
+
+class TestOperatingPoints:
+    def _grid_and_lat(self):
+        # 2 slices × 3 λ rungs, exactly checkable by hand
+        g = SweepGrid.from_points(
+            [1.0, 2.0, 3.0, 1.0, 2.0, 3.0], V100.alpha, V100.tau0,
+            b_max=[4, 4, 4, 16, 16, 16], dist="det")
+        lat = np.array([3.0, 6.0, 12.0, 2.0, 4.0, 8.0])
+        return g, lat
+
+    @staticmethod
+    def _keys(g):
+        # slice keys are .item() values of the grid's own (f32) axes
+        a = np.asarray(g.alpha)[0].item()
+        t = np.asarray(g.tau0)[0].item()
+        return (a, t, 4), (a, t, 16)
+
+    def test_max_lambda_per_slice(self):
+        g, lat = self._grid_and_lat()
+        out = operating_points(g, lat, slo=6.5)
+        k4, k16 = self._keys(g)
+        assert out[k4] == {"gidx": 1, "lam": 2.0, "mean_latency": 6.0}
+        assert out[k16] == {"gidx": 4, "lam": 2.0, "mean_latency": 4.0}
+
+    def test_ci_bound_is_conservative_and_nan_never_passes(self):
+        g, lat = self._grid_and_lat()
+        hw = np.array([0.0, 1.0, 0.0, np.nan, 0.0, 0.0])
+        lat2 = lat.copy()
+        lat2[3] = np.nan
+        out = operating_points(g, lat2, slo=6.5, ci_halfwidth=hw)
+        k4, k16 = self._keys(g)
+        # gidx 1 bound = 7.0 > slo, drops to gidx 0; NaN mean at
+        # gidx 3 never qualifies even with NaN halfwidth → gidx 4 wins
+        assert out[k4]["gidx"] == 0
+        assert out[k16]["gidx"] == 4
+
+    def test_infeasible_slice_is_none(self):
+        g, lat = self._grid_and_lat()
+        out = operating_points(g, lat, slo=1.0)
+        assert all(v is None for v in out.values())
+
+    def test_length_mismatch_raises(self):
+        g, _ = self._grid_and_lat()
+        with pytest.raises(ValueError, match="entries"):
+            operating_points(g, np.zeros(3), slo=1.0)

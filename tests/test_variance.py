@@ -1,0 +1,238 @@
+"""Adaptive-precision statistics (repro.core.variance): the host-side
+batch-means/allocation/control-variate layer and its kernel contracts.
+
+Three layers of evidence:
+
+- pure-numpy unit tests for every formula (batch-means stderr, pow2
+  cycle allocation, β̂ clipping, CV adjustment, paired differencing);
+- the CRN key contracts the docstrings promise: a det-service grid IS
+  its own companion (bitwise — same fold_in keys, same dispatch), and
+  the paired A−B sd across a seed ladder respects the conservative
+  √(s_a²+s_b²) bound;
+- statistical coverage: the nominal-95% regenerative CIs shipped by
+  the sweep and gen kernels must cover the exact truncated-chain mean
+  on a seed ladder.  Batch means over finitely many blocks slightly
+  underestimates the variance of a correlated sequence, so the
+  acceptance band is tolerance-banded below 0.95 (empirically ~0.87 ±
+  0.06 at 30 seeds for both kernels at these operating points — see
+  docs/theory.md §"Adaptive precision"); a band violation means the
+  carry accumulators, not the tolerance, broke.
+"""
+import math
+from types import SimpleNamespace
+
+import numpy as np
+import pytest
+
+from repro.core import variance
+from repro.core.analytic import LinearServiceModel
+from repro.core.continuous_sim import GenServiceModel
+from repro.core.gen_sweep import gen_sweep
+from repro.core.grid import FleetGrid, GenGrid, SweepGrid
+from repro.core.markov import solve
+from repro.core.sweep import fleet_sweep, sweep
+from repro.core.variance import (Z95, allocate_cycles, batch_means_stats,
+                                 cv_adjust, crn_pair_diff, estimate_beta)
+
+V100 = LinearServiceModel(alpha=0.1438, tau0=1.8874)
+
+
+# ---------------------------------------------------------------------------
+# pure formula layer
+# ---------------------------------------------------------------------------
+class TestBatchMeans:
+    def test_matches_manual_welford(self):
+        rng = np.random.default_rng(0)
+        x = rng.normal(size=17)
+        m2 = ((x - x.mean()) ** 2).sum()
+        se, hw = batch_means_stats(m2, len(x))
+        want = math.sqrt(x.var(ddof=1) / len(x))
+        assert se == pytest.approx(want, rel=1e-12)
+        assert hw == pytest.approx(Z95 * want, rel=1e-12)
+
+    def test_fewer_than_two_blocks_is_nan(self):
+        se, hw = batch_means_stats([0.0, 0.5, 3.0], [0, 1, 2])
+        assert np.isnan(se[:2]).all() and np.isnan(hw[:2]).all()
+        assert np.isfinite(se[2]) and hw[2] == pytest.approx(Z95 * se[2])
+
+    def test_zero_m2_gives_zero_stderr(self):
+        se, hw = batch_means_stats(0.0, 8)
+        assert se == 0.0 and hw == 0.0
+
+
+class TestAllocateCycles:
+    def test_target_mode_pow2_quantized_and_capped(self):
+        # ci/target = 2 ⇒ factor 4 ⇒ exactly pilot·4 (no overshoot);
+        # ci/target = 2.1 ⇒ factor 4.41 ⇒ next tier pilot·8; a huge
+        # ratio hits the n_max ceiling
+        alloc = allocate_cycles([2.0, 2.1, 100.0], 128, n_max=2048,
+                                target_ci=1.0)
+        assert alloc.tolist() == [512, 1024, 2048]
+
+    def test_converged_and_nan_points_stay_at_pilot(self):
+        alloc = allocate_cycles([0.5, np.nan, 0.0], 128, n_max=2048,
+                                target_ci=1.0)
+        assert alloc.tolist() == [128, 128, 128]
+
+    def test_safety_pads_the_factor(self):
+        base = allocate_cycles([1.0], 128, n_max=4096, target_ci=1.0)
+        padded = allocate_cycles([1.0], 128, n_max=4096, target_ci=1.0,
+                                 safety=4.0)
+        assert base.tolist() == [128] and padded.tolist() == [512]
+
+    def test_neyman_allocates_proportionally(self):
+        alloc = allocate_cycles([1.0, 3.0, np.nan], 100, n_max=10_000,
+                                refine_budget=400)
+        # extra = 400·[1,3,0]/4 = [100, 300] ⇒ factors [2, 4]
+        assert alloc.tolist() == [200, 400, 100]
+
+    def test_exactly_one_policy_required(self):
+        with pytest.raises(ValueError, match="exactly one"):
+            allocate_cycles([1.0], 10, n_max=100)
+        with pytest.raises(ValueError, match="exactly one"):
+            allocate_cycles([1.0], 10, n_max=100, target_ci=1.0,
+                            refine_budget=5)
+
+    def test_bounds_validation(self):
+        with pytest.raises(ValueError, match="pilot"):
+            allocate_cycles([1.0], 0, n_max=100, target_ci=1.0)
+        with pytest.raises(ValueError, match="pilot"):
+            allocate_cycles([1.0], 200, n_max=100, target_ci=1.0)
+        with pytest.raises(ValueError, match="target_ci"):
+            allocate_cycles([1.0], 10, n_max=100, target_ci=0.0)
+
+
+class TestControlVariateFormulas:
+    def test_beta_is_clipped_stderr_ratio(self):
+        beta = estimate_beta([2.0, 9.0, 1.0, np.nan], [1.0, 2.0, 0.0, 1.0])
+        assert beta[0] == 2.0          # ratio
+        assert beta[1] == 2.0          # clipped at default 2
+        assert beta[2] == 1.0          # sc == 0 ⇒ fallback
+        assert beta[3] == 1.0          # NaN ⇒ fallback
+
+    def test_cv_adjust_default_beta_one(self):
+        out = cv_adjust([10.0, 10.0], [4.0, 3.0], [3.0, 3.0])
+        assert out.tolist() == [9.0, 10.0]
+
+    def test_cv_adjust_vector_beta(self):
+        out = cv_adjust(10.0, 4.0, 3.0, beta=[0.5, 2.0])
+        assert out.tolist() == [9.5, 8.0]
+
+    def test_pair_diff_formula_and_shape_guard(self):
+        a = SimpleNamespace(mean_latency=np.array([3.0, 5.0]),
+                            stderr=np.array([0.3, 0.4]))
+        b = SimpleNamespace(mean_latency=np.array([2.0, 1.0]),
+                            stderr=np.array([0.4, 0.3]))
+        d = crn_pair_diff(a, b)
+        assert d["diff"].tolist() == [1.0, 4.0]
+        assert d["stderr"] == pytest.approx([0.5, 0.5])
+        assert d["halfwidth"] == pytest.approx([Z95 * 0.5] * 2)
+        short = SimpleNamespace(mean_latency=np.array([1.0]),
+                                stderr=np.array([0.1]))
+        with pytest.raises(ValueError, match="equal point counts"):
+            crn_pair_diff(a, short)
+
+
+# ---------------------------------------------------------------------------
+# CRN key contracts against the kernels
+# ---------------------------------------------------------------------------
+class TestCompanionContracts:
+    def test_det_grid_is_its_own_companion_bitwise(self):
+        # companion_grid only rewrites the dist axis; for an already-
+        # deterministic grid the companion dispatch must be THE SAME
+        # dispatch — same fold_in keys, bitwise-equal results.  This
+        # pins the key contract cv_adjust's CRN coupling relies on.
+        g = SweepGrid.from_points([2.0, 3.0], V100.alpha, V100.tau0,
+                                  b_max=8, dist="det")
+        comp = variance.companion_grid(g)
+        assert np.array_equal(np.asarray(comp.dist), np.asarray(g.dist))
+        a = sweep(g, n_batches=256, seed=5)
+        b = sweep(comp, n_batches=256, seed=5)
+        assert np.array_equal(a.mean_latency, b.mean_latency)
+        assert np.array_equal(a.ci_halfwidth, b.ci_halfwidth,
+                              equal_nan=True)
+        # with a perfectly coupled companion and β = 1, the adjusted
+        # estimate collapses onto the reference exactly
+        ref, exact = variance.companion_reference(comp)
+        assert exact.all()
+        adj = cv_adjust(a.mean_latency, b.mean_latency, ref)
+        assert adj == pytest.approx(ref)
+
+    def test_companion_reference_chain_vs_phi(self):
+        from repro.core.analytic import phi
+
+        g = SweepGrid.from_points([1.0, 2.5], V100.alpha, V100.tau0,
+                                  b_max=[4, 0], dist="det")
+        ref, exact = variance.companion_reference(g)
+        assert exact.tolist() == [True, False]
+        assert ref[0] == pytest.approx(
+            solve(1.0, V100, b_max=4).mean_latency)
+        assert ref[1] == pytest.approx(phi(2.5, V100.alpha, V100.tau0))
+
+    def test_paired_sd_within_conservative_bound(self):
+        # jsq-vs-random at shared seeds: the empirical sd of the paired
+        # difference across a seed ladder must respect the conservative
+        # √(s_a²+s_b²) bound crn_pair_diff reports (positively coupled
+        # arms can only shrink the true sd).  1.3 covers the χ² noise
+        # of a 6-seed sd estimate.
+        lams = [rho / V100.alpha for rho in (0.3, 0.5, 0.7)]
+        kw = dict(ks=[4])
+        gj = FleetGrid.from_product(lams, [V100.alpha], [V100.tau0],
+                                    routings=("jsq",), **kw)
+        gr = FleetGrid.from_product(lams, [V100.alpha], [V100.tau0],
+                                    routings=("random",), **kw)
+        paired, bounds = [], []
+        for s in range(6):
+            a = fleet_sweep(gj, n_steps=2000, a_cap=32, hist_every=4,
+                            seed=s)
+            b = fleet_sweep(gr, n_steps=2000, a_cap=32, hist_every=4,
+                            seed=s)
+            d = crn_pair_diff(a, b)
+            paired.append(d["diff"])
+            bounds.append(d["stderr"])
+        sd = np.asarray(paired).std(axis=0, ddof=1)
+        bound = np.mean(bounds, axis=0)
+        assert sd.sum() <= 1.3 * bound.sum()
+
+
+# ---------------------------------------------------------------------------
+# statistical coverage of the shipped CIs
+# ---------------------------------------------------------------------------
+class TestCoverage:
+    def test_sweep_ci_covers_exact_chain_mean(self):
+        lam = 0.5 * 4 / (V100.alpha * 4 + V100.tau0)
+        exact = solve(lam, V100, b_max=4).mean_latency
+        g = SweepGrid.from_points(lam, V100.alpha, V100.tau0, b_max=4,
+                                  dist="det")
+        hits, errs = 0, []
+        for s in range(30):
+            r = sweep(g, n_batches=2048, seed=s)
+            m, hw = float(r.mean_latency[0]), float(r.ci_halfwidth[0])
+            assert hw > 0
+            assert float(r.stderr[0]) == pytest.approx(hw / Z95)
+            hits += abs(m - exact) <= hw
+            errs.append(m - exact)
+        assert hits / 30 >= 0.75          # empirically 0.90
+        # the ladder mean is unbiased well beyond the per-seed CI
+        assert abs(np.mean(errs)) <= exact * 0.01
+
+    def test_gen_ci_covers_equivalent_law_chain_mean(self):
+        model = GenServiceModel(alpha_decode=0.14, tau0_decode=1.9,
+                                alpha_prefill=0.035, tau0_prefill=1.9)
+        gen_tok, prompt, cap = 32, 128, 64
+        alpha_eq = prompt * model.alpha_prefill + gen_tok * model.alpha_decode
+        tau0_eq = model.tau0_prefill + gen_tok * model.tau0_decode
+        lam = 0.5 / alpha_eq
+        exact = solve(lam, LinearServiceModel(alpha_eq, tau0_eq),
+                      b_max=cap).mean_latency
+        g = GenGrid.from_points(
+            lam, model.alpha_decode, model.tau0_decode,
+            model.alpha_prefill, model.tau0_prefill, prompt_len=prompt,
+            gen_tokens=gen_tok, max_active=cap, discipline="static")
+        hits = 0
+        for s in range(30):
+            r = gen_sweep(g, n_steps=8192, q_cap=256, a_cap=64, seed=s)
+            assert float(r.ci_halfwidth[0]) > 0
+            hits += (abs(float(r.mean_latency[0]) - exact)
+                     <= float(r.ci_halfwidth[0]))
+        assert hits / 30 >= 0.70          # empirically 0.87
