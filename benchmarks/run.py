@@ -50,6 +50,19 @@ PAYLOAD_GATES = (
     ("adaptive", "adaptive/job_savings", "buffer_dropped",
      lambda v: int(v) == 0,
      "buffer drops invalidate the matched-precision comparison"),
+    ("availability", "availability/fleet_dispatch", "buffer_dropped",
+     lambda v: int(v) == 0,
+     "queue_capacity headroom must absorb repair backlogs without "
+     "buffer drops (satellite S1's sizing contract)"),
+    ("availability", "availability/chain_crosscheck", "mean_rel_err",
+     lambda v: float(v) < 0.03,
+     "failure-regime MC drifted from the completion-time chain"),
+    ("availability", "availability/chain_crosscheck", "max_abs_z",
+     lambda v: float(v) < 3.5,
+     "a chain-crosscheck cell deviates beyond its Monte Carlo error"),
+    ("availability", "availability/mtbf_inf_reduction", "bitwise_equal",
+     lambda v: bool(v),
+     "MTBF=inf points must be bitwise identical to the base kernel"),
 )
 
 
@@ -220,8 +233,8 @@ def main() -> None:
         sys.exit("--compare needs the fresh BENCH JSONs; "
                  "drop --no-json")
 
-    from benchmarks import (adaptive, backpressure, campaign,
-                            continuous, fig4_latency_bound,
+    from benchmarks import (adaptive, availability, backpressure,
+                            campaign, continuous, fig4_latency_bound,
                             fig5_utilization, fig6_energy,
                             fig7_tradeoff, fig8_finite_bmax,
                             fig9_batch_times, fig11_served_latency,
@@ -256,6 +269,9 @@ def main() -> None:
             n_steps=1_500 if args.quick else 4_000),
         "backpressure": lambda: backpressure.run(
             n_batches=1_200 if args.quick else 3_000),
+        "availability": lambda: availability.run(
+            n_steps=2_000 if args.quick else 6_000,
+            chain_batches=3_000 if args.quick else 6_000),
         "roofline": lambda: roofline.run(),
         "superstep": lambda: superstep.run(
             n_batches=1_024 if args.quick else 3_000,

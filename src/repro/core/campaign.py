@@ -87,6 +87,38 @@ contract), leaving the other chunks sharded; bitwise shard invariance
 plus the tap's bitwise neutrality keep tapped and untapped campaigns
 identical.  Each completed chunk also streams a ``chunk`` record
 through the tap.
+
+Fault tolerance: a million-point campaign runs long enough to meet
+real failures — a flaky device dispatch, a kernel that returns NaN
+under an extreme parameter corner, a checkpoint torn by process
+death mid-write.  Three mechanisms, each with a seeded deterministic
+injection hook (``fault_plan=FaultPlan(...)``) so the recovery paths
+are TESTED, not trusted:
+
+- **Dispatch retry.**  A failed chunk dispatch (injected
+  ``CampaignFault`` or an XLA ``RuntimeError``) is retried up to
+  ``fault_retries`` times with exponential backoff; the attempt
+  number enters the injection hash, so retries re-roll.  A chunk
+  that exhausts its retries is *quarantined* — skipped, recorded in
+  the manifest and its row, never silently dropped — and the
+  campaign continues.
+- **Non-finite fold guard.**  The device fold masks any point whose
+  float statistics are non-NaN/inf-free out of the accumulator
+  (bitwise neutral when everything is finite), counts it in
+  ``quarantined_points``, and reports per-chunk counts in the
+  summary; the driver records affected chunks in the manifest.  A
+  poisoned chunk can never silently corrupt the campaign sums.
+- **Checkpoint generations.**  ``checkpoint()`` records the
+  accumulator's sha256 in the manifest and rotates the previous
+  *verified-good* accumulator to ``accumulator.prev.npz``.  Resume
+  validates the hash; a corrupt/truncated current generation falls
+  back to the previous one (replaying the chunks in between), and a
+  fully lost store restarts from chunk 0 — in every case the
+  resumed campaign is bitwise-identical to an uninterrupted one,
+  because the fold sequence is deterministic.  ``verify_resume()``
+  is the packaged witness: run, kill mid-flight (``CampaignKilled``),
+  resume, and assert fingerprint parity against an uninterrupted
+  reference.
 """
 from __future__ import annotations
 
@@ -107,15 +139,17 @@ from repro.core.hist import (SKETCH_BINS, hist_edges, hist_percentiles,
 from repro.core.variance import Z95, allocate_cycles, batch_means_stats
 
 __all__ = ["campaign", "plan_chunks", "operating_points",
-           "CampaignResult", "DEFAULT_TOP_K"]
+           "CampaignResult", "DEFAULT_TOP_K",
+           "FaultPlan", "CampaignFault", "CampaignKilled",
+           "verify_resume"]
 
-MANIFEST_VERSION = 1
+MANIFEST_VERSION = 2
 DEFAULT_TOP_K = 16
 
 # accumulator keys, in the canonical (fingerprint/checkpoint) order
 _ACC_INT = ("points", "jobs", "batches", "buffer_dropped",
             "overflow_dropped", "abandoned", "n_in_slo", "n_fresh",
-            "n_retry")
+            "n_retry", "quarantined_points")
 _ACC_F64 = ("sum_latency_jobs", "sum_latency", "sum_util", "sum_batch")
 _ACC_KEYS = (("hist", "hist_sums") + _ACC_INT + _ACC_F64
              + ("max_ci",)
@@ -128,6 +162,86 @@ _DEFAULT_CYCLES = {"sweep": 3000, "fleet": 6000, "gen": 4096}
 # allocation quantum per kind: sweep/fleet supersteps are 32 steps,
 # gen_plan rounds n_steps up to its 2048-step bucket
 _CYCLE_QUANTUM = {"sweep": 32, "fleet": 32, "gen": 2048}
+
+
+# ---------------------------------------------------------------------------
+# fault injection
+# ---------------------------------------------------------------------------
+
+class CampaignFault(RuntimeError):
+    """An injected (or injectable) per-chunk failure — dispatch
+    errors raised by a ``FaultPlan`` are instances of this, and the
+    driver's retry loop treats real XLA ``RuntimeError``s the same
+    way."""
+
+
+class CampaignKilled(RuntimeError):
+    """Raised by ``_kill_after_chunks`` — a deterministic stand-in
+    for SIGKILL mid-campaign, AFTER the chunk's row (and any due
+    checkpoint) hit disk but with later chunks unpersisted.  Carries
+    ``chunks_drained``."""
+
+    def __init__(self, chunks_drained: int):
+        super().__init__(f"campaign killed after draining "
+                         f"{chunks_drained} chunks (injected)")
+        self.chunks_drained = chunks_drained
+
+
+_FAULT_KINDS = ("dispatch", "nan", "corrupt")
+
+
+@dataclass(frozen=True)
+class FaultPlan:
+    """Seeded, deterministic fault schedule for a campaign.
+
+    Each potential injection site draws a uniform from
+    ``sha256(seed, kind, chunk, attempt)`` — a pure function of the
+    site, so an interrupted-and-resumed campaign replays *exactly*
+    the faults the uninterrupted one saw (the resume-parity witness
+    depends on this), and retry attempt ``a+1`` re-rolls instead of
+    deterministically refailing.  ``max_per_chunk`` caps injections
+    per (chunk, kind): once ``attempt`` reaches it the roll is
+    forced clean, so a plan with ``p_dispatch=1.0`` still lets a
+    sufficiently-retried chunk through.
+
+    - ``p_dispatch``: chunk dispatch raises ``CampaignFault``
+      (exercises the bounded-retry-with-backoff path).
+    - ``p_nan``: the chunk's fold inputs are NaN-poisoned
+      (exercises the fold's non-finite quarantine guard).
+    - ``p_corrupt``: the checkpoint accumulator write is truncated
+      (exercises sha validation + generation fallback on resume).
+    """
+
+    seed: int = 0
+    p_dispatch: float = 0.0
+    p_nan: float = 0.0
+    p_corrupt: float = 0.0
+    max_per_chunk: int = 2
+
+    def __post_init__(self):
+        for k in ("p_dispatch", "p_nan", "p_corrupt"):
+            p = getattr(self, k)
+            if not 0.0 <= p <= 1.0:
+                raise ValueError(f"FaultPlan.{k}={p} not in [0, 1]")
+
+    def roll(self, kind: str, chunk_idx: int, attempt: int = 0) -> bool:
+        """True iff the plan injects a ``kind`` fault at this site."""
+        if kind not in _FAULT_KINDS:
+            raise ValueError(f"unknown fault kind {kind!r}")
+        p = getattr(self, f"p_{kind}")
+        if p <= 0.0 or attempt >= self.max_per_chunk:
+            return False
+        h = hashlib.sha256(
+            f"faultplan:{self.seed}:{kind}:{chunk_idx}:{attempt}"
+            .encode()).digest()
+        return int.from_bytes(h[:8], "big") < p * 2.0 ** 64
+
+    def to_config(self) -> dict:
+        return {"seed": int(self.seed),
+                "p_dispatch": float(self.p_dispatch),
+                "p_nan": float(self.p_nan),
+                "p_corrupt": float(self.p_corrupt),
+                "max_per_chunk": int(self.max_per_chunk)}
 
 
 # ---------------------------------------------------------------------------
@@ -291,6 +405,18 @@ def _build_fold(m: int, n_bins: int, k_top: int, has_loss: bool,
             "batch": chunk["mean_batch"].astype(f64),
             "lam": chunk["lam"].astype(f64),
         }
+        # the non-finite quarantine guard: a point whose float
+        # statistics carry a NaN/inf (kernel pathology or injected
+        # poison) must never reach the f64 sums — one NaN would
+        # poison the whole campaign irreversibly.  Bitwise neutral
+        # when everything is finite: the mask then equals `valid`.
+        finite = (jnp.isfinite(xs["lat"]) & jnp.isfinite(xs["util"])
+                  & jnp.isfinite(xs["batch"]) & jnp.isfinite(xs["lam"])
+                  & jnp.isfinite(chunk["lat_bm_m2"].astype(f64)))
+        if has_sums:
+            finite = finite & jnp.all(
+                jnp.isfinite(chunk["hist_sums"].astype(f64)), axis=-1)
+        xs["finite"] = finite
         if has_sums:
             xs["hist_sums"] = chunk["hist_sums"].astype(f64)
         if has_loss:
@@ -299,12 +425,22 @@ def _build_fold(m: int, n_bins: int, k_top: int, has_loss: bool,
                 xs[k] = chunk[k].astype(i64)
 
         def body(a, x):
-            w = x["valid"].astype(i64)
-            wf = x["valid"].astype(f64)
+            ok = x["valid"] & x["finite"]
+            w = ok.astype(i64)
+            wf = ok.astype(f64)
+            # sanitize before arithmetic: NaN * 0.0 is NaN, so the
+            # usual mask-by-multiplication is not enough
+            lat = jnp.where(ok, x["lat"], 0.0)
+            util = jnp.where(ok, x["util"], 0.0)
+            batch = jnp.where(ok, x["batch"], 0.0)
             a = dict(a)
+            a["quarantined_points"] = (a["quarantined_points"]
+                                       + (x["valid"]
+                                          & ~x["finite"]).astype(i64))
             a["hist"] = a["hist"] + x["hist"] * w
             if has_sums:
-                a["hist_sums"] = a["hist_sums"] + x["hist_sums"] * wf
+                a["hist_sums"] = (a["hist_sums"]
+                                  + jnp.where(ok, x["hist_sums"], 0.0))
             a["points"] = a["points"] + w
             a["jobs"] = a["jobs"] + x["n_jobs"] * w
             a["batches"] = a["batches"] + x["batches"] * w
@@ -327,22 +463,22 @@ def _build_fold(m: int, n_bins: int, k_top: int, has_loss: bool,
                 gfrac = jnp.asarray(1.0, f64)
             jobs_f = x["n_jobs"].astype(f64)
             a["sum_latency_jobs"] = (a["sum_latency_jobs"]
-                                     + x["lat"] * jobs_f * wf)
-            a["sum_latency"] = a["sum_latency"] + x["lat"] * wf
-            a["sum_util"] = a["sum_util"] + x["util"] * wf
-            a["sum_batch"] = a["sum_batch"] + x["batch"] * wf
+                                     + lat * jobs_f * wf)
+            a["sum_latency"] = a["sum_latency"] + lat * wf
+            a["sum_util"] = a["sum_util"] + util * wf
+            a["sum_batch"] = a["sum_batch"] + batch * wf
 
             # top-K retention: replace the current minimum on a strict
             # improvement only, so earlier global indices win ties —
             # the same outcome in every chunking (sequential fold)
             def top(vals, idxs, v):
                 am = jnp.argmin(vals)
-                repl = x["valid"] & (v > vals[am])
+                repl = ok & (v > vals[am])
                 return (jnp.where(repl, vals.at[am].set(v), vals),
                         jnp.where(repl, idxs.at[am].set(x["gidx"]),
                                   idxs))
             a["top_lat_val"], a["top_lat_idx"] = top(
-                a["top_lat_val"], a["top_lat_idx"], x["lat"])
+                a["top_lat_val"], a["top_lat_idx"], lat)
             a["top_good_val"], a["top_good_idx"] = top(
                 a["top_good_val"], a["top_good_idx"],
                 x["lam"] * gfrac)
@@ -358,13 +494,14 @@ def _build_fold(m: int, n_bins: int, k_top: int, has_loss: bool,
         m2 = chunk["lat_bm_m2"].astype(f64)
         ci_hw = Z95 * jnp.sqrt(m2 / jnp.maximum(nb - 1.0, 1.0)
                                / jnp.maximum(nb, 1.0))
-        ci_hw = jnp.where(valid & (nb >= 2.0), ci_hw, 0.0)
+        ci_hw = jnp.where(valid & finite & (nb >= 2.0), ci_hw, 0.0)
         acc["max_ci"] = jnp.maximum(acc["max_ci"], jnp.max(ci_hw))
-        w = valid.astype(i64)
+        w = (valid & finite).astype(i64)
         summary = {
             "points": jnp.sum(w),
             "jobs": jnp.sum(chunk["n_jobs"].astype(i64) * w),
             "buffer_dropped": jnp.sum(chunk["dropped"].astype(i64) * w),
+            "quarantined": jnp.sum((valid & ~finite).astype(i64)),
         }
         if has_loss:
             summary["overflow_dropped"] = jnp.sum(
@@ -411,6 +548,9 @@ class CampaignResult:
     pilot_jobs: int = 0                   # measured jobs spent on triage
     point_stats: Optional[Dict[str, np.ndarray]] = field(
         default=None, repr=False)         # per-point host arrays (O(n))
+    # -- fault accounting --------------------------------------------------
+    quarantined_chunks: List[dict] = field(default_factory=list)
+    fault_events: List[dict] = field(default_factory=list)
 
     @property
     def hist(self) -> np.ndarray:
@@ -452,6 +592,17 @@ class CampaignResult:
         blocks folds in.  Adaptive campaigns drive this under
         ``target_ci``."""
         return float(self.acc["max_ci"])
+
+    @property
+    def quarantined_points(self) -> int:
+        """Points whose statistics were masked out of the fold by the
+        non-finite guard (plus any whole-chunk dispatch quarantines
+        recorded in ``quarantined_chunks``).  A campaign with faults
+        reports what it lost — it never silently drops work."""
+        n = int(self.acc["quarantined_points"])
+        n += sum(int(q["points"]) for q in self.quarantined_chunks
+                 if q.get("reason") == "dispatch")
+        return n
 
     @property
     def simulated_jobs(self) -> int:
@@ -515,13 +666,21 @@ def _atomic_write(path: Path, data: bytes) -> None:
 
 
 class _Store:
-    """manifest.json + accumulator.npz + chunks.jsonl under out_dir."""
+    """manifest.json + accumulator.npz + chunks.jsonl under out_dir.
+
+    Checkpoints are integrity-checked and two-generation: the
+    manifest records the accumulator's sha256, and the previous
+    *verified-good* accumulator is rotated to ``accumulator.prev.npz``
+    before each write.  ``load_acc_checked`` walks current → prev →
+    fresh, so a torn/corrupted write costs recomputed chunks, never a
+    wrong (or unstartable) resume."""
 
     def __init__(self, out_dir: Path):
         self.dir = Path(out_dir)
         self.dir.mkdir(parents=True, exist_ok=True)
         self.manifest_path = self.dir / "manifest.json"
         self.acc_path = self.dir / "accumulator.npz"
+        self.prev_path = self.dir / "accumulator.prev.npz"
         self.rows_path = self.dir / "chunks.jsonl"
         self._rows_fh = None
 
@@ -533,6 +692,56 @@ class _Store:
     def load_acc(self) -> Dict[str, np.ndarray]:
         with np.load(self.acc_path) as z:
             return {k: np.asarray(z[k]) for k in z.files}
+
+    @staticmethod
+    def _acc_from_bytes(data: bytes) -> Dict[str, np.ndarray]:
+        import io
+        with np.load(io.BytesIO(data)) as z:
+            return {k: np.asarray(z[k]) for k in z.files}
+
+    def load_acc_checked(self, man: dict):
+        """Validate and load the checkpointed accumulator.
+
+        Returns ``(acc | None, chunks_done, events)``: the newest
+        generation whose bytes match its recorded sha256, or
+        ``(None, 0, events)`` when every generation is corrupt or
+        missing — the campaign then restarts from chunk 0, which
+        still yields a bitwise-correct result (the fold sequence is
+        deterministic).  ``events`` records every detection/fallback
+        so recovery is visible, never silent."""
+        events: List[dict] = []
+        gens = [(self.acc_path, man.get("acc_sha"),
+                 int(man.get("chunks_done", 0)), "current")]
+        prev = man.get("prev")
+        if prev:
+            gens.append((self.prev_path, prev.get("acc_sha"),
+                         int(prev.get("chunks_done", 0)), "prev"))
+        for path, sha, done, gen in gens:
+            if not path.exists():
+                events.append({"event": "checkpoint_missing",
+                               "generation": gen})
+                continue
+            data = path.read_bytes()
+            if sha is not None and \
+                    hashlib.sha256(data).hexdigest() != sha:
+                events.append({"event": "checkpoint_corrupt",
+                               "generation": gen,
+                               "chunks_done": done})
+                continue
+            try:
+                acc = self._acc_from_bytes(data)
+            except Exception:
+                events.append({"event": "checkpoint_unreadable",
+                               "generation": gen,
+                               "chunks_done": done})
+                continue
+            if gen != "current":
+                events.append({"event": "checkpoint_recovered",
+                               "generation": gen,
+                               "chunks_done": done})
+            return acc, done, events
+        events.append({"event": "checkpoint_restart", "chunks_done": 0})
+        return None, 0, events
 
     def truncate_rows(self, chunks_done: int) -> List[dict]:
         """Keep only rows for chunks < chunks_done (rows appended
@@ -557,12 +766,36 @@ class _Store:
         self._rows_fh.write(json.dumps(row) + "\n")
         self._rows_fh.flush()
 
-    def checkpoint(self, manifest: dict,
-                   acc: Dict[str, np.ndarray]) -> None:
+    def checkpoint(self, manifest: dict, acc: Dict[str, np.ndarray],
+                   *, corrupt: bool = False) -> None:
         import io
         buf = io.BytesIO()
         np.savez(buf, **acc)
-        _atomic_write(self.acc_path, buf.getvalue())
+        data = buf.getvalue()
+        manifest = dict(manifest)
+        manifest["acc_sha"] = hashlib.sha256(data).hexdigest()
+        # rotate the previous generation — but only if its on-disk
+        # bytes still match the sha the old manifest recorded (a
+        # corrupted current generation must never displace the last
+        # good one)
+        old = self.load_manifest()
+        if old is not None and old.get("acc_sha") \
+                and self.acc_path.exists():
+            if hashlib.sha256(self.acc_path.read_bytes()).hexdigest() \
+                    == old["acc_sha"]:
+                _atomic_write(self.prev_path,
+                              self.acc_path.read_bytes())
+                manifest["prev"] = {
+                    "chunks_done": int(old["chunks_done"]),
+                    "acc_sha": old["acc_sha"]}
+            else:
+                manifest["prev"] = old.get("prev")
+        if corrupt:
+            # injected torn write: the file loses its tail but the
+            # manifest keeps the intended sha — exactly what a
+            # mid-write crash leaves behind
+            data = data[:max(len(data) // 3, 1)]
+        _atomic_write(self.acc_path, data)
         _atomic_write(self.manifest_path,
                       (json.dumps(manifest, indent=1) + "\n").encode())
 
@@ -597,6 +830,10 @@ def campaign(grid, *, chunk_size: int = 4096, mode: str = "pipelined",
              refine_budget: Optional[int] = None,
              safety: float = 1.0,
              keep_point_stats: bool = False,
+             fault_plan: Optional[FaultPlan] = None,
+             fault_retries: int = 3,
+             fault_backoff_s: float = 0.02,
+             _kill_after_chunks: Optional[int] = None,
              **kernel_kw) -> CampaignResult:
     """Stream ``grid`` through its kernel in fixed-shape chunks and
     reduce on device (module docstring has the full execution model).
@@ -618,6 +855,16 @@ def campaign(grid, *, chunk_size: int = 4096, mode: str = "pipelined",
     ``stop_after_chunks=s`` checkpoints and returns after ``s`` chunks
     (``completed=False``) — graceful preemption; pass ``resume=True``
     with the same ``out_dir``, grid, and config to continue.
+
+    ``fault_plan=FaultPlan(...)`` arms the seeded fault-injection
+    harness (pipelined mode only): dispatch failures are retried up
+    to ``fault_retries`` times with ``fault_backoff_s``-based
+    exponential backoff (exhaustion quarantines the chunk), NaN
+    poison is absorbed by the fold's non-finite guard, and
+    checkpoint corruption is caught by the store's sha validation on
+    resume.  ``_kill_after_chunks=k`` raises ``CampaignKilled``
+    after draining ``k`` chunks — the hard-kill half of the
+    ``verify_resume`` witness.
 
     ``mode="adaptive"`` is the convergence-aware scheduler: a short
     pilot pass (``pilot`` cycles per point, default ~n_max/16) triages
@@ -650,6 +897,13 @@ def campaign(grid, *, chunk_size: int = 4096, mode: str = "pipelined",
                                or refine_budget is not None):
         raise ValueError("pilot/target_ci/refine_budget require "
                          "mode='adaptive'")
+    if mode != "pipelined" and (fault_plan is not None
+                                or _kill_after_chunks is not None):
+        raise ValueError("fault_plan/_kill_after_chunks target the "
+                         "streaming driver (mode='pipelined')")
+    if fault_retries < 0:
+        raise ValueError(f"fault_retries must be >= 0 "
+                         f"(got {fault_retries})")
     if sketch:
         n_bins = SKETCH_BINS
     pinned = dict(caps) if caps is not None else caps_fn(grid)
@@ -685,12 +939,18 @@ def campaign(grid, *, chunk_size: int = 4096, mode: str = "pipelined",
             "refine_budget": (None if refine_budget is None
                               else int(refine_budget)),
             "safety": float(safety)}
+    if fault_plan is not None:
+        # part of the config fingerprint: a resume must replay the
+        # SAME fault schedule or bitwise parity is meaningless
+        config["fault_plan"] = fault_plan.to_config()
     grid_sha = _grid_sha(grid)
 
     store = _Store(Path(out_dir)) if out_dir is not None else None
     start_chunk = 0
     rows: List[dict] = []
     acc_host: Optional[Dict[str, np.ndarray]] = None
+    quarantined: List[dict] = []
+    fault_events: List[dict] = []
     if resume:
         if store is None:
             raise ValueError("resume=True needs out_dir")
@@ -702,40 +962,52 @@ def campaign(grid, *, chunk_size: int = 4096, mode: str = "pipelined",
             raise ValueError(
                 "resume manifest does not match this campaign (grid "
                 "or config changed); start fresh in a new out_dir")
-        start_chunk = int(man["chunks_done"])
-        acc_host = store.load_acc()
+        acc_host, start_chunk, fault_events = \
+            store.load_acc_checked(man)
+        # quarantine entries at or past the resume point describe
+        # chunks the resume recomputes — drop them like stale rows
+        quarantined = [q for q in man.get("quarantined", [])
+                       if q["chunk"] < start_chunk]
         rows = store.truncate_rows(start_chunk)
 
     t0 = time.perf_counter()
-    if mode == "adaptive":
-        result = _run_adaptive(grid, plan_fn, kind, n, c_size,
-                               n_chunks, padded, n_bins, sketch, seed,
-                               shard, superstep_backend, pinned,
-                               kernel_kw, steps_kw, k_top,
-                               pipeline_depth, checkpoint_every,
-                               store, config, grid_sha, start_chunk,
-                               rows, acc_host, stop_after_chunks,
-                               pilot, target_ci, refine_budget, n_max,
-                               safety, keep_point_stats)
-    elif mode == "serial":
-        result = _run_serial(grid, plan_fn, caps_fn, kind, n, c_size,
-                             n_chunks, padded, n_bins, sketch, seed,
-                             shard, superstep_backend, kernel_kw,
-                             steps_kw, k_top, store, config, grid_sha,
-                             start_chunk, rows, acc_host,
-                             stop_after_chunks, metrics_tap)
-    else:
-        result = _run_pipelined(grid, plan_fn, kind, n, c_size,
-                                n_chunks, padded, n_bins, sketch, seed,
-                                shard, superstep_backend, pinned,
-                                kernel_kw, k_top, pipeline_depth,
-                                checkpoint_every, store, config,
-                                grid_sha, start_chunk, rows, acc_host,
-                                stop_after_chunks, metrics_tap,
-                                tap_every)
+    try:
+        if mode == "adaptive":
+            result = _run_adaptive(grid, plan_fn, kind, n, c_size,
+                                   n_chunks, padded, n_bins, sketch,
+                                   seed, shard, superstep_backend,
+                                   pinned, kernel_kw, steps_kw, k_top,
+                                   pipeline_depth, checkpoint_every,
+                                   store, config, grid_sha, start_chunk,
+                                   rows, acc_host, stop_after_chunks,
+                                   pilot, target_ci, refine_budget,
+                                   n_max, safety, keep_point_stats)
+        elif mode == "serial":
+            result = _run_serial(grid, plan_fn, caps_fn, kind, n,
+                                 c_size, n_chunks, padded, n_bins,
+                                 sketch, seed, shard,
+                                 superstep_backend, kernel_kw,
+                                 steps_kw, k_top, store, config,
+                                 grid_sha, start_chunk, rows, acc_host,
+                                 stop_after_chunks, metrics_tap)
+        else:
+            result = _run_pipelined(grid, plan_fn, kind, n, c_size,
+                                    n_chunks, padded, n_bins, sketch,
+                                    seed, shard, superstep_backend,
+                                    pinned, kernel_kw, k_top,
+                                    pipeline_depth, checkpoint_every,
+                                    store, config, grid_sha,
+                                    start_chunk, rows, acc_host,
+                                    stop_after_chunks, metrics_tap,
+                                    tap_every, fault_plan,
+                                    fault_retries, fault_backoff_s,
+                                    _kill_after_chunks, quarantined)
+    finally:
+        if store is not None:
+            store.close()
     result.wall_s = time.perf_counter() - t0
+    result.fault_events = fault_events + result.fault_events
     if store is not None:
-        store.close()
         result.out_dir = str(store.dir)
     return result
 
@@ -769,7 +1041,9 @@ def _run_pipelined(grid, plan_fn, kind, n, c_size, n_chunks, padded,
                    n_bins, sketch, seed, shard, superstep_backend,
                    pinned, kernel_kw, k_top, depth, checkpoint_every,
                    store, config, grid_sha, start_chunk, rows,
-                   acc_host, stop_after, metrics_tap, tap_every):
+                   acc_host, stop_after, metrics_tap, tap_every,
+                   fault_plan, fault_retries, fault_backoff_s,
+                   kill_after, quarantined):
     import jax
     from jax.experimental import enable_x64
 
@@ -783,17 +1057,31 @@ def _run_pipelined(grid, plan_fn, kind, n, c_size, n_chunks, padded,
 
     last_chunk = n_chunks if stop_after is None \
         else min(n_chunks, start_chunk + stop_after)
-    pending = []            # (ci, summary_ref, ckpt_ref|None, meta)
+    pending = []            # (ci, summary_ref|None, ckpt_ref|None, meta)
     peak_host = 0
     tapped = 0
+    drained = 0
 
     meta_t0 = {}
 
     def drain_one():
-        nonlocal peak_host
+        nonlocal peak_host, drained
         ci, summary_ref, ckpt_ref, meta = pending.pop(0)
-        summary = jax.device_get(summary_ref)      # blocks: chunk done
+        skip = meta.pop("_skip", None)
+        if summary_ref is not None:
+            summary = jax.device_get(summary_ref)  # blocks: chunk done
+        else:
+            # dispatch-quarantined chunk: nothing was folded
+            summary = {"points": 0, "jobs": 0, "buffer_dropped": 0,
+                       "quarantined": meta["points"]}
         host_bytes = _nbytes(summary) + meta.pop("_grid_bytes")
+        q_pts = int(summary.get("quarantined", 0))
+        if q_pts:
+            quarantined.append(
+                {"chunk": ci, "points": q_pts,
+                 "reason": "dispatch" if skip is not None
+                 else "nonfinite",
+                 **({"error": skip} if skip is not None else {})})
         acc_np = None
         if ckpt_ref is not None:
             acc_np = jax.device_get(ckpt_ref)
@@ -806,32 +1094,83 @@ def _run_pipelined(grid, plan_fn, kind, n, c_size, n_chunks, padded,
         if store is not None:
             store.append_row(row)
             if acc_np is not None:
+                corrupt = (fault_plan is not None
+                           and fault_plan.roll("corrupt", ci))
                 store.checkpoint(
                     {"version": MANIFEST_VERSION, "grid_sha": grid_sha,
                      "config": config, "chunks_done": ci + 1,
-                     "n_chunks": n_chunks, "mode": "pipelined"},
-                    acc_np)
+                     "n_chunks": n_chunks, "mode": "pipelined",
+                     "quarantined": [q for q in quarantined
+                                     if q["chunk"] <= ci]},
+                    acc_np, corrupt=corrupt)
         rows.append(row)
         peak_host = max(peak_host, host_bytes)
         if metrics_tap is not None:
             metrics_tap.observe_chunk(**{k: v for k, v in row.items()
                                          if k != "host_bytes"})
+        drained += 1
+        if kill_after is not None and drained >= kill_after:
+            raise CampaignKilled(drained)
 
     for ci in range(start_chunk, last_chunk):
         start = ci * c_size
         cgrid, n_valid = _chunk_grid(grid, start, c_size, n)
         tap_this = (metrics_tap is not None and tap_every > 0
                     and ci % tap_every == 0)
-        tapped += bool(tap_this)
         meta_t0[ci] = time.perf_counter()
-        plan = plan_fn(cgrid, seed=seed, key_offset=start,
-                       n_bins=n_bins, sketch=sketch, shard=shard,
-                       superstep_backend=superstep_backend,
-                       metrics_tap=metrics_tap if tap_this else None,
-                       **pinned, **kernel_kw)
-        out, pad2 = engine.dispatch_device(plan.kernel, plan.params,
-                                           plan.keys, plan.n,
-                                           plan.n_dev)
+
+        # bounded retry with exponential backoff around the dispatch;
+        # the attempt number feeds the injection hash, so retries
+        # re-roll instead of deterministically refailing
+        attempt, skip, out, pad2, plan = 0, None, None, 0, None
+        while True:
+            try:
+                if fault_plan is not None and \
+                        fault_plan.roll("dispatch", ci, attempt):
+                    raise CampaignFault(
+                        f"injected dispatch failure (chunk {ci}, "
+                        f"attempt {attempt})")
+                plan = plan_fn(cgrid, seed=seed, key_offset=start,
+                               n_bins=n_bins, sketch=sketch,
+                               shard=shard,
+                               superstep_backend=superstep_backend,
+                               metrics_tap=(metrics_tap if tap_this
+                                            else None),
+                               **pinned, **kernel_kw)
+                out, pad2 = engine.dispatch_device(
+                    plan.kernel, plan.params, plan.keys, plan.n,
+                    plan.n_dev)
+                break
+            except (CampaignFault, RuntimeError) as e:
+                if attempt >= fault_retries:
+                    skip = str(e)     # quarantine, never silently drop
+                    break
+                time.sleep(fault_backoff_s * (2.0 ** attempt))
+                attempt += 1
+
+        is_ckpt = (store is not None
+                   and ((ci + 1) % max(checkpoint_every, 1) == 0
+                        or ci == last_chunk - 1))
+        if skip is not None:
+            # the accumulator is untouched, but a due checkpoint
+            # still advances chunks_done past the quarantined chunk
+            ckpt_ref = None
+            if is_ckpt:
+                with enable_x64():
+                    ckpt_ref = (jax.tree_util.tree_map(
+                        lambda a: a + 0, acc) if donate else acc)
+            pending.append((ci, None, ckpt_ref,
+                            {"start": start, "points": n_valid,
+                             "padded": c_size - n_valid,
+                             "tapped": False, "retries": attempt,
+                             "_skip": skip, "_grid_bytes": 0}))
+            while len(pending) > max(depth, 1):
+                drain_one()
+            continue
+
+        tapped += bool(tap_this)
+        poison = (fault_plan is not None
+                  and fault_plan.roll("nan", ci, attempt))
         lam_dev = engine.pad_tail(plan.params["lam"], pad2)
         with enable_x64():
             fold = _build_fold(c_size + pad2, n_bins, k_top,
@@ -839,14 +1178,18 @@ def _run_pipelined(grid, plan_fn, kind, n, c_size, n_chunks, padded,
                                donate)
             chunk = _fold_inputs(out, lam_dev, plan.has_loss,
                                  plan.sketch)
+            if poison:
+                # injected kernel pathology: every float statistic of
+                # the chunk turns NaN; the fold guard must quarantine
+                # the points, not the campaign
+                chunk = dict(chunk)
+                chunk["mean_latency"] = (chunk["mean_latency"]
+                                         + np.float32("nan"))
             acc, summary_ref = fold(acc, chunk,
                                     np.arange(start,
                                               start + c_size + pad2,
                                               dtype=np.int64),
                                     np.int64(n_valid))
-        is_ckpt = (store is not None
-                   and ((ci + 1) % max(checkpoint_every, 1) == 0
-                        or ci == last_chunk - 1))
         if is_ckpt:
             with enable_x64():
                 ckpt_ref = (jax.tree_util.tree_map(lambda a: a + 0, acc)
@@ -857,6 +1200,7 @@ def _run_pipelined(grid, plan_fn, kind, n, c_size, n_chunks, padded,
                         {"start": start, "points": n_valid,
                          "padded": (c_size - n_valid) + pad2,
                          "tapped": bool(tap_this),
+                         "retries": attempt,
                          "_grid_bytes": _nbytes(cgrid._arrays())}))
         while len(pending) > max(depth, 1):
             drain_one()
@@ -869,7 +1213,8 @@ def _run_pipelined(grid, plan_fn, kind, n, c_size, n_chunks, padded,
         kind=kind, mode="pipelined", n_points=n, n_chunks=n_chunks,
         chunk_size=c_size, padded_points=padded, completed=completed,
         sketch=bool(sketch), acc=acc_np, rows=rows,
-        peak_host_result_bytes=peak_host, tapped_chunks=tapped)
+        peak_host_result_bytes=peak_host, tapped_chunks=tapped,
+        quarantined_chunks=quarantined)
 
 
 def _refine_schedule(alloc: np.ndarray, c_size: int):
@@ -1174,33 +1519,48 @@ def _run_serial(grid, plan_fn, caps_fn, kind, n, c_size, n_chunks,
 def _host_fold(acc: Dict[str, np.ndarray], r, start: int, n_valid: int,
                k_top: int) -> None:
     """Numpy mirror of the device fold (vectorized — serial results
-    are a statistical baseline, not part of the bitwise contract)."""
+    are a statistical baseline, not part of the bitwise contract).
+    Applies the same non-finite quarantine guard as the device fold:
+    poisoned points are masked out of every sum and counted."""
     sl = slice(0, n_valid)
-    acc["hist"] = acc["hist"] + r.hist[sl].sum(0).astype(np.int64)
+    fin = (np.isfinite(r.mean_latency[sl])
+           & np.isfinite(r.utilization[sl])
+           & np.isfinite(r.mean_batch[sl]))
+    if not fin.all():
+        acc["quarantined_points"] = (acc["quarantined_points"]
+                                     + np.int64((~fin).sum()))
+    finc = fin.astype(np.int64)
+    acc["hist"] = acc["hist"] + (r.hist[sl]
+                                 * finc[:, None]).sum(0).astype(np.int64)
     if r.hist_sums is not None:
         acc["hist_sums"] = (acc["hist_sums"]
-                            + r.hist_sums[sl].sum(0).astype(np.float64))
-    jobs = r.n_jobs[sl].astype(np.int64)
-    acc["points"] = acc["points"] + np.int64(n_valid)
+                            + np.where(fin[:, None], r.hist_sums[sl],
+                                       0.0).sum(0).astype(np.float64))
+    jobs = r.n_jobs[sl].astype(np.int64) * finc
+    acc["points"] = acc["points"] + np.int64(int(fin.sum()))
     acc["jobs"] = acc["jobs"] + jobs.sum()
     batches = getattr(r, "n_batches", None)
     if batches is None:
         batches = r.n_steps
-    acc["batches"] = acc["batches"] + batches[sl].astype(np.int64).sum()
+    acc["batches"] = (acc["batches"]
+                      + (batches[sl].astype(np.int64) * finc).sum())
     acc["buffer_dropped"] = (acc["buffer_dropped"]
-                             + r.buffer_dropped[sl].astype(np.int64)
-                             .sum())
+                             + (r.buffer_dropped[sl].astype(np.int64)
+                                * finc).sum())
     for k in ("overflow_dropped", "abandoned", "n_in_slo", "n_fresh",
               "n_retry"):
-        acc[k] = acc[k] + getattr(r, k)[sl].astype(np.int64).sum()
-    lat = r.mean_latency[sl].astype(np.float64)
+        acc[k] = acc[k] + (getattr(r, k)[sl].astype(np.int64)
+                           * finc).sum()
+    lat = np.where(fin, r.mean_latency[sl].astype(np.float64), 0.0)
     acc["sum_latency_jobs"] = (acc["sum_latency_jobs"]
                                + (lat * jobs).sum())
     acc["sum_latency"] = acc["sum_latency"] + lat.sum()
     acc["sum_util"] = (acc["sum_util"]
-                       + r.utilization[sl].astype(np.float64).sum())
+                       + np.where(fin, r.utilization[sl]
+                                  .astype(np.float64), 0.0).sum())
     acc["sum_batch"] = (acc["sum_batch"]
-                        + r.mean_batch[sl].astype(np.float64).sum())
+                        + np.where(fin, r.mean_batch[sl]
+                                   .astype(np.float64), 0.0).sum())
     ci = getattr(r, "ci_halfwidth", None)
     if ci is not None:
         ci = np.nan_to_num(ci[sl].astype(np.float64), nan=0.0,
@@ -1212,10 +1572,67 @@ def _host_fold(acc: Dict[str, np.ndarray], r, start: int, n_valid: int,
     gfrac = np.where(offered > 0,
                      r.n_in_slo[sl] / np.maximum(offered, 1), 1.0)
     for vkey, ikey, vals in (
-            ("top_lat_val", "top_lat_idx", lat),
+            ("top_lat_val", "top_lat_idx", np.where(fin, lat, -np.inf)),
             ("top_good_val", "top_good_idx",
-             r.grid.lam[sl].astype(np.float64) * gfrac)):
+             np.where(fin, r.grid.lam[sl].astype(np.float64) * gfrac,
+                      -np.inf))):
         allv = np.concatenate([acc[vkey], vals])
         alli = np.concatenate([acc[ikey], gidx])
         order = np.lexsort((alli, -allv))[:k_top]
         acc[vkey], acc[ikey] = allv[order], alli[order]
+
+
+# ---------------------------------------------------------------------------
+# the resume-parity witness
+# ---------------------------------------------------------------------------
+
+def verify_resume(grid, *, out_dir, kill_after_chunks: int,
+                  **campaign_kw) -> dict:
+    """Kill a campaign mid-flight, resume it, and PROVE the result.
+
+    Runs the campaign three ways: an uninterrupted in-memory
+    reference, a checkpointing run hard-killed (``CampaignKilled``)
+    after ``kill_after_chunks`` drained chunks, and a ``resume=True``
+    continuation from whatever the kill left on disk.  Asserts the
+    resumed fingerprint is BITWISE equal to the reference — under any
+    ``fault_plan`` faults too, since the injection schedule is a pure
+    function of (seed, kind, chunk, attempt) and replays identically.
+
+    Returns a witness dict (fingerprint, kill/resume chunk indices,
+    fault events seen on resume, quarantined chunks).  Raises
+    ``AssertionError`` on a parity violation and ``ValueError`` when
+    the kill never fired (``kill_after_chunks`` past the last chunk).
+    """
+    for k in ("out_dir", "resume", "_kill_after_chunks",
+              "stop_after_chunks"):
+        if k in campaign_kw:
+            raise ValueError(f"verify_resume controls {k!r} itself")
+    ref = campaign(grid, **campaign_kw)
+    killed_at = None
+    try:
+        campaign(grid, out_dir=out_dir,
+                 _kill_after_chunks=kill_after_chunks, **campaign_kw)
+    except CampaignKilled as e:
+        killed_at = e.chunks_drained
+    if killed_at is None:
+        raise ValueError(
+            f"kill_after_chunks={kill_after_chunks} never fired — the "
+            f"campaign has only {ref.n_chunks} chunks")
+    man = _Store(Path(out_dir)).load_manifest()
+    resumed_from = int(man["chunks_done"]) if man else 0
+    resumed = campaign(grid, out_dir=out_dir, resume=True,
+                       **campaign_kw)
+    if not resumed.completed:
+        raise AssertionError("resumed campaign did not complete")
+    fp_ref, fp_res = ref.fingerprint(), resumed.fingerprint()
+    if fp_ref != fp_res:
+        raise AssertionError(
+            f"resume parity violated: uninterrupted {fp_ref[:16]} != "
+            f"killed-and-resumed {fp_res[:16]} (killed after "
+            f"{killed_at} chunks, resumed from chunk {resumed_from})")
+    return {"match": True, "fingerprint": fp_ref,
+            "killed_after": int(killed_at),
+            "resumed_from": resumed_from,
+            "replayed_chunks": ref.n_chunks - resumed_from,
+            "fault_events": resumed.fault_events,
+            "quarantined_chunks": resumed.quarantined_chunks}

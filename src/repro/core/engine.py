@@ -517,8 +517,44 @@ def _occupancy_scale(lam, alpha, tau0, b_max, wait_max=0.0):
     return m, sd
 
 
+def completion_inflation(lam, alpha, tau0, b_max, mtbf, mttr,
+                         restart=None, throttle=None) -> np.ndarray:
+    """Per-point multiplicative service-time inflation E[C]/s from the
+    breakdown/repair regime, evaluated at each point's occupancy-scale
+    batch size.  Preempt-resume (and fail-drop) inflate by 1 + ξ·mttr
+    (ξ = 1/MTBF); preempt-restart re-executes the batch from scratch a
+    Geometric number of times, the classical
+    E[C] = (1/ξ + mttr)·(e^{ξs} − 1), which *exponentiates* in ξ·s.
+    Clipped to [1, 64]: beyond that the point is far past ρ_eff = 1 and
+    no finite buffer sizing is meaningful anyway."""
+    lam64 = np.asarray(lam, dtype=np.float64)
+    mtbf64 = np.asarray(mtbf, dtype=np.float64) * np.ones_like(lam64)
+    r = np.asarray(mttr, dtype=np.float64) * np.ones_like(lam64)
+    xi = np.where(mtbf64 > 0, 1.0 / np.maximum(mtbf64, 1e-300), 0.0)
+    m0, _ = _occupancy_scale(lam, alpha, tau0, b_max)
+    cap = np.where(np.asarray(b_max) > 0, np.asarray(b_max), np.inf)
+    b_eff = np.minimum(np.maximum(m0, 1.0), cap)
+    s_b = (np.asarray(alpha, dtype=np.float64) * b_eff
+           + np.asarray(tau0, dtype=np.float64))
+    infl = 1.0 + xi * r
+    if restart is not None:
+        xs = np.minimum(xi * s_b, 32.0)
+        infl_restart = ((1.0 / np.maximum(xi, 1e-300) + r)
+                        * np.expm1(xs) / np.maximum(s_b, 1e-300))
+        rmask = np.asarray(restart, dtype=bool) \
+            * np.ones_like(lam64, dtype=bool)
+        infl = np.where(rmask & (xi > 0),
+                        np.maximum(infl_restart, infl), infl)
+    if throttle is not None:
+        infl = infl * np.maximum(
+            np.asarray(throttle, dtype=np.float64), 1.0)
+    return np.clip(np.where(xi > 0, infl, 1.0), 1.0, 64.0)
+
+
 def queue_capacity(lam, alpha, tau0, b_max, wait_max=0.0, *,
-                   q_max=None, floor: int = 64, ceil: int = 8192) -> int:
+                   q_max=None, mtbf=None, mttr=None, restart=None,
+                   throttle=None, floor: int = 64,
+                   ceil: int = 8192) -> int:
     """Adaptive ``q_cap`` for a request-level grid: sized from the
     dispatched grid's own maximum load instead of a global worst case.
 
@@ -531,17 +567,42 @@ def queue_capacity(lam, alpha, tau0, b_max, wait_max=0.0, *,
     with ``q_max`` given, a ``q_max > 0`` point never holds more than
     ``q_max`` waiting jobs plus one window's worth of pre-trim ("drop"
     mode) arrivals — this is what keeps super-critical (ρ > 1) loss
-    points inside finite buffers."""
-    m, sd = _occupancy_scale(lam, alpha, tau0, b_max, wait_max)
-    need = np.maximum(m + 10.0 * sd, 0.0) + 32.0
+    points inside finite buffers.
+
+    Breakdown/repair points (``mtbf``/``mttr`` given, with ``restart``
+    a per-point preempt-restart mask and ``throttle`` the degraded-
+    phase factor) size against the *completion-time* law instead of
+    the bare service time: the occupancy scale inflates by E[C]/s
+    (restart re-execution exponentiates in s/MTBF — see
+    ``completion_inflation``), and an additive repair-burst margin
+    λ·mttr + 10σ covers the arrivals that pile up across a repair
+    window, keeping ``buffer_dropped == 0`` the witness at MTTR up to
+    ~10·τ[b_max]."""
+    lam64 = np.asarray(lam, dtype=np.float64)
+    alpha_eff = np.asarray(alpha, dtype=np.float64) * np.ones_like(lam64)
+    tau0_eff = np.asarray(tau0, dtype=np.float64) * np.ones_like(lam64)
+    burst = 0.0
+    if mtbf is not None and np.any(np.asarray(mtbf) > 0):
+        infl = completion_inflation(lam, alpha, tau0, b_max, mtbf,
+                                    0.0 if mttr is None else mttr,
+                                    restart=restart, throttle=throttle)
+        alpha_eff = alpha_eff * infl
+        tau0_eff = tau0_eff * infl
+        lr = lam64 * (np.asarray(mttr, dtype=np.float64)
+                      * np.ones_like(lam64))
+        # repairs cluster inside busy periods: two back-to-back mean
+        # repairs' worth of arrivals plus a 10σ Poisson margin
+        burst = 2.0 * lr + 10.0 * np.sqrt(lr + 1.0)
+    m, sd = _occupancy_scale(lam, alpha_eff, tau0_eff, b_max, wait_max)
+    need = np.maximum(m + 10.0 * sd, 0.0) + burst + 32.0
     if q_max is not None:
-        lam64 = np.asarray(lam, dtype=np.float64)
         qm = np.asarray(q_max, dtype=np.float64) * np.ones_like(lam64)
         cap = np.where(np.asarray(b_max) > 0, np.asarray(b_max), np.inf)
         b_eff = np.minimum(np.maximum(qm, 1.0), cap)
-        w_mu = lam64 * (np.asarray(alpha) * b_eff + np.asarray(tau0)
+        w_mu = lam64 * (alpha_eff * b_eff + tau0_eff
                         + np.asarray(wait_max))
-        room_need = qm + w_mu + 10.0 * np.sqrt(w_mu + 1.0) + 32.0
+        room_need = qm + w_mu + 10.0 * np.sqrt(w_mu + 1.0) \
+            + burst + 32.0
         # the room bound caps the load estimate, but the buffer must
         # still physically hold a full waiting room (the plan layer
         # rejects q_cap < q_max) — a lightly-loaded q_max = 256 chunk

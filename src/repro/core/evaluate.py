@@ -88,6 +88,10 @@ def _analytic(grid: SweepGrid) -> List[SimResult]:
     _require(not grid.has_loss, "analytic",
              "lossless points (no q_max/deadline/retry — Theorem 2 "
              "assumes an infinite patient queue)")
+    _require(not grid.has_fail, "analytic",
+             "failure-free points (Theorem 2 assumes a server that "
+             "never breaks down; use backend='markov' with mtbf/mttr "
+             "or the MC kernels)")
     out = []
     for i in range(len(grid)):
         lam = float(grid.lam[i])
@@ -107,11 +111,26 @@ def _analytic(grid: SweepGrid) -> List[SimResult]:
 
 def _markov(grid: SweepGrid, **kw) -> List[SimResult]:
     from repro.core.markov import solve, solve_loss
-    from repro.core.grid import OVERFLOW_CODE
+    from repro.core.grid import FAIL_DISC_NAME, OVERFLOW_CODE
     _require(bool(np.all(grid.dist == DIST_CODE["det"])), "markov",
              "deterministic service")
     _require(bool(np.all(grid.wait_max == 0.0)), "markov",
              "the no-wait policy")
+    if grid.has_fail:
+        # the completion-time chain covers the pure breakdown/repair
+        # regime; mixing failures with admission control couples the
+        # chain to the room/orbit (use the MC kernels + loss_ref)
+        failing = grid.mtbf > 0.0
+        _require(bool(np.all(~failing
+                             | ((grid.q_max == 0)
+                                & (grid.deadline == 0.0)
+                                & (grid.retry_rate == 0.0)))),
+                 "markov", "failure points without admission control "
+                 "(no q_max/deadline/retry alongside mtbf)")
+        _require(bool(np.all(~failing | (grid.throttle == 1.0))),
+                 "markov", "failure points without a degraded phase "
+                 "(throttle = 1; the post-repair throttle makes "
+                 "service state-dependent across batches)")
     if grid.has_loss:
         # the exact chain covers exactly the finite-waiting-room reject
         # regime; impatience and retry feedback have no embedded-chain
@@ -141,7 +160,12 @@ def _markov(grid: SweepGrid, **kw) -> List[SimResult]:
                 retry_inflation=1.0,
             ))
             continue
-        m = solve(float(grid.lam[i]), model, b_max=b_max, **kw)
+        fkw = dict(kw)
+        if grid.has_fail and grid.mtbf[i] > 0.0:
+            fkw.update(mtbf=float(grid.mtbf[i]),
+                       mttr=float(grid.mttr[i]),
+                       fail_disc=FAIL_DISC_NAME[int(grid.fail_disc[i])])
+        m = solve(float(grid.lam[i]), model, b_max=b_max, **fkw)
         out.append(SimResult(
             lam=m.lam, n_jobs=0, mean_latency=m.mean_latency,
             mean_batch=m.mean_batch, batch_m2=m.batch_m2,
@@ -157,6 +181,10 @@ def _sim(grid: SweepGrid, **kw) -> List[SimResult]:
     _require(not grid.has_loss, "sim",
              "lossless points (the scalar simulator has no admission "
              "control; use backend='sweep' or repro.core.loss_ref)")
+    _require(not grid.has_fail, "sim",
+             "failure-free points (the scalar simulator has no "
+             "breakdown/repair model; use backend='sweep' or "
+             "repro.core.loss_ref)")
     out = []
     for i in range(len(grid)):
         b_max = float(grid.b_max[i]) if grid.b_max[i] > 0 else math.inf
@@ -233,6 +261,8 @@ def evaluate(grid: SweepGrid, backend: str = "sweep",
                 b_max=grid.b_max, dist=grid.dist, cv=grid.cv,
                 wait_max=grid.wait_max, wait_target=grid.wait_target,
                 q_max=grid.q_max, deadline=grid.deadline,
-                overflow=grid.overflow, retry_rate=grid.retry_rate)
+                overflow=grid.overflow, retry_rate=grid.retry_rate,
+                mtbf=grid.mtbf, mttr=grid.mttr,
+                fail_disc=grid.fail_disc, throttle=grid.throttle)
         return fleet_sweep(grid, **kw).to_results()
     raise ValueError(f"unknown backend {backend!r}; pick from {BACKENDS}")

@@ -84,7 +84,9 @@ from jax import lax, random
 from repro.core import engine, metrics, variance
 from repro.core.engine import ShardSpec
 from repro.core.grid import (  # noqa: F401  (re-exported for callers)
-    DISC_CODE, DISC_NAME, OVERFLOW_CODE, GenGrid, GenResult)
+    DISC_CODE, DISC_NAME, FAIL_DISC_CODE, OVERFLOW_CODE, GenGrid,
+    GenResult)
+from repro.core.sweep import _FAIL_ATTEMPTS, _FAIL_SALT
 from repro.core.hist import (SKETCH_BINS, hist_edges,
                              hist_percentiles as _hist_percentiles,
                              sketch_edges, thinned_rows)
@@ -105,8 +107,9 @@ _STEP_BUCKET = 2048         # n_steps rounds up to this (bounds recompiles)
 @engine.kernel_cache(maxsize=16)
 def _build_gen_kernel(n_steps: int, warmup: int, s_cap: int, q_cap: int,
                       a_cap: int, n_bins: int, has_loss: bool,
-                      r_cap: int, hist_every: int, ss_backend: str,
-                      use_sketch: bool, tap, n_dev: int):
+                      r_cap: int, has_fail: bool, hist_every: int,
+                      ss_backend: str, use_sketch: bool, tap,
+                      n_dev: int):
     """Compile-time specialization of the per-point token-level kernel.
 
     ``s_cap`` (grid max of ``max_active``) sizes the decode pool;
@@ -125,7 +128,23 @@ def _build_gen_kernel(n_steps: int, warmup: int, s_cap: int, q_cap: int,
     admission, and the bounded retry orbit assessed at each run end
     (re-arrivals join the tail at ``t_end``).  Reneging can empty an
     otherwise-idle queue: that step forms no batch (``b = 0``),
-    advances no time, and the next step idles."""
+    advances no time, and the next step idles.
+
+    ``has_fail = True`` adds the breakdown/repair regime at *run*
+    granularity (a run — prefill + k identical decode steps — is the
+    unit of preemptible work here): an exponential failure clock at
+    rate ξ = 1/MTBF runs over the run's busy span w, *resume* extends
+    the run end by M ~ Poisson(ξ·w) Exp(mttr) repairs, *restart*
+    prepends the geometric lost-attempt block (each losing a
+    TruncExp(ξ, w) partial execution plus a repair), and *drop* aborts
+    the run at its first failure epoch — ALL of the run's active
+    sequences are filed through the abandonment/retry path (partial
+    decode progress is not resumed; the waiting queue is untouched).
+    Arrivals during repairs join the queue normally (the window push
+    uses the extended run end).  A run following a repair executes
+    degraded: prefill and per-step decode times scale by the point's
+    ``throttle``.  Failure randomness comes from a fold_in key block,
+    leaving the base key stream untouched."""
 
     i32 = jnp.int32
     f32 = jnp.float32
@@ -173,16 +192,32 @@ def _build_gen_kernel(n_steps: int, warmup: int, s_cap: int, q_cap: int,
                                    jnp.minimum(q_lim, q_cap), q_cap)
             idxb = jnp.arange(buf_len)
             jr = jnp.arange(r_cap)
+        if has_fail:
+            mtbf, mttr = p["mtbf"], p["mttr"]
+            throttle = p["throttle"]
+            fd = p["fail_disc"]
+            is_restart, is_drop = fd == 1, fd == 2
+            xi = jnp.where(mtbf > 0.0, 1.0 / jnp.maximum(mtbf, 1e-30),
+                           0.0)
 
         def step(state, x):
-            if has_loss:
+            if has_fail:
+                state, (deg, nfail, dtime, lwork) = \
+                    state[:-4], state[-4:]
+            if has_loss and has_fail:
+                i, gaps, u_row, kfail = x
+            elif has_loss:
                 i, gaps, u_row = x
+            elif has_fail:
+                i, gaps, kfail = x
+            else:
+                i, gaps = x
+            if has_loss:
                 (head, tail, buf, rem, arr_s, now, next_arr, lat_sum,
                  lat_n, sum_b, sum_b2, n_meas, busy, span, q_max,
                  dropped, orbit, ov_n, ab_n, slo_n, fresh_n,
                  retry_n) = state
             else:
-                i, gaps = x
                 (head, tail, buf, rem, arr_s, now, next_arr, lat_sum,
                  lat_n, sum_b, sum_b2, n_meas, busy, span, q_max,
                  dropped) = state
@@ -233,6 +268,12 @@ def _build_gen_kernel(n_steps: int, warmup: int, s_cap: int, q_cap: int,
             t_pf = jnp.where(n_join > 0,
                              a_p * prompt * n_join.astype(f32) + t0_p,
                              0.0)
+            if has_fail:
+                # degraded run after a repair: prefill and per-step
+                # decode time scale by throttle (consumed this run,
+                # re-armed below on failure)
+                thr = jnp.where(deg, throttle, 1.0)
+                t_pf = t_pf * thr
             rank = jnp.cumsum((~active).astype(i32)) - 1
             take = ~active & (rank < n_join)
             j_times = jnp.take(buf, jnp.clip(head + rank, 0,
@@ -259,6 +300,8 @@ def _build_gen_kernel(n_steps: int, warmup: int, s_cap: int, q_cap: int,
             #    edge of the pre-drawn arrival coverage
             b = n_act + n_join
             dt = a_d * b.astype(f32) + t0_d
+            if has_fail:
+                dt = dt * thr
             if has_loss:
                 # reneging can empty an otherwise-idle queue: b = 0
                 # forms no batch and the step advances no time (the
@@ -281,6 +324,52 @@ def _build_gen_kernel(n_steps: int, warmup: int, s_cap: int, q_cap: int,
             t_end = t0r + kf * dt
             if has_loss:
                 t_end = jnp.where(has_b, t_end, now)
+            if has_fail:
+                # breakdown/repair over the run's busy span w (prefill
+                # + k decode steps, the preemptible unit of work here);
+                # the extended t_end feeds the window push below, so
+                # arrivals during repairs join the queue normally
+                w = t_pf + kf * dt
+                if has_loss:
+                    w = jnp.where(has_b, w, 0.0)
+                kf1, kf2, kf3, kf4 = random.split(kfail, 4)
+                fail_on = (mtbf > 0.0) & (w > 0.0)
+                M = random.poisson(kf1, jnp.where(fail_on, xi * w, 0.0))
+                rep_res = mttr * random.gamma(
+                    kf2, jnp.maximum(M, 1).astype(f32))
+                rep_res = jnp.where(M > 0, rep_res, 0.0)
+                e_blk = random.exponential(kf3, (_FAIL_ATTEMPTS,)) \
+                    * jnp.where(mtbf > 0.0, mtbf, 1.0)
+                r_blk = random.exponential(kf4, (_FAIL_ATTEMPTS,)) \
+                    * mttr
+                pre = jnp.cumprod((e_blk < w).astype(f32))
+                n_rst = jnp.sum(pre).astype(i32)
+                lost_rst = jnp.sum(pre * e_blk)
+                rep_rst = jnp.sum(pre * r_blk)
+                e1, r1 = e_blk[0], r_blk[0]
+                aborts = fail_on & is_drop & (e1 < w)
+                n_f = jnp.where(
+                    fail_on,
+                    jnp.where(is_restart, n_rst,
+                              jnp.where(is_drop, aborts.astype(i32),
+                                        M)),
+                    0)
+                rep = jnp.where(
+                    fail_on,
+                    jnp.where(is_restart, rep_rst,
+                              jnp.where(is_drop,
+                                        jnp.where(aborts, r1, 0.0),
+                                        rep_res)),
+                    0.0)
+                lost = jnp.where(fail_on & is_restart, lost_rst, 0.0)
+                lost = jnp.where(aborts, e1, lost)
+                ext = jnp.where(
+                    fail_on,
+                    jnp.where(is_restart, lost_rst + rep_rst,
+                              jnp.where(is_drop, 0.0, rep_res)),
+                    0.0)
+                t_end = jnp.where(aborts, now + e1 + r1, t_end + ext)
+                deg = fail_on & (n_f > 0)
 
             # 4) window arrivals (now, t_end] join the waiting buffer.
             #    The pushable block is the chain minus the consumed
@@ -322,6 +411,12 @@ def _build_gen_kernel(n_steps: int, warmup: int, s_cap: int, q_cap: int,
             #    (k <= m_min, so no retirement happens mid-run)
             rem = jnp.where(rem > 0, rem - k, 0)
             fin = (take | active) & (rem == 0)
+            if has_fail:
+                # an aborted (fail-drop) run completes nothing: every
+                # active sequence is dropped whole (no partial-progress
+                # resume) and filed through the abandonment path below
+                fin = fin & ~aborts
+                rem = jnp.where(aborts, 0, rem)
             lats = jnp.where(fin, t_end - arr_s, 0.0)
             now = t_end
 
@@ -335,14 +430,30 @@ def _build_gen_kernel(n_steps: int, warmup: int, s_cap: int, q_cap: int,
             n_fin = jnp.sum(fin.astype(i32))
             lat_sum = lat_sum + mf * lats.sum()
             lat_n = lat_n + jnp.where(meas, n_fin, 0)
-            sum_b = sum_b + mf * kf * bf
-            sum_b2 = sum_b2 + mf * kf * bf * bf
-            if has_loss:
-                n_meas = n_meas + jnp.where(meas & has_b, k, 0)
-                busy = busy + mf * jnp.where(has_b, t_pf + kf * dt, 0.0)
+            if has_fail:
+                # decode-step stats count completed runs only; busy is
+                # productive execution (repairs → down_time, rework and
+                # aborted partials → lost_work)
+                mfc = mf * (1.0 - aborts.astype(f32))
+                sum_b = sum_b + mfc * kf * bf
+                sum_b2 = sum_b2 + mfc * kf * bf * bf
+                ran = (~aborts) if not has_loss else (has_b & ~aborts)
+                n_meas = n_meas + jnp.where(meas & ran, k, 0)
+                busy = busy \
+                    + mfc * jnp.where(ran, t_pf + kf * dt, 0.0)
+                nfail = nfail + meas.astype(i32) * n_f
+                dtime = dtime + mf * rep
+                lwork = lwork + mf * lost
             else:
-                n_meas = n_meas + jnp.where(meas, k, 0)
-                busy = busy + mf * (t_pf + kf * dt)
+                sum_b = sum_b + mf * kf * bf
+                sum_b2 = sum_b2 + mf * kf * bf * bf
+                if has_loss:
+                    n_meas = n_meas + jnp.where(meas & has_b, k, 0)
+                    busy = busy \
+                        + mf * jnp.where(has_b, t_pf + kf * dt, 0.0)
+                else:
+                    n_meas = n_meas + jnp.where(meas, k, 0)
+                    busy = busy + mf * (t_pf + kf * dt)
             span = span + mf * (t_end - t_step0)
             q_max = jnp.maximum(q_max, q)
 
@@ -351,6 +462,11 @@ def _build_gen_kernel(n_steps: int, warmup: int, s_cap: int, q_cap: int,
                 # Binomial thinning over the whole step, pre-drawn
                 # uniform block); admitted re-arrivals join the tail
                 # with arrival epoch t_end
+                if has_fail:
+                    # fail-drop: the aborted run's b sequences re-enter
+                    # through the abandonment/retry path (filed below,
+                    # abandoned-first)
+                    lost_ab = lost_ab + jnp.where(aborts, b, 0)
                 p_fire = 1.0 - jnp.exp(-retry_rate * (t_end - t_step0))
                 n_r = jnp.sum(((jr < orbit)
                                & (u_row < p_fire)).astype(i32))
@@ -384,6 +500,8 @@ def _build_gen_kernel(n_steps: int, warmup: int, s_cap: int, q_cap: int,
             if has_loss:
                 out_state = out_state + (orbit, ov_n, ab_n, slo_n,
                                          fresh_n, retry_n)
+            if has_fail:
+                out_state = out_state + (deg, nfail, dtime, lwork)
             return out_state, (lats, fin & meas)
 
         # histogram thinning (same contract as the fleet kernel): a
@@ -413,6 +531,13 @@ def _build_gen_kernel(n_steps: int, warmup: int, s_cap: int, q_cap: int,
                       retry_u)
             else:
                 xs = (i_base + jnp.arange(REBASE_EVERY), arr_gaps)
+            if has_fail:
+                # Poisson/Gamma repair draws have traced rates, so the
+                # failure randomness rides as per-step keys, derived by
+                # fold_in (the base block draws stay bitwise-pinned)
+                fkeys = random.split(
+                    random.fold_in(k_sup, _FAIL_SALT), REBASE_EVERY)
+                xs = xs + (fkeys,)
             state, (lats, inc) = lax.scan(step, state, xs)
             hists = _ss.hist_update(hists, lats, inc, n_bins=n_bins,
                                     backend=ss_backend,
@@ -453,6 +578,11 @@ def _build_gen_kernel(n_steps: int, warmup: int, s_cap: int, q_cap: int,
         if has_loss:
             # orbit, ov_n, ab_n, slo_n, fresh_n, retry_n
             init = init + tuple(jnp.zeros((), i32) for _ in range(6))
+        if has_fail:
+            init = init + (jnp.zeros((), bool),         # degraded
+                           jnp.zeros((), i32),          # n_failures
+                           jnp.zeros((), f32),          # down_time
+                           jnp.zeros((), f32))          # lost_work
         init = init + (jnp.zeros((), f32), jnp.zeros((), f32),
                        jnp.zeros((), i32))              # batch-means bm
         hists0 = (jnp.zeros((n_bins,), i32),)            # hist
@@ -490,6 +620,11 @@ def _build_gen_kernel(n_steps: int, warmup: int, s_cap: int, q_cap: int,
             (_orbit, ov_n, ab_n, slo_n, fresh_n, retry_n) = state[16:22]
             out.update(overflow_dropped=ov_n, abandoned=ab_n,
                        n_in_slo=slo_n, n_fresh=fresh_n, n_retry=retry_n)
+        if has_fail:
+            fs = 16 + (6 if has_loss else 0)
+            (_deg, nfail, dtime, lwork) = state[fs:fs + 4]
+            out.update(n_failures=nfail, down_time=dtime,
+                       lost_work=lwork, span=span)
         return out
 
     return engine.shard_kernel(jax.vmap(run_point), n_dev)
@@ -502,19 +637,37 @@ def gen_caps(grid: GenGrid, *, q_cap: Optional[int] = None) -> dict:
     key_offset=..., **gen_caps(full_grid))``), so all chunks compile
     the same shapes as the whole-grid run."""
     has_loss = grid.has_loss
+    has_fail = grid.has_fail
+    fail_kw = {}
+    if has_fail:
+        fail_kw = dict(
+            mtbf=grid.mtbf, mttr=grid.mttr,
+            restart=grid.fail_disc == FAIL_DISC_CODE["restart"],
+            throttle=grid.throttle)
     if q_cap is None:
         q_cap = engine.queue_capacity(
             grid.lam, grid.equivalent_alpha, grid.equivalent_tau0,
             grid.max_active,
-            q_max=grid.q_max if has_loss else None)
+            q_max=grid.q_max if has_loss else None, **fail_kw)
     # the densest indivisible window: the batched prefill of a full
     # batch plus the decode step it precedes
     window = (grid.alpha_prefill * grid.prompt_len * grid.max_active
               + grid.tau0_prefill
               + grid.alpha_decode * grid.max_active
               + grid.tau0_decode)
-    caps = dict(q_cap=int(q_cap),
-                a_cap=int(engine.window_capacity(grid.lam, window)))
+    a_cap = int(engine.window_capacity(grid.lam, window))
+    if has_fail:
+        # repairs/rework stretch a run past its nominal span, and the
+        # arrival chain must still cover the extended window: scale by
+        # the completion inflation and add an MTTR burst allowance
+        infl = float(np.max(engine.completion_inflation(
+            grid.lam, grid.equivalent_alpha, grid.equivalent_tau0,
+            grid.max_active, **fail_kw)))
+        burst = float(np.max(2.0 * grid.lam * grid.mttr
+                             + 10.0 * np.sqrt(grid.lam * grid.mttr
+                                              + 1.0)))
+        a_cap = int(np.ceil(a_cap * infl + burst))
+    caps = dict(q_cap=int(q_cap), a_cap=a_cap)
     if has_loss:
         caps["r_cap"] = int(engine.orbit_capacity(grid.lam,
                                                   grid.retry_rate))
@@ -576,9 +729,9 @@ def gen_plan(grid: GenGrid, *, n_steps: int = 4096,
         n_dev = 1
     kernel = _build_gen_kernel(int(n_steps), int(warmup), s_cap,
                                int(q_cap), int(a_cap), int(n_bins),
-                               has_loss, int(r_cap), int(hist_every),
-                               ss_backend, bool(sketch), metrics_tap,
-                               n_dev)
+                               has_loss, int(r_cap), grid.has_fail,
+                               int(hist_every), ss_backend,
+                               bool(sketch), metrics_tap, n_dev)
 
     params = {
         "lam": jnp.asarray(grid.lam),
@@ -597,6 +750,12 @@ def gen_plan(grid: GenGrid, *, n_steps: int = 4096,
             deadline=jnp.asarray(grid.deadline),
             overflow=jnp.asarray(grid.overflow),
             retry_rate=jnp.asarray(grid.retry_rate))
+    if grid.has_fail:
+        params.update(
+            mtbf=jnp.asarray(grid.mtbf),
+            mttr=jnp.asarray(grid.mttr),
+            fail_disc=jnp.asarray(grid.fail_disc),
+            throttle=jnp.asarray(grid.throttle))
     keys = engine.point_keys(seed, key_offset, n)
     return engine.KernelPlan(kernel=kernel, params=params, keys=keys,
                              n=n, n_dev=n_dev, sketch=bool(sketch),
@@ -681,6 +840,13 @@ def gen_sweep(grid: GenGrid, *, n_steps: int = 4096,
             p99_median=float(np.nanmedian(p99)))
     stderr, ci = variance.batch_means_stats(out["lat_bm_m2"],
                                             out["lat_bm_n"])
+    fail_kw = {}
+    if grid.has_fail:
+        fail_kw = dict(
+            n_failures=np.asarray(out["n_failures"]),
+            down_time=np.asarray(out["down_time"], dtype=np.float64),
+            lost_work=np.asarray(out["lost_work"], dtype=np.float64),
+            span=np.asarray(out["span"], dtype=np.float64))
     return GenResult(
         grid=grid,
         mean_latency=np.asarray(out["mean_latency"], dtype=np.float64),
@@ -698,5 +864,5 @@ def gen_sweep(grid: GenGrid, *, n_steps: int = 4096,
                    if sketch else None),
         stderr=stderr, ci_halfwidth=ci,
         n_blocks=np.asarray(out["lat_bm_n"]),
-        **loss_kw,
+        **loss_kw, **fail_kw,
     )

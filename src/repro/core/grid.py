@@ -15,6 +15,7 @@ from repro.core.results import SimResult
 
 __all__ = ["DIST_CODE", "DIST_NAME", "ROUTE_CODE", "ROUTE_NAME",
            "DISC_CODE", "DISC_NAME", "OVERFLOW_CODE", "OVERFLOW_NAME",
+           "FAIL_DISC_CODE", "FAIL_DISC_NAME",
            "SweepGrid", "SweepResult", "FleetGrid", "FleetResult",
            "GenGrid", "GenResult", "MarkovGrid", "MarkovGridResult",
            "hist_edges"]
@@ -41,6 +42,16 @@ ROUTE_NAME = {v: k for k, v in ROUTE_CODE.items()}
 # where waiting requests join the running batch between decode steps.
 DISC_CODE = {"static": 0, "continuous": 1}
 DISC_NAME = {v: k for k, v in DISC_CODE.items()}
+
+# Server-failure interruption disciplines (what happens to the work in
+# flight when a replica breaks down mid-batch): "resume" carries the
+# remaining batch work across the repair (preempt-resume), "restart"
+# re-executes the interrupted batch from scratch after the repair
+# (preempt-restart — spot-preemption work loss), "drop" abandons the
+# in-flight jobs at the failure epoch and routes them to the retry
+# orbit / loss accounting (fail-drop).
+FAIL_DISC_CODE = {"resume": 0, "restart": 1, "drop": 2}
+FAIL_DISC_NAME = {v: k for k, v in FAIL_DISC_CODE.items()}
 
 # Histogram binning lives in ``repro.core.hist`` (shared by every
 # kernel); re-exported here for back-compat with older import sites.
@@ -94,6 +105,13 @@ def _as_overflow_codes(overflow) -> List[int]:
             for o in vals]
 
 
+def _as_fail_disc_codes(fail_disc) -> List[int]:
+    vals = ([fail_disc] if isinstance(fail_disc, str)
+            else list(np.atleast_1d(fail_disc)))
+    return [FAIL_DISC_CODE[d] if isinstance(d, str) else int(d)
+            for d in vals]
+
+
 @dataclass(frozen=True)
 class SweepGrid(_GridOps):
     """Struct-of-arrays parameter grid; one entry per simulated point.
@@ -109,7 +127,16 @@ class SweepGrid(_GridOps):
     waiting jobs renege (abandon) once their age exceeds it, and
     completions beyond it count against goodput (0 ⇒ no deadline) — and
     ``retry_rate`` closes the loop: every finally-lost job re-arrives
-    after an Exp(retry_rate) backoff (0 ⇒ lost jobs leave forever)."""
+    after an Exp(retry_rate) backoff (0 ⇒ lost jobs leave forever).
+
+    The server-failure axes (all off by default): ``mtbf`` is the mean
+    time between failures of an exponential breakdown clock that runs
+    only while the server is busy (0 ⇒ the server never fails),
+    ``mttr`` the mean of the Exp repair time, ``fail_disc`` a
+    ``FAIL_DISC_CODE`` integer picking the interruption discipline
+    (resume / restart / drop), and ``throttle`` ≥ 1 scales the first
+    post-repair batch's service mean (a degraded/thermal-throttle
+    phase; 1 ⇒ no degradation)."""
 
     lam: np.ndarray
     alpha: np.ndarray
@@ -123,6 +150,10 @@ class SweepGrid(_GridOps):
     deadline: np.ndarray
     overflow: np.ndarray
     retry_rate: np.ndarray
+    mtbf: np.ndarray
+    mttr: np.ndarray
+    fail_disc: np.ndarray
+    throttle: np.ndarray
 
     @property
     def rho(self) -> np.ndarray:
@@ -130,18 +161,36 @@ class SweepGrid(_GridOps):
 
     @property
     def has_loss(self) -> bool:
-        """True when any point enables an admission-control regime."""
+        """True when any point enables an admission-control regime.
+
+        A fail-drop failure point also needs the loss machinery: its
+        aborted in-flight jobs are filed through the same retry-orbit /
+        abandonment accounting."""
         return bool(np.any(self.q_max > 0) or np.any(self.deadline > 0)
-                    or np.any(self.retry_rate > 0))
+                    or np.any(self.retry_rate > 0)
+                    or np.any((self.mtbf > 0)
+                              & (self.fail_disc
+                                 == FAIL_DISC_CODE["drop"])))
+
+    @property
+    def has_fail(self) -> bool:
+        """True when any point enables the breakdown/repair regime."""
+        return bool(np.any(self.mtbf > 0))
 
     @property
     def overflow_names(self) -> List[str]:
         return [OVERFLOW_NAME[int(o)] for o in self.overflow]
 
+    @property
+    def fail_disc_names(self) -> List[str]:
+        return [FAIL_DISC_NAME[int(d)] for d in self.fail_disc]
+
     @classmethod
     def from_points(cls, lam, alpha, tau0, *, b_max=0, dist="det", cv=0.5,
                     wait_max=0.0, wait_target=0, q_max=0, deadline=0.0,
-                    overflow="reject", retry_rate=0.0) -> "SweepGrid":
+                    overflow="reject", retry_rate=0.0, mtbf=0.0,
+                    mttr=0.0, fail_disc="resume",
+                    throttle=1.0) -> "SweepGrid":
         """Build a grid from parallel per-point sequences (broadcast
         scalars to the common length)."""
         dist_codes = ([DIST_CODE[d] if isinstance(d, str) else int(d)
@@ -152,12 +201,16 @@ class SweepGrid(_GridOps):
                   _as_f32(wait_max), _as_i32(wait_target),
                   _as_i32(q_max), _as_f32(deadline),
                   _as_i32(_as_overflow_codes(overflow)),
-                  _as_f32(retry_rate)]
+                  _as_f32(retry_rate), _as_f32(mtbf), _as_f32(mttr),
+                  _as_i32(_as_fail_disc_codes(fail_disc)),
+                  _as_f32(throttle)]
         n = max(a.shape[0] for a in arrays)
         arrays = [np.broadcast_to(a, (n,)).copy() if a.shape[0] == 1 else a
                   for a in arrays]
         if any(a.shape[0] != n for a in arrays):
             raise ValueError("per-point sequences have mismatched lengths")
+        if np.any((arrays[12] > 0) & (arrays[13] <= 0)):
+            raise ValueError("failure points (mtbf > 0) need mttr > 0")
         return cls(*arrays)
 
     @classmethod
@@ -171,7 +224,11 @@ class SweepGrid(_GridOps):
                      q_maxes: Sequence[int] = (0,),
                      deadlines: Sequence[float] = (0.0,),
                      overflows: Sequence[str] = ("reject",),
-                     retry_rates: Sequence[float] = (0.0,)
+                     retry_rates: Sequence[float] = (0.0,),
+                     mtbfs: Sequence[float] = (0.0,),
+                     mttrs: Sequence[float] = (0.0,),
+                     fail_discs: Sequence[str] = ("resume",),
+                     throttles: Sequence[float] = (1.0,)
                      ) -> "SweepGrid":
         """Cartesian product of per-axis values, flattened to one grid."""
         dist_codes = [DIST_CODE[d] if isinstance(d, str) else int(d)
@@ -182,14 +239,17 @@ class SweepGrid(_GridOps):
                            _as_i32(wait_targets), _as_i32(q_maxes),
                            _as_f32(deadlines),
                            _as_i32(_as_overflow_codes(list(overflows))),
-                           _as_f32(retry_rates), indexing="ij")
+                           _as_f32(retry_rates), _as_f32(mtbfs),
+                           _as_f32(mttrs),
+                           _as_i32(_as_fail_disc_codes(list(fail_discs))),
+                           _as_f32(throttles), indexing="ij")
         flat = [m.reshape(-1) for m in mesh]
-        return cls(flat[0].astype(np.float32), flat[1].astype(np.float32),
-                   flat[2].astype(np.float32), flat[3].astype(np.int32),
-                   flat[4].astype(np.int32), flat[5].astype(np.float32),
-                   flat[6].astype(np.float32), flat[7].astype(np.int32),
-                   flat[8].astype(np.int32), flat[9].astype(np.float32),
-                   flat[10].astype(np.int32), flat[11].astype(np.float32))
+        return cls.from_points(
+            flat[0], flat[1], flat[2], b_max=flat[3], dist=flat[4],
+            cv=flat[5], wait_max=flat[6], wait_target=flat[7],
+            q_max=flat[8], deadline=flat[9], overflow=flat[10],
+            retry_rate=flat[11], mtbf=flat[12], mttr=flat[13],
+            fail_disc=flat[14], throttle=flat[15])
 
     @classmethod
     def from_rhos(cls, rhos: Sequence[float], alpha: float, tau0: float,
@@ -201,7 +261,8 @@ class SweepGrid(_GridOps):
     def _arrays(self) -> Tuple[np.ndarray, ...]:
         return (self.lam, self.alpha, self.tau0, self.b_max, self.dist,
                 self.cv, self.wait_max, self.wait_target, self.q_max,
-                self.deadline, self.overflow, self.retry_rate)
+                self.deadline, self.overflow, self.retry_rate,
+                self.mtbf, self.mttr, self.fail_disc, self.throttle)
 
 
 def _as_route_codes(routing) -> List[int]:
@@ -236,12 +297,15 @@ class FleetGrid(SweepGrid):
     def from_points(cls, lam, alpha, tau0, *, k=1, routing="jsq", b_max=0,
                     dist="det", cv=0.5, wait_max=0.0, wait_target=0,
                     q_max=0, deadline=0.0, overflow="reject",
-                    retry_rate=0.0) -> "FleetGrid":
+                    retry_rate=0.0, mtbf=0.0, mttr=0.0,
+                    fail_disc="resume", throttle=1.0) -> "FleetGrid":
         base = SweepGrid.from_points(lam, alpha, tau0, b_max=b_max,
                                      dist=dist, cv=cv, wait_max=wait_max,
                                      wait_target=wait_target, q_max=q_max,
                                      deadline=deadline, overflow=overflow,
-                                     retry_rate=retry_rate)
+                                     retry_rate=retry_rate, mtbf=mtbf,
+                                     mttr=mttr, fail_disc=fail_disc,
+                                     throttle=throttle)
         n = len(base)
         ks = _as_i32(k)
         routes = _as_i32(_as_route_codes(routing))
@@ -264,7 +328,11 @@ class FleetGrid(SweepGrid):
                      q_maxes: Sequence[int] = (0,),
                      deadlines: Sequence[float] = (0.0,),
                      overflows: Sequence[str] = ("reject",),
-                     retry_rates: Sequence[float] = (0.0,)
+                     retry_rates: Sequence[float] = (0.0,),
+                     mtbfs: Sequence[float] = (0.0,),
+                     mttrs: Sequence[float] = (0.0,),
+                     fail_discs: Sequence[str] = ("resume",),
+                     throttles: Sequence[float] = (1.0,)
                      ) -> "FleetGrid":
         dist_codes = [DIST_CODE[d] if isinstance(d, str) else int(d)
                       for d in dists]
@@ -274,17 +342,20 @@ class FleetGrid(SweepGrid):
                            _as_i32(wait_targets), _as_i32(q_maxes),
                            _as_f32(deadlines),
                            _as_i32(_as_overflow_codes(list(overflows))),
-                           _as_f32(retry_rates), _as_i32(ks),
+                           _as_f32(retry_rates), _as_f32(mtbfs),
+                           _as_f32(mttrs),
+                           _as_i32(_as_fail_disc_codes(list(fail_discs))),
+                           _as_f32(throttles), _as_i32(ks),
                            _as_i32(_as_route_codes(routings)),
                            indexing="ij")
         flat = [m.reshape(-1) for m in mesh]
-        return cls(flat[0].astype(np.float32), flat[1].astype(np.float32),
-                   flat[2].astype(np.float32), flat[3].astype(np.int32),
-                   flat[4].astype(np.int32), flat[5].astype(np.float32),
-                   flat[6].astype(np.float32), flat[7].astype(np.int32),
-                   flat[8].astype(np.int32), flat[9].astype(np.float32),
-                   flat[10].astype(np.int32), flat[11].astype(np.float32),
-                   flat[12].astype(np.int32), flat[13].astype(np.int32))
+        return cls.from_points(
+            flat[0], flat[1], flat[2], b_max=flat[3], dist=flat[4],
+            cv=flat[5], wait_max=flat[6], wait_target=flat[7],
+            q_max=flat[8], deadline=flat[9], overflow=flat[10],
+            retry_rate=flat[11], mtbf=flat[12], mttr=flat[13],
+            fail_disc=flat[14], throttle=flat[15], k=flat[16],
+            routing=flat[17])
 
     @classmethod
     def from_rhos(cls, rhos: Sequence[float], alpha: float, tau0: float,
@@ -292,7 +363,9 @@ class FleetGrid(SweepGrid):
                   routings: Sequence[str] = ("jsq",), b_max=0,
                   dist="det", cv=0.5, wait_max=0.0,
                   wait_target=0, q_max=0, deadline=0.0,
-                  overflow="reject", retry_rate=0.0) -> "FleetGrid":
+                  overflow="reject", retry_rate=0.0, mtbf=0.0,
+                  mttr=0.0, fail_disc="resume",
+                  throttle=1.0) -> "FleetGrid":
         """Grid over *per-replica* loads ρ = λα/k for one service model —
         each (ρ, k) point gets total rate λ = kρ/α, so replicas face the
         same offered load regardless of k.
@@ -314,7 +387,9 @@ class FleetGrid(SweepGrid):
                                dist=dist, cv=cv, wait_max=wait_max,
                                wait_target=wait_target, q_max=q_max,
                                deadline=deadline, overflow=overflow,
-                               retry_rate=retry_rate)
+                               retry_rate=retry_rate, mtbf=mtbf,
+                               mttr=mttr, fail_disc=fail_disc,
+                               throttle=throttle)
 
     def _arrays(self) -> Tuple[np.ndarray, ...]:
         return (*super()._arrays(), self.k, self.routing)
@@ -352,16 +427,33 @@ class GenGrid(_GridOps):
     deadline: np.ndarray
     overflow: np.ndarray
     retry_rate: np.ndarray
+    mtbf: np.ndarray
+    mttr: np.ndarray
+    fail_disc: np.ndarray
+    throttle: np.ndarray
 
     @property
     def has_loss(self) -> bool:
-        """True when any point enables an admission-control regime."""
+        """True when any point enables an admission-control regime
+        (fail-drop failure points need the loss machinery too)."""
         return bool(np.any(self.q_max > 0) or np.any(self.deadline > 0)
-                    or np.any(self.retry_rate > 0))
+                    or np.any(self.retry_rate > 0)
+                    or np.any((self.mtbf > 0)
+                              & (self.fail_disc
+                                 == FAIL_DISC_CODE["drop"])))
+
+    @property
+    def has_fail(self) -> bool:
+        """True when any point enables the breakdown/repair regime."""
+        return bool(np.any(self.mtbf > 0))
 
     @property
     def overflow_names(self) -> List[str]:
         return [OVERFLOW_NAME[int(o)] for o in self.overflow]
+
+    @property
+    def fail_disc_names(self) -> List[str]:
+        return [FAIL_DISC_NAME[int(d)] for d in self.fail_disc]
 
     @property
     def rho(self) -> np.ndarray:
@@ -392,7 +484,8 @@ class GenGrid(_GridOps):
                     tau0_prefill, *, prompt_len=128, gen_tokens=32,
                     max_active=64, discipline="continuous", q_max=0,
                     deadline=0.0, overflow="reject",
-                    retry_rate=0.0) -> "GenGrid":
+                    retry_rate=0.0, mtbf=0.0, mttr=0.0,
+                    fail_disc="resume", throttle=1.0) -> "GenGrid":
         arrays = [_as_f32(lam), _as_f32(alpha_decode), _as_f32(tau0_decode),
                   _as_f32(alpha_prefill), _as_f32(tau0_prefill),
                   _as_i32(prompt_len), _as_i32(gen_tokens),
@@ -400,7 +493,9 @@ class GenGrid(_GridOps):
                   _as_i32(_as_disc_codes(discipline)),
                   _as_i32(q_max), _as_f32(deadline),
                   _as_i32(_as_overflow_codes(overflow)),
-                  _as_f32(retry_rate)]
+                  _as_f32(retry_rate), _as_f32(mtbf), _as_f32(mttr),
+                  _as_i32(_as_fail_disc_codes(fail_disc)),
+                  _as_f32(throttle)]
         n = max(a.shape[0] for a in arrays)
         arrays = [np.broadcast_to(a, (n,)).copy() if a.shape[0] == 1 else a
                   for a in arrays]
@@ -410,6 +505,8 @@ class GenGrid(_GridOps):
             raise ValueError("max_active must be >= 1")
         if np.any(arrays[6] < 1):
             raise ValueError("gen_tokens must be >= 1")
+        if np.any((arrays[13] > 0) & (arrays[14] <= 0)):
+            raise ValueError("failure points (mtbf > 0) need mttr > 0")
         return cls(*arrays)
 
     @classmethod
@@ -421,7 +518,11 @@ class GenGrid(_GridOps):
                      q_maxes: Sequence[int] = (0,),
                      deadlines: Sequence[float] = (0.0,),
                      overflows: Sequence[str] = ("reject",),
-                     retry_rates: Sequence[float] = (0.0,)
+                     retry_rates: Sequence[float] = (0.0,),
+                     mtbfs: Sequence[float] = (0.0,),
+                     mttrs: Sequence[float] = (0.0,),
+                     fail_discs: Sequence[str] = ("resume",),
+                     throttles: Sequence[float] = (1.0,)
                      ) -> "GenGrid":
         """Cartesian product of the sweep axes for one token-level
         service model (a ``GenServiceModel`` or anything with its four
@@ -431,14 +532,18 @@ class GenGrid(_GridOps):
                            _as_i32(gen_tokens), _as_i32(max_actives),
                            disc, _as_i32(q_maxes), _as_f32(deadlines),
                            _as_i32(_as_overflow_codes(list(overflows))),
-                           _as_f32(retry_rates), indexing="ij")
+                           _as_f32(retry_rates), _as_f32(mtbfs),
+                           _as_f32(mttrs),
+                           _as_i32(_as_fail_disc_codes(list(fail_discs))),
+                           _as_f32(throttles), indexing="ij")
         flat = [m.reshape(-1) for m in mesh]
         return cls.from_points(
             flat[0].astype(np.float32), model.alpha_decode,
             model.tau0_decode, model.alpha_prefill, model.tau0_prefill,
             prompt_len=flat[1], gen_tokens=flat[2], max_active=flat[3],
             discipline=flat[4], q_max=flat[5], deadline=flat[6],
-            overflow=flat[7], retry_rate=flat[8])
+            overflow=flat[7], retry_rate=flat[8], mtbf=flat[9],
+            mttr=flat[10], fail_disc=flat[11], throttle=flat[12])
 
     @classmethod
     def from_rhos(cls, rhos: Sequence[float], model, *,
@@ -449,7 +554,11 @@ class GenGrid(_GridOps):
                   q_maxes: Sequence[int] = (0,),
                   deadlines: Sequence[float] = (0.0,),
                   overflows: Sequence[str] = ("reject",),
-                  retry_rates: Sequence[float] = (0.0,)
+                  retry_rates: Sequence[float] = (0.0,),
+                  mtbfs: Sequence[float] = (0.0,),
+                  mttrs: Sequence[float] = (0.0,),
+                  fail_discs: Sequence[str] = ("resume",),
+                  throttles: Sequence[float] = (1.0,)
                   ) -> "GenGrid":
         """Product grid over decode-capacity-normalized loads ρ: each
         (ρ, prompt, gen, ...) point gets λ = ρ/(gen·α_d + prompt·α_p),
@@ -462,7 +571,9 @@ class GenGrid(_GridOps):
                                 disciplines=disciplines,
                                 q_maxes=q_maxes, deadlines=deadlines,
                                 overflows=overflows,
-                                retry_rates=retry_rates)
+                                retry_rates=retry_rates, mtbfs=mtbfs,
+                                mttrs=mttrs, fail_discs=fail_discs,
+                                throttles=throttles)
         reps = len(grid) // len(rhos)
         rho_pts = np.repeat(_as_f32(list(rhos)), reps)
         lam = rho_pts / (grid.gen_tokens * grid.alpha_decode
@@ -474,7 +585,8 @@ class GenGrid(_GridOps):
                 self.alpha_prefill, self.tau0_prefill, self.prompt_len,
                 self.gen_tokens, self.max_active, self.discipline,
                 self.q_max, self.deadline, self.overflow,
-                self.retry_rate)
+                self.retry_rate, self.mtbf, self.mttr, self.fail_disc,
+                self.throttle)
 
 
 @dataclass(frozen=True)
@@ -705,6 +817,44 @@ class SweepResult(_LossAccounting):
     stderr: np.ndarray = field(default=None, repr=False)
     ci_halfwidth: np.ndarray = field(default=None, repr=False)
     n_blocks: np.ndarray = field(default=None, repr=False)
+    # breakdown/repair accounting, filled only on failure grids
+    # (``grid.has_fail``); None on failure-free runs.  ``n_failures``
+    # counts measured breakdowns, ``down_time`` the total repair time
+    # spent, ``lost_work`` the service time thrown away by
+    # restarts/aborts, and ``span`` the measured wall-clock the
+    # down-time is relative to.
+    n_failures: np.ndarray = field(default=None, repr=False)
+    down_time: np.ndarray = field(default=None, repr=False)
+    lost_work: np.ndarray = field(default=None, repr=False)
+    span: np.ndarray = field(default=None, repr=False)
+
+    @property
+    def availability(self) -> np.ndarray:
+        """Fraction of measured wall-clock each point's server (fleet:
+        server-hours) spent NOT under repair; 1 on failure-free runs."""
+        ones = np.ones_like(np.asarray(self.mean_latency, np.float64))
+        if self.down_time is None or self.span is None:
+            return ones
+        k = np.asarray(getattr(self.grid, "k", 1), np.float64)
+        denom = k * np.asarray(self.span, np.float64)
+        return np.where(denom > 0,
+                        1.0 - self.down_time / np.maximum(denom, 1e-30),
+                        ones)
+
+    @property
+    def work_loss_frac(self) -> np.ndarray:
+        """Fraction of executed service time thrown away by
+        preempt-restart re-execution / fail-drop aborts (the work-loss
+        tax); 0 on failure-free runs."""
+        zeros = np.zeros_like(np.asarray(self.mean_latency, np.float64))
+        if self.lost_work is None or self.span is None:
+            return zeros
+        k = np.asarray(getattr(self.grid, "k", 1), np.float64)
+        useful = (np.asarray(self.utilization, np.float64)
+                  * k * np.asarray(self.span, np.float64))
+        tot = useful + np.asarray(self.lost_work, np.float64)
+        return np.where(tot > 0,
+                        self.lost_work / np.maximum(tot, 1e-30), zeros)
 
     @property
     def hist_bin_edges(self) -> np.ndarray:
@@ -829,6 +979,37 @@ class GenResult(_LossAccounting):
     stderr: np.ndarray = field(default=None, repr=False)
     ci_halfwidth: np.ndarray = field(default=None, repr=False)
     n_blocks: np.ndarray = field(default=None, repr=False)
+    # breakdown/repair accounting — see SweepResult
+    n_failures: np.ndarray = field(default=None, repr=False)
+    down_time: np.ndarray = field(default=None, repr=False)
+    lost_work: np.ndarray = field(default=None, repr=False)
+    span: np.ndarray = field(default=None, repr=False)
+
+    @property
+    def availability(self) -> np.ndarray:
+        """Fraction of measured wall-clock the server spent NOT under
+        repair; 1 on failure-free runs."""
+        ones = np.ones_like(np.asarray(self.mean_latency, np.float64))
+        if self.down_time is None or self.span is None:
+            return ones
+        sp = np.asarray(self.span, np.float64)
+        return np.where(sp > 0,
+                        1.0 - self.down_time / np.maximum(sp, 1e-30),
+                        ones)
+
+    @property
+    def work_loss_frac(self) -> np.ndarray:
+        """Fraction of executed decode/prefill time thrown away by
+        preempt-restart re-execution / fail-drop aborts; 0 on
+        failure-free runs."""
+        zeros = np.zeros_like(np.asarray(self.mean_latency, np.float64))
+        if self.lost_work is None or self.span is None:
+            return zeros
+        useful = (np.asarray(self.utilization, np.float64)
+                  * np.asarray(self.span, np.float64))
+        tot = useful + np.asarray(self.lost_work, np.float64)
+        return np.where(tot > 0,
+                        self.lost_work / np.maximum(tot, 1e-30), zeros)
 
     @property
     def hist_bin_edges(self) -> np.ndarray:

@@ -37,6 +37,21 @@ measured *offered* job — fresh arrivals, counted once even if it later
 retries — ends in exactly one of four classes: completed in SLO
 (goodput), completed late, finally rejected (overflow), finally
 abandoned.  ``retry_inflation = (fresh + retry arrivals)/fresh``.
+
+Server failures (``mtbf``/``mttr``/``fail_disc``/``throttle``): the
+mirrors implement the kernels' breakdown/repair law per server — an
+exponential MTBF clock that runs only while executing, Exp(mttr)
+repairs, preempt-resume / preempt-restart / fail-drop interruption
+disciplines, and a ×throttle degraded first batch after any repair.
+The one deliberate difference: the restart attempt count is sampled
+UNBOUNDED here where the kernels truncate the geometric at a fixed
+block of 16 attempts (P ≈ 4e-7 at the loads tested) — the mirrors are
+statistical references on a seed ladder, not bitwise ones.  fail-drop
+routes the aborted batch's jobs through the abandonment/retry path,
+exactly like the kernels; the fleet mirror skips *impaired* replicas
+(last formation hit a failure) in random/round-robin routing and
+penalizes them under JSQ, falling back to all replicas when every one
+is impaired.
 """
 from __future__ import annotations
 
@@ -79,9 +94,26 @@ class LossRefResult:
     def late_frac(self) -> float:
         return (self.n_jobs - self.n_in_slo) / max(self.offered, 1)
 
+    # breakdown/repair accounting (zeros when failures are off)
+    n_failures: int = 0
+    down_time: float = 0.0          # repair time, summed over servers
+    lost_work: float = 0.0          # re-executed / aborted partial work
+    span: float = 0.0               # measured wall-clock, × k servers
+
     @property
     def retry_inflation(self) -> float:
         return (self.n_fresh + self.n_retry) / max(self.n_fresh, 1)
+
+    @property
+    def availability(self) -> float:
+        return 1.0 - self.down_time / max(self.span, 1e-30)
+
+    @property
+    def work_loss_frac(self) -> float:
+        tot = self.down_time + self.lost_work
+        busy = self.utilization * max(self.span, 1e-30)
+        return self.lost_work / max(busy + self.lost_work, 1e-30) \
+            if tot > 0.0 else 0.0
 
 
 def _rooms(q_max: int, overflow: str, q_cap: int):
@@ -126,12 +158,77 @@ class _Orbit:
         return lost_ab - take_a, lost_ov - take_b
 
 
+class _Failures:
+    """Per-server breakdown/repair law (see module docstring).
+
+    ``scale(r)`` is the degraded-phase service multiplier consumed at
+    the next formation; ``draw(s, r)`` runs the failure clock over one
+    execution of length ``s`` and returns
+    ``(comp, busy, repair, lost, n_failures, aborted)`` — wall-clock
+    completion, productive execution, repair time, lost partial work,
+    failure count, and the fail-drop abort flag."""
+
+    def __init__(self, rng, mtbf: float, mttr: float, fail_disc: str,
+                 throttle: float, k: int = 1):
+        self.rng = rng
+        self.on = mtbf is not None and mtbf > 0.0
+        self.mtbf = float(mtbf or 0.0)
+        self.mttr = float(mttr or 0.0)
+        self.disc = fail_disc
+        self.throttle = float(throttle if throttle else 1.0)
+        self.deg = [False] * k
+        if self.on:
+            if self.mttr <= 0.0:
+                raise ValueError("mttr must be > 0 when mtbf is set")
+            if fail_disc not in ("resume", "restart", "drop"):
+                raise ValueError(f"unknown fail_disc {fail_disc!r}")
+
+    def scale(self, r: int = 0) -> float:
+        return self.throttle if (self.on and self.deg[r]) else 1.0
+
+    def draw(self, s: float, r: int = 0):
+        if not self.on:
+            return s, s, 0.0, 0.0, 0, False
+        if s <= 0.0:
+            # kernels compute deg = fail_on & (n_f > 0) even on a
+            # batchless step — the degraded phase does not survive idle
+            self.deg[r] = False
+            return s, s, 0.0, 0.0, 0, False
+        rng, xi = self.rng, 1.0 / self.mtbf
+        if self.disc == "resume":
+            M = int(rng.poisson(xi * s))
+            rep = float(rng.gamma(M, self.mttr)) if M > 0 else 0.0
+            out = (s + rep, s, rep, 0.0, M, False)
+        elif self.disc == "restart":
+            n, lost, rep = 0, 0.0, 0.0
+            while True:
+                e = rng.exponential(self.mtbf)
+                if e >= s:
+                    break
+                n += 1
+                lost += e
+                rep += rng.exponential(self.mttr)
+            out = (s + lost + rep, s, rep, lost, n, False)
+        else:                                        # fail-drop
+            e = rng.exponential(self.mtbf)
+            if e < s:
+                rp = rng.exponential(self.mttr)
+                out = (e + rp, 0.0, rp, e, 1, True)
+            else:
+                out = (s, s, 0.0, 0.0, 0, False)
+        self.deg[r] = out[4] > 0
+        return out
+
+
 def simulate_loss_numpy(lam: float, model, b_max: int, *,
                         q_max: int = 0, deadline: float = 0.0,
                         overflow: str = "reject",
                         retry_rate: float = 0.0,
                         q_cap: int = 4096, r_cap: int = 256,
                         dist: str = "det", cv: float = 1.0,
+                        mtbf: float = 0.0, mttr: float = 0.0,
+                        fail_disc: str = "resume",
+                        throttle: float = 1.0,
                         n_batches: int = 20_000,
                         warmup: int | None = None,
                         seed: int = 0) -> LossRefResult:
@@ -151,12 +248,13 @@ def simulate_loss_numpy(lam: float, model, b_max: int, *,
     b_cap = b_max if b_max and b_max > 0 else q_cap
     roomv, trim_to, retry_room = _rooms(q_max, overflow, q_cap)
     orbit = _Orbit(rng, retry_rate, r_cap)
+    fail = _Failures(rng, mtbf, mttr, fail_disc, throttle)
     gamma_shape = 1.0 if dist == "exp" else 1.0 / (cv * cv)
 
     queue: list[float] = []       # waiting arrival epochs, FIFO
     prev_depart = 0.0
-    lat_sum = busy = span = 0.0
-    lat_n = slo_n = ov_n = ab_n = fresh_n = retry_n = 0
+    lat_sum = busy = span = down = lwork = 0.0
+    lat_n = slo_n = ov_n = ab_n = fresh_n = retry_n = nfail_n = 0
 
     for i in range(n_batches):
         meas = i >= warmup
@@ -179,19 +277,27 @@ def simulate_loss_numpy(lam: float, model, b_max: int, *,
             s = alpha * b + tau0
             if dist != "det":
                 s *= rng.gamma(gamma_shape) / gamma_shape
+            s *= fail.scale()
         else:
             s = 0.0
-        depart = release + s
+        comp, s_busy, rep, lost, n_f, aborted = fail.draw(s)
+        depart = release + comp
 
         popped, queue = queue[:b], queue[b:]
+        if aborted:
+            lost_ab += b          # the aborted batch retries/abandons
         if meas:
-            for arr in popped:
-                w = depart - arr
-                lat_sum += w
-                slo_n += int(deadline <= 0.0 or w <= deadline)
-            lat_n += b
-            busy += s
+            if not aborted:
+                for arr in popped:
+                    w = depart - arr
+                    lat_sum += w
+                    slo_n += int(deadline <= 0.0 or w <= deadline)
+                lat_n += b
+            busy += s_busy
             span += depart - prev_depart
+            down += rep
+            lwork += lost
+            nfail_n += n_f
 
         while len(queue) > trim_to:       # drop-mode formation trim
             queue.pop()
@@ -226,7 +332,8 @@ def simulate_loss_numpy(lam: float, model, b_max: int, *,
         utilization=busy / max(span, 1e-30),
         n_jobs=lat_n, offered=lat_n + ov_n + ab_n, n_in_slo=slo_n,
         overflow_dropped=ov_n, abandoned=ab_n,
-        n_fresh=fresh_n, n_retry=retry_n)
+        n_fresh=fresh_n, n_retry=retry_n,
+        n_failures=nfail_n, down_time=down, lost_work=lwork, span=span)
 
 
 def simulate_fleet_loss_numpy(lam: float, model, b_max: int, *,
@@ -236,6 +343,9 @@ def simulate_fleet_loss_numpy(lam: float, model, b_max: int, *,
                               retry_rate: float = 0.0,
                               q_cap: int = 4096, r_cap: int = 256,
                               dist: str = "det", cv: float = 1.0,
+                              mtbf: float = 0.0, mttr: float = 0.0,
+                              fail_disc: str = "resume",
+                              throttle: float = 1.0,
                               n_events: int = 40_000,
                               warmup: int | None = None,
                               seed: int = 0) -> LossRefResult:
@@ -258,31 +368,51 @@ def simulate_fleet_loss_numpy(lam: float, model, b_max: int, *,
     b_cap = b_max if b_max and b_max > 0 else q_cap
     roomv, trim_to, retry_room = _rooms(q_max, overflow, q_cap)
     orbit = _Orbit(rng, retry_rate, r_cap)
+    fail = _Failures(rng, mtbf, mttr, fail_disc, throttle, k=k)
     gamma_shape = 1.0 if dist == "exp" else 1.0 / (cv * cv)
     INF = float("inf")
+    IMP_PENALTY = 1 << 19         # JSQ load penalty on impaired replicas
 
     queues: list[list[float]] = [[] for _ in range(k)]
     in_service = [0] * k
     committed = [False] * k
+    imp = [False] * k             # last formation hit a failure
     t_free = [INF] * k
     rr = 0
     clock = 0.0
     t_arr = rng.exponential(1.0 / lam)
     lost_ov_pending = 0
-    lat_sum = busy = span = 0.0
-    lat_n = slo_n = ov_n = ab_n = fresh_n = retry_n = 0
+    lat_sum = busy = span = down = lwork = 0.0
+    lat_n = slo_n = ov_n = ab_n = fresh_n = retry_n = nfail_n = 0
     events = 0
 
-    def _route_arrival() -> int:
+    def _eligible() -> list[int]:
+        """Replicas arrivals may target: the non-impaired ones, or all
+        of them when every replica is impaired (never stall)."""
+        ok = [j for j in range(k) if not imp[j]]
+        return ok if ok else list(range(k))
+
+    def _route_one(advance_rr: bool) -> int:
         nonlocal rr
         if routing == "random":
-            return int(rng.integers(k))
+            cand = _eligible()
+            return cand[int(rng.integers(len(cand)))]
         if routing == "round_robin":
-            d = rr % k
-            rr += 1
-            return d
-        loads = [len(queues[j]) + in_service[j] for j in range(k)]
+            cand = set(_eligible())
+            start = rr % k
+            if advance_rr:
+                rr += 1
+            for off in range(k):
+                j = (start + off) % k
+                if j in cand:
+                    return j
+            return start                           # unreachable
+        loads = [len(queues[j]) + in_service[j]
+                 + (IMP_PENALTY if imp[j] else 0) for j in range(k)]
         return int(np.argmin(loads))
+
+    def _route_arrival() -> int:
+        return _route_one(advance_rr=True)
 
     while events < n_events:
         t_dec = min(t_free)
@@ -317,37 +447,42 @@ def simulate_fleet_loss_numpy(lam: float, model, b_max: int, *,
             s = alpha * b + tau0
             if dist != "det":
                 s *= rng.gamma(gamma_shape) / gamma_shape
+            s *= fail.scale(r)
+            comp, s_busy, rep, lost, n_f, aborted = fail.draw(s, r)
+            imp[r] = n_f > 0
             popped, queues[r] = q[:b], q[b:]
             q = queues[r]
+            if aborted:
+                lost_ab += b      # aborted batch retries/abandons
             if meas:
-                for arr in popped:
-                    w = t_ev + s - arr
-                    lat_sum += w
-                    slo_n += int(deadline <= 0.0 or w <= deadline)
-                lat_n += b
-                busy += s
-            in_service[r] = b
-            t_free[r] = t_ev + s
+                if not aborted:
+                    for arr in popped:
+                        w = t_ev + comp - arr
+                        lat_sum += w
+                        slo_n += int(deadline <= 0.0 or w <= deadline)
+                    lat_n += b
+                busy += s_busy
+                down += rep
+                lwork += lost
+                nfail_n += n_f
+            in_service[r] = 0 if aborted else b
+            t_free[r] = t_ev + comp
             while len(q) > trim_to:        # drop-mode formation trim
                 q.pop()
                 lost_ov_pending += 1
         else:
             in_service[r] = 0
             committed[r] = False
+            imp[r] = False
             t_free[r] = INF
 
         # retry orbit, assessed once per decision event; the firing
-        # block re-arrives whole at ONE replica
+        # block re-arrives whole at ONE replica (round-robin reads the
+        # cursor without advancing; impaired replicas are skipped the
+        # same way arrivals skip them)
         n_r = orbit.draws(t_ev - clock)
         if n_r > 0:
-            if routing == "random":
-                d = int(rng.integers(k))
-            elif routing == "round_robin":
-                d = rr % k
-            else:
-                loads = [len(queues[j]) + in_service[j]
-                         for j in range(k)]
-                d = int(np.argmin(loads))
+            d = _route_one(advance_rr=False)
             admit_r = min(n_r, max(retry_room - len(queues[d]), 0))
             queues[d].extend([t_ev] * admit_r)
             if admit_r > 0 and not committed[d]:
@@ -369,7 +504,9 @@ def simulate_fleet_loss_numpy(lam: float, model, b_max: int, *,
         utilization=busy / max(k * span, 1e-30),
         n_jobs=lat_n, offered=lat_n + ov_n + ab_n, n_in_slo=slo_n,
         overflow_dropped=ov_n, abandoned=ab_n,
-        n_fresh=fresh_n, n_retry=retry_n)
+        n_fresh=fresh_n, n_retry=retry_n,
+        n_failures=nfail_n, down_time=down, lost_work=lwork,
+        span=k * span)
 
 
 def simulate_gen_loss_numpy(lam: float, model, *, prompt_len: int,
@@ -379,6 +516,9 @@ def simulate_gen_loss_numpy(lam: float, model, *, prompt_len: int,
                             overflow: str = "reject",
                             retry_rate: float = 0.0,
                             q_cap: int = 4096, r_cap: int = 256,
+                            mtbf: float = 0.0, mttr: float = 0.0,
+                            fail_disc: str = "resume",
+                            throttle: float = 1.0,
                             n_steps: int = 30_000,
                             warmup: int | None = None,
                             seed: int = 0) -> LossRefResult:
@@ -399,6 +539,7 @@ def simulate_gen_loss_numpy(lam: float, model, *, prompt_len: int,
     a_p, t0_p = float(model.alpha_prefill), float(model.tau0_prefill)
     roomv, trim_to, retry_room = _rooms(q_max, overflow, q_cap)
     orbit = _Orbit(rng, retry_rate, r_cap)
+    fail = _Failures(rng, mtbf, mttr, fail_disc, throttle)
     continuous = discipline == "continuous"
     BIG = 1 << 24
 
@@ -406,8 +547,8 @@ def simulate_gen_loss_numpy(lam: float, model, *, prompt_len: int,
     active: list[list] = []       # [remaining_tokens, arrival_epoch]
     now = 0.0
     next_arr = rng.exponential(1.0 / lam)
-    lat_sum = busy = span = 0.0
-    lat_n = slo_n = ov_n = ab_n = fresh_n = retry_n = 0
+    lat_sum = busy = span = down = lwork = 0.0
+    lat_n = slo_n = ov_n = ab_n = fresh_n = retry_n = nfail_n = 0
 
     for i in range(n_steps):
         meas = i >= warmup
@@ -428,7 +569,9 @@ def simulate_gen_loss_numpy(lam: float, model, *, prompt_len: int,
         gate = continuous or not active
         n_join = min(len(waiting), max_active - len(active)) \
             if gate else 0
-        t_pf = a_p * prompt_len * n_join + t0_p if n_join > 0 else 0.0
+        thr = fail.scale()                 # degraded phase, this run
+        t_pf = (a_p * prompt_len * n_join + t0_p) * thr \
+            if n_join > 0 else 0.0
         for arr in waiting[:n_join]:
             active.append([gen_tokens, arr])
         waiting = waiting[n_join:]
@@ -439,7 +582,7 @@ def simulate_gen_loss_numpy(lam: float, model, *, prompt_len: int,
 
         b = len(active)
         if b > 0:
-            dt = a_d * b + t0_d
+            dt = (a_d * b + t0_d) * thr
             t0r = now + t_pf
             m_min = min(a[0] for a in active)
             watch = continuous and b < max_active
@@ -452,6 +595,13 @@ def simulate_gen_loss_numpy(lam: float, model, *, prompt_len: int,
         else:
             k_run, t_end = 0, now
 
+        # failure clock over the run's busy span (run granularity);
+        # repairs/rework extend t_end — arrivals during them below
+        w_run = t_pf + k_run * dt if b > 0 else 0.0
+        comp, w_busy, rep, lost, n_f, aborted = fail.draw(w_run)
+        if b > 0:
+            t_end = now + comp             # == old t_end + extension
+
         while next_arr <= t_end:           # window arrivals vs room
             fresh += 1
             if len(waiting) < roomv:
@@ -461,19 +611,27 @@ def simulate_gen_loss_numpy(lam: float, model, *, prompt_len: int,
             next_arr += rng.exponential(1.0 / lam)
 
         fins = []
-        if k_run > 0:
+        if k_run > 0 and not aborted:
             for a in active:
                 a[0] -= k_run
             fins, active = ([a for a in active if a[0] == 0],
                             [a for a in active if a[0] > 0])
+        if aborted:
+            # fail-drop: the whole run aborts — decode progress is not
+            # resumed, every active job leaves via the retry path
+            lost_ab += len(active)
+            active = []
         if meas:
             for _, arr in fins:
                 w = t_end - arr
                 lat_sum += w
                 slo_n += int(deadline <= 0.0 or w <= deadline)
             lat_n += len(fins)
-            busy += t_pf + k_run * (a_d * b + t0_d) if b > 0 else 0.0
+            busy += w_busy
             span += t_end - t_step0
+            down += rep
+            lwork += lost
+            nfail_n += n_f
 
         n_r = orbit.draws(t_end - t_step0)
         admit_r = min(n_r, max(retry_room - len(waiting), 0))
@@ -492,4 +650,5 @@ def simulate_gen_loss_numpy(lam: float, model, *, prompt_len: int,
         utilization=busy / max(span, 1e-30),
         n_jobs=lat_n, offered=lat_n + ov_n + ab_n, n_in_slo=slo_n,
         overflow_dropped=ov_n, abandoned=ab_n,
-        n_fresh=fresh_n, n_retry=retry_n)
+        n_fresh=fresh_n, n_retry=retry_n,
+        n_failures=nfail_n, down_time=down, lost_work=lwork, span=span)

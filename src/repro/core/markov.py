@@ -75,7 +75,8 @@ from repro.core.analytic import LinearServiceModel
 from repro.core.grid import MarkovGrid, MarkovGridResult
 
 __all__ = ["MarkovResult", "MarkovLossResult", "solve", "solve_batch",
-           "solve_grid", "solve_loss", "poisson_pmf_row"]
+           "solve_grid", "solve_loss", "poisson_pmf_row",
+           "completion_moments"]
 
 _TRUNC_START = 256           # adaptive growth starts here
 _TRUNC_CAP_DENSE = 8192      # dense adaptive growth stops here (0.5 GB)
@@ -117,6 +118,11 @@ class MarkovResult:
     truncation: int
     tail_mass: float                 # stationary mass at the truncation cell
     method: str = "dense"            # solver that produced this result
+    # breakdown/repair regime only (mtbf set on ``solve``): fraction of
+    # time NOT spent in repair, and re-executed work as a fraction of
+    # all work performed — both match the MC kernels' definitions
+    availability: float = 1.0
+    work_loss_frac: float = 0.0
 
 
 # above this truncation the cached λ-independent log-pmf core —
@@ -274,8 +280,9 @@ def _adaptive_cap(method: str) -> int:
 
 def solve(lam: float, model: LinearServiceModel, *,
           b_max: float = math.inf, truncation: int = 0,
-          tail_tol: float = _TAIL_TOL, method: str = "auto"
-          ) -> MarkovResult:
+          tail_tol: float = _TAIL_TOL, method: str = "auto",
+          mtbf: Optional[float] = None, mttr: Optional[float] = None,
+          fail_disc: str = "resume") -> MarkovResult:
     """Solve the embedded chain and return exact (up to truncation)
     metrics.
 
@@ -286,9 +293,26 @@ def solve(lam: float, model: LinearServiceModel, *,
     level).  An explicit ``truncation`` is used as-is.  See the module
     docstring for ``method``; with the default "auto", finite-b_max
     cells outside the structured solver's positive-recurrence domain
-    fall back to the dense reference transparently."""
+    fall back to the dense reference transparently.
+
+    ``mtbf``/``mttr``/``fail_disc`` switch on the breakdown/repair
+    completion-time transform (see the module section above
+    ``completion_moments``): service times become completion times with
+    exponential failures-while-serving and Exp(mttr) repairs, under
+    preempt-``"resume"`` or preempt-``"restart"``.  ``mtbf`` unset or
+    ≤ 0 is the failure-free chain, bitwise identical to the base
+    solve.  The failure chain keeps the banded structure, so it always
+    runs the structured solver ("gth" forces the pure-NumPy recursion);
+    it needs a finite ``b_max``, and ``fail_disc="drop"`` has no chain
+    (its reference is the ``loss_ref`` mirror)."""
     if lam <= 0:
         raise ValueError("lam must be > 0")
+    if mtbf is not None and mtbf > 0:
+        return _solve_failure(
+            lam, model, b_max=b_max, truncation=truncation,
+            tail_tol=tail_tol, method=method, mtbf=float(mtbf),
+            mttr=float(mttr) if mttr is not None else 0.0,
+            fail_disc=fail_disc)
     auto = method == "auto"
     method = _resolve_method(method, b_max)
 
@@ -319,6 +343,298 @@ def solve(lam: float, model: LinearServiceModel, *,
         if res.tail_mass <= tail_tol or K >= _adaptive_cap(method):
             return res
         K = min(2 * K, _adaptive_cap(method))
+
+
+# ---------------------------------------------------------------------------
+# Breakdown/repair: the completion-time transform
+# ---------------------------------------------------------------------------
+#
+# With an exponential MTBF clock (rate ξ = 1/MTBF, ticking only while
+# the server executes) and Exp(MTTR) repairs, the *service time* τ[b]
+# of a batch becomes a *completion time* C_b — wall-clock from batch
+# start to batch finish, repairs included.  The embedded chain is
+# otherwise unchanged: L' = carry(l) + (arrivals during C_{b(l)}), and
+# since C_b depends on the state only through b(l), every level above
+# b_max keeps the identical row — the banded M/G/1-type structure of
+# ``chain_solver`` survives the transform verbatim; only the row pmf
+# (arrival *count* during C_b instead of during τ[b]) and the
+# renewal-reward layer (E[C], E[C²] instead of τ, τ²) change.
+#
+#   preempt-resume  : C = s + Σ_{i≤M} R_i,  M ~ Poisson(ξs), R ~ Exp(r)
+#       E[C] = s(1 + ξr),   Var C = 2ξs r²
+#       count pmf = Poisson(λs) ⊛ CompoundPoisson(μ = ξs, geometric
+#       per-repair arrival jumps), the compound part by Panjer's
+#       recursion (its f_0 > 0 case).
+#   preempt-restart : C = Σ_{i≤G}(U_i + R_i) + s,  G ~ Geom(q = e^{−ξs})
+#       failures U ~ Exp(ξ) | U < s; the batch re-executes from scratch
+#       E[C] = (1/ξ + r)(e^{ξs} − 1) + s·... (see completion_moments)
+#       count pmf = CompoundGeometric(arrivals per failed attempt) ⊛
+#       Poisson(λs), the compound-geometric by its defective renewal
+#       recursion.
+#
+# fail-drop has no single-server transform here (the aborted batch
+# leaves through the loss/retry accounting, coupling the chain to the
+# orbit) — its exact reference is the chronological numpy mirror in
+# ``repro.core.loss_ref``.
+
+_PMF_TOL = 1e-12            # completion-count pmf tail mass kept
+_PMF_CAP = 1 << 16          # hard length cap on one pmf row
+
+
+def completion_moments(s, mtbf: float, mttr: float, *,
+                       restart: bool = False):
+    """First two moments (E[C], E[C²]) of the completion time of a
+    batch whose failure-free execution takes ``s`` (scalar or array),
+    under Exp(1/mtbf) failures-while-serving and Exp(mttr) repairs.
+    ``restart=False`` is preempt-resume, ``True`` preempt-restart;
+    ``mtbf <= 0`` disables failures (C ≡ s)."""
+    s = np.asarray(s, dtype=float)
+    if mtbf is None or mtbf <= 0:
+        return s + 0.0, s * s
+    ec, ec2, _, _ = _completion_stats(s, 1.0 / float(mtbf), float(mttr),
+                                      restart)
+    return ec, ec2
+
+
+def _completion_stats(s, xi: float, r: float, restart: bool):
+    """(E[C], E[C²], E[repair time per batch], E[lost work per batch])
+    — vectorized over the service-time array ``s``."""
+    s = np.asarray(s, dtype=float)
+    if not restart:
+        m = xi * s                                  # E[#failures]
+        ec = s * (1.0 + xi * r)
+        ec2 = ec * ec + 2.0 * m * r * r             # Var C = m·E[R²]
+        return ec, ec2, m * r, np.zeros_like(s)
+    q = np.exp(-xi * s)
+    omq = np.maximum(-np.expm1(-xi * s), 1e-300)    # 1 − q
+    eg = omq / q                                    # E[#failed attempts]
+    vg = omq / (q * q)
+    # U ~ Exp(ξ) truncated to [0, s]
+    eu = 1.0 / xi - s * q / omq
+    eu2 = 2.0 / xi ** 2 - (s * s + 2.0 * s / xi) * q / omq
+    ex = eu + r                                     # X = U + R per attempt
+    vx = (eu2 - eu * eu) + r * r
+    es = eg * ex                                    # S = Σ_{i≤G} X_i
+    vs = eg * vx + vg * ex * ex
+    ec = s + es
+    ec2 = ec * ec + vs
+    return ec, ec2, eg * r, eg * eu
+
+
+def _raw_poisson_pmf(mean: float, length: int) -> np.ndarray:
+    """Poisson pmf p_0..p_{length-1} with NO tail absorption (internal
+    convolution building block; residuals are absorbed once, at the
+    band edge)."""
+    row = np.zeros(length)
+    if mean <= 0:
+        row[0] = 1.0
+        return row
+    ks = np.arange(1, length, dtype=float)
+    row[:] = np.exp(np.concatenate(
+        [[0.0], np.cumsum(np.log(mean / ks))]) - mean)
+    return row
+
+
+def _completion_count_pmf(lam: float, s: float, xi: float, r: float,
+                          restart: bool) -> np.ndarray:
+    """pmf of the number of Poisson(λ) arrivals during one completion
+    time C (the failure-regime transition row before the carry shift).
+    Length adapts until the dropped tail is below ``_PMF_TOL``."""
+    ec, ec2, _, _ = _completion_stats(np.asarray(s), xi, r, restart)
+    mean_n = lam * float(ec)
+    var_n = mean_n + lam * lam * max(float(ec2 - ec * ec), 0.0)
+    L = int(math.ceil(mean_n + 12.0 * math.sqrt(max(var_n, 1.0)) + 40.0))
+    while True:
+        L = min(L, _PMF_CAP)
+        p = (_resume_count_pmf(lam, s, xi, r, L) if not restart
+             else _restart_count_pmf(lam, s, xi, r, L))
+        if 1.0 - p.sum() <= _PMF_TOL or L >= _PMF_CAP:
+            return p
+        L *= 2
+
+
+def _resume_count_pmf(lam: float, s: float, xi: float, r: float,
+                      L: int) -> np.ndarray:
+    # arrivals during one Exp(r) repair: Geom over {0, 1, ...}
+    f0 = 1.0 / (1.0 + lam * r)
+    ratio = lam * r / (1.0 + lam * r)
+    mu = xi * s                                     # failure count mean
+    j = np.arange(L, dtype=float)
+    jf = j * f0 * ratio ** j                        # j·f_j for Panjer
+    g = np.zeros(L)
+    g[0] = math.exp(-mu * (1.0 - f0))
+    for n in range(1, L):
+        g[n] = (mu / n) * float(np.dot(jf[1:n + 1], g[n - 1::-1][:n]))
+    return np.convolve(_raw_poisson_pmf(lam * s, L), g)[:L]
+
+
+def _restart_count_pmf(lam: float, s: float, xi: float, r: float,
+                       L: int) -> np.ndarray:
+    q = math.exp(-xi * s)
+    omq = max(-math.expm1(-xi * s), 1e-300)
+    beta = lam + xi
+    # arrivals during one failed attempt U ~ Exp(ξ) | U < s:
+    #   P(N_U = n) = (ξ/β)(λ/β)^n · P(Gamma(n+1, β) ≤ s) / (1 − q)
+    pm = _raw_poisson_pmf(beta * s, L + 1)
+    sf = np.concatenate([pm[::-1].cumsum()[::-1][1:], [0.0]])  # P(A > n)
+    n = np.arange(L, dtype=float)
+    with np.errstate(under="ignore"):
+        a = (xi / beta) * np.exp(n * math.log(lam / beta)) \
+            * sf[:L] / omq
+    rep = (1.0 / (1.0 + lam * r)) \
+        * (lam * r / (1.0 + lam * r)) ** n          # repair arrivals
+    a1 = np.convolve(a, rep)[:L]                    # one failed attempt
+    denom = 1.0 - (1.0 - q) * a1[0]
+    B = np.zeros(L)
+    B[0] = q / denom
+    for k in range(1, L):
+        B[k] = (1.0 - q) / denom \
+            * float(np.dot(a1[1:k + 1], B[k - 1::-1][:k]))
+    return np.convolve(B, _raw_poisson_pmf(lam * s, L))[:L]
+
+
+def _failure_chain(lam: float, model: LinearServiceModel, b_max: float,
+                   K: int, xi: float, r: float, restart: bool,
+                   pmfs: List[np.ndarray]) -> chain_solver.BandedChain:
+    """Banded chain whose rows are completion-count pmfs.  ``pmfs[b-1]``
+    is the count pmf of batch size b (λ-dependent, K-independent — the
+    adaptive-truncation loop computes them once)."""
+    bcap = int(b_max)
+    Lmax = max(len(p) for p in pmfs)
+    P = np.zeros((bcap + 1, Lmax))
+    los = np.zeros(bcap + 1, dtype=np.int64)
+    his = np.zeros(bcap + 1, dtype=np.int64)
+    for b, p in enumerate(pmfs, start=1):
+        P[b, :len(p)] = p
+        cdf = np.cumsum(p)
+        los[b] = max(0, int(np.searchsorted(cdf, chain_solver.BAND_TOL))
+                     - 1)
+        his[b] = min(len(p) - 1,
+                     int(np.searchsorted(cdf,
+                                         1.0 - chain_solver.BAND_TOL)) + 2)
+    ls = np.arange(K + 1)
+    b_of = np.minimum(np.maximum(ls, 1), bcap).astype(np.int64)
+    t_of = model.tau(b_of)
+    carry = np.maximum(0, ls - b_of)
+    c = np.minimum(carry + los[b_of], K)
+    c = np.minimum(np.maximum.accumulate(c), K)     # keep nondecreasing
+    hi = np.minimum(carry + his[b_of], K)
+    if np.any(c[1:] >= ls[1:]):
+        raise ValueError("detached")                # caller names ρ_eff
+    V = int(np.max(hi - c))
+    width = np.maximum(hi - c, 0).astype(np.int64)
+    j = np.arange(V + 1)
+    pidx = (c - carry)[:, None] + j[None, :]
+    valid = (j[None, :] <= width[:, None]) & (pidx >= 0) & (pidx < Lmax)
+    B = np.where(valid, P[b_of[:, None], np.clip(pidx, 0, Lmax - 1)], 0.0)
+    B[ls, width] += np.maximum(0.0, 1.0 - B.sum(axis=1))
+    return chain_solver.BandedChain(
+        lam=float(lam), b_max=float(b_max), K=K, V=V, B=B, c=c,
+        width=width, b_of=b_of, t_of=t_of)
+
+
+def _failure_metrics(lam: float, pi: np.ndarray, t_of: np.ndarray,
+                     b_of: np.ndarray, ec: np.ndarray, ec2: np.ndarray,
+                     e_down: np.ndarray, e_lost: np.ndarray) -> dict:
+    """``chain_metrics`` with the occupancy integral generalized to the
+    random completion time:  ∫ jobs dt over one cycle from level l is
+    in_sys·E[C_l] + λ·E[C_l²]/2 (arrivals are independent of C)."""
+    K = len(pi) - 1
+    ls = np.arange(K + 1)
+    idle = np.where(ls == 0, 1.0 / lam, 0.0)
+    mean_cycle = float(pi @ (idle + ec))
+    in_sys = np.maximum(ls, 1).astype(float)
+    e_l = float(pi @ (in_sys * ec + lam * ec2 / 2.0)) / mean_cycle
+    util = float(pi @ t_of) / mean_cycle            # productive fraction
+    down = float(pi @ e_down) / mean_cycle
+    lost = float(pi @ e_lost) / mean_cycle
+    bf = b_of.astype(float)
+    return {
+        "mean_latency": e_l / lam,
+        "mean_batch": float(pi @ bf),
+        "batch_m2": float(pi @ (bf * bf)),
+        "utilization": util,
+        "mean_queue": e_l,
+        "pi0": float(pi[0]),
+        "tail_mass": float(pi[-1]),
+        "availability": 1.0 - down,
+        "work_loss_frac": lost / (util + lost) if lost > 0.0 else 0.0,
+    }
+
+
+def _solve_failure(lam: float, model: LinearServiceModel, *,
+                   b_max: float, truncation: int, tail_tol: float,
+                   method: str, mtbf: float, mttr: float,
+                   fail_disc: str) -> MarkovResult:
+    """Adaptive-truncation solve of the completion-time chain."""
+    if math.isinf(b_max):
+        raise ValueError("the completion-time chain needs a finite "
+                         "b_max (b_max = ∞ has no repeating band and "
+                         "the failure MC kernels pin finite caps)")
+    if fail_disc == "drop":
+        raise ValueError(
+            "fail-drop couples the chain to the retry orbit and has no "
+            "single-server completion-time transform; use the "
+            "chronological numpy mirror (repro.core.loss_ref) as its "
+            "reference")
+    if fail_disc not in ("resume", "restart"):
+        raise ValueError(f"unknown fail_disc {fail_disc!r}; pick from "
+                         "('resume', 'restart', 'drop')")
+    if mttr is None or mttr <= 0:
+        raise ValueError("mttr must be > 0 when mtbf is set")
+    restart = fail_disc == "restart"
+    xi = 1.0 / mtbf
+    bcap = int(b_max)
+    taus = model.tau(np.arange(1, bcap + 1))
+    ec_b, ec2_b, down_b, lost_b = _completion_stats(taus, xi, mttr,
+                                                    restart)
+    rho_eff = lam * float(ec_b[-1]) / bcap
+    if rho_eff >= 1.0:
+        raise ValueError(
+            f"failure-inflated load is unstable: rho_eff = "
+            f"λ·E[C(τ[b_max])]/b_max = {rho_eff:.4f} >= 1 — "
+            f"(MTBF={mtbf:g}, MTTR={mttr:g}, {fail_disc}) inflates the "
+            f"τ[{bcap}]={float(taus[-1]):g} batch to "
+            f"E[C]={float(ec_b[-1]):g}; lower λ, shorten repairs, or "
+            "raise b_max")
+    pmfs = [_completion_count_pmf(lam, float(s), xi, mttr, restart)
+            for s in taus]
+    meth = "gth" if method == "gth" else "band"
+
+    def solve_at(K: int) -> MarkovResult:
+        try:
+            ch = _failure_chain(lam, model, b_max, K, xi, mttr, restart,
+                                pmfs)
+        except ValueError:
+            raise ValueError(
+                "banded completion-time chain detached from the "
+                f"diagonal: rho_eff = λ·E[C(τ[b_max])]/b_max = "
+                f"{rho_eff:.4f} under (MTBF={mtbf:g}, MTTR={mttr:g}, "
+                f"{fail_disc}) sits at the positive-recurrence "
+                "boundary; lower λ or the repair load") from None
+        pi = chain_solver.solve_pi(ch, method=meth)
+        m = _failure_metrics(lam, pi, ch.t_of, ch.b_of,
+                             ec_b[ch.b_of - 1], ec2_b[ch.b_of - 1],
+                             down_b[ch.b_of - 1], lost_b[ch.b_of - 1])
+        return MarkovResult(
+            lam=lam, mean_latency=m["mean_latency"],
+            mean_batch=m["mean_batch"], batch_m2=m["batch_m2"],
+            utilization=m["utilization"], mean_queue=m["mean_queue"],
+            pi=pi, truncation=K, tail_mass=m["tail_mass"], method=meth,
+            availability=m["availability"],
+            work_loss_frac=m["work_loss_frac"])
+
+    if truncation:
+        _check_truncation(truncation, "struct")
+        return solve_at(truncation)
+    K = _start_truncation(lam, model, b_max)
+    K = min(max(K, int(32 + 8 * lam * float(ec_b[-1])
+                       / max(1e-9, 1.0 - rho_eff))), _TRUNC_CAP_STRUCT)
+    while True:
+        res = solve_at(K)
+        if res.tail_mass <= tail_tol or K >= _TRUNC_CAP_STRUCT:
+            return res
+        K = min(2 * K, _TRUNC_CAP_STRUCT)
 
 
 @dataclass

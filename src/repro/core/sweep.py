@@ -56,8 +56,9 @@ from jax import lax, random
 from repro.core import engine, metrics, variance
 from repro.core.engine import ShardSpec
 from repro.core.grid import (  # noqa: F401  (re-exported for back-compat)
-    DIST_CODE, DIST_NAME, OVERFLOW_CODE, OVERFLOW_NAME, ROUTE_CODE,
-    ROUTE_NAME, FleetGrid, FleetResult, SweepGrid, SweepResult)
+    DIST_CODE, DIST_NAME, FAIL_DISC_CODE, FAIL_DISC_NAME, OVERFLOW_CODE,
+    OVERFLOW_NAME, ROUTE_CODE, ROUTE_NAME, FleetGrid, FleetResult,
+    SweepGrid, SweepResult)
 from repro.core.hist import (SKETCH_BINS, hist_edges,
                              hist_percentiles as _hist_percentiles,
                              sketch_edges, thinned_rows)
@@ -85,11 +86,22 @@ _REBASE_EVERY = 32
 _OV_REJECT = OVERFLOW_CODE["reject"]
 
 
+# preempt-restart re-execution attempts explicitly materialized per
+# step (fixed-shape RNG).  The geometric attempt count is truncated
+# here; tests pick regimes with P(fail) ≤ 0.4 per attempt, where
+# P(> 16 failures) ≈ 4e-7 is far below MC noise (the numpy mirrors
+# sample the unbounded law).
+_FAIL_ATTEMPTS = 16
+# failure-clock fold_in salt — distinct from the retry orbit's 0x0b17
+# so neither perturbs the other's (or the main) key stream
+_FAIL_SALT = 0x0f41
+
+
 @engine.kernel_cache(maxsize=32)
 def _build_kernel(n_batches: int, warmup: int, q_cap: int, a_cap: int,
                   n_bins: int, has_timeout: bool, all_det: bool,
-                  has_loss: bool, r_cap: int, ss_backend: str,
-                  use_sketch: bool, tap, n_dev: int):
+                  has_loss: bool, r_cap: int, has_fail: bool,
+                  ss_backend: str, use_sketch: bool, tap, n_dev: int):
     """Compile-time specialization of the per-point scan kernel.
 
     The waiting room is a *linear compacted* buffer: waiting jobs always
@@ -114,7 +126,24 @@ def _build_kernel(n_batches: int, warmup: int, q_cap: int, a_cap: int,
     pop, and the bounded retry orbit assessed at the departure epoch
     (re-arrivals join with arrival time ``depart``; a batch emptied by
     reneging has ``b = 0``, costs no service time, and the next step
-    idles)."""
+    idles).
+
+    ``has_fail = True`` adds the breakdown/repair regime (every op
+    behind this compile-time flag, so failure-free grids keep their
+    bitwise-pinned results): an exponential failure clock at rate
+    ξ = 1/MTBF runs while the batch executes, repairs are
+    Exp(mttr), and the in-flight batch is handled by the point's
+    ``fail_disc`` — *resume* (service s is interrupted by
+    M ~ Poisson(ξ·s) repairs, completion C = s + Σ repairs),
+    *restart* (a Geometric number of attempts each losing a
+    TruncExp(ξ, s) partial execution plus a repair, then the full s;
+    truncated at ``_FAIL_ATTEMPTS``), or *drop* (the batch aborts at
+    its first failure epoch E < s, its b jobs are filed through the
+    abandonment/retry-orbit path, and only the repair follows — drop
+    grids therefore always compile ``has_loss``).  A batch following
+    a repair runs degraded: its service mean scales by the point's
+    ``throttle``.  All failure randomness derives from a fold_in
+    key, so it never perturbs the base key stream."""
 
     i32 = jnp.int32
     f32 = jnp.float32
@@ -143,6 +172,13 @@ def _build_kernel(n_batches: int, warmup: int, q_cap: int, a_cap: int,
             # retries re-enter against the physical room in both modes
             retry_room = jnp.where(q_lim > 0,
                                    jnp.minimum(q_lim, q_cap), q_cap)
+        if has_fail:
+            mtbf, mttr = p["mtbf"], p["mttr"]
+            throttle = p["throttle"]
+            fd = p["fail_disc"]
+            is_restart, is_drop = fd == 1, fd == 2
+            xi = jnp.where(mtbf > 0.0, 1.0 / jnp.maximum(mtbf, 1e-30),
+                           0.0)
 
         def push_arrivals(buf, q, dropped, lost_ov, offered, k_u, rate,
                           t0, win):
@@ -170,6 +206,9 @@ def _build_kernel(n_batches: int, warmup: int, q_cap: int, a_cap: int,
             # so float32 precision is set by queue sojourn magnitudes,
             # not by total simulated time — n_batches can grow without
             # degrading per-job latency resolution.
+            if has_fail:
+                state, (deg, nfail, dtime, lwork) = \
+                    state[:-4], state[-4:]
             if has_loss:
                 (q, buf, key, lat_sum, lat_n, sum_b, sum_b2, sum_bs,
                  n_meas, busy, span, q_max, dropped,
@@ -230,12 +269,71 @@ def _build_kernel(n_batches: int, warmup: int, q_cap: int, a_cap: int,
                 # a queue emptied by reneging forms no batch: no
                 # service time elapses and the next step idles
                 s = jnp.where(b > 0, s, 0.0)
-            depart = release + s
+            if has_fail:
+                # degraded phase: the first batch after a repair runs
+                # at throttle×τ (consumed here, re-armed on failure)
+                s = s * jnp.where(deg, throttle, 1.0)
+                kf = random.fold_in(ks[0], _FAIL_SALT)
+                kf1, kf2, kf3, kf4 = random.split(kf, 4)
+                fail_on = (mtbf > 0.0) & (b > 0)
+                # preempt-resume: M ~ Poisson(ξ·s) mid-batch failures,
+                # each inserting an Exp(mttr) repair (sum of M unit
+                # exponentials = Gamma(M), exact and fixed-shape)
+                M = random.poisson(kf1, jnp.where(fail_on, xi * s, 0.0))
+                rep_res = mttr * random.gamma(
+                    kf2, jnp.maximum(M, 1).astype(f32))
+                rep_res = jnp.where(M > 0, rep_res, 0.0)
+                # preempt-restart: attempt i fails iff its Exp-clock
+                # epoch E_i lands inside s, losing the partial work E_i
+                # plus a repair R_i; the first surviving attempt runs
+                # the full s (geometric count, truncated at the block)
+                e_blk = random.exponential(kf3, (_FAIL_ATTEMPTS,)) \
+                    * jnp.where(mtbf > 0.0, mtbf, 1.0)
+                r_blk = random.exponential(kf4, (_FAIL_ATTEMPTS,)) \
+                    * mttr
+                pre = jnp.cumprod((e_blk < s).astype(f32))
+                n_rst = jnp.sum(pre).astype(i32)
+                lost_rst = jnp.sum(pre * e_blk)
+                rep_rst = jnp.sum(pre * r_blk)
+                # fail-drop: the batch aborts at its first failure
+                # epoch; only the repair follows (jobs are filed
+                # through the abandonment path at the departure epoch)
+                e1, r1 = e_blk[0], r_blk[0]
+                aborts = fail_on & is_drop & (e1 < s)
+                n_f = jnp.where(
+                    fail_on,
+                    jnp.where(is_restart, n_rst,
+                              jnp.where(is_drop, aborts.astype(i32),
+                                        M)),
+                    0)
+                rep = jnp.where(
+                    fail_on,
+                    jnp.where(is_restart, rep_rst,
+                              jnp.where(is_drop,
+                                        jnp.where(aborts, r1, 0.0),
+                                        rep_res)),
+                    0.0)
+                lost = jnp.where(fail_on & is_restart, lost_rst, 0.0)
+                lost = jnp.where(aborts, e1, lost)
+                s_busy = jnp.where(aborts, 0.0, s)
+                comp = s + rep + jnp.where(fail_on & is_restart,
+                                           lost_rst, 0.0)
+                comp = jnp.where(aborts, e1 + r1, comp)
+                deg = fail_on & (n_f > 0)
+            else:
+                comp = s
+            depart = release + comp
 
             # pop the b oldest jobs (the buffer prefix); their latency
             # ends at `depart`; shift the remainder down by b
             popmask = slots < b
             lats = jnp.where(popmask, depart - buf[:q_cap], 0.0)
+            if has_fail:
+                # an aborted (fail-drop) batch completes nothing: its
+                # jobs leave through the abandonment path, not as
+                # latency samples
+                lats = jnp.where(aborts, 0.0, lats)
+                popmask = popmask & ~aborts
             buf = engine.fifo_pop_shift(buf, b, q_cap)
             q = q - b
 
@@ -246,9 +344,14 @@ def _build_kernel(n_batches: int, warmup: int, q_cap: int, a_cap: int,
                 q = q - trim
                 lost_ov = lost_ov + trim
 
-            # arrivals during the service period join the queue
+            # arrivals during the service period join the queue; under
+            # failures the window is the full wall-clock completion
+            # (repairs and rework included — the clock advances to
+            # `depart = release + comp`, so arrivals during repairs
+            # must be generated too, or the Poisson stream gets gaps)
             buf, q, dropped, lost_ov, fresh = push_arrivals(
-                buf, q, dropped, lost_ov, fresh, ks[4], lam, release, s)
+                buf, q, dropped, lost_ov, fresh, ks[4], lam, release,
+                comp if has_fail else s)
 
             meas = i >= warmup
             if has_loss:
@@ -259,6 +362,11 @@ def _build_kernel(n_batches: int, warmup: int, q_cap: int, a_cap: int,
                 # return to the orbit.  THEN this step's fresh losses
                 # are filed — abandoned before overflow — and whatever
                 # the orbit cannot hold becomes a terminal loss.
+                if has_fail:
+                    # fail-drop: the aborted batch's b jobs re-enter
+                    # through the abandonment/retry path (filed below,
+                    # abandoned-first), eligible from the next step
+                    lost_ab = lost_ab + jnp.where(aborts, b, zero)
                 p_fire = 1.0 - jnp.exp(-retry_rate * depart)
                 n_r = engine.orbit_draws(korb, orbit, p_fire, r_cap)
                 orbit = orbit - n_r
@@ -275,10 +383,11 @@ def _build_kernel(n_batches: int, warmup: int, q_cap: int, a_cap: int,
                 ov_n = ov_n + mi * term_ov
                 fresh_n = fresh_n + mi * fresh
                 retry_n = retry_n + mi * n_r
+                b_done = jnp.where(aborts, zero, b) if has_fail else b
                 in_slo = jnp.where(
                     deadline > 0.0,
                     jnp.sum((popmask & (lats <= deadline))
-                            .astype(i32)), b)
+                            .astype(i32)), b_done)
                 slo_n = slo_n + mi * in_slo
 
             # rebase the clock: the departure becomes the next origin
@@ -287,19 +396,42 @@ def _build_kernel(n_batches: int, warmup: int, q_cap: int, a_cap: int,
             # accumulate statistics after warmup
             mf = meas.astype(jnp.float32)
             bf = b.astype(jnp.float32)
-            lat_sum = lat_sum + mf * lats.sum()
-            lat_n = lat_n + jnp.where(meas, b, 0)
-            sum_b = sum_b + mf * bf
-            sum_b2 = sum_b2 + mf * bf * bf
-            sum_bs = sum_bs + mf * bf * s
-            if has_loss:
-                # a b = 0 step (queue emptied by reneging) is not a
-                # batch; wall-clock/busy accumulators are untouched
-                # anyway (s = 0, depart = release)
-                n_meas = n_meas + (meas & (b > 0)).astype(i32)
+            if has_fail:
+                # batch-level stats count COMPLETED batches only; the
+                # service a job experiences is the completion time C
+                # (execution + rework + repairs).  busy accumulates
+                # productive execution only — repairs and lost restart
+                # work are tracked separately (down_time, lost_work)
+                mfc = mf * (1.0 - aborts.astype(jnp.float32))
+                lat_sum = lat_sum + mfc * lats.sum()
+                lat_n = lat_n + jnp.where(meas & ~aborts, b, 0)
+                sum_b = sum_b + mfc * bf
+                sum_b2 = sum_b2 + mfc * bf * bf
+                sum_bs = sum_bs + mfc * bf * comp
+                if has_loss:
+                    n_meas = n_meas \
+                        + (meas & (b > 0) & ~aborts).astype(i32)
+                else:
+                    n_meas = n_meas + meas.astype(i32)
+                busy = busy + mf * s_busy
+                mi_f = meas.astype(i32)
+                nfail = nfail + mi_f * n_f
+                dtime = dtime + mf * rep
+                lwork = lwork + mf * lost
             else:
-                n_meas = n_meas + meas.astype(i32)
-            busy = busy + mf * s
+                lat_sum = lat_sum + mf * lats.sum()
+                lat_n = lat_n + jnp.where(meas, b, 0)
+                sum_b = sum_b + mf * bf
+                sum_b2 = sum_b2 + mf * bf * bf
+                sum_bs = sum_bs + mf * bf * s
+                if has_loss:
+                    # a b = 0 step (queue emptied by reneging) is not a
+                    # batch; wall-clock/busy accumulators are untouched
+                    # anyway (s = 0, depart = release)
+                    n_meas = n_meas + (meas & (b > 0)).astype(i32)
+                else:
+                    n_meas = n_meas + meas.astype(i32)
+                busy = busy + mf * s
             span = span + mf * depart     # wall-clock advanced this step
             q_max = jnp.maximum(q_max, q)
 
@@ -315,6 +447,8 @@ def _build_kernel(n_batches: int, warmup: int, q_cap: int, a_cap: int,
             else:
                 out_state = (q, buf, key, lat_sum, lat_n, sum_b, sum_b2,
                              sum_bs, n_meas, busy, span, q_max, dropped)
+            if has_fail:
+                out_state = out_state + (deg, nfail, dtime, lwork)
             return out_state, (lats, popmask & meas)
 
         def superstep(carry, i_base):
@@ -345,6 +479,11 @@ def _build_kernel(n_batches: int, warmup: int, q_cap: int, a_cap: int,
                 jnp.zeros((), i32))
         if has_loss:
             init = init + tuple(jnp.zeros((), i32) for _ in range(6))
+        if has_fail:
+            init = init + (jnp.zeros((), bool),      # degraded phase
+                           jnp.zeros((), i32),       # n_failures
+                           jnp.zeros((), f32),       # down_time
+                           jnp.zeros((), f32))       # lost_work
         bm0 = (jnp.zeros((), f32), jnp.zeros((), f32), jnp.zeros((), i32))
         hists0 = (jnp.zeros((n_bins,), i32),)
         if use_sketch:
@@ -374,9 +513,13 @@ def _build_kernel(n_batches: int, warmup: int, q_cap: int, a_cap: int,
         if use_sketch:
             out["hist_sums"] = hists[1]
         if has_loss:
-            (_orbit, ov_n, ab_n, slo_n, fresh_n, retry_n) = state[13:]
+            (_orbit, ov_n, ab_n, slo_n, fresh_n, retry_n) = state[13:19]
             out.update(overflow_dropped=ov_n, abandoned=ab_n,
                        n_in_slo=slo_n, n_fresh=fresh_n, n_retry=retry_n)
+        if has_fail:
+            (_deg, nfail, dtime, lwork) = state[-4:]
+            out.update(n_failures=nfail, down_time=dtime,
+                       lost_work=lwork, span=span)
         return out
 
     return engine.shard_kernel(jax.vmap(run_point), n_dev)
@@ -411,12 +554,25 @@ def sweep_caps(grid: SweepGrid, *, q_cap: Optional[int] = None) -> dict:
     has_timeout = bool(np.any(grid.wait_max > 0.0))
     all_det = bool(np.all(grid.dist == DIST_CODE["det"]))
     has_loss = grid.has_loss
+    has_fail = grid.has_fail
     if q_cap is None:
+        fail_kw = {}
+        if has_fail:
+            # failure points inflate the busy period (rework + repair):
+            # size the room for the completion-time law, not raw τ[b]
+            fail_kw = dict(
+                mtbf=grid.mtbf, mttr=grid.mttr,
+                restart=grid.fail_disc == FAIL_DISC_CODE["restart"],
+                throttle=grid.throttle)
         q_cap = engine.queue_capacity(grid.lam, grid.alpha, grid.tau0,
                                       grid.b_max, grid.wait_max,
                                       q_max=grid.q_max if has_loss
-                                      else None)
-    if all_det and not has_timeout and not np.any(grid.b_max == 0):
+                                      else None, **fail_kw)
+    if has_fail:
+        # a failed batch's completion time has no deterministic bound,
+        # so the provable window-capacity path is unavailable
+        a_cap = int(q_cap)
+    elif all_det and not has_timeout and not np.any(grid.b_max == 0):
         # deterministic service with a finite cap hard-bounds the
         # service window at α·b_max + τ0, so the per-window arrival
         # draw can be provably window-sized; random service or an
@@ -460,13 +616,14 @@ def sweep_plan(grid: SweepGrid, *, n_batches: int = 3000,
     has_timeout = bool(np.any(grid.wait_max > 0.0))
     all_det = bool(np.all(grid.dist == DIST_CODE["det"]))
     has_loss = grid.has_loss
+    has_fail = grid.has_fail
     if key_offset:
         # a_cap is only grid-derived on the window-capacity path; the
         # a_cap = q_cap fallback follows from a pinned q_cap
         _require_pinned_caps(
             "sweep", key_offset,
             q_cap=q_cap is not None,
-            a_cap=(a_cap is not None
+            a_cap=(a_cap is not None or has_fail
                    or not (all_det and not has_timeout
                            and not np.any(grid.b_max == 0))),
             r_cap=not has_loss or r_cap is not None)
@@ -496,7 +653,7 @@ def sweep_plan(grid: SweepGrid, *, n_batches: int = 3000,
         n_dev = 1
     kernel = _build_kernel(int(n_batches), int(warmup), int(q_cap),
                            int(a_cap), int(n_bins), has_timeout, all_det,
-                           has_loss, int(r_cap), ss_backend,
+                           has_loss, int(r_cap), has_fail, ss_backend,
                            bool(sketch), metrics_tap, n_dev)
 
     params = {
@@ -512,6 +669,12 @@ def sweep_plan(grid: SweepGrid, *, n_batches: int = 3000,
             deadline=jnp.asarray(grid.deadline),
             overflow=jnp.asarray(grid.overflow),
             retry_rate=jnp.asarray(grid.retry_rate))
+    if grid.has_fail:
+        params.update(
+            mtbf=jnp.asarray(grid.mtbf),
+            mttr=jnp.asarray(grid.mttr),
+            fail_disc=jnp.asarray(grid.fail_disc),
+            throttle=jnp.asarray(grid.throttle))
     keys = engine.point_keys(seed, key_offset, n)
     return engine.KernelPlan(kernel=kernel, params=params, keys=keys,
                              n=n, n_dev=n_dev, sketch=bool(sketch),
@@ -608,6 +771,13 @@ def sweep(grid: SweepGrid, *, n_batches: int = 3000,
             p99_median=float(np.nanmedian(p99)))
     stderr, ci = variance.batch_means_stats(out["lat_bm_m2"],
                                             out["lat_bm_n"])
+    fail_kw = {}
+    if grid.has_fail:
+        fail_kw = dict(
+            n_failures=np.asarray(out["n_failures"]),
+            down_time=np.asarray(out["down_time"], dtype=np.float64),
+            lost_work=np.asarray(out["lost_work"], dtype=np.float64),
+            span=np.asarray(out["span"], dtype=np.float64))
     return SweepResult(
         grid=grid,
         mean_latency=np.asarray(out["mean_latency"], dtype=np.float64),
@@ -626,7 +796,7 @@ def sweep(grid: SweepGrid, *, n_batches: int = 3000,
                    if sketch else None),
         stderr=stderr, ci_halfwidth=ci,
         n_blocks=np.asarray(out["lat_bm_n"]),
-        **loss_kw,
+        **loss_kw, **fail_kw,
     )
 
 
@@ -638,9 +808,9 @@ def sweep(grid: SweepGrid, *, n_batches: int = 3000,
 def _build_fleet_kernel(n_steps: int, warmup: int, k_max: int, q_cap: int,
                         a_cap: int, pop_cap: int, n_bins: int,
                         has_timeout: bool, all_det: bool, has_jsq: bool,
-                        has_loss: bool, r_cap: int, hist_every: int,
-                        ss_backend: str, use_sketch: bool, tap,
-                        n_dev: int):
+                        has_loss: bool, r_cap: int, has_fail: bool,
+                        hist_every: int, ss_backend: str,
+                        use_sketch: bool, tap, n_dev: int):
     """Compile-time specialization of the per-point fleet scan kernel.
 
     Unlike the single-server kernel — one scan step per *service period*
@@ -694,11 +864,25 @@ def _build_fleet_kernel(n_steps: int, warmup: int, k_max: int, q_cap: int,
     replica whose queue empties by reneging forms no batch and
     un-commits (it can go free with jobs expired, unlike the lossless
     kernel where committed ⇒ work pending).
+
+    ``has_fail = True`` threads the breakdown/repair regime through the
+    fleet: a forming replica draws its whole completion time (service +
+    discipline-dependent rework/repairs, same law as the single-server
+    kernel) AT formation — exact, because the law is independent of
+    later state, and it preserves the latency-at-batch-start property
+    above.  A replica whose drawn completion contains at least one
+    failure is flagged *impaired* until its next decision; routing
+    steers around impaired replicas (JSQ adds an ``IMP_LOAD`` penalty,
+    random/round-robin rank-select over the un-impaired actives,
+    falling back to all actives when every replica is impaired), which
+    makes failover cost measurable.  Fail-drop aborts route the
+    batch's jobs through the abandonment/retry path.
     """
     i32 = jnp.int32
     f32 = jnp.float32
     INF = jnp.float32(3.0e38)
     BIG_LOAD = jnp.int32(2 ** 20)   # inactive-replica load; keeps the
+    IMP_LOAD = jnp.int32(2 ** 19)   # impaired-replica routing penalty
     slots = jnp.arange(pop_cap)     # JSQ compare free of i32 overflow
     ridx = jnp.arange(k_max)
     R_RANDOM, R_RR = ROUTE_CODE["random"], ROUTE_CODE["round_robin"]
@@ -729,9 +913,19 @@ def _build_fleet_kernel(n_steps: int, warmup: int, k_max: int, q_cap: int,
             trim_to = jnp.where((q_lim > 0) & ~is_reject, q_lim, q_cap)
             retry_room = jnp.where(q_lim > 0,
                                    jnp.minimum(q_lim, q_cap), q_cap)
+        if has_fail:
+            mtbf, mttr = p["mtbf"], p["mttr"]
+            throttle = p["throttle"]
+            fd = p["fail_disc"]
+            is_restart, is_drop = fd == 1, fd == 2
+            xi = jnp.where(mtbf > 0.0, 1.0 / jnp.maximum(mtbf, 1e-30),
+                           0.0)
 
         def step(state, x):
             i, kstep = x
+            if has_fail:
+                state, (deg, imp, nfail, dtime, lwork) = \
+                    state[:-5], state[-5:]
             if has_loss:
                 (q, head, buf, in_service, committed, t_free, next_arr,
                  rr, clock, lat_sum, lat_n, sum_b, sum_b2, sum_bs,
@@ -771,9 +965,33 @@ def _build_fleet_kernel(n_steps: int, warmup: int, k_max: int, q_cap: int,
             ts = ts_ext[:a_cap]
             jidx = jnp.arange(a_cap)
 
-            dest_rand = jnp.minimum((u_route * k.astype(f32)).astype(i32),
-                                    k - 1)
-            dest_rr = (rr + jidx) % k
+            if has_fail:
+                # route around impaired replicas.  ``imp`` is constant
+                # between two decisions (it only flips at formations),
+                # so the per-window closed-form destination sequences
+                # remain exact.  When EVERY active replica is impaired
+                # the mask falls back to all actives — arrivals are
+                # never stalled, only steered.
+                avail = active & ~imp
+                eff = jnp.where(jnp.any(avail), avail, active)
+                n_eff = jnp.sum(eff.astype(i32))
+                cum_eff = jnp.cumsum(eff.astype(i32))
+                rank = jnp.minimum(
+                    (u_route * n_eff.astype(f32)).astype(i32), n_eff - 1)
+                dest_rand = jnp.sum(
+                    jnp.where(eff[None, :]
+                              & (cum_eff[None, :] == rank[:, None] + 1),
+                              ridx[None, :], 0), axis=1)
+                # round-robin: the j-th arrival starts its scan at the
+                # cursor and takes the cyclically-next available replica
+                start = (rr + jidx) % k
+                cyc = (ridx[None, :] - start[:, None]) % k
+                cyc = jnp.where(eff[None, :], cyc, BIG_LOAD)
+                dest_rr = jnp.argmin(cyc, axis=1).astype(i32)
+            else:
+                dest_rand = jnp.minimum(
+                    (u_route * k.astype(f32)).astype(i32), k - 1)
+                dest_rr = (rr + jidx) % k
             if has_jsq:
                 # JSQ water-filling: S(c) = arrivals needed to raise
                 # every load below level c up to c; arrival j fills
@@ -781,6 +999,11 @@ def _build_fleet_kernel(n_steps: int, warmup: int, k_max: int, q_cap: int,
                 # (j - S(c_j))-th replica (by index) among those with
                 # load <= c_j
                 load = jnp.where(active, q + in_service, BIG_LOAD)
+                if has_fail:
+                    # impaired replicas sort after every healthy load
+                    # but before inactive rows (auto-fallback when all
+                    # are impaired)
+                    load = load + jnp.where(imp & active, IMP_LOAD, 0)
                 lmin = jnp.min(load)
                 cgrid = lmin + jnp.arange(a_cap + 1)
                 S = jnp.sum(
@@ -923,12 +1146,66 @@ def _build_fleet_kernel(n_steps: int, warmup: int, k_max: int, q_cap: int,
                 kshape = jnp.where(dist == 1, 1.0, 1.0 / (cv * cv))
                 g = random.gamma(ksvc, kshape) / kshape
                 s = jnp.where(dist == 0, mean_s, mean_s * g)
-            depart = t_ev + s
+            if has_fail:
+                # whole completion time drawn AT formation (same law as
+                # the single-server kernel; exact because the law is
+                # independent of later state, and it keeps `depart`
+                # known at batch start)
+                deg_r = jnp.any(oh & deg)
+                s = s * jnp.where(deg_r, throttle, 1.0)
+                kf = random.fold_in(kstep, _FAIL_SALT)
+                kf1, kf2, kf3, kf4 = random.split(kf, 4)
+                fail_on = (mtbf > 0.0) & form & (b > 0)
+                M = random.poisson(kf1, jnp.where(fail_on, xi * s, 0.0))
+                rep_res = mttr * random.gamma(
+                    kf2, jnp.maximum(M, 1).astype(f32))
+                rep_res = jnp.where(M > 0, rep_res, 0.0)
+                e_blk = random.exponential(kf3, (_FAIL_ATTEMPTS,)) \
+                    * jnp.where(mtbf > 0.0, mtbf, 1.0)
+                r_blk = random.exponential(kf4, (_FAIL_ATTEMPTS,)) \
+                    * mttr
+                pre = jnp.cumprod((e_blk < s).astype(f32))
+                n_rst = jnp.sum(pre).astype(i32)
+                lost_rst = jnp.sum(pre * e_blk)
+                rep_rst = jnp.sum(pre * r_blk)
+                e1, r1 = e_blk[0], r_blk[0]
+                aborts = fail_on & is_drop & (e1 < s)
+                n_f = jnp.where(
+                    fail_on,
+                    jnp.where(is_restart, n_rst,
+                              jnp.where(is_drop, aborts.astype(i32),
+                                        M)),
+                    0)
+                rep = jnp.where(
+                    fail_on,
+                    jnp.where(is_restart, rep_rst,
+                              jnp.where(is_drop,
+                                        jnp.where(aborts, r1, 0.0),
+                                        rep_res)),
+                    0.0)
+                lost = jnp.where(fail_on & is_restart, lost_rst, 0.0)
+                lost = jnp.where(aborts, e1, lost)
+                s_busy = jnp.where(aborts, 0.0, s)
+                comp = s + rep + jnp.where(fail_on & is_restart,
+                                           lost_rst, 0.0)
+                comp = jnp.where(aborts, e1 + r1, comp)
+                # impaired from formation until the next decision;
+                # degraded applies to the replica's NEXT batch
+                imp = jnp.where(oh, fail_on & (n_f > 0), imp)
+                deg = jnp.where(oh & form, fail_on & (n_f > 0), deg)
+            else:
+                comp = s
+            depart = t_ev + comp
             # per-job latency ops run on pop_cap slots only — b never
             # exceeds pop_cap (= max b_max, or q_cap when some point
             # batches unboundedly)
             popmask = slots < b
             lats = jnp.where(popmask, depart - row, 0.0)
+            if has_fail:
+                # an aborted (fail-drop) batch completes nothing; its
+                # jobs re-enter through the abandonment path below
+                lats = jnp.where(aborts, 0.0, lats)
+                popmask = popmask & ~aborts
 
             if has_loss:
                 # prefix removals (reneged + popped) advance the head;
@@ -955,22 +1232,45 @@ def _build_fleet_kernel(n_steps: int, warmup: int, k_max: int, q_cap: int,
             mstart = meas & form
             mf = mstart.astype(f32)
             bf = b.astype(f32)
-            lat_sum = lat_sum + mf * lats.sum()
-            lat_n = lat_n + jnp.where(mstart, b, 0)
-            sum_b = sum_b + mf * bf
-            sum_b2 = sum_b2 + mf * bf * bf
-            sum_bs = sum_bs + mf * bf * s
-            n_meas = n_meas + mstart.astype(i32)
-            busy = busy + mf * s
+            if has_fail:
+                # completed-batch stats only; busy counts productive
+                # execution (repairs → down_time, rework → lost_work)
+                mfc = mf * (1.0 - aborts.astype(f32))
+                lat_sum = lat_sum + mfc * lats.sum()
+                lat_n = lat_n + jnp.where(mstart & ~aborts, b, 0)
+                sum_b = sum_b + mfc * bf
+                sum_b2 = sum_b2 + mfc * bf * bf
+                sum_bs = sum_bs + mfc * bf * comp
+                n_meas = n_meas + (mstart & ~aborts).astype(i32)
+                busy = busy + mf * s_busy
+                nfail = nfail + mstart.astype(i32) * n_f
+                dtime = dtime + mf * rep
+                lwork = lwork + mf * lost
+                jobs_rep = jobs_rep \
+                    + jnp.where(oh & mstart & ~aborts, b, 0)
+            else:
+                lat_sum = lat_sum + mf * lats.sum()
+                lat_n = lat_n + jnp.where(mstart, b, 0)
+                sum_b = sum_b + mf * bf
+                sum_b2 = sum_b2 + mf * bf * bf
+                sum_bs = sum_bs + mf * bf * s
+                n_meas = n_meas + mstart.astype(i32)
+                busy = busy + mf * s
+                jobs_rep = jobs_rep + jnp.where(oh & mstart, b, 0)
             span = span + (meas & do_event).astype(f32) * (t_ev - clock)
             q_max = jnp.maximum(q_max, jnp.max(q))
-            jobs_rep = jobs_rep + jnp.where(oh & mstart, b, 0)
 
             if has_loss:
+                if has_fail:
+                    # fail-drop: the aborted batch's jobs are filed
+                    # through the abandonment/retry path (below,
+                    # abandoned-first)
+                    lost_ab = lost_ab + jnp.where(aborts, b, 0)
+                b_done = jnp.where(aborts, 0, b) if has_fail else b
                 in_slo = jnp.where(
                     deadline > 0.0,
                     jnp.sum((popmask & (lats <= deadline)).astype(i32)),
-                    b)
+                    b_done)
                 # bounded retry orbit, assessed once per processed
                 # event (exact Binomial thinning over the inter-event
                 # gap, fixed-shape RNG).  The firing block re-arrives
@@ -986,13 +1286,31 @@ def _build_fleet_kernel(n_steps: int, warmup: int, k_max: int, q_cap: int,
                 n_r = engine.orbit_draws(k_draw, orbit, p_fire, r_cap)
                 orbit = orbit - n_r
                 u_r = random.uniform(k_route)
-                d_rand = jnp.minimum(
-                    (u_r * k.astype(f32)).astype(i32), k - 1)
                 load2 = jnp.where(active, q + in_service, BIG_LOAD)
+                if has_fail:
+                    # the retry block also steers around impaired
+                    # replicas, with the same all-impaired fallback
+                    avail2 = active & ~imp
+                    eff2 = jnp.where(jnp.any(avail2), avail2, active)
+                    n_eff2 = jnp.sum(eff2.astype(i32))
+                    cum2 = jnp.cumsum(eff2.astype(i32))
+                    rank2 = jnp.minimum(
+                        (u_r * n_eff2.astype(f32)).astype(i32),
+                        n_eff2 - 1)
+                    d_rand = jnp.sum(
+                        jnp.where(eff2 & (cum2 == rank2 + 1), ridx, 0))
+                    cyc2 = jnp.where(eff2, (ridx - rr % k) % k,
+                                     BIG_LOAD)
+                    d_rr = jnp.argmin(cyc2).astype(i32)
+                    load2 = load2 + jnp.where(imp & active, IMP_LOAD, 0)
+                else:
+                    d_rand = jnp.minimum(
+                        (u_r * k.astype(f32)).astype(i32), k - 1)
+                    d_rr = rr % k
                 d_jsq = jnp.argmin(load2).astype(i32)
                 dest_r = jnp.where(
                     routing == R_RANDOM, d_rand,
-                    jnp.where(routing == R_RR, rr % k, d_jsq)
+                    jnp.where(routing == R_RR, d_rr, d_jsq)
                 ).astype(i32)
                 oh_r = ridx == dest_r
                 q_d = jnp.sum(jnp.where(oh_r, q, 0))
@@ -1044,6 +1362,8 @@ def _build_fleet_kernel(n_steps: int, warmup: int, k_max: int, q_cap: int,
             if has_loss:
                 out_state = out_state + (orbit, ov_n, ab_n, slo_n,
                                          fresh_n, retry_n)
+            if has_fail:
+                out_state = out_state + (deg, imp, nfail, dtime, lwork)
             return out_state, (lats, popmask & mstart)
 
         # histogram thinning: scatter-adds cost per *element* under
@@ -1102,6 +1422,12 @@ def _build_fleet_kernel(n_steps: int, warmup: int, k_max: int, q_cap: int,
         if has_loss:
             # orbit, ov_n, ab_n, slo_n, fresh_n, retry_n
             init = init + tuple(jnp.zeros((), i32) for _ in range(6))
+        if has_fail:
+            init = init + (jnp.zeros((k_max,), bool),   # degraded
+                           jnp.zeros((k_max,), bool),   # impaired
+                           jnp.zeros((), i32),          # n_failures
+                           jnp.zeros((), f32),          # down_time
+                           jnp.zeros((), f32))          # lost_work
         init = init + (jnp.zeros((), f32), jnp.zeros((), f32),
                        jnp.zeros((), i32))              # batch-means bm
         hists0 = (jnp.zeros((n_bins,), i32),)            # hist (superstep)
@@ -1141,6 +1467,11 @@ def _build_fleet_kernel(n_steps: int, warmup: int, k_max: int, q_cap: int,
             (_orbit, ov_n, ab_n, slo_n, fresh_n, retry_n) = state[20:26]
             out.update(overflow_dropped=ov_n, abandoned=ab_n,
                        n_in_slo=slo_n, n_fresh=fresh_n, n_retry=retry_n)
+        if has_fail:
+            fs = 20 + (6 if has_loss else 0)
+            (_deg, _imp, nfail, dtime, lwork) = state[fs:fs + 5]
+            out.update(n_failures=nfail, down_time=dtime,
+                       lost_work=lwork, span=span)
         return out
 
     return engine.shard_kernel(jax.vmap(run_point), n_dev)
@@ -1155,11 +1486,19 @@ def fleet_caps(grid: FleetGrid, *, q_cap: Optional[int] = None) -> dict:
     loss grids) appear here."""
     has_loss = grid.has_loss
     if q_cap is None:
+        fail_kw = {}
+        if grid.has_fail:
+            # the per-replica room must absorb the completion-time
+            # inflation (rework + repairs) of the failure points
+            fail_kw = dict(
+                mtbf=grid.mtbf, mttr=grid.mttr,
+                restart=grid.fail_disc == FAIL_DISC_CODE["restart"],
+                throttle=grid.throttle)
         q_cap = engine.queue_capacity(grid.lam / np.maximum(grid.k, 1),
                                       grid.alpha, grid.tau0, grid.b_max,
                                       grid.wait_max,
                                       q_max=grid.q_max if has_loss
-                                      else None)
+                                      else None, **fail_kw)
     caps = dict(q_cap=int(q_cap))
     if has_loss:
         caps["r_cap"] = int(engine.orbit_capacity(grid.lam,
@@ -1237,8 +1576,9 @@ def fleet_plan(grid: FleetGrid, *, n_steps: int = 6000,
                                  int(q_cap), int(a_cap), pop_cap,
                                  int(n_bins), has_timeout, all_det,
                                  has_jsq, has_loss, int(r_cap),
-                                 int(hist_every), ss_backend,
-                                 bool(sketch), metrics_tap, n_dev)
+                                 grid.has_fail, int(hist_every),
+                                 ss_backend, bool(sketch), metrics_tap,
+                                 n_dev)
 
     params = {
         "lam": jnp.asarray(grid.lam), "alpha": jnp.asarray(grid.alpha),
@@ -1254,6 +1594,12 @@ def fleet_plan(grid: FleetGrid, *, n_steps: int = 6000,
             deadline=jnp.asarray(grid.deadline),
             overflow=jnp.asarray(grid.overflow),
             retry_rate=jnp.asarray(grid.retry_rate))
+    if grid.has_fail:
+        params.update(
+            mtbf=jnp.asarray(grid.mtbf),
+            mttr=jnp.asarray(grid.mttr),
+            fail_disc=jnp.asarray(grid.fail_disc),
+            throttle=jnp.asarray(grid.throttle))
     keys = engine.point_keys(seed, key_offset, n)
     return engine.KernelPlan(kernel=kernel, params=params, keys=keys,
                              n=n, n_dev=n_dev, sketch=bool(sketch),
@@ -1344,6 +1690,13 @@ def fleet_sweep(grid: FleetGrid, *, n_steps: int = 6000,
             p99_median=float(np.nanmedian(p99)))
     stderr, ci = variance.batch_means_stats(out["lat_bm_m2"],
                                             out["lat_bm_n"])
+    fail_kw = {}
+    if grid.has_fail:
+        fail_kw = dict(
+            n_failures=np.asarray(out["n_failures"]),
+            down_time=np.asarray(out["down_time"], dtype=np.float64),
+            lost_work=np.asarray(out["lost_work"], dtype=np.float64),
+            span=np.asarray(out["span"], dtype=np.float64))
     return FleetResult(
         grid=grid,
         mean_latency=np.asarray(out["mean_latency"], dtype=np.float64),
@@ -1363,5 +1716,5 @@ def fleet_sweep(grid: FleetGrid, *, n_steps: int = 6000,
         stderr=stderr, ci_halfwidth=ci,
         n_blocks=np.asarray(out["lat_bm_n"]),
         jobs_by_replica=np.asarray(out["jobs_by_replica"]),
-        **loss_kw,
+        **loss_kw, **fail_kw,
     )

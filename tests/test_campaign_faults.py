@@ -1,0 +1,218 @@
+"""Fault-injection harness for the campaign driver.
+
+Every injected fault must leave the campaign in a *stated* state:
+either a clean retry heals it bitwise, or the damage is quarantined
+and reported — in the chunk row, the manifest, and the result — and
+the campaign continues.  Nothing is ever silently dropped, and a
+killed-and-resumed campaign is bitwise identical to an uninterrupted
+one under the same ``FaultPlan`` (the injection schedule is a pure
+function of (seed, kind, chunk, attempt), so a resume replays it).
+"""
+import json
+
+import numpy as np
+import pytest
+
+from repro.core.campaign import (CampaignKilled, FaultPlan, campaign,
+                                 verify_resume)
+from repro.core.grid import SweepGrid
+
+N_POINTS = 32
+KW = dict(chunk_size=8, n_batches=256, fault_backoff_s=0.0)
+
+
+@pytest.fixture(scope="module")
+def grid():
+    return SweepGrid.from_points(np.linspace(0.3, 0.9, N_POINTS),
+                                 0.05, 1.0, b_max=4)
+
+
+@pytest.fixture(scope="module")
+def clean(grid):
+    return campaign(grid, **KW)
+
+
+class TestFaultPlan:
+    def test_roll_is_deterministic_and_seeded(self):
+        p = FaultPlan(seed=7, p_dispatch=0.5)
+        rolls = [p.roll("dispatch", c, a) for c in range(16)
+                 for a in range(2)]
+        assert rolls == [p.roll("dispatch", c, a) for c in range(16)
+                        for a in range(2)]
+        assert any(rolls) and not all(rolls)
+        q = FaultPlan(seed=8, p_dispatch=0.5)
+        assert rolls != [q.roll("dispatch", c, a) for c in range(16)
+                         for a in range(2)]
+
+    def test_max_per_chunk_forces_clean(self):
+        p = FaultPlan(seed=0, p_dispatch=1.0, max_per_chunk=2)
+        assert p.roll("dispatch", 3, 0) and p.roll("dispatch", 3, 1)
+        assert not p.roll("dispatch", 3, 2)
+
+    def test_probability_validation(self):
+        with pytest.raises(ValueError):
+            FaultPlan(p_nan=1.5)
+        with pytest.raises(ValueError):
+            FaultPlan().roll("meteor", 0)
+
+    def test_requires_pipelined_mode(self, grid):
+        with pytest.raises(ValueError, match="pipelined"):
+            campaign(grid, mode="serial", fault_plan=FaultPlan(),
+                     chunk_size=8, n_batches=256)
+
+
+class TestDispatchFaults:
+    def test_retry_heals_bitwise(self, grid, clean):
+        plan = FaultPlan(seed=3, p_dispatch=0.7, max_per_chunk=2)
+        r = campaign(grid, fault_plan=plan, fault_retries=4, **KW)
+        assert r.fingerprint() == clean.fingerprint()
+        assert r.quarantined_chunks == []
+        # the rows record the retries the plan forced
+        assert any(row["retries"] > 0 for row in r.rows)
+
+    def test_exhausted_retries_quarantine_never_drop(self, grid,
+                                                     tmp_path):
+        plan = FaultPlan(seed=3, p_dispatch=1.0, max_per_chunk=8)
+        r = campaign(grid, fault_plan=plan, fault_retries=1,
+                     out_dir=str(tmp_path), **KW)
+        assert r.completed
+        # every chunk exhausted its retries: all quarantined, all
+        # reported — in the result, the rows, and the manifest
+        assert len(r.quarantined_chunks) == r.n_chunks
+        assert all(q["reason"] == "dispatch" and "error" in q
+                   for q in r.quarantined_chunks)
+        assert r.quarantined_points == N_POINTS
+        assert r.totals["points"] == 0
+        man = json.loads((tmp_path / "manifest.json").read_text())
+        assert man["quarantined"] == r.quarantined_chunks
+        rows_q = sum(row["quarantined"] for row in r.rows)
+        assert rows_q == N_POINTS
+
+    def test_partial_quarantine_keeps_other_chunks(self, grid):
+        plan = FaultPlan(seed=5, p_dispatch=0.4, max_per_chunk=8)
+        r = campaign(grid, fault_plan=plan, fault_retries=0, **KW)
+        lost = sum(q["points"] for q in r.quarantined_chunks)
+        assert 0 < lost < N_POINTS
+        assert r.totals["points"] == N_POINTS - lost
+        assert r.quarantined_points == lost
+
+
+class TestNaNFaults:
+    def test_fold_guard_quarantines_and_continues(self, grid,
+                                                  tmp_path):
+        plan = FaultPlan(seed=5, p_nan=0.6)
+        r = campaign(grid, fault_plan=plan, out_dir=str(tmp_path),
+                     **KW)
+        assert r.completed
+        assert r.quarantined_chunks, "plan never fired — pick a seed"
+        assert all(q["reason"] == "nonfinite"
+                   for q in r.quarantined_chunks)
+        # the poison never reached the accumulator
+        for k in ("sum_latency_jobs", "sum_latency", "sum_util",
+                  "sum_batch", "hist_sums", "max_ci"):
+            assert np.all(np.isfinite(r.acc[k])), k
+        # accounting: folded + quarantined partitions the campaign
+        q_pts = sum(q["points"] for q in r.quarantined_chunks)
+        assert r.totals["points"] + q_pts == N_POINTS
+        assert r.totals["quarantined_points"] == q_pts
+        man = json.loads((tmp_path / "manifest.json").read_text())
+        assert man["quarantined"] == r.quarantined_chunks
+
+    def test_clean_grid_quarantines_nothing(self, clean):
+        assert clean.quarantined_chunks == []
+        assert clean.totals["quarantined_points"] == 0
+        assert clean.totals["points"] == N_POINTS
+
+
+class TestCheckpointCorruption:
+    def test_corrupt_checkpoint_detected_on_resume(self, grid,
+                                                   tmp_path):
+        plan = FaultPlan(seed=1, p_corrupt=1.0, max_per_chunk=1)
+        with pytest.raises(CampaignKilled):
+            campaign(grid, out_dir=str(tmp_path), checkpoint_every=1,
+                     fault_plan=plan, _kill_after_chunks=3, **KW)
+        # the manifest records the intended sha; the file is torn
+        man = json.loads((tmp_path / "manifest.json").read_text())
+        import hashlib
+        disk = (tmp_path / "accumulator.npz").read_bytes()
+        assert hashlib.sha256(disk).hexdigest() != man["acc_sha"]
+        res = campaign(grid, out_dir=str(tmp_path),
+                       checkpoint_every=1, fault_plan=plan,
+                       resume=True, **KW)
+        events = [e["event"] for e in res.fault_events]
+        assert "checkpoint_corrupt" in events
+        ref = campaign(grid, fault_plan=plan, **KW)
+        assert res.fingerprint() == ref.fingerprint()
+
+    def test_prev_generation_fallback(self, grid, clean, tmp_path):
+        # pick a seed whose plan corrupts the LAST checkpoint (chunk
+        # 3) but not the first (chunk 1): resume must fall back to
+        # the rotated previous generation, not restart from zero
+        seed = next(s for s in range(200)
+                    if FaultPlan(seed=s, p_corrupt=0.5).roll(
+                        "corrupt", 3)
+                    and not FaultPlan(seed=s, p_corrupt=0.5).roll(
+                        "corrupt", 1))
+        plan = FaultPlan(seed=seed, p_corrupt=0.5)
+        r = campaign(grid, out_dir=str(tmp_path), checkpoint_every=2,
+                     fault_plan=plan, **KW)
+        assert r.completed and r.n_chunks == 4
+        res = campaign(grid, out_dir=str(tmp_path),
+                       checkpoint_every=2, fault_plan=plan,
+                       resume=True, **KW)
+        recov = [e for e in res.fault_events
+                 if e["event"] == "checkpoint_recovered"]
+        assert recov and recov[0]["chunks_done"] == 2
+        assert res.fingerprint() == clean.fingerprint()
+
+
+class TestResumeParity:
+    """The packaged witness: kill, resume, bitwise-compare."""
+
+    def test_plain_kill_resume(self, grid, tmp_path):
+        w = verify_resume(grid, out_dir=str(tmp_path),
+                          kill_after_chunks=2, checkpoint_every=1,
+                          **KW)
+        assert w["match"] and w["killed_after"] == 2
+        assert w["resumed_from"] == 2
+        assert w["replayed_chunks"] == 2
+
+    def test_kill_between_checkpoints_replays(self, grid, tmp_path):
+        w = verify_resume(grid, out_dir=str(tmp_path),
+                          kill_after_chunks=3, checkpoint_every=2,
+                          **KW)
+        # last checkpoint was after chunk 2 — chunk 3's work is lost
+        # and replayed, bitwise
+        assert w["match"] and w["resumed_from"] == 2
+
+    def test_kill_resume_under_all_faults(self, grid, tmp_path):
+        plan = FaultPlan(seed=9, p_dispatch=0.5, p_nan=0.3,
+                         p_corrupt=0.5, max_per_chunk=2)
+        w = verify_resume(grid, out_dir=str(tmp_path),
+                          kill_after_chunks=3, checkpoint_every=1,
+                          fault_plan=plan, fault_retries=4, **KW)
+        assert w["match"]
+
+    def test_kill_past_end_is_an_error(self, grid, tmp_path):
+        with pytest.raises(ValueError, match="never fired"):
+            verify_resume(grid, out_dir=str(tmp_path),
+                          kill_after_chunks=99, **KW)
+
+    def test_killed_exception_reports_progress(self, grid, tmp_path):
+        with pytest.raises(CampaignKilled) as ei:
+            campaign(grid, out_dir=str(tmp_path), checkpoint_every=1,
+                     _kill_after_chunks=2, **KW)
+        assert ei.value.chunks_drained == 2
+
+    def test_resume_config_mismatch_still_refused(self, grid,
+                                                  tmp_path):
+        # the fault plan is part of the config fingerprint: resuming
+        # with a DIFFERENT schedule would break parity silently
+        plan = FaultPlan(seed=1, p_dispatch=0.2)
+        with pytest.raises(CampaignKilled):
+            campaign(grid, out_dir=str(tmp_path), checkpoint_every=1,
+                     fault_plan=plan, _kill_after_chunks=2, **KW)
+        with pytest.raises(ValueError, match="does not match"):
+            campaign(grid, out_dir=str(tmp_path), resume=True,
+                     fault_plan=FaultPlan(seed=2, p_dispatch=0.2),
+                     checkpoint_every=1, **KW)

@@ -1,0 +1,439 @@
+"""Regression harness for the breakdown/repair (server-failure) paths.
+
+Every failure discipline of the three MC kernels — *preempt-resume*
+(work survives the outage), *preempt-restart* (the in-flight batch
+re-executes from scratch), *fail-drop* (the in-flight batch aborts
+and its jobs enter the loss/retry accounting) — is pinned against the
+independent chronological numpy mirrors in ``repro.core.loss_ref`` on
+seed ladders (3σ of the paired MC error, house convention), plus:
+
+- **MTBF→∞ reduction**: a ``mtbf=0`` point dispatched through the
+  failure-capable kernel is bitwise identical to the base kernel at
+  pinned caps — the breakdown machinery must cost *nothing* on
+  reliable points (the salted failure key stream never perturbs the
+  arrival/service draws).
+- **Chain-vs-MC**: the completion-time transform in ``markov.solve``
+  (resume and restart) agrees with the failing MC kernel within 3σ
+  on a seed ladder, and its availability matches to ~1e-2.
+- **Exact accounting**: the goodput partition still sums to 1 with
+  failures on, availability ∈ (0, 1], resume loses no work, restart
+  does, span and failure counts are consistent.
+- **Capacity headroom (S1)**: ``engine.queue_capacity`` sized with
+  the completion-time law keeps ``buffer_dropped == 0`` at MTTR up
+  to 10·τ[b_max], for resume AND restart.
+- **ρ_eff diagnostic (S6)**: an unstable failure point raises a
+  ValueError naming ρ_eff and the (MTBF, MTTR) pair, not an opaque
+  recurrence error.
+"""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import engine, markov
+from repro.core.analytic import LinearServiceModel
+from repro.core.continuous_sim import GenServiceModel
+from repro.core.gen_sweep import gen_sweep
+from repro.core.grid import FleetGrid, GenGrid, SweepGrid
+from repro.core.loss_ref import (simulate_fleet_loss_numpy,
+                                 simulate_gen_loss_numpy,
+                                 simulate_loss_numpy)
+from repro.core.sweep import fleet_sweep, sweep
+
+MODEL = LinearServiceModel(alpha=0.05, tau0=1.0)
+GMODEL = GenServiceModel(alpha_decode=0.14, tau0_decode=1.9,
+                         alpha_prefill=0.035, tau0_prefill=1.9)
+GEN, PROMPT, CAP = 32, 128, 64
+ALPHA_EQ = GMODEL.alpha_decode * GEN + GMODEL.alpha_prefill * PROMPT
+
+N_REPS = 6                  # ladder width on the kernel side
+N_REF = 3                   # seeds on the numpy-reference side
+FAIL_FIELDS = ("mean_latency", "utilization", "availability",
+               "work_loss_frac")
+
+# (fail_disc, mtbf, mttr, throttle, lam) — one config per discipline,
+# mtbf a few service times so outages actually fire, drop with a
+# degraded-phase throttle so that path is exercised too
+SW_CFG = [("resume", 8.0, 0.5, 1.0, 4.0),
+          ("restart", 8.0, 0.5, 1.0, 4.0),
+          ("drop", 8.0, 0.5, 0.85, 4.0)]
+SW_BMAX = 8
+FL_CFG = [("resume", "jsq"), ("restart", "random"),
+          ("drop", "round_robin")]
+FL_LAM, FL_K, FL_B, FL_MTBF, FL_MTTR = 6.0, 2, 4, 8.0, 0.5
+GEN_LAM = 0.7 / ALPHA_EQ
+GEN_CFG = [("resume", 200.0, 5.0), ("restart", 200.0, 5.0),
+           ("drop", 200.0, 5.0)]
+
+
+def _ladder_se(kernel_vals, ref_vals, floor_frac=0.015,
+               floor_abs=0.0):
+    se = math.sqrt(kernel_vals.var(ddof=1) / len(kernel_vals)
+                   + ref_vals.var(ddof=1) / len(ref_vals))
+    return max(se, floor_frac * abs(float(ref_vals.mean())), floor_abs)
+
+
+def _gate(kernel_vals, ref_vals, label):
+    se = _ladder_se(kernel_vals, ref_vals, floor_abs=0.004)
+    assert abs(kernel_vals.mean() - ref_vals.mean()) < 3.0 * se, \
+        (label, float(kernel_vals.mean()), float(ref_vals.mean()))
+
+
+@pytest.fixture(scope="module")
+def sweep_fail():
+    cfg = [c for c in SW_CFG for _ in range(N_REPS)]
+    g = SweepGrid.from_points([c[4] for c in cfg], MODEL.alpha,
+                              MODEL.tau0, b_max=SW_BMAX,
+                              fail_disc=[c[0] for c in cfg],
+                              mtbf=[c[1] for c in cfg],
+                              mttr=[c[2] for c in cfg],
+                              throttle=[c[3] for c in cfg])
+    assert g.has_fail
+    return g, sweep(g, n_batches=6000, q_cap=64, a_cap=64, r_cap=64,
+                    seed=11)
+
+
+@pytest.fixture(scope="module")
+def fleet_fail():
+    cfg = [c for c in FL_CFG for _ in range(N_REPS)]
+    g = FleetGrid.from_points([FL_LAM] * len(cfg), MODEL.alpha,
+                              MODEL.tau0, k=FL_K, b_max=FL_B,
+                              routing=[c[1] for c in cfg],
+                              fail_disc=[c[0] for c in cfg],
+                              mtbf=FL_MTBF, mttr=FL_MTTR)
+    return g, fleet_sweep(g, n_steps=8000, q_cap=64, a_cap=32,
+                          r_cap=64, seed=7)
+
+
+@pytest.fixture(scope="module")
+def gen_fail():
+    cfg = [c for c in GEN_CFG for _ in range(N_REPS)]
+    g = GenGrid.from_points(
+        [GEN_LAM] * len(cfg), GMODEL.alpha_decode, GMODEL.tau0_decode,
+        GMODEL.alpha_prefill, GMODEL.tau0_prefill, prompt_len=PROMPT,
+        gen_tokens=GEN, max_active=CAP,
+        fail_disc=[c[0] for c in cfg], mtbf=[c[1] for c in cfg],
+        mttr=[c[2] for c in cfg])
+    return g, gen_sweep(g, n_steps=6000, q_cap=96, a_cap=96, r_cap=64,
+                        seed=5)
+
+
+class TestSweepVsNumpyRef:
+    @pytest.mark.parametrize("ci", range(len(SW_CFG)))
+    def test_failure_metrics_seed_ladder(self, sweep_fail, ci):
+        _, r = sweep_fail
+        disc, mtbf, mttr, thr, lam = SW_CFG[ci]
+        sl = slice(ci * N_REPS, (ci + 1) * N_REPS)
+        refs = [simulate_loss_numpy(lam, MODEL, SW_BMAX, mtbf=mtbf,
+                                    mttr=mttr, fail_disc=disc,
+                                    throttle=thr, q_cap=64, r_cap=64,
+                                    n_batches=15_000, seed=s)
+                for s in range(N_REF)]
+        for f in FAIL_FIELDS:
+            _gate(np.asarray(getattr(r, f)[sl], dtype=float),
+                  np.array([getattr(x, f) for x in refs]),
+                  (disc, f))
+
+
+class TestFleetVsNumpyRef:
+    @pytest.mark.parametrize("ci", range(len(FL_CFG)))
+    def test_failure_metrics_seed_ladder(self, fleet_fail, ci):
+        _, r = fleet_fail
+        disc, route = FL_CFG[ci]
+        sl = slice(ci * N_REPS, (ci + 1) * N_REPS)
+        refs = [simulate_fleet_loss_numpy(FL_LAM, MODEL, FL_B, k=FL_K,
+                                          routing=route, mtbf=FL_MTBF,
+                                          mttr=FL_MTTR, fail_disc=disc,
+                                          q_cap=64, r_cap=64,
+                                          n_events=40_000, seed=s)
+                for s in range(N_REF)]
+        for f in FAIL_FIELDS:
+            _gate(np.asarray(getattr(r, f)[sl], dtype=float),
+                  np.array([getattr(x, f) for x in refs]),
+                  (disc, route, f))
+
+
+class TestGenVsNumpyRef:
+    @pytest.mark.parametrize("ci", range(len(GEN_CFG)))
+    def test_failure_metrics_seed_ladder(self, gen_fail, ci):
+        _, r = gen_fail
+        disc, mtbf, mttr = GEN_CFG[ci]
+        sl = slice(ci * N_REPS, (ci + 1) * N_REPS)
+        refs = [simulate_gen_loss_numpy(GEN_LAM, GMODEL,
+                                        prompt_len=PROMPT,
+                                        gen_tokens=GEN, max_active=CAP,
+                                        mtbf=mtbf, mttr=mttr,
+                                        fail_disc=disc, q_cap=96,
+                                        r_cap=64, n_steps=20_000,
+                                        seed=s)
+                for s in range(N_REF)]
+        for f in FAIL_FIELDS:
+            _gate(np.asarray(getattr(r, f)[sl], dtype=float),
+                  np.array([getattr(x, f) for x in refs]),
+                  (disc, f))
+
+
+class TestAccounting:
+    """Exact (not statistical) invariants on every failure run."""
+
+    def _check(self, r, n_cycles):
+        assert int(r.buffer_dropped.sum()) == 0
+        av = np.asarray(r.availability, dtype=float)
+        assert np.all((av > 0.0) & (av <= 1.0))
+        wl = np.asarray(r.work_loss_frac, dtype=float)
+        assert np.all((wl >= 0.0) & (wl < 1.0))
+        assert np.all(np.asarray(r.span, dtype=float) > 0.0)
+        assert np.all(np.asarray(r.n_failures) > 0)
+        assert np.all(np.asarray(r.down_time, dtype=float) > 0.0)
+
+    def test_sweep(self, sweep_fail):
+        _, r = sweep_fail
+        self._check(r, 6000)
+        lost = np.asarray(r.lost_work, dtype=float)
+        # resume loses no work; restart re-executes; drop abandons
+        assert np.all(lost[0 * N_REPS:1 * N_REPS] == 0.0)
+        assert np.all(lost[1 * N_REPS:2 * N_REPS] > 0.0)
+        assert np.all(lost[2 * N_REPS:3 * N_REPS] > 0.0)
+        # fail-drop files its aborted jobs — goodput partition holds
+        sl = slice(2 * N_REPS, 3 * N_REPS)
+        offered = (r.n_jobs + r.overflow_dropped + r.abandoned)[sl]
+        total = (r.goodput_frac + r.late_frac + r.reject_frac
+                 + r.abandon_frac)[sl]
+        assert np.all(offered > 0)
+        assert np.allclose(total, 1.0, atol=1e-6)
+        assert np.all(r.abandoned[sl] > 0)
+
+    def test_fleet(self, fleet_fail):
+        _, r = fleet_fail
+        self._check(r, 8000)
+
+    def test_gen(self, gen_fail):
+        _, r = gen_fail
+        self._check(r, 6000)
+
+
+class TestMTBFInfReduction:
+    """A reliable (mtbf=0) point must be BITWISE the base kernel's
+    answer at pinned caps — even when dispatched alongside failing
+    points through the failure-capable kernel, because the failure
+    draws come from a salted side stream."""
+
+    BASE_FIELDS = ("mean_latency", "mean_batch", "utilization",
+                   "n_jobs", "latency_p50", "latency_p99")
+
+    def test_sweep(self):
+        g = SweepGrid.from_points(
+            [4.0, 3.0, 2.0], MODEL.alpha, MODEL.tau0, b_max=SW_BMAX,
+            fail_disc=["restart", "resume", "resume"],
+            mtbf=[8.0, 0.0, 0.0], mttr=[0.5, 0.0, 0.0])
+        assert g.has_fail and not g.take(slice(1, None)).has_fail
+        kw = dict(n_batches=1024, q_cap=64, a_cap=64)
+        mixed = sweep(g, seed=11, **kw)
+        base = sweep(g.take(slice(1, None)), seed=11, key_offset=1,
+                     **kw)
+        for f in self.BASE_FIELDS:
+            assert np.array_equal(getattr(mixed, f)[1:],
+                                  getattr(base, f)), f
+        assert np.all(np.asarray(mixed.availability)[1:] == 1.0)
+        assert np.all(np.asarray(mixed.n_failures)[1:] == 0)
+
+    def test_fleet(self):
+        g = FleetGrid.from_points(
+            [6.0, 5.0, 4.0], MODEL.alpha, MODEL.tau0, k=FL_K,
+            b_max=FL_B, routing="jsq",
+            fail_disc=["resume", "resume", "resume"],
+            mtbf=[8.0, 0.0, 0.0], mttr=[0.5, 0.0, 0.0])
+        kw = dict(n_steps=1024, q_cap=64, a_cap=16)
+        mixed = fleet_sweep(g, seed=13, **kw)
+        base = fleet_sweep(g.take(slice(1, None)), seed=13,
+                           key_offset=1, **kw)
+        for f in self.BASE_FIELDS:
+            assert np.array_equal(getattr(mixed, f)[1:],
+                                  getattr(base, f)), f
+
+    def test_gen(self):
+        g = GenGrid.from_points(
+            [GEN_LAM, 0.8 * GEN_LAM, 0.6 * GEN_LAM],
+            GMODEL.alpha_decode, GMODEL.tau0_decode,
+            GMODEL.alpha_prefill, GMODEL.tau0_prefill,
+            prompt_len=PROMPT, gen_tokens=GEN, max_active=CAP,
+            fail_disc=["restart", "resume", "resume"],
+            mtbf=[200.0, 0.0, 0.0], mttr=[5.0, 0.0, 0.0])
+        kw = dict(n_steps=1024, q_cap=64, a_cap=96)
+        mixed = gen_sweep(g, seed=13, **kw)
+        base = gen_sweep(g.take(slice(1, None)), seed=13,
+                         key_offset=1, **kw)
+        for f in self.BASE_FIELDS:
+            assert np.array_equal(getattr(mixed, f)[1:],
+                                  getattr(base, f)), f
+
+
+class TestSplitDispatchDeterminism:
+    """Per-point bitwise invariance to dispatch grouping with the
+    failure machinery armed — guards the salted fold_in key
+    construction against shape-dependent key consumption."""
+
+    def test_sweep(self):
+        g = SweepGrid.from_points(
+            [4.0, 3.5, 3.0, 2.5], MODEL.alpha, MODEL.tau0,
+            b_max=SW_BMAX,
+            fail_disc=["resume", "restart", "drop", "resume"],
+            mtbf=[8.0, 8.0, 8.0, 0.0], mttr=[0.5, 0.5, 0.5, 0.0],
+            throttle=[1.0, 0.85, 1.0, 1.0])
+        kw = dict(n_batches=512, q_cap=64, a_cap=64, r_cap=32)
+        full = sweep(g, seed=11, **kw)
+        a = sweep(g.take(slice(0, 2)), seed=11, **kw)
+        b = sweep(g.take(slice(2, None)), seed=11, key_offset=2, **kw)
+        for f in ("mean_latency", "n_jobs", "n_failures", "down_time",
+                  "lost_work", "utilization"):
+            merged = np.concatenate([getattr(a, f), getattr(b, f)])
+            assert np.array_equal(getattr(full, f), merged), f
+
+    def test_fleet(self):
+        g = FleetGrid.from_points(
+            [6.0, 6.0, 5.0, 6.0], MODEL.alpha, MODEL.tau0,
+            k=[2, 2, 1, 2],
+            routing=["jsq", "random", "round_robin", "jsq"],
+            b_max=FL_B,
+            fail_disc=["resume", "restart", "drop", "resume"],
+            mtbf=[8.0, 8.0, 8.0, 0.0], mttr=[0.5, 0.5, 0.5, 0.0])
+        kw = dict(n_steps=512, q_cap=64, a_cap=16, r_cap=32)
+        full = fleet_sweep(g, seed=13, **kw)
+        a = fleet_sweep(g.take(slice(0, 2)), seed=13, **kw)
+        b = fleet_sweep(g.take(slice(2, None)), seed=13, key_offset=2,
+                        **kw)
+        for f in ("mean_latency", "n_jobs", "n_failures", "down_time",
+                  "lost_work"):
+            merged = np.concatenate([getattr(a, f), getattr(b, f)])
+            assert np.array_equal(getattr(full, f), merged), f
+
+    def test_gen(self):
+        g = GenGrid.from_points(
+            [GEN_LAM] * 4, GMODEL.alpha_decode, GMODEL.tau0_decode,
+            GMODEL.alpha_prefill, GMODEL.tau0_prefill,
+            prompt_len=PROMPT, gen_tokens=GEN, max_active=CAP,
+            fail_disc=["resume", "restart", "drop", "resume"],
+            mtbf=[200.0, 200.0, 200.0, 0.0],
+            mttr=[5.0, 5.0, 5.0, 0.0])
+        kw = dict(n_steps=512, q_cap=64, a_cap=96, r_cap=32)
+        full = gen_sweep(g, seed=13, **kw)
+        a = gen_sweep(g.take(slice(0, 2)), seed=13, **kw)
+        b = gen_sweep(g.take(slice(2, None)), seed=13, key_offset=2,
+                      **kw)
+        for f in ("mean_latency", "n_jobs", "n_failures", "down_time",
+                  "lost_work"):
+            merged = np.concatenate([getattr(a, f), getattr(b, f)])
+            assert np.array_equal(getattr(full, f), merged), f
+
+
+class TestChainVsMC:
+    """The completion-time transform against the failing MC kernel —
+    the exact-reference witness for the breakdown regime."""
+
+    LAM, MTBF, MTTR = 3.0, 8.0, 0.5
+
+    @pytest.mark.parametrize("disc", ["resume", "restart"])
+    def test_latency_within_3_sigma(self, disc):
+        ex = markov.solve(self.LAM, MODEL, b_max=SW_BMAX,
+                          mtbf=self.MTBF, mttr=self.MTTR,
+                          fail_disc=disc)
+        n_lad = 8
+        g = SweepGrid.from_points([self.LAM] * n_lad, MODEL.alpha,
+                                  MODEL.tau0, b_max=SW_BMAX,
+                                  fail_disc=disc, mtbf=self.MTBF,
+                                  mttr=self.MTTR)
+        r = sweep(g, n_batches=8000, q_cap=64, a_cap=64, seed=3)
+        lat = np.asarray(r.mean_latency, dtype=float)
+        se = max(lat.std(ddof=1) / math.sqrt(n_lad),
+                 0.003 * ex.mean_latency)
+        z = (lat.mean() - ex.mean_latency) / se
+        assert abs(z) < 3.0, (disc, float(lat.mean()), ex.mean_latency,
+                              float(z))
+        av = np.asarray(r.availability, dtype=float).mean()
+        assert abs(av - ex.availability) < 0.01, (disc, av,
+                                                  ex.availability)
+
+    def test_mtbf_inf_converges_to_base(self):
+        base = markov.solve(self.LAM, MODEL, b_max=SW_BMAX)
+        far = markov.solve(self.LAM, MODEL, b_max=SW_BMAX, mtbf=1e9,
+                           mttr=0.5)
+        assert math.isclose(far.mean_latency, base.mean_latency,
+                            rel_tol=1e-4)
+        assert far.availability > 1.0 - 1e-6
+
+    def test_mtbf_none_is_exactly_base(self):
+        a = markov.solve(self.LAM, MODEL, b_max=SW_BMAX)
+        b = markov.solve(self.LAM, MODEL, b_max=SW_BMAX, mtbf=None)
+        assert a.mean_latency == b.mean_latency
+        assert np.array_equal(a.pi, b.pi)
+
+    def test_completion_moments_reduce(self):
+        s = 1.4
+        ec, ec2 = markov.completion_moments(s, 0.0, 0.0)
+        assert (ec, ec2) == (s, s * s)
+        ec, _ = markov.completion_moments(s, 8.0, 0.5)
+        assert math.isclose(ec, s * (1.0 + 0.5 / 8.0))
+        ec, _ = markov.completion_moments(s, 8.0, 0.5, restart=True)
+        xi = 1.0 / 8.0
+        assert math.isclose(ec, (1.0 / xi + 0.5) * math.expm1(xi * s))
+
+
+class TestQueueCapacityHeadroom:
+    """S1: capacity sizing from the completion-time law keeps the
+    hard-buffer witness (buffer_dropped == 0) at MTTR up to
+    10·τ[b_max]."""
+
+    @pytest.mark.parametrize("disc", ["resume", "restart"])
+    def test_no_buffer_drops_at_long_mttr(self, disc):
+        lam, b_max = 2.0, SW_BMAX
+        tau_top = MODEL.alpha * b_max + MODEL.tau0        # τ[b_max]
+        mttr = 10.0 * tau_top
+        mtbf = 60.0
+        q_cap = engine.queue_capacity(
+            np.array([lam]), MODEL.alpha, MODEL.tau0, b_max,
+            mtbf=np.array([mtbf]), mttr=np.array([mttr]),
+            restart=np.array([disc == "restart"]))
+        g = SweepGrid.from_points([lam] * 4, MODEL.alpha, MODEL.tau0,
+                                  b_max=b_max, fail_disc=disc,
+                                  mtbf=mtbf, mttr=mttr)
+        r = sweep(g, n_batches=4000, q_cap=q_cap, a_cap=q_cap, seed=2)
+        assert int(r.buffer_dropped.sum()) == 0
+        assert np.all(np.asarray(r.n_failures) > 0)
+
+    def test_inflation_monotone_in_mttr(self):
+        lam = np.array([2.0])
+        lo = engine.completion_inflation(lam, MODEL.alpha, MODEL.tau0,
+                                         SW_BMAX, 60.0, 1.0)
+        hi = engine.completion_inflation(lam, MODEL.alpha, MODEL.tau0,
+                                         SW_BMAX, 60.0, 14.0)
+        assert np.all(hi > lo) and np.all(lo >= 1.0)
+        rst = engine.completion_inflation(
+            lam, MODEL.alpha, MODEL.tau0, SW_BMAX, 2.0, 1.0,
+            restart=np.array([True]))
+        res = engine.completion_inflation(
+            lam, MODEL.alpha, MODEL.tau0, SW_BMAX, 2.0, 1.0,
+            restart=np.array([False]))
+        assert np.all(rst > res)      # re-execution dominates
+
+
+class TestRhoEffDiagnostic:
+    """S6: the chain refuses unstable failure regimes with an
+    actionable message, not an opaque recurrence error."""
+
+    def test_names_rho_eff_and_repair_pair(self):
+        with pytest.raises(ValueError) as ei:
+            markov.solve(6.0, MODEL, b_max=SW_BMAX, mtbf=1.0, mttr=2.0,
+                         fail_disc="restart")
+        msg = str(ei.value)
+        assert "rho_eff" in msg
+        assert "MTBF=1" in msg and "MTTR=2" in msg
+        assert "restart" in msg
+
+    def test_drop_needs_mc_reference(self):
+        with pytest.raises(ValueError, match="drop"):
+            markov.solve(2.0, MODEL, b_max=SW_BMAX, mtbf=8.0, mttr=0.5,
+                         fail_disc="drop")
+
+    def test_failure_chain_needs_finite_b_max(self):
+        with pytest.raises(ValueError, match="b_max"):
+            markov.solve(2.0, MODEL, mtbf=8.0, mttr=0.5)
